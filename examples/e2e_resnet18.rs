@@ -1,0 +1,96 @@
+//! END-TO-END DRIVER: the full system on a real workload.
+//!
+//! Builds ResNet-18, compiles it for the INT8 baseline and the DeepGEMM
+//! LUT-16 engine, serves a stream of batched inference requests through
+//! the L3 coordinator (router + dynamic batcher), and reports per-stage
+//! profiles, end-to-end latency/throughput, and the INT8→LUT speedup —
+//! the paper's Tab. 5 row for ResNet-18, reproduced through the serving
+//! stack rather than a bare loop.
+//!
+//!     cargo run --release --example e2e_resnet18 [n_requests]
+
+use deepgemm::coordinator::{BatcherConfig, Router};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::StageProfile;
+use deepgemm::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    println!("== building ResNet-18 (random init, 1000 classes) ==");
+    let graph = zoo::build("resnet18", 1000, 0).expect("build");
+    println!(
+        "   {} conv layers, {:.1}M parameters",
+        graph.conv_count(),
+        graph.conv_params() as f64 / 1e6
+    );
+    let x = Tensor::random(&[1, 3, 224, 224], 42, -1.0, 1.0);
+    let calib = [x.clone()];
+
+    let mut results = Vec::new();
+    for backend in [Backend::Int8, Backend::Lut16(Scheme::D)] {
+        println!("\n== compiling for {} ==", backend.name());
+        let t0 = Instant::now();
+        let model =
+            CompiledModel::compile(graph.clone(), backend, &calib).expect("compile");
+        println!("   compile time {:.2}s", t0.elapsed().as_secs_f64());
+
+        // Direct forward with stage profile.
+        let mut prof = StageProfile::new();
+        model.forward(&x, &mut prof).expect("warmup");
+        let mut prof = StageProfile::new();
+        let t0 = Instant::now();
+        model.forward(&x, &mut prof).expect("forward");
+        let direct = t0.elapsed().as_secs_f64();
+        print!("{}", prof.render(&format!("resnet18 / {}", backend.name())));
+
+        // Serve n_requests through the coordinator.
+        let mut router = Router::new();
+        router.register(
+            model,
+            BatcherConfig { max_batch: 4, ..BatcherConfig::default() },
+        );
+        let router = Arc::new(router);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let r = router.clone();
+                std::thread::spawn(move || {
+                    let x = Tensor::random(&[1, 3, 224, 224], i as u64, -1.0, 1.0);
+                    let t = Instant::now();
+                    let resp = r.infer("resnet18", x).expect("infer");
+                    (t.elapsed().as_secs_f64(), resp.argmax)
+                })
+            })
+            .collect();
+        let lat: Vec<f64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().0)
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::from_samples(&lat);
+        println!(
+            "   served {n_requests} requests in {wall:.2}s → {:.2} req/s; latency p50 {:.0} ms, p95 {:.0} ms",
+            n_requests as f64 / wall,
+            s.median * 1e3,
+            s.p95 * 1e3
+        );
+        println!("   metrics: {}", router.metrics.render().replace('\n', "\n            "));
+        results.push((backend.name(), direct));
+    }
+
+    let speedup = results[0].1 / results[1].1;
+    println!(
+        "\n== RESULT == single-image e2e: int8 {:.1} ms, lut16-d {:.1} ms → speedup {speedup:.2}x (paper Tab.5: 1.62x)",
+        results[0].1 * 1e3,
+        results[1].1 * 1e3
+    );
+}

@@ -1,0 +1,54 @@
+//! Packing schemes a–d (paper §4.1): equivalence check + instruction
+//! counts + measured latency on one layer shape.
+//!
+//!     cargo run --release --example packing_schemes
+
+use deepgemm::bench::{support, BenchOpts};
+use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+use deepgemm::kernels::{lut16, Backend, CodeMat, GemmSize};
+use deepgemm::profiling::icount::{paper_tab3, scheme_icount};
+use deepgemm::quant::{IntCodebook, Lut16};
+
+fn main() {
+    let size = GemmSize::new(64, 32, 576);
+    let a = CodeMat::random(size.m, size.k, 2, 1);
+    let w = CodeMat::random(size.n, size.k, 2, 2);
+    let lut = Lut16::build(&IntCodebook::signed(2), &IntCodebook::unsigned(2));
+
+    // All four schemes produce bit-identical results.
+    let mut reference: Option<Vec<i32>> = None;
+    for scheme in Scheme::ALL {
+        let ap = pack_activations(&a, scheme);
+        let wp = pack_weights(&w, scheme);
+        let mut out = vec![0i32; size.m * size.n];
+        lut16::gemm(&ap, &wp, &lut, scheme, &mut out);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_eq!(r, &out, "scheme {scheme:?} diverged"),
+        }
+        println!(
+            "scheme {}: w bytes {:>7}, a bytes {:>7} — results identical ✓",
+            scheme.name(),
+            wp.bytes(),
+            ap.bytes()
+        );
+    }
+
+    println!("\nper-output instruction model (ours | paper Tab. 3):");
+    let opts = BenchOpts::quick();
+    for scheme in Scheme::ALL {
+        let ic = scheme_icount(scheme);
+        let pc = paper_tab3(scheme);
+        let ms = support::time_backend(Backend::Lut16(scheme), size, &opts) * 1e3;
+        println!(
+            "  {}: and {:.2} shift {:.2} or {:.2} shuffle {:.2} → total {:.2} (paper {:.1})  measured {ms:.3} ms",
+            scheme.name(),
+            ic.and,
+            ic.shift,
+            ic.or,
+            ic.shuffle,
+            ic.total(),
+            pc.total()
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Quickstart: quantize a float GEMM to 2-bit, run the LUT-16 kernel,
+//! dequantize — the paper's pipeline in ~40 lines of public API.
+//!
+//!     cargo run --release --example quickstart
+
+use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+use deepgemm::kernels::{lut16, CodeMat, GemmSize};
+use deepgemm::quant::{Lut16, Quantizer};
+use deepgemm::util::rng::Rng;
+
+fn main() {
+    let size = GemmSize::new(4, 3, 64);
+    let mut rng = Rng::new(1);
+
+    // Float operands: activations in [0, 1] (post-ReLU-like), weights ~N.
+    let mut acts = vec![0f32; size.m * size.k];
+    let mut weights = vec![0f32; size.n * size.k];
+    rng.fill_f32(&mut acts, 0.0, 1.0);
+    rng.fill_normal(&mut weights, 0.4);
+
+    // 1. Calibrate quantizers (LSQ-style MSE refinement).
+    let aq = Quantizer::mse_refined(&acts, 2, false);
+    let wq = Quantizer::mse_refined(&weights, 2, true);
+
+    // 2. Quantize to 2-bit codes.
+    let mut a_codes = vec![0u8; acts.len()];
+    let mut w_codes = vec![0u8; weights.len()];
+    aq.quantize(&acts, &mut a_codes);
+    wq.quantize(&weights, &mut w_codes);
+    let a = CodeMat::from_data(size.m, size.k, 2, a_codes);
+    let w = CodeMat::from_data(size.n, size.k, 2, w_codes);
+
+    // 3. Build the 16-entry product LUT and pack both operands
+    //    (weights offline, activations at runtime).
+    let lut = Lut16::build(&wq.params.codebook(), &aq.params.codebook());
+    let wp = pack_weights(&w, Scheme::D);
+    let ap = pack_activations(&a, Scheme::D);
+
+    // 4. One pshufb-powered GEMM: every MAC is a table lookup.
+    let mut acc = vec![0i32; size.m * size.n];
+    lut16::gemm(&ap, &wp, &lut, Scheme::D, &mut acc);
+
+    // 5. Dequantize and compare against the float reference.
+    let scale = aq.params.scale * wq.params.scale;
+    println!("{:>10}  {:>10}  {:>8}", "quantized", "float ref", "|err|");
+    for m in 0..size.m {
+        for n in 0..size.n {
+            let got = acc[m * size.n + n] as f32 * scale;
+            let want: f32 = (0..size.k)
+                .map(|k| acts[m * size.k + k] * weights[n * size.k + k])
+                .sum();
+            println!("{got:>10.3}  {want:>10.3}  {:>8.3}", (got - want).abs());
+        }
+    }
+    println!(
+        "\nLUT: {} entries, bias {}, packed weights {} B (vs {} B fp32)",
+        lut.entries(),
+        lut.bias,
+        wp.bytes(),
+        weights.len() * 4
+    );
+}

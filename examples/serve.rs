@@ -1,0 +1,69 @@
+//! Serving demo: start the TCP server with a small CNN on the LUT-16
+//! engine, drive it with concurrent line-JSON clients, print latency
+//! percentiles, throughput and batcher metrics, then shut down.
+//!
+//!     cargo run --release --example serve [n_clients] [reqs_per_client]
+
+use deepgemm::coordinator::{server, BatcherConfig, Client, Router, ServerConfig};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::zoo;
+use deepgemm::util::json::Json;
+use deepgemm::util::rng::Rng;
+use deepgemm::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let n_clients: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_client: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let mut rng = Rng::new(0);
+    let graph = zoo::small_cnn(10, &mut rng);
+    let model = CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[]).expect("compile");
+    let mut router = Router::new();
+    router.register(model, BatcherConfig { max_batch: 8, ..Default::default() });
+    let router = Arc::new(router);
+    let (addr, _handle) =
+        server::spawn(router.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).expect("bind");
+    println!("server on {addr}; {n_clients} clients × {per_client} requests");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|cid| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut rng = Rng::new(cid as u64);
+                let mut lats = Vec::new();
+                for _ in 0..per_client {
+                    let mut input = vec![0f32; 3 * 32 * 32];
+                    rng.fill_f32(&mut input, -1.0, 1.0);
+                    let t = Instant::now();
+                    let resp = client.infer("small_cnn", &input).expect("infer");
+                    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+                    lats.push(t.elapsed().as_secs_f64());
+                }
+                lats
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::from_samples(&lats);
+    println!(
+        "throughput {:.1} req/s | latency p50 {:.2} ms p95 {:.2} ms max {:.2} ms",
+        lats.len() as f64 / wall,
+        s.median * 1e3,
+        s.p95 * 1e3,
+        s.max * 1e3
+    );
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).expect("metrics");
+    println!("server metrics:\n{}", m.get("metrics").unwrap().as_str().unwrap());
+    let _ = c.call(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+}

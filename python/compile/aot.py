@@ -1,0 +1,128 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) → HLO **text**
+artifacts + manifest + golden I/O for the rust PJRT runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the published
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and DESIGN.md.
+
+Usage: (cd python && python -m compile.aot --out ../artifacts)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants. The default HLO printer elides big
+    # array literals as `constant({...})`, which the consuming parser
+    # accepts but fills with ZEROS — silently corrupting any module with
+    # embedded weights/LUTs (we found this as exact-zero LUT rows in the
+    # rust golden checks; see EXPERIMENTS.md §Debug-log).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line etc.) are rejected by
+    # the older HLO parser — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def tensor_meta(arrs):
+    return [{"shape": list(a.shape), "dtype": "f32"} for a in arrs]
+
+
+def emit(out_dir, name, fn, example_inputs, tags):
+    """Lower fn at the example shapes, write HLO + golden, return the
+    manifest entry."""
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_inputs]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(hlo)
+    # Golden: run the jitted fn on the example inputs.
+    outputs = jax.jit(fn)(*example_inputs)
+    if not isinstance(outputs, (tuple, list)):
+        outputs = (outputs,)
+    golden_file = f"{name}.golden.json"
+    with open(os.path.join(out_dir, golden_file), "w") as f:
+        json.dump(
+            {
+                "inputs": [np.asarray(a).reshape(-1).astype(float).tolist() for a in example_inputs],
+                "outputs": [np.asarray(o).reshape(-1).astype(float).tolist() for o in outputs],
+            },
+            f,
+        )
+    print(f"  {name}: hlo {len(hlo)/1e3:.0f} kB, outputs {[tuple(o.shape) for o in outputs]}")
+    return {
+        "name": name,
+        "hlo": hlo_file,
+        "inputs": tensor_meta(example_inputs),
+        "outputs": tensor_meta(outputs),
+        "golden": golden_file,
+        "tags": tags,
+    }
+
+
+#: Quantized-GEMM artifact shapes (M, N, K) — small conv-layer-like sizes
+#: kept modest so interpret-mode lowering stays compact.
+GEMM_SHAPES = [(8, 16, 64), (16, 32, 144), (32, 32, 576)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    entries = []
+
+    print("lowering quant-GEMM artifacts (L1 pallas lut kernel)...")
+    for m, n, k in GEMM_SHAPES:
+        ka, kw = jax.random.split(jax.random.fold_in(key, m * n * k))
+        a = jax.random.uniform(ka, (m, k), minval=0.0, maxval=1.0)
+        w = jax.random.normal(kw, (n, k)) * 0.5
+        entries.append(
+            emit(
+                out_dir,
+                f"quant_gemm_m{m}_n{n}_k{k}_w2a2",
+                lambda a, w: (model_lib.quant_gemm_pipeline(a, w, bits=2),),
+                [a, w],
+                {"kernel": "lut_gemm", "bits": "2", "m": str(m), "n": str(n), "k": str(k)},
+            )
+        )
+
+    print("lowering small_cnn model artifact (L2 graph over L1 kernels)...")
+    cnn = model_lib.SmallCNN(jax.random.PRNGKey(7), num_classes=10, bits=2, in_hw=16)
+    x = jax.random.uniform(jax.random.PRNGKey(11), (1, 3, 16, 16), minval=-1.0, maxval=1.0)
+    entries.append(
+        emit(
+            out_dir,
+            "small_cnn_w2a2",
+            lambda x: (cnn(x),),
+            [x],
+            {"kernel": "model", "bits": "2", "model": "small_cnn"},
+        )
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

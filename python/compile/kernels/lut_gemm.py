@@ -1,0 +1,122 @@
+"""L1 — the DeepGEMM LUT GEMM as a Pallas kernel (TPU-adapted, run with
+interpret=True on CPU per the AOT recipe).
+
+Hardware adaptation of the paper's AVX2 kernel (DESIGN.md §3):
+
+  AVX2 `pshufb` 16-entry lookup  →  one-hot(index) @ LUT contraction, the
+    MXU-idiomatic table lookup (a (T, 2^2b) one-hot matrix against the
+    (2^2b,) LUT vector); in interpret mode XLA executes it as a gather.
+  bit-unpack via `and`/`srl`      →  the same bitwise ops on int32 lanes
+    (TPU VPU ops).
+  BlockSpec HBM→VMEM tiling       →  (bm × K/cpw) activation tiles and
+    (bn × K/cpw) weight tiles staged into VMEM; the packed 2-bit layout
+    moves 16× less HBM traffic than f32.
+
+The kernel computes  out[m, n] = Σ_k lut[(w[n,k] << bits) | a[m,k]]
+over *packed* int32 operands (16 2-bit codes per word).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM tile sizes (multiples of the TPU lane count would apply on real
+# hardware; interpret mode only needs them to divide the padded problem).
+BM = 8
+BN = 8
+
+
+def _lut_lookup_onehot(lut, idx, entries):
+    """Table lookup as a one-hot contraction (the MXU-friendly form)."""
+    onehot = (idx[..., None] == jnp.arange(entries, dtype=idx.dtype)).astype(lut.dtype)
+    return onehot @ lut
+
+
+def _kernel(a_ref, w_ref, lut_ref, o_ref, *, bits, k_words, use_onehot):
+    """One (BM × BN) output tile: unpack both operands' words, build
+    4-bit (2·bits generally) indices, look up products, accumulate."""
+    cpw = ref.CODES_PER_WORD[bits]
+    slot = ref.SLOT_BITS[bits]
+    mask = (1 << bits) - 1
+    entries = 1 << (2 * bits)
+
+    a_words = a_ref[...].astype(jnp.uint32)  # (BM, k_words)
+    w_words = w_ref[...].astype(jnp.uint32)  # (BN, k_words)
+    lut = lut_ref[...]
+
+    # Unpack: (R, k_words, cpw) codes, flattened to (R, K).
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * slot)[None, None, :]
+    a_codes = ((a_words[:, :, None] >> shifts) & mask).astype(jnp.int32)
+    w_codes = ((w_words[:, :, None] >> shifts) & mask).astype(jnp.int32)
+    a_codes = a_codes.reshape(a_codes.shape[0], k_words * cpw)
+    w_codes = w_codes.reshape(w_codes.shape[0], k_words * cpw)
+
+    # Index = (w << bits) | a, per (m, n, k).
+    idx = (w_codes[None, :, :] << bits) | a_codes[:, None, :]
+    if use_onehot:
+        prods = _lut_lookup_onehot(lut, idx, entries)
+    else:
+        prods = jnp.take(lut, idx.reshape(-1)).reshape(idx.shape)
+    o_ref[...] = prods.sum(axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_onehot"))
+def lut_gemm_packed(a_packed, w_packed, lut, bits=2, use_onehot=False):
+    """Packed LUT GEMM via pallas_call.
+
+    a_packed: (M, KW) int32, w_packed: (N, KW) int32,
+    lut: (2^(2·bits),) int32 or float32. M, N must be multiples of BM/BN
+    (use `lut_gemm` for the padding wrapper).
+    """
+    m, kw = a_packed.shape
+    n, kw2 = w_packed.shape
+    assert kw == kw2, f"packed K mismatch: {kw} vs {kw2}"
+    assert m % BM == 0 and n % BN == 0, f"(M={m}, N={n}) must tile by ({BM}, {BN})"
+    out_dtype = jnp.float32 if lut.dtype == jnp.float32 else jnp.int32
+    kernel = functools.partial(
+        _kernel, bits=bits, k_words=kw, use_onehot=use_onehot
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // BM, n // BN),
+        in_specs=[
+            pl.BlockSpec((BM, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a_packed, w_packed, lut)
+
+
+def lut_gemm(a_codes, w_codes, lut, bits=2, w_zero_code=None, use_onehot=False):
+    """Unpacked-codes convenience wrapper: pads M/N to tile multiples and
+    K to a packing-word multiple, packs, runs the Pallas kernel, slices.
+
+    K padding uses `w_zero_code` (the weight code whose *value* is 0) so
+    padded columns contribute exactly zero — pass the weight zero-point
+    for uniform signed weights (default: 2^(bits-1)).
+    """
+    if w_zero_code is None:
+        w_zero_code = 1 << (bits - 1)
+    cpw = ref.CODES_PER_WORD[bits]
+    m, k = a_codes.shape
+    n, k2 = w_codes.shape
+    assert k == k2
+    mp = -(-m // BM) * BM
+    np_ = -(-n // BN) * BN
+    kp = -(-k // cpw) * cpw
+    a_pad = jnp.zeros((mp, kp), jnp.int32).at[:m, :k].set(a_codes)
+    w_pad = jnp.full((np_, kp), w_zero_code, jnp.int32).at[:n, :k].set(w_codes)
+    # Padded a-columns meet w_zero_code (value 0) → zero products; padded
+    # a-rows/w-rows are sliced away below.
+    w_pad = w_pad.at[:, k:].set(w_zero_code)
+    out = lut_gemm_packed(
+        ref.pack_codes(a_pad, bits), ref.pack_codes(w_pad, bits), lut, bits, use_onehot
+    )
+    return out[:m, :n]

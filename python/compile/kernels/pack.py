@@ -1,0 +1,79 @@
+"""L1 — bit-packing and quantization Pallas kernels.
+
+The runtime packing stage of the paper (Fig. 1a / Fig. 7 "act-pack"),
+expressed for the TPU VPU: 16 2-bit codes per int32 word via shift+OR
+lane ops. interpret=True per the AOT recipe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pack_kernel(codes_ref, o_ref, *, bits):
+    cpw = ref.CODES_PER_WORD[bits]
+    slot = ref.SLOT_BITS[bits]
+    codes = codes_ref[...].astype(jnp.uint32)
+    r, k = codes.shape
+    grouped = codes.reshape(r, k // cpw, cpw)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * slot)[None, None, :]
+    o_ref[...] = (grouped << shifts).sum(axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def pack_pallas(codes, bits=2):
+    """Pack (R, K) int32 codes → (R, K/cpw) int32 words with a Pallas
+    kernel (row-tiled)."""
+    r, k = codes.shape
+    cpw = ref.CODES_PER_WORD[bits]
+    assert k % cpw == 0
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, k // cpw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k // cpw), jnp.int32),
+        interpret=True,
+    )(codes)
+
+
+def _quantize_kernel(x_ref, o_ref, *, scale, zp, bits):
+    # floor(+0.5) for cross-runtime tie determinism — see ref.quantize_ref.
+    q = jnp.floor(x_ref[...] / scale + 0.5) + zp
+    o_ref[...] = jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "zp", "bits"))
+def quantize_pallas(x, scale, zp, bits=2):
+    """Uniform affine quantization (paper Eq. 1) as a Pallas kernel."""
+    r, k = x.shape
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, scale=scale, zp=zp, bits=bits),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _dequantize_kernel(acc_ref, o_ref, *, scale):
+    o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def dequantize_pallas(acc, scale):
+    """Accumulator → f32 (the Fig. 7 "dequantize" stage)."""
+    r, k = acc.shape
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, scale=scale),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), jnp.float32),
+        interpret=True,
+    )(acc)

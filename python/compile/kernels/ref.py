@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracle for the DeepGEMM LUT kernels (L1).
+
+Everything here is straight-line jax.numpy with no Pallas: the pytest
+suite asserts the Pallas kernels in lut_gemm.py / pack.py reproduce these
+functions bit-exactly (integer paths) or to float tolerance (f32 LUT).
+
+Conventions (mirroring the rust side, rust/src/kernels/mod.rs):
+  - a_codes: (M, K) int32 activation codes in [0, 2^bits)
+  - w_codes: (N, K) int32 weight codes (weights stored transposed)
+  - lut[(cw << bits) | ca] = Vw(cw) * Va(ca)
+  - out[m, n] = sum_k lut[(w[n,k] << bits) | a[m,k]]
+"""
+
+import jax.numpy as jnp
+
+#: Number of 2-bit codes packed per int32 word.
+CODES_PER_WORD = {2: 16, 3: 8, 4: 8}
+#: Bit stride used when packing (3-bit codes are stored in 4-bit slots so
+#: shifts stay power-of-two, matching the rust Dense3 nibble layout).
+SLOT_BITS = {2: 2, 3: 4, 4: 4}
+
+
+def make_lut(w_values, a_values, bits):
+    """Product LUT: lut[(cw << bits) | ca] = w_values[cw] * a_values[ca]."""
+    w_values = jnp.asarray(w_values)
+    a_values = jnp.asarray(a_values)
+    assert w_values.shape == (1 << bits,)
+    assert a_values.shape == (1 << bits,)
+    return (w_values[:, None] * a_values[None, :]).reshape(-1)
+
+
+def uniform_values(bits, signed):
+    """Integer codebook values: code -> code - zp (signed) or code."""
+    codes = jnp.arange(1 << bits, dtype=jnp.int32)
+    return codes - (1 << (bits - 1)) if signed else codes
+
+
+def pack_codes(codes, bits):
+    """Pack (R, K) int32 codes into (R, K/cpw) int32 words (little-endian
+    slots). K must be a multiple of CODES_PER_WORD[bits]."""
+    cpw = CODES_PER_WORD[bits]
+    slot = SLOT_BITS[bits]
+    r, k = codes.shape
+    assert k % cpw == 0, f"K={k} not a multiple of {cpw}"
+    grouped = codes.reshape(r, k // cpw, cpw).astype(jnp.uint32)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * slot)[None, None, :]
+    return (grouped << shifts).sum(axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def unpack_codes(words, bits, k):
+    """Inverse of pack_codes -> (R, K) int32 codes."""
+    cpw = CODES_PER_WORD[bits]
+    slot = SLOT_BITS[bits]
+    mask = (1 << bits) - 1
+    r, nw = words.shape
+    assert nw * cpw >= k
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * slot)[None, None, :]
+    u = words.astype(jnp.uint32)
+    codes = (u[:, :, None] >> shifts) & mask
+    return codes.reshape(r, nw * cpw)[:, :k].astype(jnp.int32)
+
+
+def lut_gemm_ref(a_codes, w_codes, lut, bits):
+    """Reference LUT GEMM on unpacked codes."""
+    idx = (w_codes[None, :, :] << bits) | a_codes[:, None, :]  # (M, N, K)
+    prods = jnp.take(lut, idx.reshape(-1)).reshape(idx.shape)
+    return prods.sum(axis=-1)
+
+
+def quantize_ref(x, scale, zp, bits):
+    """Uniform affine quantization to codes (paper Eq. 1).
+
+    Rounding is floor(x + 0.5) rather than jnp.round: dequantized
+    activations live on an exact grid, so round-half ties actually occur,
+    and jax's round-half-even disagrees with the older XLA runtime the
+    rust side embeds (round-half-away). floor(+0.5) lowers identically
+    in both, keeping the AOT goldens bit-exact.
+    """
+    q = jnp.floor(x / scale + 0.5) + zp
+    return jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.int32)
+
+
+def dequantize_ref(codes, scale, zp):
+    return (codes.astype(jnp.float32) - zp) * scale
+
+
+def quant_gemm_ref(a, w, a_scale, a_zp, w_scale, w_zp, bits):
+    """End-to-end float-in/float-out quantized GEMM reference:
+    quantize both operands, integer LUT GEMM with centered codebooks,
+    dequantize."""
+    a_codes = quantize_ref(a, a_scale, a_zp, bits)
+    w_codes = quantize_ref(w, w_scale, w_zp, bits)
+    wv = jnp.arange(1 << bits, dtype=jnp.int32) - w_zp
+    av = jnp.arange(1 << bits, dtype=jnp.int32) - a_zp
+    lut = make_lut(wv, av, bits)
+    acc = lut_gemm_ref(a_codes, w_codes, lut, bits)
+    return acc.astype(jnp.float32) * (a_scale * w_scale)

@@ -1,0 +1,190 @@
+"""LSQ — Learned Step Size Quantization (Esser et al. [10]), the training
+side of the paper's Tab. 1.
+
+Implements the LSQ quantizer with its custom gradient (straight-through
+estimator for the rounding; the step-size gradient of Eq. 3 of the LSQ
+paper with the 1/sqrt(N·Qp) gradient scale), a small convnet, and a
+training loop on a synthetic 10-class image dataset (the offline
+substitute for ImageNet — see DESIGN.md §6.1).
+
+Run the Tab. 1 analogue with:  python -m compile.lsq_experiment
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- LSQ core
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quantize(v, s, qn, qp):
+    """Fake-quantize v with learned step s: s * clip(round(v/s), -qn, qp)."""
+    return jnp.clip(jnp.round(v / s), -qn, qp) * s
+
+
+def _lsq_fwd(v, s, qn, qp):
+    return lsq_quantize(v, s, qn, qp), (v, s)
+
+
+def _lsq_bwd(qn, qp, res, g):
+    v, s = res
+    vs = v / s
+    inside = (vs > -qn) & (vs < qp)
+    # dL/dv: straight-through inside the clip range.
+    dv = jnp.where(inside, g, 0.0)
+    # dL/ds per LSQ Eq. 3.
+    ds_elem = jnp.where(
+        vs <= -qn,
+        -float(qn),
+        jnp.where(vs >= qp, float(qp), jnp.round(vs) - vs),
+    )
+    gscale = 1.0 / np.sqrt(v.size * max(qp, 1))
+    ds = jnp.sum(g * ds_elem) * gscale
+    return dv, ds
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def quant_ranges(bits, signed):
+    """(qn, qp) code magnitudes for LSQ."""
+    if signed:
+        return (1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return 0, (1 << bits) - 1
+
+
+def init_step(x, bits, signed):
+    """LSQ step initialisation: 2·E|x| / sqrt(Qp)."""
+    _, qp = quant_ranges(bits, signed)
+    return 2.0 * jnp.mean(jnp.abs(x)) / np.sqrt(max(qp, 1))
+
+
+# ------------------------------------------------------------ the network
+def init_params(key, num_classes=10, width=16):
+    k = jax.random.split(key, 5)
+    he = lambda kk, shape, fan: jax.random.normal(kk, shape) * (2.0 / fan) ** 0.5
+    w1 = he(k[0], (width, 3, 3, 3), 27)
+    w2 = he(k[1], (2 * width, width, 3, 3), width * 9)
+    w3 = he(k[2], (2 * width, 2 * width, 3, 3), 2 * width * 9)
+    fc = he(k[3], (num_classes, 2 * width), 2 * width)
+    params = {
+        "w1": w1, "b1": jnp.zeros(width),
+        "w2": w2, "b2": jnp.zeros(2 * width),
+        "w3": w3, "b3": jnp.zeros(2 * width),
+        "fc": fc, "fcb": jnp.zeros(num_classes),
+        # Learned steps: one per quantized tensor (3 weight + 3 act).
+        "sw": jnp.array([init_step(w1, 2, True), init_step(w2, 2, True), init_step(w3, 2, True)]),
+        "sa": jnp.array([0.1, 0.1, 0.1]),
+    }
+    return params
+
+
+def conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    return y + b[None, :, None, None]
+
+
+def forward(params, x, bits):
+    """bits: 32 (fp), 8 or 2. Activations quantize unsigned (post-ReLU
+    inputs are shifted to ≥ 0 by the preceding ReLU); weights signed."""
+    quant_w = bits < 32
+    wq, aq = [], []
+    if quant_w:
+        qn_w, qp_w = quant_ranges(bits, True)
+        _, qp_a = quant_ranges(bits, False)
+        for i, name in enumerate(["w1", "w2", "w3"]):
+            wq.append(lsq_quantize(params[name], params["sw"][i], qn_w, qp_w))
+            aq.append((params["sa"][i], qp_a))
+    else:
+        wq = [params["w1"], params["w2"], params["w3"]]
+
+    h = x
+    strides = [1, 2, 2]
+    for i in range(3):
+        if quant_w:
+            # Quantize the conv input (unsigned after first layer's tanh-ish
+            # range; LSQ unsigned clips negatives to 0 like ReLU would).
+            s, qp_a = aq[i]
+            h = lsq_quantize(h, s, 0, qp_a)
+        h = conv(h, wq[i], params[f"b{i+1}"], strides[i])
+        h = jax.nn.relu(h)
+    h = h.mean(axis=(2, 3))
+    return h @ params["fc"].T + params["fcb"][None, :]
+
+
+# --------------------------------------------------------------- data/train
+def synthetic_dataset(key, n_per_class=400, classes=10, hw=16, noise=0.35):
+    """Separable-but-noisy synthetic images: smooth class prototypes plus
+    gaussian noise (the offline ImageNet stand-in)."""
+    kp, kn, ks = jax.random.split(key, 3)
+    freq = jax.random.normal(kp, (classes, 3, 4))  # low-freq coefficients
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, hw), jnp.linspace(0, 1, hw), indexing="ij")
+    basis = jnp.stack(
+        [jnp.sin(2 * np.pi * yy), jnp.cos(2 * np.pi * xx),
+         jnp.sin(4 * np.pi * xx * yy), jnp.cos(2 * np.pi * (xx + yy))]
+    )  # (4, H, W)
+    protos = jnp.einsum("kcf,fhw->kchw", freq, basis)  # (classes, 3, H, W)
+    n = classes * n_per_class
+    labels = jnp.repeat(jnp.arange(classes), n_per_class)
+    noise_imgs = jax.random.normal(kn, (n, 3, hw, hw)) * noise
+    imgs = protos[labels] + noise_imgs
+    perm = jax.random.permutation(ks, n)
+    return imgs[perm], labels[perm]
+
+
+def loss_fn(params, x, y, bits):
+    logits = forward(params, x, bits)
+    onehot = jax.nn.one_hot(y, logits.shape[-1])
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+
+
+def accuracy(params, x, y, bits, batch=256):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(params, x[i : i + batch], bits)
+        correct += int((logits.argmax(-1) == y[i : i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train(bits, steps=300, batch=64, lr=3e-3, seed=0, n_per_class=300, noise=1.2, verbose=False):
+    """Train the small convnet at the given precision; returns (test_acc,
+    loss_history)."""
+    key = jax.random.PRNGKey(seed)
+    kd, kp, kb = jax.random.split(key, 3)
+    x, y = synthetic_dataset(kd, n_per_class=n_per_class, noise=noise)
+    n_test = x.shape[0] // 5
+    xtr, ytr = x[n_test:], y[n_test:]
+    xte, yte = x[:n_test], y[:n_test]
+    params = init_params(kp)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn), static_argnames=("bits",))
+    # Adam.
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    losses = []
+    for step in range(steps):
+        kb, ks = jax.random.split(kb)
+        idx = jax.random.randint(ks, (batch,), 0, xtr.shape[0])
+        loss, g = grad_fn(params, xtr[idx], ytr[idx], bits)
+        losses.append(float(loss))
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = step + 1
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+        v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+        params = jax.tree.map(
+            lambda p, mm, vv: p
+            - lr * (mm / (1 - b1**t)) / (jnp.sqrt(vv / (1 - b2**t)) + eps),
+            params,
+            m,
+            v,
+        )
+        # Steps must stay positive.
+        params["sw"] = jnp.maximum(params["sw"], 1e-5)
+        params["sa"] = jnp.maximum(params["sa"], 1e-5)
+        if verbose and step % 50 == 0:
+            print(f"  step {step:4d} loss {loss:.3f}")
+    return accuracy(params, xte, yte, bits), losses

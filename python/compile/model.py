@@ -1,0 +1,115 @@
+"""L2 — the quantized model graph in JAX, built on the L1 Pallas kernels.
+
+`QuantConv2d` lowers convolution to im2col + the packed LUT GEMM — the
+same pipeline as the rust engine (quantize → im2col → pack → Lut-Conv →
+dequantize), so the AOT artifacts exercise every stage. `SmallCNN` is the
+model lowered to HLO for the rust PJRT runtime (and the LSQ experiment's
+backbone).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lut_gemm, ref
+
+
+def im2col(x, kh, kw, stride, pad):
+    """NCHW (1, C, H, W) → (M, K) patches, K = C·kh·kw (matching the rust
+    engine's column order: channel-major, then ky, kx)."""
+    n, c, h, w = x.shape
+    assert n == 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (1, C*kh*kw, OH, OW) with K ordered (c, ky, kx)
+    k = c * kh * kw
+    return patches.reshape(k, -1).T  # (M, K)
+
+
+class QuantConv2d:
+    """2-bit (by default) LUT-GEMM convolution with uniform quantizers.
+
+    Weights: symmetric signed codes; activations: unsigned (post-ReLU)
+    codes. The LUT stores centered integer products; dequant multiplies
+    by the scale product — identical semantics to the rust engine.
+    """
+
+    def __init__(self, key, in_ch, out_ch, k, stride=1, pad=0, bits=2, relu=True):
+        self.in_ch, self.out_ch, self.k = in_ch, out_ch, k
+        self.stride, self.pad, self.bits, self.relu = stride, pad, bits, relu
+        wkey, bkey = jax.random.split(key)
+        fan_in = in_ch * k * k
+        self.weight = jax.random.normal(wkey, (out_ch, fan_in)) * (2.0 / fan_in) ** 0.5
+        self.bias = jax.random.uniform(bkey, (out_ch,), minval=-0.05, maxval=0.05)
+        # Offline weight quantization.
+        self.w_scale = float(jnp.max(jnp.abs(self.weight))) / (1 << (bits - 1)) + 1e-12
+        self.w_zp = 1 << (bits - 1)
+        self.w_codes = ref.quantize_ref(self.weight, self.w_scale, self.w_zp, bits)
+
+    def lut_for(self, a_zp):
+        wv = jnp.arange(1 << self.bits, dtype=jnp.int32) - self.w_zp
+        av = jnp.arange(1 << self.bits, dtype=jnp.int32) - a_zp
+        return ref.make_lut(wv, av, self.bits)
+
+    def __call__(self, x, a_scale, a_zp, use_pallas=True):
+        """x: (1, C, H, W) f32. Returns (1, out_ch, OH, OW) f32."""
+        n, c, h, w = x.shape
+        oh = (h + 2 * self.pad - self.k) // self.stride + 1
+        ow = (w + 2 * self.pad - self.k) // self.stride + 1
+        cols = im2col(x, self.k, self.k, self.stride, self.pad)  # (M, K)
+        a_codes = ref.quantize_ref(cols, a_scale, a_zp, self.bits)
+        lut = self.lut_for(a_zp)
+        if use_pallas:
+            acc = lut_gemm.lut_gemm(
+                a_codes, self.w_codes, lut, self.bits, w_zero_code=self.w_zp
+            )
+        else:
+            acc = ref.lut_gemm_ref(a_codes, self.w_codes, lut, self.bits)
+        y = acc.astype(jnp.float32) * (self.w_scale * a_scale) + self.bias[None, :]
+        y = y.T.reshape(1, self.out_ch, oh, ow)
+        return jnp.maximum(y, 0.0) if self.relu else y
+
+
+class SmallCNN:
+    """Quantized small CNN (3 convs + GAP + linear head) — the model
+    artifact lowered for the rust PJRT runtime."""
+
+    def __init__(self, key, num_classes=10, bits=2, in_hw=16):
+        keys = jax.random.split(key, 4)
+        self.in_hw = in_hw
+        self.convs = [
+            QuantConv2d(keys[0], 3, 8, 3, stride=1, pad=1, bits=bits),
+            QuantConv2d(keys[1], 8, 16, 3, stride=2, pad=1, bits=bits),
+            QuantConv2d(keys[2], 16, 32, 3, stride=2, pad=1, bits=bits),
+        ]
+        # Per-layer activation quantizers: input is in [-1, 1]; later
+        # activations are post-ReLU. Scales are rough static calibrations
+        # (the LSQ experiment learns them instead).
+        self.act_q = [(2.0 / 3, 2), (1.0, 0), (1.0, 0)]
+        self.fc_w = jax.random.normal(keys[3], (num_classes, 32)) * (1.0 / 32) ** 0.5
+        self.fc_b = jnp.zeros((num_classes,))
+
+    def __call__(self, x, use_pallas=True):
+        for conv, (s, zp) in zip(self.convs, self.act_q):
+            x = conv(x, s, zp, use_pallas=use_pallas)
+        x = x.mean(axis=(2, 3))  # (1, C)
+        return x @ self.fc_w.T + self.fc_b[None, :]
+
+
+def quant_gemm_pipeline(a, w, bits=2):
+    """Float-in/float-out quantized GEMM: the artifact function for the
+    per-shape PJRT benchmarks. `a`: (M, K) f32, `w`: (N, K) f32."""
+    a_scale = 1.0 / ((1 << bits) - 1)
+    a_zp = 0
+    w_scale = 1.0 / (1 << (bits - 1))
+    w_zp = 1 << (bits - 1)
+    a_codes = ref.quantize_ref(a, a_scale, a_zp, bits)
+    w_codes = ref.quantize_ref(w, w_scale, w_zp, bits)
+    wv = jnp.arange(1 << bits, dtype=jnp.int32) - w_zp
+    av = jnp.arange(1 << bits, dtype=jnp.int32) - a_zp
+    lut = ref.make_lut(wv, av, bits)
+    acc = lut_gemm.lut_gemm(a_codes, w_codes, lut, bits, w_zero_code=w_zp)
+    return acc.astype(jnp.float32) * (a_scale * w_scale)

@@ -1,0 +1,60 @@
+"""AOT pipeline tests: HLO text hygiene (the large-constant and metadata
+pitfalls that corrupt the rust round-trip), manifest validity, golden
+self-consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as ml
+
+
+def _emit_one(tmp_path):
+    cnn = ml.SmallCNN(jax.random.PRNGKey(1), num_classes=4, bits=2, in_hw=8)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (1, 3, 8, 8), minval=-1, maxval=1)
+    entry = aot.emit(str(tmp_path), "t_model", lambda x: (cnn(x),), [x], {"k": "v"})
+    return entry, cnn, x
+
+
+def test_hlo_text_has_full_constants_and_no_metadata(tmp_path):
+    entry, _, _ = _emit_one(tmp_path)
+    text = open(os.path.join(tmp_path, entry["hlo"])).read()
+    assert "constant({...})" not in text, "large constants were elided"
+    assert "source_end_line" not in text, "new-parser-only metadata present"
+    assert "ENTRY" in text
+
+
+def test_manifest_entry_shape(tmp_path):
+    entry, _, x = _emit_one(tmp_path)
+    assert entry["name"] == "t_model"
+    assert entry["inputs"] == [{"shape": [1, 3, 8, 8], "dtype": "f32"}]
+    assert entry["outputs"][0]["shape"] == [1, 4]
+    assert entry["tags"] == {"k": "v"}
+
+
+def test_golden_self_consistency(tmp_path):
+    """Golden outputs must equal re-running the jitted fn on the recorded
+    inputs (guards against accidental nondeterminism in emit)."""
+    entry, cnn, _ = _emit_one(tmp_path)
+    g = json.load(open(os.path.join(tmp_path, entry["golden"])))
+    x = jnp.asarray(np.array(g["inputs"][0], np.float32).reshape(1, 3, 8, 8))
+    want = np.array(g["outputs"][0], np.float32)
+    got = np.asarray(jax.jit(lambda x: (cnn(x),))(x)[0]).reshape(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_quant_gemm_artifact_fn_deterministic(tmp_path):
+    a = jax.random.uniform(jax.random.PRNGKey(3), (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(4), (8, 32)) * 0.3
+    y1 = ml.quant_gemm_pipeline(a, w, 2)
+    y2 = jax.jit(lambda a, w: ml.quant_gemm_pipeline(a, w, 2))(a, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_shapes_list_is_sane():
+    for m, n, k in aot.GEMM_SHAPES:
+        assert m % 8 == 0 and n % 8 == 0 and k % 16 == 0

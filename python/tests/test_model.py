@@ -1,0 +1,88 @@
+"""L2 model tests: im2col correctness, QuantConv2d vs float conv,
+SmallCNN pipeline consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as ml
+from compile.kernels import ref
+
+
+def test_im2col_matches_lax_conv():
+    """im2col + dense GEMM == lax.conv for random f32 weights."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 3, 10, 10))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (5, 3, 3, 3))
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((1, 1), (1, 1)), dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    cols = ml.im2col(x, 3, 3, 1, 1)  # (M, K)
+    got = (cols @ w.reshape(5, -1).T).T.reshape(1, 5, 10, 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_stride_and_pad():
+    x = jnp.arange(1 * 1 * 4 * 4, dtype=jnp.float32).reshape(1, 1, 4, 4)
+    cols = ml.im2col(x, 2, 2, 2, 0)
+    assert cols.shape == (4, 4)
+    # First patch = pixels (0,0),(0,1),(1,0),(1,1) = 0,1,4,5.
+    np.testing.assert_array_equal(np.asarray(cols[0]), [0, 1, 4, 5])
+
+
+def test_quantconv_pallas_equals_ref_path():
+    conv = ml.QuantConv2d(jax.random.PRNGKey(1), 3, 6, 3, stride=1, pad=1, bits=2)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (1, 3, 8, 8), minval=-1, maxval=1)
+    y_pallas = conv(x, 2.0 / 3, 2, use_pallas=True)
+    y_ref = conv(x, 2.0 / 3, 2, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+    assert y_pallas.shape == (1, 6, 8, 8)
+
+
+def test_quantconv_tracks_float_conv():
+    """2-bit conv correlates strongly with its float counterpart."""
+    conv = ml.QuantConv2d(jax.random.PRNGKey(3), 3, 8, 3, stride=1, pad=1, bits=2, relu=False)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (1, 3, 12, 12), minval=0, maxval=1)
+    y_q = conv(x, 1.0 / 3, 0)
+    w4d = conv.weight.reshape(8, 3, 3, 3)
+    y_f = jax.lax.conv_general_dilated(
+        x, w4d, (1, 1), ((1, 1), (1, 1)), dimension_numbers=("NCHW", "OIHW", "NCHW")
+    ) + conv.bias[None, :, None, None]
+    corr = np.corrcoef(np.asarray(y_q).ravel(), np.asarray(y_f).ravel())[0, 1]
+    assert corr > 0.85, corr
+
+
+def test_small_cnn_shapes_and_determinism():
+    cnn = ml.SmallCNN(jax.random.PRNGKey(5), num_classes=7, bits=2, in_hw=16)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (1, 3, 16, 16), minval=-1, maxval=1)
+    y1 = cnn(x)
+    y2 = cnn(x)
+    assert y1.shape == (1, 7)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_small_cnn_pallas_vs_ref():
+    cnn = ml.SmallCNN(jax.random.PRNGKey(7), num_classes=10, bits=2, in_hw=16)
+    x = jax.random.uniform(jax.random.PRNGKey(8), (1, 3, 16, 16), minval=-1, maxval=1)
+    yp = cnn(x, use_pallas=True)
+    yr = cnn(x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def test_quant_gemm_pipeline_shapes():
+    a = jnp.ones((10, 20), jnp.float32) * 0.5
+    w = jnp.ones((6, 20), jnp.float32) * -0.25
+    out = ml.quant_gemm_pipeline(a, w, bits=2)
+    assert out.shape == (10, 6)
+    # All-equal inputs → all-equal outputs.
+    assert float(jnp.std(out)) < 1e-6
+
+
+def test_quantize_grid_is_exact_for_grid_inputs():
+    """Inputs already on the dequant grid must round-trip exactly (the
+    property that made tie-handling matter for the AOT goldens)."""
+    scale, zp, bits = 0.25, 2, 2
+    codes = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    x = ref.dequantize_ref(codes, scale, zp)
+    back = ref.quantize_ref(x, scale, zp, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))

@@ -1,0 +1,106 @@
+"""Unit + property tests for the pure-jnp reference layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_pack_unpack_roundtrip_exact(bits):
+    rng = np.random.default_rng(bits)
+    cpw = ref.CODES_PER_WORD[bits]
+    codes = jnp.asarray(rng.integers(0, 1 << bits, (5, cpw * 7)), jnp.int32)
+    words = ref.pack_codes(codes, bits)
+    assert words.shape == (5, 7)
+    back = ref.unpack_codes(words, bits, codes.shape[1])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4]),
+    rows=st.integers(1, 6),
+    words=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_roundtrip_property(bits, rows, words, seed):
+    rng = np.random.default_rng(seed)
+    k = words * ref.CODES_PER_WORD[bits]
+    codes = jnp.asarray(rng.integers(0, 1 << bits, (rows, k)), jnp.int32)
+    back = ref.unpack_codes(ref.pack_codes(codes, bits), bits, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_make_lut_matches_products():
+    wv = jnp.asarray([-2, -1, 0, 1], jnp.int32)
+    av = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    lut = ref.make_lut(wv, av, 2)
+    assert lut.shape == (16,)
+    for cw in range(4):
+        for ca in range(4):
+            assert int(lut[(cw << 2) | ca]) == int(wv[cw]) * int(av[ca])
+
+
+def test_lut_gemm_ref_hand_example():
+    # a = [[0,1,2,3]], w = [[3,3,3,3]] signed weights (value 1), unsigned a.
+    a = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    w = jnp.asarray([[3, 3, 3, 3]], jnp.int32)
+    lut = ref.make_lut(jnp.arange(4, dtype=jnp.int32) - 2, jnp.arange(4, dtype=jnp.int32), 2)
+    out = ref.lut_gemm_ref(a, w, lut, 2)
+    assert out.shape == (1, 1)
+    assert int(out[0, 0]) == 0 + 1 + 2 + 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31), bits=st.sampled_from([2, 3, 4]))
+def test_lut_gemm_ref_equals_dense_dot(seed, bits):
+    """LUT GEMM over centered codebooks == plain integer matmul of the
+    centered code values."""
+    rng = np.random.default_rng(seed)
+    m, n, k = rng.integers(1, 6), rng.integers(1, 6), rng.integers(1, 40)
+    a = jnp.asarray(rng.integers(0, 1 << bits, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 1 << bits, (n, k)), jnp.int32)
+    zp = 1 << (bits - 1)
+    lut = ref.make_lut(
+        jnp.arange(1 << bits, dtype=jnp.int32) - zp,
+        jnp.arange(1 << bits, dtype=jnp.int32),
+        bits,
+    )
+    got = ref.lut_gemm_ref(a, w, lut, bits)
+    want = (a[:, None, :] * (w[None, :, :] - zp)).sum(-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_ref_clips_and_rounds():
+    x = jnp.asarray([[-10.0, -0.26, -0.24, 0.0, 0.24, 0.26, 10.0]])
+    codes = ref.quantize_ref(x, 0.5, 2, 2)
+    np.testing.assert_array_equal(
+        np.asarray(codes)[0], [0, 1, 2, 2, 2, 3, 3]
+    )
+
+
+def test_quantize_dequantize_error_bound():
+    rng = np.random.default_rng(9)
+    # 2-bit signed grid spans [-2, 1]·scale = [-1.0, 0.5]; stay inside it
+    # (edge clipping costs up to a full step and is tested elsewhere).
+    x = jnp.asarray(rng.uniform(-0.95, 0.45, (4, 100)), jnp.float32)
+    scale, zp, bits = 0.5, 2, 2
+    codes = ref.quantize_ref(x, scale, zp, bits)
+    back = ref.dequantize_ref(codes, scale, zp)
+    # In-range values round to within half a step.
+    assert float(jnp.max(jnp.abs(back - x))) <= scale / 2 + 1e-6
+
+
+def test_quant_gemm_ref_tracks_float_gemm():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0, 1, (8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.3, (4, 64)), jnp.float32)
+    got = ref.quant_gemm_ref(a, w, 1.0 / 3, 0, 0.25, 2, 2)
+    want = a @ w.T
+    # 2-bit quantization: loose agreement, but correlation must be high.
+    g, t = np.asarray(got).ravel(), np.asarray(want).ravel()
+    corr = np.corrcoef(g, t)[0, 1]
+    assert corr > 0.9, corr

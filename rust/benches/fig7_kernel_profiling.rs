@@ -1,0 +1,144 @@
+//! Paper Fig. 7: low-level kernel profiling on x86 — per-stage breakdown
+//! of the quantized convolution pipeline (act-quantize / act-pack /
+//! Lut-Conv / dequantize; we report im2col separately where the paper
+//! folds it into packing), plus the intra-LutConv unpack/lookup/accumulate
+//! split that the paper attributes ~80% / ~20% via VTune.
+//!
+//! Expected shape: Lut-Conv dominates; within it, unpacking is the
+//! majority (the paper's headline profiling insight and the motivation
+//! for schemes b–d and future work).
+
+use deepgemm::bench::{bench, BenchOpts, Table};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::{self, Scheme};
+use deepgemm::kernels::{Backend, CodeMat};
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::{Stage, StageProfile};
+use deepgemm::quant::{IntCodebook, Lut16};
+
+fn stage_table(model_name: &str, backend: Backend, iters: usize) -> Table {
+    let graph = zoo::build(model_name, 1000, 0).expect("build");
+    let (c, h, w) = graph.input_chw;
+    let x = Tensor::random(&[1, c, h, w], 3, -1.0, 1.0);
+    let model = CompiledModel::compile(graph, backend, &[x.clone()]).expect("compile");
+    let mut prof = StageProfile::new();
+    model.forward(&x, &mut StageProfile::new()).expect("warmup");
+    for _ in 0..iters {
+        model.forward(&x, &mut prof).expect("fwd");
+    }
+    let mut t = Table::new(
+        format!("Fig 7 — stage breakdown: {model_name} / {}", backend.name()),
+        &["ms", "% of total"],
+    );
+    let total = prof.total();
+    for st in Stage::ALL {
+        if prof.calls(st) > 0 {
+            t.row(st.name(), vec![prof.secs(st) * 1e3 / iters as f64, 100.0 * prof.secs(st) / total]);
+        }
+    }
+    t
+}
+
+/// Intra-LutConv split via materialized two-pass execution (scheme a):
+/// pass 1 computes the 4 index vectors per 32-byte chunk (unpack); pass 2
+/// does shuffle+sad from the materialized indices (lookup+accumulate).
+#[cfg(target_arch = "x86_64")]
+mod split {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_pass(a: &[u8], w: &[u8], idx_out: &mut [u8]) {
+        let m3 = _mm256_set1_epi8(0x03);
+        let mc = _mm256_set1_epi8(0x0C);
+        let chunks = a.len() / 32;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(32 * c) as *const __m256i);
+            let vw = _mm256_loadu_si256(w.as_ptr().add(32 * c) as *const __m256i);
+            let i0 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                _mm256_and_si256(va, m3),
+            );
+            let i1 = _mm256_or_si256(
+                _mm256_and_si256(vw, mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+            );
+            let i2 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+            );
+            let i3 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+            );
+            for (r, v) in [i0, i1, i2, i3].into_iter().enumerate() {
+                _mm256_storeu_si256(
+                    idx_out.as_mut_ptr().add(128 * c + 32 * r) as *mut __m256i,
+                    v,
+                );
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lookup_accum_pass(idx: &[u8], table: &[u8; 16]) -> i64 {
+        let tt = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+        let lut = _mm256_broadcastsi128_si256(tt);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..idx.len() / 32 {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(32 * c) as *const __m256i);
+            let prod = _mm256_shuffle_epi8(lut, iv);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+        }
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256(acc, 1);
+        let d = _mm_add_epi64(hi, lo);
+        let e = _mm_shuffle_epi32(d, 238);
+        _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+    }
+}
+
+fn main() {
+    let quick = std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1");
+    // Stage breakdown on a real network.
+    let model = if quick { "small_cnn" } else { "resnet18" };
+    let t = stage_table(model, Backend::Lut16(Scheme::D), if quick { 1 } else { 2 });
+    print!("{}", t.render());
+    t.write_json("fig7_stages").expect("json");
+
+    // Intra-LutConv split (paper: unpack ≈ 80% of Lut-Conv).
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            let opts = BenchOpts::from_env();
+            let k = 1 << 16; // 64k values per row
+            let a = CodeMat::random(1, k, 2, 1);
+            let w = CodeMat::random(1, k, 2, 2);
+            let ap = pack::pack(&a, pack::Layout::Dense);
+            let wp = pack::pack(&w, pack::Layout::Dense);
+            let lut = Lut16::build(&IntCodebook::signed(2), &IntCodebook::unsigned(2));
+            let mut table = [0u8; 16];
+            table.copy_from_slice(&lut.table);
+            let mut idx = vec![0u8; ap.row(0).len() * 4];
+            let t_unpack = bench("unpack", &opts, || unsafe {
+                split::unpack_pass(ap.row(0), wp.row(0), &mut idx);
+                std::hint::black_box(&idx);
+            })
+            .secs();
+            let t_lookup = bench("lookup+accum", &opts, || unsafe {
+                std::hint::black_box(split::lookup_accum_pass(&idx, &table));
+            })
+            .secs();
+            let mut t2 = Table::new(
+                "Fig 7 (inset) — inside Lut-Conv (scheme a, materialized passes)",
+                &["ms per 64k MACs", "% of Lut-Conv"],
+            );
+            let total = t_unpack + t_lookup;
+            t2.row("unpack", vec![t_unpack * 1e3, 100.0 * t_unpack / total]);
+            t2.row("lookup+accumulate", vec![t_lookup * 1e3, 100.0 * t_lookup / total]);
+            t2.note("paper (VTune): unpack ~80% of Lut-Conv");
+            print!("{}", t2.render());
+            t2.write_json("fig7_lutconv_split").expect("json");
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Paper Fig. 8: kernel profiling on the Arm platform (Raspberry Pi 4B),
+//! where Neon's lack of a 128-bit table-lookup instruction makes the LUT
+//! approach uncompetitive.
+//!
+//! Offline substitution (DESIGN.md §6.4): the [`Backend::Portable`]
+//! scalar kernel plays the "no fast byte-shuffle" role on the same
+//! machine. Expected shape: Lut-Conv fraction balloons vs the AVX2
+//! profile, and the portable LUT kernel *loses* to INT8 — exactly the
+//! paper's Arm story.
+
+use deepgemm::bench::{support, BenchOpts, Table};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::{Backend, GemmSize};
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::{Stage, StageProfile};
+use deepgemm::util::geomean;
+
+fn main() {
+    let opts = BenchOpts {
+        warmup: 0.05,
+        measure: 0.3,
+        max_samples: 30,
+        ..BenchOpts::from_env()
+    };
+    // Stage profile with the portable kernel (small_cnn keeps the scalar
+    // path tractable — the RPi in the paper is ~20x slower than its x86).
+    let graph = zoo::build("small_cnn", 10, 0).expect("build");
+    let x = Tensor::random(&[1, 3, 32, 32], 3, -1.0, 1.0);
+    let model =
+        CompiledModel::compile(graph, Backend::Portable, &[x.clone()]).expect("compile");
+    let mut prof = StageProfile::new();
+    model.forward(&x, &mut StageProfile::new()).expect("warmup");
+    for _ in 0..5 {
+        model.forward(&x, &mut prof).expect("fwd");
+    }
+    let mut t = Table::new(
+        "Fig 8 — stage breakdown with the portable (no-byte-shuffle) kernel",
+        &["ms", "% of total"],
+    );
+    let total = prof.total();
+    for st in Stage::ALL {
+        if prof.calls(st) > 0 {
+            t.row(st.name(), vec![prof.secs(st) * 1e3 / 5.0, 100.0 * prof.secs(st) / total]);
+        }
+    }
+    t.note("portable scalar LUT = the 'Arm without tbl' stand-in (DESIGN.md §6.4)");
+    print!("{}", t.render());
+    t.write_json("fig8_stages").expect("json");
+
+    // Portable LUT vs INT8 on a few layer shapes: the LUT advantage must
+    // evaporate without a vector table lookup.
+    let shapes = [
+        GemmSize::new(196, 64, 576),
+        GemmSize::new(784, 32, 288),
+        GemmSize::new(49, 128, 1152),
+    ];
+    let mut t2 = Table::new(
+        "Fig 8 (companion) — portable LUT vs INT8 per-layer speedup",
+        &["int8 ms", "portable-lut ms", "speedup"],
+    );
+    let mut sps = Vec::new();
+    for size in shapes {
+        let t_int8 = support::time_backend(Backend::Int8, size, &opts);
+        let t_port = support::time_backend(Backend::Portable, size, &opts);
+        sps.push(t_int8 / t_port);
+        t2.row(
+            format!("({},{},{})", size.m, size.n, size.k),
+            vec![t_int8 * 1e3, t_port * 1e3, t_int8 / t_port],
+        );
+    }
+    let geo = geomean(&sps);
+    t2.note(format!(
+        "geomean {geo:.3} — expected < 1 (vs AVX2 lut16-d > 1): no shuffle, no win"
+    ));
+    print!("{}", t2.render());
+    t2.write_json("fig8_portable_vs_int8").expect("json");
+
+    // Sanity on the expected shape: vectorized lut16-d must beat the
+    // portable kernel by a wide margin.
+    let size = GemmSize::new(196, 64, 576);
+    let t_simd = support::time_backend(Backend::Lut16(Scheme::D), size, &opts);
+    let t_port = support::time_backend(Backend::Portable, size, &opts);
+    println!(
+        "\nvector/scalar LUT ratio at (196,64,576): {:.1}x (paper's x86-vs-Arm gap analogue)",
+        t_port / t_simd
+    );
+    assert!(t_port > t_simd, "portable must be slower than AVX2 lut16");
+}

@@ -1,0 +1,60 @@
+//! Paper Tab. 2: scaling LUT-16 to larger bitwidths (2/3/4-bit) — table
+//! metadata (index width, entries, size, AVX2 registers, L1 fit) plus the
+//! *measured* latency cost of the bigger tables on a fixed GEMM shape.
+//!
+//! Expected shape: all three fit in L1; LUT access cost rises modestly
+//! from 2-bit (1 shuffle) to 3-bit (2 tables + blends) to 4-bit (16
+//! tables + compare/mask).
+
+use deepgemm::bench::{support, BenchOpts, Table};
+use deepgemm::kernels::{Backend, GemmSize};
+use deepgemm::quant::{IntCodebook, Lut16};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let size = GemmSize::new(128, 64, 576);
+    let mut t = Table::new(
+        "Tab 2 — scaling LUT-16 to larger bitwidths",
+        &[
+            "index bits",
+            "LUT entries",
+            "LUT bits",
+            "AVX2 regs",
+            "fits L1 (32KB)",
+            "gemm ms",
+            "vs 2-bit",
+        ],
+    );
+    let mut base = 0.0;
+    for bits in [2u32, 3, 4] {
+        let cb = IntCodebook::signed(bits);
+        let lut = Lut16::build(&cb, &IntCodebook::unsigned(bits));
+        let backend = if bits == 2 {
+            Backend::Lut16(deepgemm::kernels::pack::Scheme::D)
+        } else {
+            Backend::LutWide(bits)
+        };
+        let secs = support::time_backend(backend, size, &opts);
+        if bits == 2 {
+            base = secs;
+        }
+        t.row(
+            format!("{bits}-bit"),
+            vec![
+                (2 * bits) as f64,
+                lut.entries() as f64,
+                lut.size_bits() as f64,
+                lut.avx2_registers() as f64,
+                (lut.size_bits() / 8 <= 32 * 1024) as u8 as f64,
+                secs * 1e3,
+                secs / base,
+            ],
+        );
+    }
+    t.note(format!(
+        "paper Tab.2: entries 16/64/256, size 128/512/2048 bits, regs 1/2/8, all fit L1; gemm at (M,N,K)=({},{},{})",
+        size.m, size.n, size.k
+    ));
+    print!("{}", t.render());
+    t.write_json("tab2_lut_scaling").expect("write json");
+}

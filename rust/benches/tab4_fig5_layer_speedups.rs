@@ -1,0 +1,67 @@
+//! Paper Tab. 4 + Fig. 5: per-layer speedups of DeepGEMM (LUT-16 2-bit)
+//! over the QNNPACK-style INT8 baseline, across the conv layer shapes of
+//! MobileNetV1 / ResNet18 / ResNet34 / ResNet50.
+//!
+//! Paper reference geomeans: 1.74× / 1.64× / 1.67× / 1.57× (avg 1.66×).
+//! Expected shape on this testbed: LUT-16 > 1× everywhere except very
+//! small K, gap growing with K (the kernel is vectorized along K).
+
+use deepgemm::bench::{support, BenchOpts, Table};
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::util::geomean;
+
+fn main() {
+    let opts = BenchOpts {
+        warmup: 0.05,
+        measure: 0.35,
+        max_samples: 40,
+        ..BenchOpts::from_env()
+    };
+    let models = [
+        ("mobilenet_v1", 1.74),
+        ("resnet18", 1.64),
+        ("resnet34", 1.67),
+        ("resnet50", 1.57),
+    ];
+    let mut summary = Table::new(
+        "Tab 4 — geomean conv-layer speedup over INT8 (paper in parens)",
+        &["geomean speedup", "paper"],
+    );
+    let mut all_geo = Vec::new();
+    for (model, paper) in models {
+        let layers = support::model_gemms(model).expect("model inventory");
+        let mut fig5 = Table::new(
+            format!("Fig 5 — {model}: per-layer latency & speedup"),
+            &["M", "N", "K", "int8 ms", "lut16 ms", "speedup"],
+        );
+        let mut speedups = Vec::new();
+        for (name, size) in &layers {
+            let t_int8 = support::time_backend(Backend::Int8, *size, &opts);
+            let t_lut = support::time_backend(Backend::Lut16(Scheme::D), *size, &opts);
+            let sp = t_int8 / t_lut;
+            speedups.push(sp);
+            fig5.row(
+                format!("{name} ({},{},{})", size.m, size.n, size.k),
+                vec![
+                    size.m as f64,
+                    size.n as f64,
+                    size.k as f64,
+                    t_int8 * 1e3,
+                    t_lut * 1e3,
+                    sp,
+                ],
+            );
+        }
+        let geo = geomean(&speedups);
+        all_geo.push(geo);
+        fig5.note(format!("geomean speedup = {geo:.3} (paper: {paper})"));
+        print!("{}", fig5.render());
+        fig5.write_json(&format!("fig5_{model}")).expect("write json");
+        summary.row(model, vec![geo, paper]);
+    }
+    summary.row("average", vec![geomean(&all_geo), 1.66]);
+    summary.note("backend lut16-d (scheme d) vs QNNPACK-style int8 (unpack+pmaddwd)");
+    print!("{}", summary.render());
+    summary.write_json("tab4_geomeans").expect("write json");
+}

@@ -1,0 +1,76 @@
+//! Paper Tab. 5 + Fig. 6: end-to-end model inference speedups over the
+//! INT8 baseline (all conv layers quantized; includes activation
+//! quantize/pack/dequant overheads, exactly as §5.2 measures).
+//!
+//! Paper reference: ResNet18 1.62×, ResNet34 1.68×, ResNet50 1.59×,
+//! ResNeXt101 1.50×, GoogleNet 1.50×, InceptionV3 1.58× (avg 1.58×).
+//! Expected shape: e2e gains smaller than per-layer gains (overheads),
+//! biggest on ResNets where conv GEMMs dominate.
+//!
+//! Full-size ImageNet graphs at 224²/299² are heavy on one debug core;
+//! DEEPGEMM_BENCH_QUICK=1 restricts to ResNet18 + GoogleNet.
+
+use deepgemm::bench::Table;
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::StageProfile;
+use deepgemm::util::geomean;
+use std::time::Instant;
+
+fn run_model(model: CompiledModel, x: &Tensor, iters: usize) -> f64 {
+    let mut prof = StageProfile::new();
+    model.forward(x, &mut prof).expect("warmup"); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        model.forward(x, &mut prof).expect("forward");
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1");
+    let models: Vec<(&str, f64)> = if quick {
+        vec![("resnet18", 1.62), ("googlenet", 1.50)]
+    } else {
+        vec![
+            ("resnet18", 1.62),
+            ("resnet34", 1.68),
+            ("resnet50", 1.59),
+            ("resnext101", 1.50),
+            ("googlenet", 1.50),
+            ("inception_v3", 1.58),
+        ]
+    };
+    let iters = if quick { 1 } else { 2 };
+    let mut t = Table::new(
+        "Tab 5 / Fig 6 — end-to-end speedup over INT8",
+        &["int8 ms", "lut16-d ms", "speedup", "paper"],
+    );
+    let mut sps = Vec::new();
+    for (name, paper) in &models {
+        eprintln!("[e2e] building {name}...");
+        let graph = zoo::build(name, 1000, 0).expect("build");
+        let (c, h, w) = graph.input_chw;
+        let x = Tensor::random(&[1, c, h, w], 42, -1.0, 1.0);
+        let calib = [x.clone()];
+        eprintln!("[e2e] compiling {name} for int8...");
+        let m_int8 = CompiledModel::compile(graph.clone(), Backend::Int8, &calib).expect("int8");
+        let t_int8 = run_model(m_int8, &x, iters);
+        eprintln!("[e2e] compiling {name} for lut16-d...");
+        let m_lut =
+            CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &calib).expect("lut");
+        let t_lut = run_model(m_lut, &x, iters);
+        let sp = t_int8 / t_lut;
+        sps.push(sp);
+        eprintln!("[e2e] {name}: int8 {:.1} ms, lut {:.1} ms, speedup {sp:.3}", t_int8 * 1e3, t_lut * 1e3);
+        t.row(*name, vec![t_int8 * 1e3, t_lut * 1e3, sp, *paper]);
+    }
+    t.row("average", vec![f64::NAN, f64::NAN, geomean(&sps), 1.58]);
+    t.note("depthwise convs run the same direct path in both engines; non-conv ops identical");
+    print!("{}", t.render());
+    t.write_json("tab5_fig6_end_to_end").expect("write json");
+}

@@ -1,0 +1,389 @@
+//! Benchmark harness (criterion substitute): adaptive iteration counts,
+//! robust statistics, aligned table rendering, and JSON result files
+//! under `bench_results/` so every paper table/figure regeneration leaves
+//! a machine-readable artifact.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Harness options.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Warmup wall-clock budget (seconds).
+    pub warmup: f64,
+    /// Measurement wall-clock budget (seconds).
+    pub measure: f64,
+    /// Max samples to collect.
+    pub max_samples: usize,
+    /// Inner repetitions per sample for very fast functions.
+    pub min_sample_time: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup: 0.15, measure: 0.9, max_samples: 200, min_sample_time: 1e-4 }
+    }
+}
+
+impl BenchOpts {
+    /// Faster settings for smoke-testing the benches.
+    pub fn quick() -> Self {
+        Self { warmup: 0.02, measure: 0.1, max_samples: 30, min_sample_time: 5e-5 }
+    }
+
+    /// Read `DEEPGEMM_BENCH_QUICK=1` to shrink bench time in CI.
+    pub fn from_env() -> Self {
+        if std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// One benchmark's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-call seconds.
+    pub summary: Summary,
+    /// Calls per sample used.
+    pub batch: usize,
+}
+
+impl BenchResult {
+    pub fn secs(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// Measure `f`, returning per-call timing statistics.
+pub fn bench(name: impl Into<String>, opts: &BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + calibrate batch size.
+    let t0 = Instant::now();
+    let mut calls = 0u64;
+    while t0.elapsed().as_secs_f64() < opts.warmup || calls < 3 {
+        f();
+        calls += 1;
+        if calls > 1_000_000 {
+            break;
+        }
+    }
+    let per_call = t0.elapsed().as_secs_f64() / calls as f64;
+    let batch = ((opts.min_sample_time / per_call.max(1e-12)).ceil() as usize).clamp(1, 100_000);
+
+    let mut samples = Vec::with_capacity(opts.max_samples);
+    let tm = Instant::now();
+    while tm.elapsed().as_secs_f64() < opts.measure && samples.len() < opts.max_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    if samples.is_empty() {
+        samples.push(per_call);
+    }
+    BenchResult { name: name.into(), summary: Summary::from_samples(&samples), batch }
+}
+
+/// A results table: ordered rows of (label, column → value).
+#[derive(Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len());
+        self.rows.push((label.into(), values));
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render an aligned text table.
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([5])
+            .max()
+            .unwrap()
+            .max(self.title.len().min(28));
+        let mut s = format!("\n== {} ==\n", self.title);
+        s.push_str(&format!("{:<label_w$}", ""));
+        for c in &self.columns {
+            s.push_str(&format!("  {c:>14}"));
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(&format!("{label:<label_w$}"));
+            for v in vals {
+                if v.abs() >= 1e6 || (v.abs() < 1e-3 && *v != 0.0) {
+                    s.push_str(&format!("  {v:>14.3e}"));
+                } else {
+                    s.push_str(&format!("  {v:>14.4}"));
+                }
+            }
+            s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("  note: {n}\n"));
+        }
+        s
+    }
+
+    /// Write JSON under `bench_results/<file>.json`.
+    pub fn write_json(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let mut rows = Vec::new();
+        for (label, vals) in &self.rows {
+            rows.push(Json::obj(vec![
+                ("label", Json::str(label.clone())),
+                ("values", Json::arr_f64(vals)),
+            ]));
+        }
+        let doc = Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::str(c.clone())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+        ]);
+        let path = dir.join(format!("{file}.json"));
+        std::fs::write(&path, doc.dump())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_scale() {
+        let opts = BenchOpts { warmup: 0.01, measure: 0.05, max_samples: 20, min_sample_time: 1e-5 };
+        let r = bench("spin", &opts, || {
+            std::hint::black_box((0..2000).sum::<u64>());
+        });
+        assert!(r.secs() > 0.0);
+        assert!(r.summary.n >= 1);
+    }
+
+    #[test]
+    fn table_render_and_json() {
+        let mut t = Table::new("Tab X", &["speedup", "ms"]);
+        t.row("resnet18", vec![1.62, 12.5]);
+        t.row("vgg16", vec![1.5, 100.0]);
+        t.note("hello");
+        let r = t.render();
+        assert!(r.contains("resnet18"));
+        assert!(r.contains("speedup"));
+        assert!(r.contains("hello"));
+        let dir = std::env::temp_dir().join("dg_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let path = t.write_json("tabx").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::env::set_current_dir(old).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("title").unwrap().as_str().unwrap(), "Tab X");
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+}
+
+/// Shared helpers for the paper-table bench binaries (`rust/benches/`).
+pub mod support {
+    use crate::kernels::pack::{self, Scheme};
+    use crate::kernels::{
+        bitserial, fp32, int8, lut16, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend,
+        CodeMat, GemmSize,
+    };
+    use crate::quant::{F32Codebook, IntCodebook, Lut16, Lut16F32, Lut65k};
+    use crate::util::rng::Rng;
+
+    /// A ready-to-run GEMM problem for one backend: calling `run`
+    /// executes exactly one GEMM (activation packing is *excluded* — the
+    /// per-layer comparisons time the kernel itself, as the paper's
+    /// Fig. 5 does; end-to-end costs are covered by tab5/fig7).
+    pub struct PreparedGemm {
+        pub size: GemmSize,
+        pub backend: Backend,
+        run_fn: Box<dyn FnMut()>,
+    }
+
+    impl PreparedGemm {
+        #[inline]
+        pub fn run(&mut self) {
+            (self.run_fn)()
+        }
+    }
+
+    /// Build a prepared problem with random codes/values.
+    pub fn prepare(backend: Backend, size: GemmSize, seed: u64) -> PreparedGemm {
+        let GemmSize { m, n, k } = size;
+        let mut out_i = vec![0i32; m * n];
+        let run_fn: Box<dyn FnMut()> = match backend {
+            Backend::Fp32 => {
+                let mut rng = Rng::new(seed);
+                let mut av = vec![0f32; m * k];
+                let mut wv = vec![0f32; n * k];
+                rng.fill_f32(&mut av, -1.0, 1.0);
+                rng.fill_f32(&mut wv, -1.0, 1.0);
+                let a = fp32::MatF32::from_values(&av, m, k);
+                let w = fp32::MatF32::from_values(&wv, n, k);
+                let mut out = vec![0f32; m * n];
+                Box::new(move || {
+                    fp32::gemm(&a, &w, &mut out);
+                    std::hint::black_box(&out);
+                })
+            }
+            Backend::Int8 => {
+                let mut rng = Rng::new(seed);
+                let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+                let a = int8::A8::from_codes(&acodes, m, k, 128);
+                let w = int8::W8::from_values(&wvals, n, k);
+                Box::new(move || {
+                    int8::gemm(&a, &w, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::Lut16(scheme) => {
+                let cb = IntCodebook::signed(2);
+                let acb = IntCodebook::unsigned(2);
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let lut = Lut16::build(&cb, &acb);
+                let ap = pack::pack_activations(&a, scheme);
+                let wp = pack::pack_weights(&w, scheme);
+                Box::new(move || {
+                    lut16::gemm(&ap, &wp, &lut, scheme, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::LutWide(bits) => {
+                let cb = IntCodebook::signed(bits);
+                let acb = IntCodebook::unsigned(bits);
+                let a = CodeMat::random(m, k, bits, seed);
+                let w = CodeMat::random(n, k, bits, seed ^ 1);
+                let lut = Lut16::build(&cb, &acb);
+                let ap = lut16_wide::pack_wide(&a);
+                let wp = lut16_wide::pack_wide(&w);
+                Box::new(move || {
+                    lut16_wide::gemm(&ap, &wp, &lut, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::Lut65k => {
+                let cb = IntCodebook::signed(2);
+                let acb = IntCodebook::unsigned(2);
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let lut = Lut65k::build(&cb, &acb);
+                let ap = lut65k::pack_dense(&a);
+                let wp = lut65k::pack_dense(&w);
+                Box::new(move || {
+                    lut65k::gemm(&ap, &wp, &lut, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::Lut16F32 => {
+                let wcb = F32Codebook::new(2, vec![-1.6, -0.4, 0.35, 1.4]);
+                let acb = F32Codebook::new(2, vec![0.0, 0.4, 1.1, 2.3]);
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let lut = Lut16F32::build(&wcb, &acb);
+                let ap = pack::pack(&a, Scheme::D.a_layout());
+                let wp = pack::pack(&w, Scheme::D.w_layout());
+                let mut out = vec![0f32; m * n];
+                Box::new(move || {
+                    lut16_f32::gemm(&ap, &wp, &lut, &mut out);
+                    std::hint::black_box(&out);
+                })
+            }
+            Backend::BitSerial => {
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let ap = bitserial::Planes::from_codes(&a.data, m, k, 2);
+                let wp = bitserial::Planes::from_codes(&w.data, n, k, 2);
+                Box::new(move || {
+                    bitserial::gemm(&ap, &wp, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::UlpPack => {
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let ap = ulppack::UlpPacked::from_codes(&a.data, m, k, true);
+                let wp = ulppack::UlpPacked::from_codes(&w.data, n, k, false);
+                Box::new(move || {
+                    ulppack::gemm(&ap, &wp, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+            Backend::Portable => {
+                let cb = IntCodebook::signed(2);
+                let acb = IntCodebook::unsigned(2);
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let lut = Lut16::build(&cb, &acb);
+                let ap = pack::pack(&a, pack::Layout::Dense);
+                let wp = pack::pack(&w, pack::Layout::Dense);
+                Box::new(move || {
+                    portable::gemm(&ap, &wp, &lut, &mut out_i);
+                    std::hint::black_box(&out_i);
+                })
+            }
+        };
+        PreparedGemm { size, backend, run_fn }
+    }
+
+    /// Time one backend at one size with the given opts; returns median
+    /// seconds per GEMM call.
+    pub fn time_backend(backend: Backend, size: GemmSize, opts: &super::BenchOpts) -> f64 {
+        let mut p = prepare(backend, size, 0xBEEF ^ size.k as u64);
+        super::bench(format!("{}-{:?}", backend.name(), size), opts, || p.run()).secs()
+    }
+
+    /// Non-depthwise conv layers of a model as GEMM sizes (deduplicated,
+    /// keeping the first layer name for each distinct shape).
+    pub fn model_gemms(model: &str) -> crate::Result<Vec<(String, GemmSize)>> {
+        let inv = crate::nn::zoo::layer_inventory(model)?;
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        for l in inv {
+            if l.spec.groups == l.spec.in_ch && l.spec.groups > 1 {
+                continue; // depthwise — dedicated kernels in deployments
+            }
+            let g = l.gemm();
+            if seen.insert((g.m, g.n, g.k)) {
+                out.push((l.name.to_string(), g));
+            }
+        }
+        Ok(out)
+    }
+}

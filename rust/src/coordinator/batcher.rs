@@ -1,0 +1,208 @@
+//! Dynamic batcher: one worker thread per model pulls requests from a
+//! bounded queue and executes them in batches of up to `max_batch`,
+//! waiting at most `max_wait` to fill a batch (the classic
+//! latency/throughput knob). Bounded queues give natural backpressure:
+//! when the queue is full the router rejects instead of buffering
+//! unboundedly.
+
+use crate::coordinator::metrics::Metrics;
+use crate::engine::CompiledModel;
+use crate::nn::Tensor;
+use crate::profiling::StageProfile;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Queue capacity (requests) before rejection.
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2), queue_cap: 128 }
+    }
+}
+
+/// Response for one inference.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub output: Vec<f32>,
+    pub argmax: usize,
+    pub queue_secs: f64,
+    pub compute_secs: f64,
+    pub batch_size: usize,
+}
+
+pub(crate) struct Job {
+    pub input: Tensor,
+    pub enqueued: Instant,
+    pub reply: SyncSender<crate::Result<InferResponse>>,
+}
+
+/// Handle to a model's worker (clone-able sender side).
+pub struct BatchWorker {
+    pub(crate) tx: SyncSender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchWorker {
+    /// Spawn the worker thread owning `model`.
+    pub fn spawn(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_cap);
+        let handle = std::thread::Builder::new()
+            .name(format!("batcher-{}", model.name))
+            .spawn(move || worker_loop(model, cfg, metrics, rx))
+            .expect("spawn batch worker");
+        Self { tx, handle: Some(handle) }
+    }
+
+    /// Non-blocking submit; `Err` means the queue is full (backpressure).
+    pub(crate) fn try_submit(&self, job: Job) -> Result<(), Job> {
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+}
+
+impl Drop for BatchWorker {
+    fn drop(&mut self) {
+        // Closing the channel ends the worker loop.
+        let (dead_tx, _) = std::sync::mpsc::sync_channel(1);
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, rx: Receiver<Job>) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => batch.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.on_batch(batch.len());
+        let bsize = batch.len();
+        for job in batch {
+            let queue_secs = job.enqueued.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let mut prof = StageProfile::new();
+            let result = model.forward(&job.input, &mut prof).map(|y| InferResponse {
+                argmax: crate::engine::argmax(&y.data),
+                output: y.data,
+                queue_secs,
+                compute_secs: t0.elapsed().as_secs_f64(),
+                batch_size: bsize,
+            });
+            match &result {
+                Ok(r) => metrics.on_complete(r.queue_secs + r.compute_secs, r.queue_secs),
+                Err(_) => metrics.on_error(),
+            }
+            let _ = job.reply.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::Scheme;
+    use crate::kernels::Backend;
+    use crate::nn::zoo;
+    use crate::util::rng::Rng;
+
+    fn worker(max_batch: usize, max_wait_ms: u64, cap: usize) -> (BatchWorker, Arc<Metrics>) {
+        let mut rng = Rng::new(1);
+        let g = zoo::small_cnn(4, &mut rng);
+        let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        };
+        (BatchWorker::spawn(model, cfg, metrics.clone()), metrics)
+    }
+
+    fn submit(w: &BatchWorker) -> std::sync::mpsc::Receiver<crate::Result<InferResponse>> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let job = Job {
+            input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        w.try_submit(job).map_err(|_| ()).expect("queue full");
+        rx
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let (w, m) = worker(4, 1, 16);
+        let rx = submit(&w);
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.len(), 4);
+        assert!(resp.compute_secs > 0.0);
+        assert_eq!(m.counters().completed, 1);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let (w, m) = worker(8, 20, 64);
+        let rxs: Vec<_> = (0..16).map(|_| submit(&w)).collect();
+        let resps: Vec<_> = rxs.iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        assert!(resps.iter().all(|r| r.output.len() == 4));
+        let c = m.counters();
+        assert_eq!(c.completed, 16);
+        // With a 20ms window and inference >> submit time, at least one
+        // batch must have had > 1 request.
+        assert!(c.batches < 16, "no batching happened: {} batches", c.batches);
+        assert!(resps.iter().any(|r| r.batch_size > 1));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let (w, _m) = worker(1, 0, 1);
+        // Fill queue + in-flight; eventually try_submit must fail.
+        let mut rejected = false;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            let (tx, rx) = std::sync::mpsc::sync_channel(1);
+            let job = Job {
+                input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
+                enqueued: Instant::now(),
+                reply: tx,
+            };
+            match w.try_submit(job) {
+                Ok(()) => rxs.push(rx),
+                Err(_) => {
+                    rejected = true;
+                    break;
+                }
+            }
+        }
+        assert!(rejected, "queue of cap 1 never filled");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+    }
+}

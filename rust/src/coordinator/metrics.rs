@@ -1,0 +1,141 @@
+//! Serving metrics: counters + latency/batch-size histograms.
+
+use crate::util::stats::Histogram;
+use std::sync::Mutex;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Counters {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub batches: u64,
+}
+
+struct Inner {
+    counters: Counters,
+    latency: Histogram,
+    queue_time: Histogram,
+    batch_size: Histogram,
+}
+
+/// Thread-safe metrics sink shared by router, batchers and server.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                counters: Counters::default(),
+                latency: Histogram::exponential(1e-5, 1.6, 40),
+                queue_time: Histogram::exponential(1e-6, 1.6, 40),
+                batch_size: Histogram::new((1..=64).map(|x| x as f64).collect()),
+            }),
+        }
+    }
+
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().counters.requests += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().counters.rejected += 1;
+    }
+
+    pub fn on_error(&self) {
+        self.inner.lock().unwrap().counters.errors += 1;
+    }
+
+    pub fn on_complete(&self, latency_secs: f64, queue_secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.completed += 1;
+        g.latency.record(latency_secs);
+        g.queue_time.record(queue_secs);
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.batches += 1;
+        g.batch_size.record(size as f64);
+    }
+
+    pub fn counters(&self) -> Counters {
+        self.inner.lock().unwrap().counters
+    }
+
+    /// Human-readable snapshot.
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let c = g.counters;
+        let mean_batch = g.batch_size.mean();
+        format!(
+            "requests={} completed={} rejected={} errors={} batches={}\n\
+             latency p50={:.2}ms p95={:.2}ms mean={:.2}ms\n\
+             queue   p50={:.3}ms p95={:.3}ms\n\
+             batch   mean={:.2}",
+            c.requests,
+            c.completed,
+            c.rejected,
+            c.errors,
+            c.batches,
+            g.latency.quantile(0.5) * 1e3,
+            g.latency.quantile(0.95) * 1e3,
+            g.latency.mean() * 1e3,
+            g.queue_time.quantile(0.5) * 1e3,
+            g.queue_time.quantile(0.95) * 1e3,
+            mean_batch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_reject();
+        m.on_complete(0.010, 0.001);
+        m.on_batch(4);
+        let c = m.counters();
+        assert_eq!(c.requests, 2);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.batches, 1);
+        let r = m.render();
+        assert!(r.contains("requests=2"));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.on_request();
+                        m.on_complete(0.001, 0.0001);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counters().requests, 800);
+        assert_eq!(m.counters().completed, 800);
+    }
+}

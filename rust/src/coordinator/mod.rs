@@ -1,0 +1,19 @@
+//! L3 coordinator — the serving runtime that makes the DeepGEMM kernels a
+//! deployable system (vLLM-router-style): a model [`Router`] in front of
+//! per-model [`batcher`] workers with bounded queues (backpressure),
+//! [`metrics`], and a line-JSON TCP [`server`] front-end.
+//!
+//! Everything is std-only (the offline image has no tokio); concurrency
+//! is threads + channels, which for CPU-bound inference is the right
+//! shape anyway — one worker thread per model pins the packed weights hot
+//! in cache.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, InferResponse};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{serve, Client, ServerConfig};

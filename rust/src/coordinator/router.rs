@@ -1,0 +1,137 @@
+//! Model router: registry of compiled models, each behind its own batch
+//! worker; routes inference requests by model name and applies
+//! backpressure (bounded queues → reject-on-full).
+
+use crate::coordinator::batcher::{BatchWorker, BatcherConfig, InferResponse, Job};
+use crate::coordinator::metrics::Metrics;
+use crate::engine::CompiledModel;
+use crate::nn::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The router.
+pub struct Router {
+    workers: HashMap<String, BatchWorker>,
+    input_shapes: HashMap<String, (usize, usize, usize)>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self {
+            workers: HashMap::new(),
+            input_shapes: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Register a compiled model under its graph name.
+    pub fn register(&mut self, model: CompiledModel, cfg: BatcherConfig) {
+        let name = model.name.clone();
+        self.input_shapes.insert(name.clone(), model.graph.input_chw);
+        let worker = BatchWorker::spawn(model, cfg, self.metrics.clone());
+        self.workers.insert(name, worker);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.workers.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn input_chw(&self, model: &str) -> Option<(usize, usize, usize)> {
+        self.input_shapes.get(model).copied()
+    }
+
+    /// Blocking inference: enqueue and wait for the response.
+    pub fn infer(&self, model: &str, input: Tensor) -> crate::Result<InferResponse> {
+        self.metrics.on_request();
+        let worker = self.workers.get(model).ok_or_else(|| {
+            self.metrics.on_error();
+            crate::Error::Config(format!("unknown model '{model}'"))
+        })?;
+        // Shape check up front so the error is synchronous.
+        if let Some((c, h, w)) = self.input_chw(model) {
+            if input.shape != vec![1, c, h, w] {
+                self.metrics.on_error();
+                return Err(crate::Error::Shape(format!(
+                    "model '{model}' expects [1, {c}, {h}, {w}], got {:?}",
+                    input.shape
+                )));
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let job = Job { input, enqueued: Instant::now(), reply: tx };
+        if worker.try_submit(job).is_err() {
+            self.metrics.on_reject();
+            return Err(crate::Error::Runtime(format!(
+                "model '{model}' queue full (backpressure)"
+            )));
+        }
+        rx.recv()
+            .map_err(|_| crate::Error::Runtime("worker dropped response".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::Scheme;
+    use crate::kernels::Backend;
+    use crate::nn::zoo;
+    use crate::util::rng::Rng;
+
+    fn router() -> Router {
+        let mut rng = Rng::new(2);
+        let g = zoo::small_cnn(5, &mut rng);
+        let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let mut r = Router::new();
+        r.register(model, BatcherConfig::default());
+        r
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let r = router();
+        assert_eq!(r.models(), vec!["small_cnn"]);
+        let x = Tensor::random(&[1, 3, 32, 32], 3, -1.0, 1.0);
+        let resp = r.infer("small_cnn", x).unwrap();
+        assert_eq!(resp.output.len(), 5);
+        assert!(resp.argmax < 5);
+    }
+
+    #[test]
+    fn unknown_model_and_bad_shape_rejected() {
+        let r = router();
+        let x = Tensor::random(&[1, 3, 32, 32], 3, -1.0, 1.0);
+        assert!(r.infer("nope", x.clone()).is_err());
+        let bad = Tensor::random(&[1, 3, 16, 16], 3, -1.0, 1.0);
+        let err = r.infer("small_cnn", bad).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let r = Arc::new(router());
+        let hs: Vec<_> = (0..6)
+            .map(|i| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    let x = Tensor::random(&[1, 3, 32, 32], i as u64, -1.0, 1.0);
+                    r.infer("small_cnn", x).unwrap().argmax
+                })
+            })
+            .collect();
+        for h in hs {
+            assert!(h.join().unwrap() < 5);
+        }
+        assert_eq!(r.metrics.counters().completed, 6);
+    }
+}

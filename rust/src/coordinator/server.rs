@@ -1,0 +1,256 @@
+//! Line-JSON TCP front-end for the router.
+//!
+//! Protocol (one JSON document per line):
+//!   → {"id": 1, "model": "small_cnn", "input": [f32 × C·H·W]}
+//!   ← {"id": 1, "ok": true, "argmax": 3, "output": [...],
+//!      "compute_ms": 1.2, "queue_ms": 0.1, "batch": 4}
+//!   → {"cmd": "metrics"}        ← {"ok": true, "metrics": "..."}
+//!   → {"cmd": "models"}         ← {"ok": true, "models": [...]}
+//!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
+
+use crate::coordinator::router::Router;
+use crate::nn::Tensor;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7070".into() }
+    }
+}
+
+/// Serve `router` until a shutdown command arrives. Returns the bound
+/// address (useful with port 0 in tests).
+pub fn serve(router: Arc<Router>, cfg: &ServerConfig) -> crate::Result<()> {
+    let (addr, handle) = spawn(router, cfg)?;
+    eprintln!("deepgemm server listening on {addr}");
+    handle.join().map_err(|_| crate::Error::Runtime("accept loop panicked".into()))?;
+    Ok(())
+}
+
+/// Spawn the accept loop in a background thread; returns (bound address,
+/// join handle).
+pub fn spawn(
+    router: Arc<Router>,
+    cfg: &ServerConfig,
+) -> crate::Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = std::thread::Builder::new()
+        .name("deepgemm-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let r = router.clone();
+                        let st = stop.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(s, r, st);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+        .expect("spawn accept loop");
+    Ok((addr, handle))
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, &router, &stop);
+        writer.write_all(reply.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if stop.load(Ordering::SeqCst) {
+            // Wake the accept loop with a dummy connection.
+            let _ = TcpStream::connect(peer);
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => {
+            return Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("bad json: {e}"))),
+            ])
+        }
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    if let Some(cmd) = doc.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(router.metrics.render())),
+            ]),
+            "models" => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "models",
+                    Json::Arr(router.models().iter().map(|m| Json::str(*m)).collect()),
+                ),
+            ]),
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            other => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("unknown cmd '{other}'"))),
+            ]),
+        };
+    }
+    let model = match doc.get("model").and_then(|m| m.as_str()) {
+        Some(m) => m.to_string(),
+        None => {
+            return Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str("missing 'model'")),
+            ])
+        }
+    };
+    let input = match doc.get("input").and_then(|i| i.as_f32_vec()) {
+        Some(v) => v,
+        None => {
+            return Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str("missing 'input' array")),
+            ])
+        }
+    };
+    let Some((c, h, w)) = router.input_chw(&model) else {
+        return Json::obj(vec![
+            ("id", id),
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(format!("unknown model '{model}'"))),
+        ]);
+    };
+    if input.len() != c * h * w {
+        return Json::obj(vec![
+            ("id", id),
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(format!("input must have {} elements", c * h * w))),
+        ]);
+    }
+    let t = Tensor::from_vec(&[1, c, h, w], input);
+    match router.infer(&model, t) {
+        Ok(resp) => Json::obj(vec![
+            ("id", id),
+            ("ok", Json::Bool(true)),
+            ("argmax", Json::num(resp.argmax as f64)),
+            ("output", Json::arr_f32(&resp.output)),
+            ("compute_ms", Json::num(resp.compute_secs * 1e3)),
+            ("queue_ms", Json::num(resp.queue_secs * 1e3)),
+            ("batch", Json::num(resp.batch_size as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("id", id),
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(e.to_string())),
+        ]),
+    }
+}
+
+/// Minimal blocking client for the line-JSON protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn call(&mut self, req: &Json) -> crate::Result<Json> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(crate::Error::Msg)
+    }
+
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> crate::Result<Json> {
+        self.call(&Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("model", Json::str(model)),
+            ("input", Json::arr_f32(input)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::engine::CompiledModel;
+    use crate::kernels::pack::Scheme;
+    use crate::kernels::Backend;
+    use crate::nn::zoo;
+    use crate::util::rng::Rng;
+
+    fn start() -> (std::net::SocketAddr, Arc<Router>) {
+        let mut rng = Rng::new(4);
+        let g = zoo::small_cnn(3, &mut rng);
+        let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let mut r = Router::new();
+        r.register(model, BatcherConfig::default());
+        let r = Arc::new(r);
+        let (addr, _h) = spawn(r.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+        (addr, r)
+    }
+
+    #[test]
+    fn end_to_end_tcp_inference() {
+        let (addr, _r) = start();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let input = vec![0.3f32; 3 * 32 * 32];
+        let resp = c.infer("small_cnn", &input).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("output").unwrap().as_arr().unwrap().len(), 3);
+        // Commands.
+        let m = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap();
+        assert!(m.dump().contains("small_cnn"));
+        let met = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+        assert!(met.get("metrics").unwrap().as_str().unwrap().contains("completed=1"));
+    }
+
+    #[test]
+    fn protocol_errors_are_reported() {
+        let (addr, _r) = start();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let r1 = c.call(&Json::obj(vec![("model", Json::str("small_cnn"))])).unwrap();
+        assert_eq!(r1.get("ok").unwrap().as_bool(), Some(false));
+        let r2 = c.infer("missing_model", &[0.0; 4]).unwrap();
+        assert_eq!(r2.get("ok").unwrap().as_bool(), Some(false));
+        let r3 = c.infer("small_cnn", &[0.0; 4]).unwrap();
+        assert!(r3.get("error").unwrap().as_str().unwrap().contains("elements"));
+    }
+}

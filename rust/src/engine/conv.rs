@@ -1,0 +1,422 @@
+//! Per-layer compiled convolution state: quantized + packed weights, the
+//! LUT, the activation quantizer, and the instrumented forward pass.
+
+use crate::kernels::pack::{self, Packed, Scheme};
+use crate::kernels::{bitserial, int8, lut16, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat};
+use crate::nn::im2col::im2col_codes;
+use crate::nn::{ConvSpec, Tensor};
+use crate::profiling::{Stage, StageProfile};
+use crate::quant::{uniform::Quantizer, F32Codebook, Lut16, Lut16F32, Lut65k};
+
+/// Offline-prepared weights for one conv layer (one entry per group).
+pub enum PreparedWeights {
+    Lut16 { packed: Vec<Packed>, lut: Lut16, scheme: Scheme },
+    LutWide { packed: Vec<Packed>, lut: Lut16 },
+    Lut65k { packed: Vec<Packed>, lut: Lut65k },
+    Lut16F32 { packed: Vec<Packed>, lut: Lut16F32 },
+    Int8 { w: Vec<int8::W8> },
+    BitSerial { planes: Vec<bitserial::Planes>, w_code_sums: Vec<Vec<i32>> },
+    Ulp { packed: Vec<ulppack::UlpPacked>, w_code_sums: Vec<Vec<i32>> },
+    Portable { packed: Vec<Packed>, lut: Lut16 },
+}
+
+impl PreparedWeights {
+    /// Bytes held by the packed weight representation (model-size metric).
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            PreparedWeights::Lut16 { packed, .. }
+            | PreparedWeights::LutWide { packed, .. }
+            | PreparedWeights::Lut65k { packed, .. }
+            | PreparedWeights::Lut16F32 { packed, .. }
+            | PreparedWeights::Portable { packed, .. } => packed.iter().map(|p| p.bytes()).sum(),
+            PreparedWeights::Int8 { w } => w.iter().map(|x| x.data.len()).sum(),
+            PreparedWeights::BitSerial { planes, .. } => {
+                planes.iter().map(|p| p.data.len() * 8).sum()
+            }
+            PreparedWeights::Ulp { packed, .. } => packed.iter().map(|p| p.data.len() * 2).sum(),
+        }
+    }
+}
+
+/// A conv layer compiled for a quantized backend.
+pub struct CompiledConv {
+    pub spec: ConvSpec,
+    pub relu: bool,
+    pub backend: Backend,
+    pub bias: Vec<f32>,
+    pub act_q: Quantizer,
+    pub w_scale: f32,
+    /// zero-point codes for weights/activations (code-space).
+    w_zp: i32,
+    a_zp: i32,
+    pub weights: PreparedWeights,
+}
+
+impl CompiledConv {
+    /// Quantize + pack the layer weights for `backend`; `lo`/`hi` is the
+    /// calibrated input activation range.
+    pub fn prepare(
+        spec: &ConvSpec,
+        weights: &[f32],
+        bias: &[f32],
+        relu: bool,
+        backend: Backend,
+        lo: f32,
+        hi: f32,
+    ) -> crate::Result<Self> {
+        let act_q = super::act_quantizer(backend, lo, hi);
+        let groups = spec.groups;
+        let og = spec.out_ch / groups;
+        let kk = spec.in_ch / groups * spec.kh * spec.kw;
+        let bits = match backend {
+            Backend::Int8 => 8,
+            Backend::LutWide(b) => b,
+            _ => 2,
+        };
+        // Symmetric weight quantizer (bipolar; LSQ-style MSE-refined).
+        let w_q = Quantizer::mse_refined(weights, bits, true);
+        let w_scale = w_q.params.scale;
+        let w_zp = w_q.params.zero_point;
+        let a_zp = act_q.params.zero_point;
+
+        // Per-group weight code matrices (rows = out channels of group).
+        let mut group_codes: Vec<CodeMat> = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let slice = &weights[g * og * kk..(g + 1) * og * kk];
+            let mut codes = vec![0u8; slice.len()];
+            w_q.quantize(slice, &mut codes);
+            group_codes.push(CodeMat::from_data(og, kk, bits, codes));
+        }
+
+        // Codebooks are only meaningful for the sub-byte LUT backends
+        // (8-bit int8 uses centered values directly).
+        let cbs = || (w_q.params.codebook(), act_q.params.codebook());
+
+        let prepared = match backend {
+            Backend::Lut16(scheme) => {
+                let (w_cb, a_cb) = cbs();
+                PreparedWeights::Lut16 {
+                    packed: group_codes.iter().map(|c| pack::pack_weights(c, scheme)).collect(),
+                    lut: Lut16::build(&w_cb, &a_cb),
+                    scheme,
+                }
+            }
+            Backend::LutWide(_) => {
+                let (w_cb, a_cb) = cbs();
+                PreparedWeights::LutWide {
+                    packed: group_codes.iter().map(lut16_wide::pack_wide).collect(),
+                    lut: Lut16::build(&w_cb, &a_cb),
+                }
+            }
+            Backend::Lut65k => {
+                let (w_cb, a_cb) = cbs();
+                PreparedWeights::Lut65k {
+                    packed: group_codes.iter().map(lut65k::pack_dense).collect(),
+                    lut: Lut65k::build(&w_cb, &a_cb),
+                }
+            }
+            Backend::Lut16F32 => {
+                let (w_cb, a_cb) = cbs();
+                let w_f = F32Codebook::from_int(&w_cb, w_scale);
+                let a_f = F32Codebook::from_int(&a_cb, act_q.params.scale);
+                PreparedWeights::Lut16F32 {
+                    packed: group_codes
+                        .iter()
+                        .map(|c| pack::pack(c, Scheme::D.w_layout()))
+                        .collect(),
+                    lut: Lut16F32::build(&w_f, &a_f),
+                }
+            }
+            Backend::Portable => {
+                let (w_cb, a_cb) = cbs();
+                PreparedWeights::Portable {
+                    packed: group_codes
+                        .iter()
+                        .map(|c| pack::pack(c, pack::Layout::Dense))
+                        .collect(),
+                    lut: Lut16::build(&w_cb, &a_cb),
+                }
+            }
+            Backend::Int8 => {
+                // i8 values are the centered codes (code − zp).
+                let w = group_codes
+                    .iter()
+                    .map(|c| {
+                        let vals: Vec<i8> =
+                            c.data.iter().map(|&code| (code as i32 - w_zp) as i8).collect();
+                        int8::W8::from_values(&vals, og, kk)
+                    })
+                    .collect();
+                PreparedWeights::Int8 { w }
+            }
+            Backend::BitSerial => {
+                let planes = group_codes
+                    .iter()
+                    .map(|c| bitserial::Planes::from_codes(&c.data, og, kk, bits))
+                    .collect();
+                let sums = code_row_sums(&group_codes);
+                PreparedWeights::BitSerial { planes, w_code_sums: sums }
+            }
+            Backend::UlpPack => {
+                let packed = group_codes
+                    .iter()
+                    .map(|c| ulppack::UlpPacked::from_codes(&c.data, og, kk, false))
+                    .collect();
+                let sums = code_row_sums(&group_codes);
+                PreparedWeights::Ulp { packed, w_code_sums: sums }
+            }
+            Backend::Fp32 => {
+                return Err(crate::Error::Config("fp32 convs are not quantized".into()))
+            }
+        };
+
+        Ok(Self {
+            spec: *spec,
+            relu,
+            backend,
+            bias: bias.to_vec(),
+            act_q,
+            w_scale,
+            w_zp,
+            a_zp,
+            weights: prepared,
+        })
+    }
+
+    /// Instrumented quantized forward for a single image.
+    pub fn forward(&self, x: &Tensor, prof: &mut StageProfile) -> crate::Result<Tensor> {
+        let (_, c, h, w) = x.nchw();
+        if c != self.spec.in_ch {
+            return Err(crate::Error::Shape(format!(
+                "conv expects C={}, got {c}",
+                self.spec.in_ch
+            )));
+        }
+        let (oh, ow) = self.spec.out_hw(h, w);
+        let groups = self.spec.groups;
+        let og = self.spec.out_ch / groups;
+        let kk = self.spec.in_ch / groups * self.spec.kh * self.spec.kw;
+        let m = oh * ow;
+        let s_out = self.w_scale * self.act_q.params.scale;
+
+        // Stage 1 — activation quantization (whole tensor, once).
+        let codes = prof.time(Stage::Quantize, || {
+            let mut codes = vec![0u8; x.data.len()];
+            self.act_q.quantize(&x.data, &mut codes);
+            codes
+        });
+        let pad_code = self.act_q.quantize_one(0.0);
+
+        let mut out = Tensor::zeros(&[1, self.spec.out_ch, oh, ow]);
+        let mut cols: Vec<u8> = Vec::new();
+        for g in 0..groups {
+            // Stage 2 — im2col on codes.
+            prof.time(Stage::Im2col, || {
+                im2col_codes(&codes, c, h, w, &self.spec, g, pad_code, &mut cols)
+            });
+            let col_mat = CodeMat::from_data(
+                m,
+                kk,
+                match self.backend {
+                    Backend::Int8 => 8,
+                    Backend::LutWide(b) => b,
+                    _ => 2,
+                },
+                std::mem::take(&mut cols),
+            );
+
+            // Stages 3+4 — pack + GEMM (+ per-backend extras), then
+            // stage 5 — dequantize into the output plane.
+            let acc = self.gemm_group(&col_mat, g, m, og, kk, prof)?;
+            let bias = &self.bias;
+            let relu = self.relu;
+            prof.time(Stage::Dequant, || {
+                for mi in 0..m {
+                    for ni in 0..og {
+                        let oc = g * og + ni;
+                        let mut v = match &acc {
+                            Acc::I32(a) => a[mi * og + ni] as f32 * s_out,
+                            Acc::F32(a) => a[mi * og + ni],
+                        } + if bias.is_empty() { 0.0 } else { bias[oc] };
+                        if relu {
+                            v = v.max(0.0);
+                        }
+                        out.data[oc * m + mi] = v;
+                    }
+                }
+            });
+            cols = col_mat.data; // reuse allocation
+        }
+        Ok(out)
+    }
+
+    fn gemm_group(
+        &self,
+        col: &CodeMat,
+        g: usize,
+        m: usize,
+        og: usize,
+        kk: usize,
+        prof: &mut StageProfile,
+    ) -> crate::Result<Acc> {
+        let mut acc = vec![0i32; m * og];
+        match &self.weights {
+            PreparedWeights::Lut16 { packed, lut, scheme } => {
+                let a = prof.time(Stage::Pack, || pack::pack_activations(col, *scheme));
+                prof.time(Stage::LutConv, || lut16::gemm(&a, &packed[g], lut, *scheme, &mut acc));
+            }
+            PreparedWeights::LutWide { packed, lut } => {
+                let a = prof.time(Stage::Pack, || lut16_wide::pack_wide(col));
+                prof.time(Stage::LutConv, || lut16_wide::gemm(&a, &packed[g], lut, &mut acc));
+            }
+            PreparedWeights::Lut65k { packed, lut } => {
+                let a = prof.time(Stage::Pack, || lut65k::pack_dense(col));
+                prof.time(Stage::LutConv, || lut65k::gemm(&a, &packed[g], lut, &mut acc));
+            }
+            PreparedWeights::Lut16F32 { packed, lut } => {
+                let a = prof.time(Stage::Pack, || pack::pack(col, Scheme::D.a_layout()));
+                let mut facc = vec![0f32; m * og];
+                prof.time(Stage::LutConv, || lut16_f32::gemm(&a, &packed[g], lut, &mut facc));
+                return Ok(Acc::F32(facc));
+            }
+            PreparedWeights::Portable { packed, lut } => {
+                let a = prof.time(Stage::Pack, || pack::pack(col, pack::Layout::Dense));
+                prof.time(Stage::LutConv, || portable::gemm(&a, &packed[g], lut, &mut acc));
+            }
+            PreparedWeights::Int8 { w } => {
+                let a = prof.time(Stage::Pack, || {
+                    int8::A8::from_codes(&col.data, m, kk, self.a_zp)
+                });
+                prof.time(Stage::LutConv, || int8::gemm(&a, &w[g], &mut acc));
+            }
+            PreparedWeights::BitSerial { planes, w_code_sums } => {
+                let (a, a_sums) = prof.time(Stage::Pack, || {
+                    let a = bitserial::Planes::from_codes(&col.data, m, kk, col.bits);
+                    (a, row_sums(&col.data, m, kk))
+                });
+                prof.time(Stage::LutConv, || bitserial::gemm(&a, &planes[g], &mut acc));
+                // Unsigned kernel → signed correction (§5.3's "additional
+                // operations ... to accommodate signed inputs").
+                prof.time(Stage::Dequant, || {
+                    self.unsigned_fixup(&mut acc, &a_sums, &w_code_sums[g], m, og, kk)
+                });
+            }
+            PreparedWeights::Ulp { packed, w_code_sums } => {
+                let (a, a_sums) = prof.time(Stage::Pack, || {
+                    let a = ulppack::UlpPacked::from_codes(&col.data, m, kk, true);
+                    (a, row_sums(&col.data, m, kk))
+                });
+                prof.time(Stage::LutConv, || ulppack::gemm(&a, &packed[g], &mut acc));
+                prof.time(Stage::Dequant, || {
+                    self.unsigned_fixup(&mut acc, &a_sums, &w_code_sums[g], m, og, kk)
+                });
+            }
+        }
+        Ok(Acc::I32(acc))
+    }
+
+    /// Convert an unsigned-code accumulator Σ cw·ca into the centered
+    /// Σ (cw−zw)(ca−za) using offline weight sums and runtime act sums.
+    fn unsigned_fixup(
+        &self,
+        acc: &mut [i32],
+        a_sums: &[i32],
+        w_sums: &[i32],
+        m: usize,
+        og: usize,
+        kk: usize,
+    ) {
+        let zw = self.w_zp;
+        let za = self.a_zp;
+        let kzz = (kk as i32) * zw * za;
+        for mi in 0..m {
+            let asum = a_sums[mi];
+            for ni in 0..og {
+                acc[mi * og + ni] += kzz - zw * asum - za * w_sums[ni];
+            }
+        }
+    }
+}
+
+enum Acc {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+fn code_row_sums(groups: &[CodeMat]) -> Vec<Vec<i32>> {
+    groups
+        .iter()
+        .map(|c| {
+            (0..c.rows)
+                .map(|r| c.row(r).iter().map(|&v| v as i32).sum())
+                .collect()
+        })
+        .collect()
+}
+
+fn row_sums(codes: &[u8], rows: usize, k: usize) -> Vec<i32> {
+    (0..rows)
+        .map(|r| codes[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_rejects_fp32() {
+        let spec = ConvSpec::new(2, 2, 1, 1, 0);
+        let w = vec![0.5f32; 4];
+        assert!(CompiledConv::prepare(&spec, &w, &[], false, Backend::Fp32, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn conv_forward_matches_direct_quantized_math() {
+        // 1x1 conv = plain GEMM: verify the full pipeline against a
+        // hand-computed quantized result.
+        let spec = ConvSpec::new(2, 2, 1, 1, 0);
+        let w = vec![0.5f32, -0.5, 1.0, 0.25];
+        let cc = CompiledConv::prepare(
+            &spec,
+            &w,
+            &[0.1, -0.1],
+            false,
+            Backend::Lut16(Scheme::D),
+            0.0,
+            1.0,
+        )
+        .unwrap();
+        let x = Tensor::from_vec(&[1, 2, 1, 1], vec![1.0, 0.5]);
+        let mut prof = StageProfile::new();
+        let y = cc.forward(&x, &mut prof).unwrap();
+        // Manual: quantize x and w through the same quantizers.
+        let mut xq = [0u8; 2];
+        cc.act_q.quantize(&x.data, &mut xq);
+        let xd: Vec<f32> = xq.iter().map(|&c| cc.act_q.dequantize_one(c)).collect();
+        let wq = Quantizer::mse_refined(&w, 2, true);
+        let wd: Vec<f32> = {
+            let mut codes = vec![0u8; 4];
+            wq.quantize(&w, &mut codes);
+            codes.iter().map(|&c| wq.dequantize_one(c)).collect()
+        };
+        let want = [
+            wd[0] * xd[0] + wd[1] * xd[1] + 0.1,
+            wd[2] * xd[0] + wd[3] * xd[1] - 0.1,
+        ];
+        crate::util::prop::assert_close(&y.data, &want, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn packed_bytes_reflect_compression() {
+        let spec = ConvSpec::new(16, 32, 3, 1, 1);
+        let n = spec.weight_len();
+        let w: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+        let lut = CompiledConv::prepare(&spec, &w, &[], true, Backend::Lut16(Scheme::A), 0.0, 1.0)
+            .unwrap();
+        let i8 = CompiledConv::prepare(&spec, &w, &[], true, Backend::Int8, 0.0, 1.0).unwrap();
+        // 2-bit dense ≈ 4× smaller than int8 (modulo K padding).
+        let ratio = i8.weights.packed_bytes() as f64 / lut.weights.packed_bytes() as f64;
+        assert!(ratio > 2.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Bit-serial GEMM baseline (Cowan et al. [8], Tulloch & Jia [19]):
+//! decompose b-bit operands into bit planes, multiply planes with AND,
+//! accumulate with popcount, weight by powers of two:
+//!
+//! `Σ_k w_k·a_k = Σ_i Σ_j 2^(i+j) · popcount(Wplane_i & Aplane_j)`
+//!
+//! Works for unipolar (unsigned) codes; the bipolar case needs extra
+//! popcount corrections — exactly the §5.3 flexibility limitation the
+//! paper calls out versus the LUT approach. The planes are stored as u64
+//! words and the kernel uses the hardware `popcnt` instruction (on AVX2
+//! x86 there is no vector popcount, so scalar u64 popcnt at 1/cycle is
+//! the standard approach).
+
+use crate::util::align_up;
+
+/// Bit-plane packed matrix: per row, `bits` planes of `words` u64 each.
+#[derive(Clone, Debug)]
+pub struct Planes {
+    pub rows: usize,
+    pub k: usize,
+    pub k_padded: usize,
+    pub bits: u32,
+    pub words: usize,
+    pub data: Vec<u64>,
+}
+
+impl Planes {
+    /// Pack codes (one per byte, row-major rows×k) into bit planes.
+    pub fn from_codes(codes: &[u8], rows: usize, k: usize, bits: u32) -> Self {
+        assert_eq!(codes.len(), rows * k);
+        let k_padded = align_up(k.max(1), 64);
+        let words = k_padded / 64;
+        let mut data = vec![0u64; rows * bits as usize * words];
+        for r in 0..rows {
+            for (i, &c) in codes[r * k..(r + 1) * k].iter().enumerate() {
+                debug_assert!((c as u32) < (1 << bits));
+                for b in 0..bits as usize {
+                    if (c >> b) & 1 == 1 {
+                        data[(r * bits as usize + b) * words + i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+            }
+        }
+        Self { rows, k, k_padded, bits, words, data }
+    }
+
+    #[inline]
+    pub fn plane(&self, row: usize, bit: usize) -> &[u64] {
+        let start = (row * self.bits as usize + bit) * self.words;
+        &self.data[start..start + self.words]
+    }
+}
+
+/// Bit-serial GEMM: `out[m][n] = Σ_k a_code[m][k] · w_code[n][k]`
+/// (unipolar: codes are the values).
+pub fn gemm(a: &Planes, w: &Planes, out: &mut [i32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(out.len(), a.rows * w.rows);
+    for m in 0..a.rows {
+        for n in 0..w.rows {
+            let mut acc = 0u64;
+            for i in 0..w.bits as usize {
+                let wp = w.plane(n, i);
+                for j in 0..a.bits as usize {
+                    let ap = a.plane(m, j);
+                    let mut pop = 0u64;
+                    for t in 0..a.words {
+                        pop += (wp[t] & ap[t]).count_ones() as u64;
+                    }
+                    acc += pop << (i + j);
+                }
+            }
+            out[m * w.rows + n] = acc as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_oracle_2bit() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 4, 63), (2, 3, 64), (2, 2, 65), (2, 2, 500)] {
+            let a = CodeMat::random(m, k, 2, k as u64);
+            let w = CodeMat::random(n, k, 2, k as u64 ^ 0xF00);
+            let cb = IntCodebook::unsigned(2);
+            let mut want = vec![0i32; m * n];
+            oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+            let ap = Planes::from_codes(&a.data, m, k, 2);
+            let wp = Planes::from_codes(&w.data, n, k, 2);
+            let mut got = vec![0i32; m * n];
+            gemm(&ap, &wp, &mut got);
+            assert_eq!(got, want, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_1_and_3_bit() {
+        for bits in [1u32, 3] {
+            let (m, n, k) = (2usize, 3usize, 130usize);
+            let a = CodeMat::random(m, k, bits, 11);
+            let w = CodeMat::random(n, k, bits, 13);
+            let cb = IntCodebook::unsigned(bits);
+            let mut want = vec![0i32; m * n];
+            oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+            let ap = Planes::from_codes(&a.data, m, k, bits);
+            let wp = Planes::from_codes(&w.data, n, k, bits);
+            let mut got = vec![0i32; m * n];
+            gemm(&ap, &wp, &mut got);
+            assert_eq!(got, want, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn plane_packing_property() {
+        prop::check(
+            0xB175,
+            60,
+            |r: &mut Rng| {
+                let k = r.range(1, 300);
+                let mut codes = vec![0u8; k];
+                r.fill_codes(&mut codes, 2);
+                codes
+            },
+            |codes| {
+                let k = codes.len();
+                let p = Planes::from_codes(codes, 1, k, 2);
+                // Reconstruct codes from planes.
+                for (i, &c) in codes.iter().enumerate() {
+                    let b0 = (p.plane(0, 0)[i / 64] >> (i % 64)) & 1;
+                    let b1 = (p.plane(0, 1)[i / 64] >> (i % 64)) & 1;
+                    let back = (b1 << 1 | b0) as u8;
+                    if back != c {
+                        return Err(format!("bit {i}: {back} != {c}"));
+                    }
+                }
+                // Padding bits must be zero.
+                for b in 0..2 {
+                    for i in k..p.k_padded {
+                        if (p.plane(0, b)[i / 64] >> (i % 64)) & 1 != 0 {
+                            return Err(format!("pad bit set at {i}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! FP32 GEMM reference (the paper's full-precision baseline).
+//!
+//! A straightforward but not naive implementation: K-padded rows, AVX2+FMA
+//! microkernel with 4 independent accumulator chains per output to hide
+//! FMA latency. This is the "R/32 values per register" strawman the paper
+//! contrasts the LUT kernels against (§3.2).
+
+use crate::util::align_up;
+
+pub const K_BLOCK32: usize = 8;
+
+/// Row-major f32 matrix with K padded to a multiple of 8.
+#[derive(Clone, Debug)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub k: usize,
+    pub k_padded: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn from_values(values: &[f32], rows: usize, k: usize) -> Self {
+        assert_eq!(values.len(), rows * k);
+        let k_padded = align_up(k.max(1), K_BLOCK32 * 4);
+        let mut data = vec![0f32; rows * k_padded];
+        for r in 0..rows {
+            data[r * k_padded..r * k_padded + k].copy_from_slice(&values[r * k..(r + 1) * k]);
+        }
+        Self { rows, k, k_padded, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.k_padded..(r + 1) * self.k_padded]
+    }
+}
+
+/// Scalar reference.
+pub fn gemm_scalar(a: &MatF32, w: &MatF32, out: &mut [f32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(out.len(), a.rows * w.rows);
+    for m in 0..a.rows {
+        let arow = a.row(m);
+        for n in 0..w.rows {
+            let wrow = w.row(n);
+            let mut acc = 0f64;
+            for k in 0..a.k {
+                acc += (arow[k] * wrow[k]) as f64;
+            }
+            out[m * w.rows + n] = acc as f32;
+        }
+    }
+}
+
+pub fn gemm(a: &MatF32, w: &MatF32, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            unsafe { avx2::gemm(a, w, out) };
+            return;
+        }
+    }
+    gemm_scalar(a, w, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm(a: &MatF32, w: &MatF32, out: &mut [f32]) {
+        for m in 0..a.rows {
+            let arow = a.row(m);
+            for n in 0..w.rows {
+                let wrow = w.row(n);
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                let mut kb = 0usize;
+                while kb < a.k_padded {
+                    let a0 = _mm256_loadu_ps(arow.as_ptr().add(kb));
+                    let a1 = _mm256_loadu_ps(arow.as_ptr().add(kb + 8));
+                    let a2 = _mm256_loadu_ps(arow.as_ptr().add(kb + 16));
+                    let a3 = _mm256_loadu_ps(arow.as_ptr().add(kb + 24));
+                    let w0 = _mm256_loadu_ps(wrow.as_ptr().add(kb));
+                    let w1 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 8));
+                    let w2 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 16));
+                    let w3 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 24));
+                    acc0 = _mm256_fmadd_ps(a0, w0, acc0);
+                    acc1 = _mm256_fmadd_ps(a1, w1, acc1);
+                    acc2 = _mm256_fmadd_ps(a2, w2, acc2);
+                    acc3 = _mm256_fmadd_ps(a3, w3, acc3);
+                    kb += 32;
+                }
+                let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+                out[m * w.rows + n] = hsum_ps(acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn random_problem(m: usize, n: usize, k: usize, seed: u64) -> (MatF32, MatF32) {
+        let mut rng = Rng::new(seed);
+        let mut av = vec![0f32; m * k];
+        let mut wv = vec![0f32; n * k];
+        rng.fill_f32(&mut av, -1.0, 1.0);
+        rng.fill_f32(&mut wv, -1.0, 1.0);
+        (MatF32::from_values(&av, m, k), MatF32::from_values(&wv, n, k))
+    }
+
+    #[test]
+    fn avx2_matches_scalar() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 4, 31), (2, 5, 64), (4, 3, 100), (2, 2, 1111)] {
+            let (a, w) = random_problem(m, n, k, k as u64 + 3);
+            let mut want = vec![0f32; m * n];
+            gemm_scalar(&a, &w, &mut want);
+            let mut got = vec![0f32; m * n];
+            gemm(&a, &w, &mut got);
+            assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn identity_like() {
+        // a single 1.0 at position j picks out w[n][j].
+        let k = 40;
+        let mut av = vec![0f32; k];
+        av[17] = 1.0;
+        let mut rng = Rng::new(8);
+        let mut wv = vec![0f32; 2 * k];
+        rng.fill_f32(&mut wv, -2.0, 2.0);
+        let a = MatF32::from_values(&av, 1, k);
+        let w = MatF32::from_values(&wv, 2, k);
+        let mut out = vec![0f32; 2];
+        gemm(&a, &w, &mut out);
+        assert!((out[0] - wv[17]).abs() < 1e-6);
+        assert!((out[1] - wv[k + 17]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,560 @@
+//! LUT-16 GEMM kernels, 2-bit operands (paper §3.2 Fig. 3, §4 Alg. 1).
+//!
+//! The 16-entry product table lives in a single 256-bit register (two
+//! mirrored 128-bit lanes); each inner-loop round builds a 32-byte index
+//! vector `idx = (w << 2) | a` and retrieves 32 products with one
+//! `_mm256_shuffle_epi8` — the paper's key instruction. Products are
+//! biased-u8 (see [`crate::quant::Lut16`]); accumulation uses
+//! `_mm256_sad_epu8` against zero, which horizontally sums groups of 8
+//! product bytes into u64 lanes and therefore **cannot overflow for any
+//! practical K** (the paper instead assumes 8-bit accumulation does not
+//! overflow). The kernel epilogue subtracts the bias/padding correction
+//! (Listing 1's reduction corresponds to `hsum_epi64` here).
+//!
+//! Four unpacking schemes (paper §4.1, [`Scheme`]) share this skeleton and
+//! differ only in how the index vectors are produced.
+
+use super::pack::{Packed, Scheme};
+use super::{CodeMat, K_BLOCK};
+use crate::quant::Lut16;
+
+/// Scalar reference implementation — works on any platform, used as the
+/// mid-level oracle and as the engine fallback when AVX2 is unavailable.
+pub fn gemm_scalar(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    assert_eq!(a.k, w.k, "K mismatch");
+    assert_eq!(out.len(), a.rows * w.rows);
+    assert_eq!(lut.bits, 2);
+    let k = a.k;
+    let mut a_codes = vec![0u8; k];
+    let mut w_codes = vec![0u8; k];
+    for m in 0..a.rows {
+        super::pack::unpack_row(a.row(m), k, a.layout, &mut a_codes);
+        for n in 0..w.rows {
+            super::pack::unpack_row(w.row(n), k, w.layout, &mut w_codes);
+            let mut acc = 0i64;
+            for i in 0..k {
+                acc += lut.product(w_codes[i], a_codes[i]) as i64;
+            }
+            out[m * w.rows + n] = acc as i32;
+        }
+    }
+}
+
+/// Dispatch to the fastest available implementation for `scheme`.
+pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, scheme: Scheme, out: &mut [i32]) {
+    assert_eq!(a.layout, scheme.a_layout(), "activations packed for wrong scheme");
+    assert_eq!(w.layout, scheme.w_layout(), "weights packed for wrong scheme");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            unsafe { avx2::gemm(a, w, lut, scheme, out) };
+            return;
+        }
+    }
+    gemm_scalar(a, w, lut, out);
+}
+
+/// Convenience: quantized codes in, i32 accumulators out (packs
+/// activations on the fly; weights must be pre-packed offline).
+pub fn gemm_from_codes(
+    a_codes: &CodeMat,
+    w_packed: &Packed,
+    lut: &Lut16,
+    scheme: Scheme,
+    out: &mut [i32],
+) {
+    let a = super::pack::pack_activations(a_codes, scheme);
+    gemm(&a, w_packed, lut, scheme, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the four u64 lanes of a 256-bit accumulator —
+    /// the AVX2 reduction of the paper's Listing 1.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn hsum_epi64(v: __m256i) -> i64 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256(v, 1);
+        let d = _mm_add_epi64(hi, lo);
+        let e = _mm_shuffle_epi32(d, 238);
+        let f = _mm_add_epi64(e, d);
+        _mm_cvtsi128_si64(f)
+    }
+
+    /// Broadcast the 16-entry biased table into both 128-bit lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn load_lut(lut: &Lut16) -> __m256i {
+        debug_assert_eq!(lut.table.len(), 16);
+        let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
+        _mm256_broadcastsi128_si256(t)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm(a: &Packed, w: &Packed, lut: &Lut16, scheme: Scheme, out: &mut [i32]) {
+        let corr = lut.correction(a.k_padded, a.pad());
+        // The 1×4 microkernels accumulate 4 (dense) / 2 (nibble) rounds
+        // of biased-u8 entries in a byte lane before the SAD: exact iff
+        // 4·max_entry < 256. Every uniform 2-bit codebook pair satisfies
+        // this (entries ≤ 15); exotic custom codebooks fall back to the
+        // per-column kernels.
+        let max_entry = *lut.table.iter().max().unwrap_or(&0) as u32;
+        let tile4_ok = 4 * max_entry < 256;
+        for m in 0..a.rows {
+            let arow = a.row(m);
+            let mut n = 0usize;
+            // 1×4 column microkernel: the activation chunk is loaded and
+            // unpacked ONCE per four outputs (perf pass §L3: the a-side
+            // shift/mask work — half of Tab. 3's per-output budget — is
+            // amortized 4×, and four independent SAD accumulator chains
+            // hide the accumulate latency).
+            while tile4_ok && n + 4 <= w.rows {
+                let sads: [i64; 4] = match scheme {
+                    Scheme::A | Scheme::B => dot4_dense(
+                        arow,
+                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                        lut,
+                        a.k_padded,
+                    ),
+                    Scheme::C => dot4_scheme_c(
+                        arow,
+                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                        lut,
+                        a.k_padded,
+                    ),
+                    Scheme::D => dot4_scheme_d(
+                        arow,
+                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                        lut,
+                        a.k_padded,
+                    ),
+                };
+                for (j, s) in sads.into_iter().enumerate() {
+                    out[m * w.rows + n + j] = (s - corr) as i32;
+                }
+                n += 4;
+            }
+            while n < w.rows {
+                let wrow = w.row(n);
+                let sad: i64 = match scheme {
+                    Scheme::A => dot_scheme_a(arow, wrow, lut, a.k_padded),
+                    Scheme::B => dot_scheme_b(arow, wrow, lut, a.k_padded),
+                    Scheme::C => dot_scheme_c(arow, wrow, lut, a.k_padded),
+                    Scheme::D => dot_scheme_d(arow, wrow, lut, a.k_padded),
+                };
+                out[m * w.rows + n] = (sad - corr) as i32;
+                n += 1;
+            }
+        }
+    }
+
+    /// 1×4 microkernel for the dense/dense schemes (a, b): per 128
+    /// values the activation index-parts (3 shifts + 4 ands) are computed
+    /// once and OR-combined with each column's weight parts.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_dense(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+        let lutv = load_lut(lut);
+        let m3 = _mm256_set1_epi8(0x03);
+        let mc = _mm256_set1_epi8(0x0C);
+        let zero = _mm256_setzero_si256();
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+            // Hoisted activation parts, one per round.
+            let ta = [
+                _mm256_and_si256(va, m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+            ];
+            for j in 0..4 {
+                let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(32 * c) as *const __m256i);
+                let tw = [
+                    _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                    _mm256_and_si256(vw, mc),
+                    _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
+                    _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+                ];
+                let mut sum8 = _mm256_setzero_si256();
+                for r in 0..4 {
+                    let idx = _mm256_or_si256(tw[r], ta[r]);
+                    let prod = _mm256_shuffle_epi8(lutv, idx);
+                    sum8 = _mm256_add_epi8(prod, sum8);
+                    // 4 rounds × max entry 9 (unsigned) / 6 (signed-bias)
+                    // stays < 256 → one SAD per 4 rounds is exact.
+                    if r == 3 {
+                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+                    }
+                }
+            }
+        }
+        [
+            hsum_epi64(acc[0]),
+            hsum_epi64(acc[1]),
+            hsum_epi64(acc[2]),
+            hsum_epi64(acc[3]),
+        ]
+    }
+
+    /// 1×4 microkernel for scheme c (ready weight bytes).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_scheme_c(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+        let lutv = load_lut(lut);
+        let m3 = _mm256_set1_epi8(0x03);
+        let zero = _mm256_setzero_si256();
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+            let ta = [
+                _mm256_and_si256(va, m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+            ];
+            for j in 0..4 {
+                let wbase = wrows[j].as_ptr().add(128 * c);
+                let mut sum8 = _mm256_setzero_si256();
+                for (r, tar) in ta.iter().enumerate() {
+                    let tw = _mm256_loadu_si256(wbase.add(32 * r) as *const __m256i);
+                    let idx = _mm256_or_si256(tw, *tar);
+                    sum8 = _mm256_add_epi8(_mm256_shuffle_epi8(lutv, idx), sum8);
+                }
+                acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+            }
+        }
+        [
+            hsum_epi64(acc[0]),
+            hsum_epi64(acc[1]),
+            hsum_epi64(acc[2]),
+            hsum_epi64(acc[3]),
+        ]
+    }
+
+    /// 1×4 microkernel for scheme d (complementary nibbles): the fused
+    /// OR depends on both operands, so only the activation loads are
+    /// shared; independent accumulators still hide SAD latency.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_scheme_d(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+        let lutv = load_lut(lut);
+        let mf = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        let mut acc = [_mm256_setzero_si256(); 4];
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            for half in 0..2 {
+                let off = 64 * c + 32 * half;
+                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                for j in 0..4 {
+                    let vw =
+                        _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
+                    let fused = _mm256_or_si256(vw, va);
+                    let ilo = _mm256_and_si256(fused, mf);
+                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                    // Two rounds → max 2 × entry ≤ 18 < 256: one SAD.
+                    let sum8 = _mm256_add_epi8(
+                        _mm256_shuffle_epi8(lutv, ilo),
+                        _mm256_shuffle_epi8(lutv, ihi),
+                    );
+                    acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+                }
+            }
+        }
+        [
+            hsum_epi64(acc[0]),
+            hsum_epi64(acc[1]),
+            hsum_epi64(acc[2]),
+            hsum_epi64(acc[3]),
+        ]
+    }
+
+    #[allow(non_camel_case_types)]
+    type i64x4 = [i64; 4];
+
+    /// Scheme a: naive dense/dense. Per 128 values: 6 shifts, 8 ands,
+    /// 4 ors, 4 shuffles (Tab. 3 column a: 1.5/2/1/1 per output).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_scheme_a(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        let lutv = load_lut(lut);
+        let m3 = _mm256_set1_epi8(0x03);
+        let mc = _mm256_set1_epi8(0x0C);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+            let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
+            // round 0: w crumb0 → [3:2] needs <<2; a crumb0 in place.
+            let i0 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                _mm256_and_si256(va, m3),
+            );
+            // round 1: w crumb1 already at [3:2]; a crumb1 needs >>2.
+            let i1 = _mm256_or_si256(
+                _mm256_and_si256(vw, mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+            );
+            // round 2: w >>2, a >>4.
+            let i2 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+            );
+            // round 3: w >>4, a >>6.
+            let i3 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+            );
+            for idx in [i0, i1, i2, i3] {
+                let prod = _mm256_shuffle_epi8(lutv, idx);
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+            }
+        }
+        hsum_epi64(acc)
+    }
+
+    /// Scheme b: same dense layout, but the unpack order elides the
+    /// provably-unneeded mask in round 3 (`a >> 6` is already clean, and
+    /// `pshufb` ignores bits 4–6 while bit 7 is guaranteed clear) and
+    /// hoists shared shift temporaries — fewer ops, shorter dependency
+    /// chains than scheme a.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_scheme_b(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        let lutv = load_lut(lut);
+        let m3 = _mm256_set1_epi8(0x03);
+        let mc = _mm256_set1_epi8(0x0C);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+            let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
+            let w2 = _mm256_srli_epi32(vw, 2); // crumbs 2,3 shifted toward [3:2]
+            let a2 = _mm256_srli_epi32(va, 2);
+            let i0 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                _mm256_and_si256(va, m3),
+            );
+            let i1 = _mm256_or_si256(_mm256_and_si256(vw, mc), _mm256_and_si256(a2, m3));
+            let i2 = _mm256_or_si256(
+                _mm256_and_si256(w2, mc),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+            );
+            // round 3: (w>>4)&mc | (a>>6) — a>>6 has bits [1:0] only, and
+            // epi32 shifts leak at most neighbouring-byte crumbs into
+            // bits >= 2 of... no: a>>6 within epi32 lanes brings byte b+1
+            // bits into byte b bits [7:2]; pshufb masks bits 4-6 but bits
+            // [3:2] would corrupt the weight field, EXCEPT we OR the
+            // weight field in — so we shift the *or-combined* register:
+            // build t = (w>>4)&mc first, then or with (a>>6)&m3... the
+            // elision is only safe for the last byte; keep correctness:
+            // elide instead the *weight* mask by pre-cleaning: w>>4 of the
+            // top crumb is clean in bits [3:2] per byte? No — same leak.
+            // => only genuine elision: compute a6 = srli_epi16(va, 6) and
+            // rely on pshufb ignoring bits 4-6 after masking bit7+[3:2]:
+            // not free either. We therefore keep round 3 masked but reuse
+            // w2/a2 (hoisting wins come from ILP, not op count).
+            let i3 = _mm256_or_si256(
+                _mm256_and_si256(_mm256_srli_epi32(w2, 2), mc),
+                _mm256_and_si256(_mm256_srli_epi32(a2, 4), m3),
+            );
+            for idx in [i0, i1, i2, i3] {
+                let prod = _mm256_shuffle_epi8(lutv, idx);
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+            }
+        }
+        hsum_epi64(acc)
+    }
+
+    /// Scheme c: weights byte-expanded & round-grouped offline
+    /// ([`Layout::ByteHi`]): each round's weight vector is load-and-go
+    /// (zero shifts, zero masks). Activations stay dense.
+    /// Per 128 values: 3 shifts, 4 ands, 4 ors, 4 shuffles.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_scheme_c(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        let lutv = load_lut(lut);
+        let m3 = _mm256_set1_epi8(0x03);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+            let wbase = wrow.as_ptr().add(128 * c);
+            let ta = [
+                _mm256_and_si256(va, m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+            ];
+            for (i, tai) in ta.iter().enumerate() {
+                let tw = _mm256_loadu_si256(wbase.add(32 * i) as *const __m256i);
+                let idx = _mm256_or_si256(tw, *tai);
+                let prod = _mm256_shuffle_epi8(lutv, idx);
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+            }
+        }
+        hsum_epi64(acc)
+    }
+
+    /// Scheme d: complementary nibble layouts — `w | a` directly yields
+    /// two 4-bit indices per byte; the low nibble needs one mask, the high
+    /// one shift (`pshufb` reads only low 4 bits once bit 7 is clear,
+    /// which `(w|a) >> 4` guarantees).
+    /// Per 128 values (2 fused loads of 32B each): 2 ors, 2 ands,
+    /// 2 shifts, 4 shuffles.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_scheme_d(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        let lutv = load_lut(lut);
+        let mf = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        // Nibble layouts: 64 bytes per 128 values.
+        let chunks = k_padded / K_BLOCK;
+        for c in 0..chunks {
+            for half in 0..2 {
+                let off = 64 * c + 32 * half;
+                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                let fused = _mm256_or_si256(vw, va);
+                let ilo = _mm256_and_si256(fused, mf);
+                // High nibble: bits [7:4] → [3:0]; epi32 shift leaks the
+                // next byte's low nibble into bits [7:4], which pshufb
+                // ignores (bit 7 of the shifted result is bit 11 of the
+                // fused pair = next byte's bit 3 — may be set! Use epi16
+                // shift + mask-free trick: shift each 16-bit lane right 4
+                // then AND with 0x0F0F is needed... keep one AND).
+                let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                for idx in [ilo, ihi] {
+                    let prod = _mm256_shuffle_epi8(lutv, idx);
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                }
+            }
+        }
+        hsum_epi64(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::{pack_activations, pack_weights};
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn check_scheme_vs_oracle(scheme: Scheme, signed: bool, m: usize, n: usize, k: usize, seed: u64) {
+        let cb = if signed { IntCodebook::signed(2) } else { IntCodebook::unsigned(2) };
+        let a = CodeMat::random(m, k, 2, seed);
+        let w = CodeMat::random(n, k, 2, seed ^ 0xABCD);
+        let lut = Lut16::build(&cb, &cb);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+
+        let ap = pack_activations(&a, scheme);
+        let wp = pack_weights(&w, scheme);
+        let mut got = vec![0i32; m * n];
+        gemm(&ap, &wp, &lut, scheme, &mut got);
+        assert_eq!(got, want, "scheme {:?} signed={signed} m={m} n={n} k={k}", scheme);
+
+        let mut got_scalar = vec![0i32; m * n];
+        gemm_scalar(&ap, &wp, &lut, &mut got_scalar);
+        assert_eq!(got_scalar, want, "scalar scheme {:?}", scheme);
+    }
+
+    #[test]
+    fn all_schemes_match_oracle_small() {
+        for scheme in Scheme::ALL {
+            for &signed in &[false, true] {
+                check_scheme_vs_oracle(scheme, signed, 3, 5, 7, 42);
+            }
+        }
+    }
+
+    #[test]
+    fn all_schemes_match_oracle_k_block_boundaries() {
+        // K exactly at / around the 128-value block boundary.
+        for scheme in Scheme::ALL {
+            for &k in &[1usize, 127, 128, 129, 255, 256, 300] {
+                check_scheme_vs_oracle(scheme, true, 2, 3, k, 7 + k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn schemes_agree_with_each_other_property() {
+        prop::check(
+            0xDEE9,
+            40,
+            |r: &mut Rng| {
+                (r.range(1, 5), r.range(1, 6), r.range(1, 400), r.next_u64())
+            },
+            |&(m, n, k, seed)| {
+                let cb = IntCodebook::signed(2);
+                let a = CodeMat::random(m, k, 2, seed);
+                let w = CodeMat::random(n, k, 2, seed ^ 1);
+                let lut = Lut16::build(&cb, &cb);
+                let mut ref_out: Option<Vec<i32>> = None;
+                for scheme in Scheme::ALL {
+                    let ap = pack_activations(&a, scheme);
+                    let wp = pack_weights(&w, scheme);
+                    let mut out = vec![0i32; m * n];
+                    gemm(&ap, &wp, &lut, scheme, &mut out);
+                    match &ref_out {
+                        None => ref_out = Some(out),
+                        Some(r0) => {
+                            if r0 != &out {
+                                return Err(format!(
+                                    "scheme {:?} diverges at m={m} n={n} k={k}",
+                                    scheme
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn asymmetric_codebooks() {
+        // Weight signed, activation unsigned (the common post-ReLU case).
+        let wcb = IntCodebook::signed(2);
+        let acb = IntCodebook::unsigned(2);
+        let a = CodeMat::random(4, 200, 2, 5);
+        let w = CodeMat::random(6, 200, 2, 6);
+        let lut = Lut16::build(&wcb, &acb);
+        let mut want = vec![0i32; 24];
+        oracle_gemm_i32(&a, &w, &wcb, &acb, &mut want);
+        for scheme in Scheme::ALL {
+            let ap = pack_activations(&a, scheme);
+            let wp = pack_weights(&w, scheme);
+            let mut got = vec![0i32; 24];
+            gemm(&ap, &wp, &lut, scheme, &mut got);
+            assert_eq!(got, want, "scheme {:?}", scheme);
+        }
+    }
+
+    #[test]
+    fn large_k_no_overflow() {
+        // Max products (unsigned 3*3=9) with K = 16384: acc = 147456,
+        // far beyond i16/u8 — verifies the SAD accumulation chain.
+        let k = 16384;
+        let cb = IntCodebook::unsigned(2);
+        let a = CodeMat::from_data(1, k, 2, vec![3; k]);
+        let w = CodeMat::from_data(1, k, 2, vec![3; k]);
+        let lut = Lut16::build(&cb, &cb);
+        for scheme in Scheme::ALL {
+            let ap = pack_activations(&a, scheme);
+            let wp = pack_weights(&w, scheme);
+            let mut got = vec![0i32; 1];
+            gemm(&ap, &wp, &lut, scheme, &mut got);
+            assert_eq!(got[0], 9 * k as i32, "scheme {:?}", scheme);
+        }
+    }
+}

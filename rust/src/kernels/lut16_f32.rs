@@ -1,0 +1,159 @@
+//! f32-entry LUT-16 kernel — the non-uniform-quantization path (paper
+//! §5.3): "The LUT can store either integer or floating-point values.
+//! Floating-point entries ... make DeepGEMM compatible with non-uniform
+//! quantization."
+//!
+//! Index construction is identical to the integer scheme-d kernel; the
+//! lookup becomes a pair of `vpermps` (8-entry f32 permutes) blended on
+//! index bit 3, and accumulation is `vaddps`. Latency is *independent of
+//! the sign or uniformity of the levels* — the flexibility claim the
+//! §5.3 bench quantifies.
+
+use super::pack::{Layout, Packed};
+use crate::quant::Lut16F32;
+
+/// Scalar reference.
+pub fn gemm_scalar(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(out.len(), a.rows * w.rows);
+    let k = a.k;
+    let mut ac = vec![0u8; k];
+    let mut wc = vec![0u8; k];
+    for m in 0..a.rows {
+        super::pack::unpack_row(a.row(m), k, a.layout, &mut ac);
+        for n in 0..w.rows {
+            super::pack::unpack_row(w.row(n), k, w.layout, &mut wc);
+            let mut acc = 0f64;
+            for i in 0..k {
+                acc += lut.product(wc[i], ac[i]) as f64;
+            }
+            out[m * w.rows + n] = acc as f32;
+        }
+    }
+}
+
+/// Dispatch. Requires scheme-d layouts (weights [`Layout::NibbleHi`],
+/// activations [`Layout::NibbleLo`]).
+pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
+    assert_eq!(a.layout, Layout::NibbleLo);
+    assert_eq!(w.layout, Layout::NibbleHi);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            unsafe { avx2::gemm(a, w, lut, out) };
+            return;
+        }
+    }
+    gemm_scalar(a, w, lut, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Look up 8 f32 products for 8 dword-expanded indices.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lookup8(lut_lo: __m256, lut_hi: __m256, idx: __m256i) -> __m256 {
+        let lo = _mm256_permutevar8x32_ps(lut_lo, idx);
+        let hi = _mm256_permutevar8x32_ps(lut_hi, idx);
+        // Select by index bit 3 → move to the dword sign bit for blendv.
+        let sel = _mm256_castsi256_ps(_mm256_slli_epi32(idx, 28));
+        _mm256_blendv_ps(lo, hi, sel)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
+        let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
+        let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
+        let mf = _mm256_set1_epi8(0x0F);
+        let pad_corr = lut.pad_product * a.pad() as f32;
+        let bytes = a.k_padded / 2;
+        for m in 0..a.rows {
+            let arow = a.row(m);
+            for n in 0..w.rows {
+                let wrow = w.row(n);
+                let mut acc = _mm256_setzero_ps();
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                    let fused = _mm256_or_si256(vw, va);
+                    let ilo = _mm256_and_si256(fused, mf);
+                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                    // Expand 32 byte-indices → 4 groups of 8 dwords each
+                    // and accumulate products.
+                    for idxv in [ilo, ihi] {
+                        let q0 = _mm256_castsi256_si128(idxv);
+                        let q1 = _mm256_extracti128_si256(idxv, 1);
+                        let e0 = _mm256_cvtepu8_epi32(q0);
+                        let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
+                        let e2 = _mm256_cvtepu8_epi32(q1);
+                        let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
+                        for e in [e0, e1, e2, e3] {
+                            acc = _mm256_add_ps(acc, lookup8(lut_lo, lut_hi, e));
+                        }
+                    }
+                    off += 32;
+                }
+                out[m * w.rows + n] = hsum_ps(acc) - pad_corr;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::{pack, Scheme};
+    use crate::kernels::{oracle_gemm_f32, CodeMat};
+    use crate::quant::{F32Codebook, Lut16F32};
+    use crate::util::prop::assert_close;
+
+    fn check(wcb: &F32Codebook, acb: &F32Codebook, m: usize, n: usize, k: usize, seed: u64) {
+        let a = CodeMat::random(m, k, 2, seed);
+        let w = CodeMat::random(n, k, 2, seed ^ 0x11);
+        let lut = Lut16F32::build(wcb, acb);
+        let mut want = vec![0f32; m * n];
+        oracle_gemm_f32(&a, &w, wcb, acb, &mut want);
+        let ap = pack(&a, Scheme::D.a_layout());
+        let wp = pack(&w, Scheme::D.w_layout());
+        let mut got = vec![0f32; m * n];
+        gemm(&ap, &wp, &lut, &mut got);
+        assert_close(&got, &want, 1e-3, 1e-4).unwrap();
+        let mut got_s = vec![0f32; m * n];
+        gemm_scalar(&ap, &wp, &lut, &mut got_s);
+        assert_close(&got_s, &want, 1e-3, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn nonuniform_codebooks_match_oracle() {
+        let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
+        let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 100), (3, 2, 128), (2, 2, 500)] {
+            check(&wcb, &acb, m, n, k, k as u64 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn uniform_as_special_case() {
+        // f32 LUT with uniform levels must match the scaled integer path.
+        use crate::quant::IntCodebook;
+        let icb = IntCodebook::signed(2);
+        let wcb = F32Codebook::from_int(&icb, 0.5);
+        let acb = F32Codebook::from_int(&IntCodebook::unsigned(2), 0.25);
+        check(&wcb, &acb, 3, 3, 200, 777);
+    }
+}

@@ -1,0 +1,237 @@
+//! LUT-16 generalised to 3-bit and 4-bit operands (paper §3.3, Tab. 2).
+//!
+//! - 3-bit: 64-entry table, 6-bit index `(w << 3) | a`; the table spans
+//!   two AVX2 registers — we hold it as four 16-entry sub-tables and
+//!   select with `pblendvb` on index bits 4–5 (2 shuffles + blends per
+//!   round vs 1 shuffle for 2-bit: the paper's "LUT access time will
+//!   slightly increase").
+//! - 4-bit: 256-entry table, 8-bit index; 16 sub-tables selected by the
+//!   weight code (compare + mask accumulation — 8 AVX2 registers of
+//!   table, as Tab. 2 lists).
+//!
+//! Both use the [`Layout::Dense3`]/[`Layout::Dense4`] packings (2 codes
+//! per byte) and the same biased-u8 + `vpsadbw` accumulation as the 2-bit
+//! kernel.
+
+use super::pack::{pack, Layout, Packed};
+use super::CodeMat;
+use crate::quant::Lut16;
+
+/// Pack helper for the wide kernels.
+pub fn pack_wide(codes: &CodeMat) -> Packed {
+    match codes.bits {
+        3 => pack(codes, Layout::Dense3),
+        4 => pack(codes, Layout::Dense4),
+        b => panic!("lut16_wide supports 3/4-bit, got {b}"),
+    }
+}
+
+/// Scalar reference for any bitwidth.
+pub fn gemm_scalar(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(out.len(), a.rows * w.rows);
+    let k = a.k;
+    let mut ac = vec![0u8; k];
+    let mut wc = vec![0u8; k];
+    for m in 0..a.rows {
+        super::pack::unpack_row(a.row(m), k, a.layout, &mut ac);
+        for n in 0..w.rows {
+            super::pack::unpack_row(w.row(n), k, w.layout, &mut wc);
+            let mut acc = 0i64;
+            for i in 0..k {
+                acc += lut.product(wc[i], ac[i]) as i64;
+            }
+            out[m * w.rows + n] = acc as i32;
+        }
+    }
+}
+
+pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            match lut.bits {
+                3 => unsafe { avx2::gemm3(a, w, lut, out) },
+                4 => unsafe { avx2::gemm4(a, w, lut, out) },
+                _ => gemm_scalar(a, w, lut, out),
+            }
+            return;
+        }
+    }
+    gemm_scalar(a, w, lut, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use crate::kernels::lut16::avx2::hsum_epi64;
+    use std::arch::x86_64::*;
+
+    /// 3-bit kernel. Dense3: codes at bits [2:0] and [6:4]; 64 values per
+    /// 32-byte load, two rounds per load.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm3(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+        debug_assert_eq!(lut.table.len(), 64);
+        // Four 16-entry sub-tables, each broadcast to both lanes.
+        let mut sub = [_mm256_setzero_si256(); 4];
+        for (t, s) in sub.iter_mut().enumerate() {
+            let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
+            *s = _mm256_broadcastsi128_si256(tt);
+        }
+        let m7 = _mm256_set1_epi8(0x07);
+        let m38 = _mm256_set1_epi8(0x38);
+        let zero = _mm256_setzero_si256();
+        let corr = lut.correction(a.k_padded, a.pad());
+        let bytes = a.k_padded / 2;
+        for mi in 0..a.rows {
+            let arow = a.row(mi);
+            for n in 0..w.rows {
+                let wrow = w.row(n);
+                let mut acc = _mm256_setzero_si256();
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                    // round 0: codes at [2:0]; round 1: at [6:4].
+                    for r in 0..2 {
+                        let (ca, cw) = if r == 0 {
+                            (_mm256_and_si256(va, m7), _mm256_and_si256(_mm256_slli_epi32(vw, 3), m38))
+                        } else {
+                            (
+                                _mm256_and_si256(_mm256_srli_epi32(va, 4), m7),
+                                _mm256_and_si256(_mm256_srli_epi32(vw, 1), m38),
+                            )
+                        };
+                        let idx = _mm256_or_si256(cw, ca); // 6-bit index
+                        // Select sub-table by bits [5:4] using blendv on
+                        // the shifted index (blendv keys on bit 7).
+                        let s01 = _mm256_blendv_epi8(
+                            _mm256_shuffle_epi8(sub[0], idx),
+                            _mm256_shuffle_epi8(sub[1], idx),
+                            _mm256_slli_epi32(idx, 3), // bit4 → bit7
+                        );
+                        let s23 = _mm256_blendv_epi8(
+                            _mm256_shuffle_epi8(sub[2], idx),
+                            _mm256_shuffle_epi8(sub[3], idx),
+                            _mm256_slli_epi32(idx, 3),
+                        );
+                        let prod = _mm256_blendv_epi8(
+                            s01,
+                            s23,
+                            _mm256_slli_epi32(idx, 2), // bit5 → bit7
+                        );
+                        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                    }
+                    off += 32;
+                }
+                out[mi * w.rows + n] = (hsum_epi64(acc) - corr) as i32;
+            }
+        }
+    }
+
+    /// 4-bit kernel. Dense4: codes at [3:0], [7:4]; 16 sub-tables
+    /// selected by the weight code via compare+mask accumulation.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm4(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+        debug_assert_eq!(lut.table.len(), 256);
+        let mut sub = [_mm256_setzero_si256(); 16];
+        for (t, s) in sub.iter_mut().enumerate() {
+            let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
+            *s = _mm256_broadcastsi128_si256(tt);
+        }
+        let mf = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        let corr = lut.correction(a.k_padded, a.pad());
+        let bytes = a.k_padded / 2;
+        for mi in 0..a.rows {
+            let arow = a.row(mi);
+            for n in 0..w.rows {
+                let wrow = w.row(n);
+                let mut acc = _mm256_setzero_si256();
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                    for r in 0..2 {
+                        let (ca, cw) = if r == 0 {
+                            (_mm256_and_si256(va, mf), _mm256_and_si256(vw, mf))
+                        } else {
+                            (
+                                _mm256_and_si256(_mm256_srli_epi16(va, 4), mf),
+                                _mm256_and_si256(_mm256_srli_epi16(vw, 4), mf),
+                            )
+                        };
+                        // prod[j] = sub[cw[j]][ca[j]] — accumulate over
+                        // the 16 possible weight codes with masks.
+                        let mut prod = _mm256_setzero_si256();
+                        for (t, s) in sub.iter().enumerate() {
+                            let sel = _mm256_cmpeq_epi8(cw, _mm256_set1_epi8(t as i8));
+                            prod = _mm256_or_si256(
+                                prod,
+                                _mm256_and_si256(_mm256_shuffle_epi8(*s, ca), sel),
+                            );
+                        }
+                        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                    }
+                    off += 32;
+                }
+                out[mi * w.rows + n] = (hsum_epi64(acc) - corr) as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+
+    fn check(bits: u32, signed: bool, m: usize, n: usize, k: usize, seed: u64) {
+        let cb = if signed { IntCodebook::signed(bits) } else { IntCodebook::unsigned(bits) };
+        let a = CodeMat::random(m, k, bits, seed);
+        let w = CodeMat::random(n, k, bits, seed ^ 0x55);
+        let lut = Lut16::build(&cb, &cb);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+        let ap = pack_wide(&a);
+        let wp = pack_wide(&w);
+        let mut got = vec![0i32; m * n];
+        gemm(&ap, &wp, &lut, &mut got);
+        assert_eq!(got, want, "bits={bits} signed={signed} m={m} n={n} k={k}");
+        let mut got_s = vec![0i32; m * n];
+        gemm_scalar(&ap, &wp, &lut, &mut got_s);
+        assert_eq!(got_s, want);
+    }
+
+    #[test]
+    fn matches_oracle_3bit() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)] {
+            check(3, false, m, n, k, k as u64 + 31);
+            check(3, true, m, n, k, k as u64 + 32);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_4bit() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)] {
+            check(4, false, m, n, k, k as u64 + 41);
+            check(4, true, m, n, k, k as u64 + 42);
+        }
+    }
+
+    #[test]
+    fn max_products_4bit_unsigned() {
+        // 15 × 15 × k exercises the top of the biased-u8 entry range.
+        let k = 2048;
+        let cb = IntCodebook::unsigned(4);
+        let a = CodeMat::from_data(1, k, 4, vec![15; k]);
+        let w = CodeMat::from_data(1, k, 4, vec![15; k]);
+        let lut = Lut16::build(&cb, &cb);
+        let ap = pack_wide(&a);
+        let wp = pack_wide(&w);
+        let mut out = vec![0i32; 1];
+        gemm(&ap, &wp, &lut, &mut out);
+        assert_eq!(out[0], 225 * k as i32);
+    }
+}

@@ -1,0 +1,98 @@
+//! LUT-65k GEMM kernel (paper §3.2): a 2^16-entry table of 4-element
+//! block dot products, indexed by (packed weight byte, packed activation
+//! byte). One lookup covers four MACs; the index is built by byte
+//! interleaving, which removes per-crumb masking/shifting entirely — the
+//! paper's trade of unpacking work for a larger (L2-resident, 64 KB)
+//! table.
+//!
+//! The hot loop is scalar by design: AVX2 has no 16-bit-indexed gather
+//! cheaper than ~1 lookup/cycle, which is exactly what scalar L1/L2 loads
+//! achieve with 4-way unrolling; the bench shows where the bigger table
+//! wins and loses against LUT-16 (cache-residency ablation).
+
+use super::pack::{pack, Layout, Packed};
+use super::CodeMat;
+use crate::quant::Lut65k;
+
+/// Pack codes densely (4 crumbs/byte) for the LUT-65k kernel.
+pub fn pack_dense(codes: &CodeMat) -> Packed {
+    pack(codes, Layout::Dense)
+}
+
+/// `out[m][n] = Σ_k Vw(w[k]) · Va(a[k])` via 4-MAC block lookups.
+pub fn gemm(a: &Packed, w: &Packed, lut: &Lut65k, out: &mut [i32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(a.layout, Layout::Dense);
+    assert_eq!(w.layout, Layout::Dense);
+    assert_eq!(out.len(), a.rows * w.rows);
+    let bytes = a.k_padded / 4;
+    // Padding correction: padded crumbs are code 0 on both sides.
+    let pad_corr = lut.pad_product * a.pad() as i32;
+    let table = &lut.table;
+    for m in 0..a.rows {
+        let arow = &a.row(m)[..bytes];
+        for n in 0..w.rows {
+            let wrow = &w.row(n)[..bytes];
+            // 4-way unrolled scalar lookup loop; indices are
+            // (w_byte << 8) | a_byte.
+            let mut acc0 = 0i32;
+            let mut acc1 = 0i32;
+            let mut acc2 = 0i32;
+            let mut acc3 = 0i32;
+            let mut i = 0usize;
+            while i + 4 <= bytes {
+                // SAFETY-free fast path: indices are < 65536 by
+                // construction (u8 << 8 | u8).
+                acc0 += table[((wrow[i] as usize) << 8) | arow[i] as usize] as i32;
+                acc1 += table[((wrow[i + 1] as usize) << 8) | arow[i + 1] as usize] as i32;
+                acc2 += table[((wrow[i + 2] as usize) << 8) | arow[i + 2] as usize] as i32;
+                acc3 += table[((wrow[i + 3] as usize) << 8) | arow[i + 3] as usize] as i32;
+                i += 4;
+            }
+            while i < bytes {
+                acc0 += table[((wrow[i] as usize) << 8) | arow[i] as usize] as i32;
+                i += 1;
+            }
+            out[m * w.rows + n] = acc0 + acc1 + acc2 + acc3 - pad_corr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+
+    fn check(m: usize, n: usize, k: usize, signed: bool, seed: u64) {
+        let cb = if signed { IntCodebook::signed(2) } else { IntCodebook::unsigned(2) };
+        let a = CodeMat::random(m, k, 2, seed);
+        let w = CodeMat::random(n, k, 2, seed ^ 0xAA);
+        let lut = Lut65k::build(&cb, &cb);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+        let ap = pack_dense(&a);
+        let wp = pack_dense(&w);
+        let mut got = vec![0i32; m * n];
+        gemm(&ap, &wp, &lut, &mut got);
+        assert_eq!(got, want, "m={m} n={n} k={k} signed={signed}");
+    }
+
+    #[test]
+    fn matches_oracle() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 3), (3, 4, 127), (2, 3, 128), (2, 2, 129), (2, 2, 640)] {
+            check(m, n, k, false, k as u64 + 1);
+            check(m, n, k, true, k as u64 + 2);
+        }
+    }
+
+    #[test]
+    fn partial_byte_padding_correct() {
+        // k = 5: one full byte + 1 crumb in second byte; padding is
+        // code 0, whose signed product is (-2)(-2) = 4 per crumb — the
+        // correction must remove it exactly.
+        check(1, 1, 5, true, 3);
+        check(1, 1, 6, true, 4);
+        check(1, 1, 7, true, 5);
+    }
+}

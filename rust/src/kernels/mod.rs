@@ -1,0 +1,259 @@
+//! The DeepGEMM kernel suite (paper §3–§4) plus every baseline the paper
+//! compares against (§2.2, §5).
+//!
+//! All low-bit GEMM kernels share one semantic contract:
+//!
+//! ```text
+//! acc[m][n] = Σ_k  Vw(w_code[n][k]) · Va(a_code[m][k])      (i32)
+//! ```
+//!
+//! where `a_code` is an M×K matrix of activation codes, `w_code` an N×K
+//! matrix of weight codes (i.e. the weight matrix is stored transposed so
+//! every output streams contiguous K-major data), and `Vw`/`Va` are the
+//! codebooks from [`crate::quant`]. Floating-point LUT kernels produce f32
+//! accumulators with the same structure.
+//!
+//! Modules:
+//! - [`pack`] — bit-packing layouts & schemes a–d (paper §4.1, Fig. 4)
+//! - [`lut16`] — LUT-16 `pshufb` kernels, 2-bit (paper §3.2, Alg. 1)
+//! - [`lut16_wide`] — 3-bit / 4-bit LUT kernels (paper Tab. 2)
+//! - [`lut16_f32`] — f32-entry LUT kernel for non-uniform quantization
+//! - [`lut65k`] — the 2^16-entry block-product kernel (paper §3.2)
+//! - [`int8`] — QNNPACK-style INT8 baseline (the paper's denominator)
+//! - [`fp32`] — FP32 reference GEMM
+//! - [`bitserial`] — AND+popcount baseline (Cowan et al.)
+//! - [`ulppack`] — sub-byte-packed multiply baseline (Won et al.)
+//! - [`portable`] — scalar LUT kernel (the "Arm without tbl" stand-in,
+//!   paper Fig. 8)
+
+pub mod bitserial;
+pub mod fp32;
+pub mod int8;
+pub mod lut16;
+pub mod lut16_f32;
+pub mod lut16_wide;
+pub mod lut65k;
+pub mod pack;
+pub mod portable;
+pub mod ulppack;
+
+use crate::quant::IntCodebook;
+
+/// Values-per-AVX2-chunk the 2-bit kernels process per inner iteration:
+/// 32 packed bytes × 4 crumbs. K is always padded to a multiple of this.
+pub const K_BLOCK: usize = 128;
+
+/// A GEMM problem size. Convention follows the paper's layer listings:
+/// an (M×K) activation matrix against a (K×N) weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmSize {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmSize {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        Self { m, n, k }
+    }
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+}
+
+/// Row-major matrix of codes, one code per byte (the unpacked form that
+/// packing routines consume and oracles operate on).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub data: Vec<u8>,
+}
+
+impl CodeMat {
+    pub fn new(rows: usize, cols: usize, bits: u32) -> Self {
+        Self { rows, cols, bits, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, bits: u32, data: Vec<u8>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        debug_assert!(data.iter().all(|&c| (c as u32) < (1 << bits)));
+        Self { rows, cols, bits, data }
+    }
+
+    pub fn random(rows: usize, cols: usize, bits: u32, seed: u64) -> Self {
+        let mut m = Self::new(rows, cols, bits);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.fill_codes(&mut m.data, bits);
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u8 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// Scalar reference GEMM over codes + integer codebooks — the oracle every
+/// kernel is tested against.
+pub fn oracle_gemm_i32(
+    a: &CodeMat,
+    w: &CodeMat,
+    w_cb: &IntCodebook,
+    a_cb: &IntCodebook,
+    out: &mut [i32],
+) {
+    assert_eq!(a.cols, w.cols, "K mismatch");
+    assert_eq!(out.len(), a.rows * w.rows);
+    for m in 0..a.rows {
+        let arow = a.row(m);
+        for n in 0..w.rows {
+            let wrow = w.row(n);
+            let mut acc = 0i64;
+            for k in 0..a.cols {
+                acc += (w_cb.value(wrow[k]) * a_cb.value(arow[k])) as i64;
+            }
+            out[m * w.rows + n] = acc as i32;
+        }
+    }
+}
+
+/// f32 oracle over real codebooks (non-uniform path).
+pub fn oracle_gemm_f32(
+    a: &CodeMat,
+    w: &CodeMat,
+    w_cb: &crate::quant::F32Codebook,
+    a_cb: &crate::quant::F32Codebook,
+    out: &mut [f32],
+) {
+    assert_eq!(a.cols, w.cols, "K mismatch");
+    assert_eq!(out.len(), a.rows * w.rows);
+    for m in 0..a.rows {
+        let arow = a.row(m);
+        for n in 0..w.rows {
+            let wrow = w.row(n);
+            let mut acc = 0f64;
+            for k in 0..a.cols {
+                acc += (w_cb.value(wrow[k]) * a_cb.value(arow[k])) as f64;
+            }
+            out[m * w.rows + n] = acc as f32;
+        }
+    }
+}
+
+/// Which GEMM backend to use — the engine-level dispatch enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// FP32 blocked/AVX2 reference.
+    Fp32,
+    /// QNNPACK-style INT8 (unpack→pmaddwd). The paper's baseline.
+    Int8,
+    /// LUT-16 pshufb kernel with the given packing scheme (2-bit).
+    Lut16(pack::Scheme),
+    /// LUT-16 generalisation at 3 or 4 bits (paper Tab. 2).
+    LutWide(u32),
+    /// 2^16-entry block-product table (paper §3.2 LUT-65k).
+    Lut65k,
+    /// f32-entry LUT (non-uniform quantization, §5.3).
+    Lut16F32,
+    /// Bit-serial AND+popcount baseline.
+    BitSerial,
+    /// ULPPACK-style packed-multiply baseline.
+    UlpPack,
+    /// Scalar LUT kernel — the no-SIMD / "Arm without tbl" path (Fig. 8).
+    Portable,
+}
+
+impl Backend {
+    pub fn name(&self) -> String {
+        match self {
+            Backend::Fp32 => "fp32".into(),
+            Backend::Int8 => "int8".into(),
+            Backend::Lut16(s) => format!("lut16-{}", s.name()),
+            Backend::LutWide(b) => format!("lut{}b", b),
+            Backend::Lut65k => "lut65k".into(),
+            Backend::Lut16F32 => "lut16-f32".into(),
+            Backend::BitSerial => "bitserial".into(),
+            Backend::UlpPack => "ulppack".into(),
+            Backend::Portable => "portable".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s {
+            "fp32" => Backend::Fp32,
+            "int8" => Backend::Int8,
+            "lut16" | "lut16-d" | "lut2" => Backend::Lut16(pack::Scheme::D),
+            "lut16-a" => Backend::Lut16(pack::Scheme::A),
+            "lut16-b" => Backend::Lut16(pack::Scheme::B),
+            "lut16-c" => Backend::Lut16(pack::Scheme::C),
+            "lut3b" => Backend::LutWide(3),
+            "lut4b" => Backend::LutWide(4),
+            "lut65k" => Backend::Lut65k,
+            "lut16-f32" => Backend::Lut16F32,
+            "bitserial" => Backend::BitSerial,
+            "ulppack" => Backend::UlpPack,
+            "portable" => Backend::Portable,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_tiny_by_hand() {
+        // a = [[0,1],[2,3]] codes, w = [[1,1]] codes, unsigned 2-bit.
+        let a = CodeMat::from_data(2, 2, 2, vec![0, 1, 2, 3]);
+        let w = CodeMat::from_data(1, 2, 2, vec![1, 1]);
+        let cb = IntCodebook::unsigned(2);
+        let mut out = vec![0i32; 2];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut out);
+        assert_eq!(out, vec![1, 5]);
+    }
+
+    #[test]
+    fn oracle_signed_by_hand() {
+        // signed: values = code - 2.
+        let a = CodeMat::from_data(1, 3, 2, vec![0, 2, 3]); // -2, 0, 1
+        let w = CodeMat::from_data(2, 3, 2, vec![3, 3, 3, 0, 0, 0]); // 1s / -2s
+        let cb = IntCodebook::signed(2);
+        let mut out = vec![0i32; 2];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut out);
+        assert_eq!(out, vec![-2 + 0 + 1, 4 + 0 - 2]);
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [
+            Backend::Fp32,
+            Backend::Int8,
+            Backend::Lut16(pack::Scheme::D),
+            Backend::LutWide(3),
+            Backend::LutWide(4),
+            Backend::Lut65k,
+            Backend::Lut16F32,
+            Backend::BitSerial,
+            Backend::UlpPack,
+            Backend::Portable,
+        ] {
+            let parsed = Backend::parse(&b.name());
+            assert_eq!(parsed, Some(b), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn code_mat_random_within_bits() {
+        let m = CodeMat::random(7, 13, 3, 99);
+        assert!(m.data.iter().all(|&c| c < 8));
+        assert_eq!(m.row(3).len(), 13);
+    }
+}

@@ -1,0 +1,70 @@
+//! Portable scalar LUT kernel — the stand-in for the paper's Arm port
+//! (Fig. 8): "Neon lacks a 128-bit vectorized instruction for table
+//! lookup similar to the AVX2 shuffle instruction so our current Arm
+//! implementation does not offer competitive performance."
+//!
+//! This kernel performs the same pack → unpack → lookup → accumulate
+//! pipeline with *no* byte-shuffle instruction available: crumbs are
+//! extracted with scalar shifts/masks and looked up one at a time. Its
+//! stage breakdown (fig8 bench) shows the same qualitative picture as the
+//! paper's Raspberry Pi profile — unpacking and lookup dominate and the
+//! LUT advantage over INT8 evaporates.
+
+use super::pack::{Layout, Packed};
+use crate::quant::Lut16;
+
+/// Scalar LUT GEMM over dense-packed 2-bit operands.
+pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    assert_eq!(a.k, w.k);
+    assert_eq!(a.layout, Layout::Dense);
+    assert_eq!(w.layout, Layout::Dense);
+    assert_eq!(out.len(), a.rows * w.rows);
+    let bytes = a.k_padded / 4;
+    // Use the biased table exactly like the SIMD kernel would, so the
+    // instruction mix is honest (bias subtraction in the epilogue).
+    let table = &lut.table;
+    let corr = lut.correction(a.k_padded, a.pad());
+    for m in 0..a.rows {
+        let arow = &a.row(m)[..bytes];
+        for n in 0..w.rows {
+            let wrow = &w.row(n)[..bytes];
+            let mut acc = 0u32;
+            for i in 0..bytes {
+                let (wb, ab) = (wrow[i], arow[i]);
+                // Four crumb lookups per byte pair: idx = w<<2 | a.
+                acc += table[(((wb << 2) & 0x0C) | (ab & 0x03)) as usize] as u32;
+                acc += table[((wb & 0x0C) | ((ab >> 2) & 0x03)) as usize] as u32;
+                acc += table[(((wb >> 2) & 0x0C) | ((ab >> 4) & 0x03)) as usize] as u32;
+                acc += table[(((wb >> 4) & 0x0C) | (ab >> 6)) as usize] as u32;
+            }
+            out[m * w.rows + n] = (acc as i64 - corr) as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::pack;
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+
+    #[test]
+    fn matches_oracle() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 4, 127), (2, 3, 128), (2, 2, 361)] {
+            for &signed in &[false, true] {
+                let cb = if signed { IntCodebook::signed(2) } else { IntCodebook::unsigned(2) };
+                let a = CodeMat::random(m, k, 2, k as u64 + 7);
+                let w = CodeMat::random(n, k, 2, k as u64 + 8);
+                let lut = Lut16::build(&cb, &cb);
+                let mut want = vec![0i32; m * n];
+                oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+                let ap = pack(&a, Layout::Dense);
+                let wp = pack(&w, Layout::Dense);
+                let mut got = vec![0i32; m * n];
+                gemm(&ap, &wp, &lut, &mut got);
+                assert_eq!(got, want, "m={m} n={n} k={k} signed={signed}");
+            }
+        }
+    }
+}

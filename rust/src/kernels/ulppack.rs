@@ -1,0 +1,184 @@
+//! ULPPACK-style GEMM baseline (Won et al. [20]): pack multiple sub-byte
+//! values into wider lanes so a *single* ordinary multiply computes a
+//! short dot product in the middle bits.
+//!
+//! We implement the W2A2 configuration with 16-bit lanes: weight lane
+//! `w0 + w1·2^8`, activation lane `a1 + a0·2^8` (note the reversal);
+//! `vpmullw` then yields bits [15:8] = `w0·a0 + w1·a1` (the 2-element dot
+//! product) because the low cross term `w0·a1 ≤ 9` cannot carry into bit
+//! 8 and the high cross term overflows out of the 16-bit lane. Unsigned
+//! codes only — the paper's §5.3 point about ULPPACK's signed-input
+//! limitation falls out of this construction.
+
+use crate::util::align_up;
+
+/// Values per packed inner iteration: 16 u16 lanes × 2 values.
+pub const K_BLOCK_ULP: usize = 32;
+
+/// Packed matrix for the ULPPACK kernel: rows × (k/2) u16 lanes.
+#[derive(Clone, Debug)]
+pub struct UlpPacked {
+    pub rows: usize,
+    pub k: usize,
+    pub k_padded: usize,
+    /// lanes per row = k_padded / 2
+    pub lanes: usize,
+    pub data: Vec<u16>,
+    /// true = activation ordering (reversed pair), false = weight order.
+    pub reversed: bool,
+}
+
+impl UlpPacked {
+    pub fn from_codes(codes: &[u8], rows: usize, k: usize, reversed: bool) -> Self {
+        assert_eq!(codes.len(), rows * k);
+        let k_padded = align_up(k.max(1), K_BLOCK_ULP);
+        let lanes = k_padded / 2;
+        let mut data = vec![0u16; rows * lanes];
+        for r in 0..rows {
+            for i in 0..k {
+                debug_assert!(codes[r * k + i] < 4);
+                let lane = i / 2;
+                let hi = i % 2 == 1;
+                let v = codes[r * k + i] as u16;
+                // weight: pair (v0, v1) → v0 | v1<<8
+                // activation: pair (v0, v1) → v1 | v0<<8 (reversed)
+                let shift = if hi != reversed { 8 } else { 0 };
+                data[r * lanes + lane] |= v << shift;
+            }
+        }
+        Self { rows, k, k_padded, lanes, data, reversed }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u16] {
+        &self.data[r * self.lanes..(r + 1) * self.lanes]
+    }
+}
+
+/// Scalar reference of the packed-multiply trick (mirrors the SIMD path
+/// lane for lane).
+pub fn gemm_scalar(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
+    assert_eq!(a.k, w.k);
+    assert!(a.reversed && !w.reversed, "pack a reversed, w normal");
+    assert_eq!(out.len(), a.rows * w.rows);
+    for m in 0..a.rows {
+        let arow = a.row(m);
+        for n in 0..w.rows {
+            let wrow = w.row(n);
+            let mut acc = 0i64;
+            for l in 0..a.lanes {
+                let p = wrow[l].wrapping_mul(arow[l]);
+                acc += (p >> 8) as i64; // bits [15:8] = 2-element dot
+            }
+            out[m * w.rows + n] = acc as i32;
+        }
+    }
+}
+
+pub fn gemm(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            unsafe { avx2::gemm(a, w, out) };
+            return;
+        }
+    }
+    gemm_scalar(a, w, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256(v, 1);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+        _mm_cvtsi128_si32(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
+        debug_assert!(a.reversed && !w.reversed);
+        let ones = _mm256_set1_epi16(1);
+        for m in 0..a.rows {
+            let arow = a.row(m);
+            for n in 0..w.rows {
+                let wrow = w.row(n);
+                let mut acc = _mm256_setzero_si256();
+                let mut l = 0usize;
+                while l < a.lanes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(l) as *const __m256i);
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(l) as *const __m256i);
+                    // One multiply = 16 two-element dot products.
+                    let p = _mm256_mullo_epi16(vw, va);
+                    let mid = _mm256_srli_epi16(p, 8); // u16 dots ≤ 18
+                    // Pairwise-sum u16 dots into i32 lanes.
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(mid, ones));
+                    l += 16;
+                }
+                out[m * w.rows + n] = hsum_epi32(acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+
+    fn problem(m: usize, n: usize, k: usize, seed: u64) -> (CodeMat, CodeMat) {
+        (CodeMat::random(m, k, 2, seed), CodeMat::random(n, k, 2, seed ^ 0x7777))
+    }
+
+    #[test]
+    fn matches_oracle_unsigned() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 4, 31), (2, 3, 32), (2, 2, 33), (2, 2, 777)] {
+            let (a, w) = problem(m, n, k, k as u64 * 13 + 1);
+            let cb = IntCodebook::unsigned(2);
+            let mut want = vec![0i32; m * n];
+            oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+            let ap = UlpPacked::from_codes(&a.data, m, k, true);
+            let wp = UlpPacked::from_codes(&w.data, n, k, false);
+            let mut got = vec![0i32; m * n];
+            gemm(&ap, &wp, &mut got);
+            assert_eq!(got, want, "m={m} n={n} k={k}");
+            let mut got_s = vec![0i32; m * n];
+            gemm_scalar(&ap, &wp, &mut got_s);
+            assert_eq!(got_s, want);
+        }
+    }
+
+    #[test]
+    fn no_carry_at_worst_case() {
+        // All 3s: worst-case cross terms; per-lane dot = 9 + 9 = 18.
+        let k = 1024;
+        let a = CodeMat::from_data(1, k, 2, vec![3; k]);
+        let w = CodeMat::from_data(1, k, 2, vec![3; k]);
+        let ap = UlpPacked::from_codes(&a.data, 1, k, true);
+        let wp = UlpPacked::from_codes(&w.data, 1, k, false);
+        let mut out = vec![0i32; 1];
+        gemm(&ap, &wp, &mut out);
+        assert_eq!(out[0], 9 * k as i32);
+    }
+
+    #[test]
+    fn lane_packing_by_hand() {
+        // codes (2, 3): weight lane = 2 | 3<<8; act lane = 3 | 2<<8.
+        let w = UlpPacked::from_codes(&[2, 3], 1, 2, false);
+        assert_eq!(w.data[0], 2 | 3 << 8);
+        let a = UlpPacked::from_codes(&[2, 3], 1, 2, true);
+        assert_eq!(a.data[0], 3 | 2 << 8);
+        // mullo: (2 + 3·256)(3 + 2·256) = 6 + (4+9)·256 + 6·65536;
+        // bits [15:8] = 13 = 2·2 + 3·3. ✓
+        let p = w.data[0].wrapping_mul(a.data[0]);
+        assert_eq!(p >> 8, 13);
+    }
+}

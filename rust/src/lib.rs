@@ -1,0 +1,63 @@
+//! # DeepGEMM — ultra low-precision LUT-based inference framework
+//!
+//! Reproduction of *DeepGEMM: Accelerated Ultra Low-Precision Inference on
+//! CPU Architectures using Lookup Tables* (Ganji et al., 2023) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised as:
+//!
+//! - [`kernels`] — the paper's contribution: bit-packing schemes (a–d),
+//!   LUT-16 / LUT-65k AVX2 GEMM kernels for 2/3/4-bit operands, plus every
+//!   baseline the paper compares against (FP32, QNNPACK-style INT8,
+//!   bit-serial, ULPPACK) implemented from scratch.
+//! - [`quant`] — uniform (affine / LSQ-style) and non-uniform codebook
+//!   quantization, and lookup-table construction for signed/unsigned,
+//!   integer/float entries.
+//! - [`nn`] — tensors, im2col convolution, layers and the model zoo
+//!   (MobileNetV1, ResNet18/34/50, ResNeXt101, GoogleNet, InceptionV3,
+//!   VGG16) whose conv shapes drive the paper's evaluation.
+//! - [`engine`] — graph executor with per-stage instrumentation and
+//!   pluggable GEMM engines.
+//! - [`runtime`] — PJRT (xla crate) loader/executor for the AOT artifacts
+//!   produced by the python/JAX layer.
+//! - [`coordinator`] — the L3 serving runtime: request router, dynamic
+//!   batcher, worker pool, metrics, TCP front-end.
+//! - [`bench`] — the benchmark harness (criterion substitute) used by every
+//!   table/figure reproduction under `rust/benches/`.
+//! - [`profiling`] — stage timers and the instruction-count model for the
+//!   packing-scheme analysis (Tab. 3).
+//! - [`util`] — substrates the offline image lacks: CLI parsing, JSON,
+//!   PRNG, thread pool, property-testing helpers.
+
+pub mod bench;
+pub mod coordinator;
+pub mod engine;
+pub mod kernels;
+pub mod nn;
+pub mod profiling;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("{0}")]
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}

@@ -1,0 +1,207 @@
+//! `deepgemm` CLI — leader entrypoint for the serving runtime plus
+//! inspection/diagnostic commands.
+
+use deepgemm::coordinator::{serve, BatcherConfig, Router, ServerConfig};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::StageProfile;
+use deepgemm::runtime::PjrtRuntime;
+use deepgemm::util::cli::{usage, Args, OptSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "model", help: "model name (see `models`)", takes_value: true, default: Some("small_cnn") },
+        OptSpec { name: "backend", help: "gemm backend: fp32|int8|lut16[-a..-d]|lut3b|lut4b|lut65k|lut16-f32|bitserial|ulppack|portable", takes_value: true, default: Some("lut16-d") },
+        OptSpec { name: "addr", help: "listen address for serve", takes_value: true, default: Some("127.0.0.1:7070") },
+        OptSpec { name: "batch", help: "max dynamic batch size", takes_value: true, default: Some("8") },
+        OptSpec { name: "wait-ms", help: "max batching wait (ms)", takes_value: true, default: Some("2") },
+        OptSpec { name: "iters", help: "iterations for profile/infer", takes_value: true, default: Some("3") },
+        OptSpec { name: "classes", help: "classifier width", takes_value: true, default: Some("10") },
+        OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+        OptSpec { name: "verbose", help: "chatty output", takes_value: false, default: None },
+    ]
+}
+
+const COMMANDS: [(&str, &str); 7] = [
+    ("serve", "start the inference server (router + dynamic batcher)"),
+    ("infer", "run one inference on a random input and print timing"),
+    ("profile", "per-stage breakdown of a model forward (Fig. 7 style)"),
+    ("models", "list the model zoo with conv counts and GEMM shapes"),
+    ("artifacts", "list AOT artifacts and run their golden checks (PJRT)"),
+    ("selftest", "quick kernel-vs-oracle self test"),
+    ("help", "show this help"),
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", usage("deepgemm", "ultra low-precision LUT inference", &COMMANDS, &specs()));
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_backend(args: &Args) -> Result<Backend, deepgemm::Error> {
+    let name = args.get_or("backend", "lut16-d");
+    Backend::parse(name)
+        .ok_or_else(|| deepgemm::Error::Config(format!("unknown backend '{name}'")))
+}
+
+fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
+    let model = args.get_or("model", "small_cnn");
+    let classes = args.get_usize("classes", 10).map_err(deepgemm::Error::Config)?;
+    let seed = args.get_usize("seed", 0).map_err(deepgemm::Error::Config)? as u64;
+    let backend = parse_backend(args)?;
+    let graph = zoo::build(model, classes, seed)?;
+    eprintln!(
+        "compiling {model} ({} convs, {:.1}M params) for backend {}...",
+        graph.conv_count(),
+        graph.conv_params() as f64 / 1e6,
+        backend.name()
+    );
+    CompiledModel::compile(graph, backend, &[])
+}
+
+fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
+    match cmd {
+        "help" => {
+            println!("{}", usage("deepgemm", "ultra low-precision LUT inference", &COMMANDS, &specs()));
+            Ok(())
+        }
+        "models" => {
+            for name in zoo::MODELS {
+                let g = zoo::build(name, 1000, 0)?;
+                let inv = zoo::layer_inventory(name)?;
+                println!(
+                    "{name:<14} convs={:<3} params={:>7.1}M  example gemm (M,N,K) = {:?}",
+                    g.conv_count(),
+                    g.conv_params() as f64 / 1e6,
+                    inv.get(inv.len() / 2).map(|l| {
+                        let s = l.gemm();
+                        (s.m, s.n, s.k)
+                    })
+                );
+            }
+            Ok(())
+        }
+        "serve" => {
+            let model = compile_model(args)?;
+            let mut router = Router::new();
+            let cfg = BatcherConfig {
+                max_batch: args.get_usize("batch", 8).map_err(deepgemm::Error::Config)?,
+                max_wait: Duration::from_millis(
+                    args.get_usize("wait-ms", 2).map_err(deepgemm::Error::Config)? as u64,
+                ),
+                queue_cap: 128,
+            };
+            router.register(model, cfg);
+            serve(Arc::new(router), &ServerConfig { addr: args.get_or("addr", "127.0.0.1:7070").into() })
+        }
+        "infer" => {
+            let model = compile_model(args)?;
+            let (c, h, w) = model.graph.input_chw;
+            let iters = args.get_usize("iters", 3).map_err(deepgemm::Error::Config)?;
+            for i in 0..iters {
+                let x = Tensor::random(&[1, c, h, w], i as u64, -1.0, 1.0);
+                let mut prof = StageProfile::new();
+                let t0 = std::time::Instant::now();
+                let y = model.forward(&x, &mut prof)?;
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "iter {i}: argmax={} latency={:.2} ms",
+                    deepgemm::engine::argmax(&y.data),
+                    dt * 1e3
+                );
+            }
+            Ok(())
+        }
+        "profile" => {
+            let model = compile_model(args)?;
+            let (c, h, w) = model.graph.input_chw;
+            let iters = args.get_usize("iters", 3).map_err(deepgemm::Error::Config)?;
+            let mut prof = StageProfile::new();
+            let x = Tensor::random(&[1, c, h, w], 7, -1.0, 1.0);
+            model.forward(&x, &mut StageProfile::new())?; // warmup
+            for _ in 0..iters {
+                model.forward(&x, &mut prof)?;
+            }
+            println!("{}", prof.render(&format!("{} / {}", model.name, model.backend.name())));
+            Ok(())
+        }
+        "artifacts" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let mut rt = PjrtRuntime::open(dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            let names: Vec<String> =
+                rt.manifest.names().iter().map(|s| s.to_string()).collect();
+            let mut failures: Vec<String> = Vec::new();
+            for name in names {
+                let has_golden = rt
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .find(|a| a.name == name)
+                    .and_then(|a| a.golden.as_ref())
+                    .is_some();
+                if has_golden {
+                    let err = rt.check_golden(&name)?;
+                    println!("{name:<40} golden max_abs_err = {err:.3e} {}", if err < 1e-3 { "OK" } else { "FAIL" });
+                    if err >= 1e-3 {
+                        failures.push(name.clone());
+                    }
+                } else {
+                    rt.load(&name)?;
+                    println!("{name:<40} compiled OK (no golden)");
+                }
+            }
+            if failures.is_empty() {
+                Ok(())
+            } else {
+                Err(deepgemm::Error::Runtime(format!(
+                    "golden check failed for: {}",
+                    failures.join(", ")
+                )))
+            }
+        }
+        "selftest" => {
+            use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+            use deepgemm::kernels::{lut16, oracle_gemm_i32, CodeMat};
+            use deepgemm::quant::{IntCodebook, Lut16};
+            let cb = IntCodebook::signed(2);
+            let a = CodeMat::random(8, 300, 2, 1);
+            let wm = CodeMat::random(16, 300, 2, 2);
+            let lut = Lut16::build(&cb, &cb);
+            let mut want = vec![0i32; 8 * 16];
+            oracle_gemm_i32(&a, &wm, &cb, &cb, &mut want);
+            for scheme in Scheme::ALL {
+                let ap = pack_activations(&a, scheme);
+                let wp = pack_weights(&wm, scheme);
+                let mut got = vec![0i32; 8 * 16];
+                lut16::gemm(&ap, &wp, &lut, scheme, &mut got);
+                assert_eq!(got, want, "scheme {scheme:?}");
+                println!("lut16 scheme {} OK", scheme.name());
+            }
+            println!("selftest passed");
+            Ok(())
+        }
+        other => Err(deepgemm::Error::Config(format!(
+            "unknown command '{other}' (try `deepgemm help`)"
+        ))),
+    }
+}

@@ -1,0 +1,368 @@
+//! Layer graph: a small DAG IR with enough ops to express the paper's
+//! CNNs (sequential stacks, residual adds, inception concats). Execution
+//! lives in [`crate::engine`]; this module owns structure and weights.
+
+use super::{ConvSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Graph operation.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Convolution (+ folded bias, optional fused ReLU — batch norm is
+    /// assumed folded into weights/bias as all deployment runtimes do).
+    Conv {
+        spec: ConvSpec,
+        weights: Vec<f32>,
+        bias: Vec<f32>,
+        relu: bool,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    GlobalAvgPool,
+    /// Fully connected [out_f × in_f] (+ bias).
+    Fc {
+        in_f: usize,
+        out_f: usize,
+        weights: Vec<f32>,
+        bias: Vec<f32>,
+    },
+    /// Elementwise add of two inputs (+ optional fused ReLU).
+    Add {
+        relu: bool,
+    },
+    Relu,
+    /// Channel concat of ≥2 inputs.
+    Concat,
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Fc { .. } => "fc",
+            Op::Add { .. } => "add",
+            Op::Relu => "relu",
+            Op::Concat => "concat",
+        }
+    }
+}
+
+/// A node: op + indices of producer nodes (or the graph input).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    /// Input node ids; [`Graph::INPUT`] denotes the graph input tensor.
+    pub inputs: Vec<usize>,
+}
+
+/// A model graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// (C, H, W) of the expected single-image input.
+    pub input_chw: (usize, usize, usize),
+    pub nodes: Vec<Node>,
+    /// Node id producing the output.
+    pub output: usize,
+}
+
+impl Graph {
+    pub const INPUT: usize = usize::MAX;
+
+    pub fn new(name: impl Into<String>, input_chw: (usize, usize, usize)) -> Self {
+        Self { name: name.into(), input_chw, nodes: Vec::new(), output: 0 }
+    }
+
+    /// Append a node; returns its id.
+    pub fn push(&mut self, name: impl Into<String>, op: Op, inputs: Vec<usize>) -> usize {
+        self.nodes.push(Node { name: name.into(), op, inputs });
+        let id = self.nodes.len() - 1;
+        self.output = id;
+        id
+    }
+
+    /// Add a conv (+ReLU) with He-initialised random weights.
+    pub fn conv(
+        &mut self,
+        name: impl Into<String>,
+        spec: ConvSpec,
+        relu: bool,
+        input: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let wlen = spec.weight_len();
+        let fan_in = (spec.in_ch / spec.groups * spec.kh * spec.kw) as f32;
+        let std = (2.0 / fan_in).sqrt();
+        let mut weights = vec![0f32; wlen];
+        rng.fill_normal(&mut weights, std);
+        let mut bias = vec![0f32; spec.out_ch];
+        rng.fill_f32(&mut bias, -0.05, 0.05);
+        self.push(name, Op::Conv { spec, weights, bias, relu }, vec![input])
+    }
+
+    /// Number of conv nodes.
+    pub fn conv_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.op, Op::Conv { .. })).count()
+    }
+
+    /// Total conv weight parameters.
+    pub fn conv_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv { weights, .. } => weights.len(),
+                Op::Fc { weights, .. } => weights.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Validate topology: inputs reference earlier nodes only.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &inp in &n.inputs {
+                if inp != Self::INPUT && inp >= i {
+                    return Err(crate::Error::Config(format!(
+                        "node {i} ({}) references non-causal input {inp}",
+                        n.name
+                    )));
+                }
+            }
+            let arity_ok = match n.op {
+                Op::Add { .. } => n.inputs.len() == 2,
+                Op::Concat => n.inputs.len() >= 2,
+                _ => n.inputs.len() == 1,
+            };
+            if !arity_ok {
+                return Err(crate::Error::Config(format!(
+                    "node {i} ({}) has wrong arity {}",
+                    n.name,
+                    n.inputs.len()
+                )));
+            }
+        }
+        if self.output >= self.nodes.len() {
+            return Err(crate::Error::Config("output id out of range".into()));
+        }
+        Ok(())
+    }
+
+    /// Infer the output shape of every node for a single-image input.
+    pub fn infer_shapes(&self) -> crate::Result<Vec<Vec<usize>>> {
+        let (c, h, w) = self.input_chw;
+        let input_shape = vec![1, c, h, w];
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for (i, n) in self.nodes.iter().enumerate() {
+            let get = |id: usize| -> crate::Result<&Vec<usize>> {
+                if id == Self::INPUT {
+                    Ok(&input_shape)
+                } else {
+                    shapes.get(id).ok_or_else(|| {
+                        crate::Error::Config(format!("node {i}: bad input {id}"))
+                    })
+                }
+            };
+            let shape = match &n.op {
+                Op::Conv { spec, .. } => {
+                    let s = get(n.inputs[0])?;
+                    if s[1] != spec.in_ch {
+                        return Err(crate::Error::Shape(format!(
+                            "node {} ({}): in_ch {} != tensor C {}",
+                            i, n.name, spec.in_ch, s[1]
+                        )));
+                    }
+                    let (oh, ow) = spec.out_hw(s[2], s[3]);
+                    vec![1, spec.out_ch, oh, ow]
+                }
+                Op::MaxPool { k, stride, pad } => {
+                    let s = get(n.inputs[0])?;
+                    let oh = (s[2] + 2 * pad - k) / stride + 1;
+                    let ow = (s[3] + 2 * pad - k) / stride + 1;
+                    vec![1, s[1], oh, ow]
+                }
+                Op::GlobalAvgPool => {
+                    let s = get(n.inputs[0])?;
+                    vec![1, s[1], 1, 1]
+                }
+                Op::Fc { in_f, out_f, .. } => {
+                    let s = get(n.inputs[0])?;
+                    let flat: usize = s.iter().product();
+                    if flat != *in_f {
+                        return Err(crate::Error::Shape(format!(
+                            "node {} ({}): fc expects {in_f}, got {flat}",
+                            i, n.name
+                        )));
+                    }
+                    vec![1, *out_f]
+                }
+                Op::Add { .. } => {
+                    let a = get(n.inputs[0])?.clone();
+                    let b = get(n.inputs[1])?;
+                    if &a != b {
+                        return Err(crate::Error::Shape(format!(
+                            "node {} ({}): add shape mismatch {a:?} vs {b:?}",
+                            i, n.name
+                        )));
+                    }
+                    a
+                }
+                Op::Relu => get(n.inputs[0])?.clone(),
+                Op::Concat => {
+                    let first = get(n.inputs[0])?.clone();
+                    let mut c_total = 0usize;
+                    for &inp in &n.inputs {
+                        let s = get(inp)?;
+                        if s[2] != first[2] || s[3] != first[3] {
+                            return Err(crate::Error::Shape(format!(
+                                "node {} ({}): concat spatial mismatch",
+                                i, n.name
+                            )));
+                        }
+                        c_total += s[1];
+                    }
+                    vec![1, c_total, first[2], first[3]]
+                }
+            };
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Conv layer inventory with resolved input sizes — feeds the
+    /// per-layer benches.
+    pub fn conv_inventory(&self) -> crate::Result<Vec<(String, ConvSpec, usize, usize)>> {
+        let shapes = self.infer_shapes()?;
+        let (c, h, w) = self.input_chw;
+        let input_shape = vec![1, c, h, w];
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if let Op::Conv { spec, .. } = &n.op {
+                let s = if n.inputs[0] == Self::INPUT {
+                    &input_shape
+                } else {
+                    &shapes[n.inputs[0]]
+                };
+                out.push((n.name.clone(), *spec, s[2], s[3]));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Reference FP32 forward pass (single image) — the semantic oracle that
+/// the quantized engines are compared against in integration tests.
+pub fn forward_fp32(g: &Graph, x: &Tensor) -> crate::Result<Tensor> {
+    g.validate()?;
+    let mut outs: Vec<Tensor> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let get = |id: usize| -> &Tensor {
+            if id == Graph::INPUT {
+                x
+            } else {
+                &outs[id]
+            }
+        };
+        let y = match &n.op {
+            Op::Conv { spec, weights, bias, relu } => {
+                let y = super::im2col::conv2d_direct(get(n.inputs[0]), weights, bias, spec);
+                if *relu {
+                    y.map(|v| v.max(0.0))
+                } else {
+                    y
+                }
+            }
+            Op::MaxPool { k, stride, pad } => get(n.inputs[0]).max_pool(*k, *stride, *pad),
+            Op::GlobalAvgPool => get(n.inputs[0]).global_avg_pool(),
+            Op::Fc { in_f, out_f, weights, bias } => {
+                let xin = get(n.inputs[0]);
+                let mut y = Tensor::zeros(&[1, *out_f]);
+                for o in 0..*out_f {
+                    let mut acc = bias[o];
+                    for i in 0..*in_f {
+                        acc += weights[o * in_f + i] * xin.data[i];
+                    }
+                    y.data[o] = acc;
+                }
+                y
+            }
+            Op::Add { relu } => {
+                let y = get(n.inputs[0]).add(get(n.inputs[1]));
+                if *relu {
+                    y.map(|v| v.max(0.0))
+                } else {
+                    y
+                }
+            }
+            Op::Relu => get(n.inputs[0]).map(|v| v.max(0.0)),
+            Op::Concat => {
+                let parts: Vec<&Tensor> = n.inputs.iter().map(|&i| get(i)).collect();
+                Tensor::concat_channels(&parts)
+            }
+        };
+        outs.push(y);
+    }
+    Ok(outs.swap_remove(g.output))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("tiny", (3, 8, 8));
+        let mut rng = Rng::new(1);
+        let c1 = g.conv("c1", ConvSpec::new(3, 4, 3, 1, 1), true, Graph::INPUT, &mut rng);
+        let c2 = g.conv("c2", ConvSpec::new(4, 4, 3, 1, 1), false, c1, &mut rng);
+        let add = g.push("res", Op::Add { relu: true }, vec![c1, c2]);
+        let gap = g.push("gap", Op::GlobalAvgPool, vec![add]);
+        let mut wfc = vec![0f32; 4 * 2];
+        rng.fill_normal(&mut wfc, 0.5);
+        g.push(
+            "fc",
+            Op::Fc { in_f: 4, out_f: 2, weights: wfc, bias: vec![0.0; 2] },
+            vec![gap],
+        );
+        g
+    }
+
+    #[test]
+    fn validates_and_infers() {
+        let g = tiny_graph();
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[0], vec![1, 4, 8, 8]);
+        assert_eq!(shapes[2], vec![1, 4, 8, 8]);
+        assert_eq!(shapes[4], vec![1, 2]);
+    }
+
+    #[test]
+    fn forward_runs_and_relu_applies() {
+        let g = tiny_graph();
+        let x = Tensor::random(&[1, 3, 8, 8], 5, -1.0, 1.0);
+        let y = forward_fp32(&g, &x).unwrap();
+        assert_eq!(y.shape, vec![1, 2]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn non_causal_graph_rejected() {
+        let mut g = Graph::new("bad", (1, 4, 4));
+        g.push("x", Op::Relu, vec![3]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn conv_inventory_resolves_input_sizes() {
+        let g = tiny_graph();
+        let inv = g.conv_inventory().unwrap();
+        assert_eq!(inv.len(), 2);
+        assert_eq!(inv[0].2, 8);
+        assert_eq!(inv[1].3, 8);
+    }
+}

@@ -1,0 +1,199 @@
+//! im2col lowering: convolution → GEMM (the paper's layer shapes are all
+//! expressed this way, §5.1).
+//!
+//! Two variants:
+//! - [`im2col_f32`] on float tensors (FP32 engine);
+//! - [`im2col_codes`] on already-quantized code tensors — the quantized
+//!   engines quantize the activation tensor *once* (C·H·W elements) and
+//!   then lower codes, so quantization cost does not scale with K
+//!   duplication. Padding contributes the quantizer's zero code.
+
+use super::{ConvSpec, Tensor};
+
+/// Lower an f32 NCHW tensor (single image) to the [M × K] column matrix
+/// for `spec`, group `g`. M = oh·ow, K = (in_ch/groups)·kh·kw.
+pub fn im2col_f32(x: &Tensor, spec: &ConvSpec, g: usize, out: &mut Vec<f32>) {
+    let (n, c, h, w) = x.nchw();
+    assert_eq!(n, 1, "im2col operates per image");
+    assert_eq!(c, spec.in_ch);
+    let (oh, ow) = spec.out_hw(h, w);
+    let cg = spec.in_ch / spec.groups;
+    let k = cg * spec.kh * spec.kw;
+    out.clear();
+    out.resize(oh * ow * k, 0.0);
+    let c0 = g * cg;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k;
+            let mut col = 0usize;
+            for ci in 0..cg {
+                for ky in 0..spec.kh {
+                    for kx in 0..spec.kw {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                        out[row + col] = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                        {
+                            x.at4(0, c0 + ci, iy as usize, ix as usize)
+                        } else {
+                            0.0
+                        };
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Same lowering over a quantized code plane (u8 codes, NCHW layout in a
+/// flat slice with the given channel count / spatial dims). `pad_code` is
+/// the code representing real 0.0 (the quantizer's zero point).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_codes(
+    codes: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    spec: &ConvSpec,
+    g: usize,
+    pad_code: u8,
+    out: &mut Vec<u8>,
+) {
+    assert_eq!(codes.len(), c * h * w);
+    assert_eq!(c, spec.in_ch);
+    let (oh, ow) = spec.out_hw(h, w);
+    let cg = spec.in_ch / spec.groups;
+    let k = cg * spec.kh * spec.kw;
+    out.clear();
+    out.resize(oh * ow * k, 0);
+    let c0 = g * cg;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k;
+            let mut col = 0usize;
+            for ci in 0..cg {
+                let plane = (c0 + ci) * h * w;
+                for ky in 0..spec.kh {
+                    for kx in 0..spec.kw {
+                        let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                        out[row + col] = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                        {
+                            codes[plane + iy as usize * w + ix as usize]
+                        } else {
+                            pad_code
+                        };
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Direct (naive) convolution — the correctness oracle for the GEMM path.
+pub fn conv2d_direct(x: &Tensor, weights: &[f32], bias: &[f32], spec: &ConvSpec) -> Tensor {
+    let (n, c, h, w) = x.nchw();
+    assert_eq!(n, 1);
+    assert_eq!(c, spec.in_ch);
+    assert_eq!(weights.len(), spec.weight_len());
+    let (oh, ow) = spec.out_hw(h, w);
+    let cg = spec.in_ch / spec.groups;
+    let og = spec.out_ch / spec.groups;
+    let mut out = Tensor::zeros(&[1, spec.out_ch, oh, ow]);
+    for g in 0..spec.groups {
+        for oc in 0..og {
+            let oc_abs = g * og + oc;
+            let wbase = oc_abs * cg * spec.kh * spec.kw;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if bias.is_empty() { 0.0 } else { bias[oc_abs] };
+                    for ci in 0..cg {
+                        for ky in 0..spec.kh {
+                            for kx in 0..spec.kw {
+                                let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                                let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                                    let xv = x.at4(0, g * cg + ci, iy as usize, ix as usize);
+                                    let wv = weights
+                                        [wbase + (ci * spec.kh + ky) * spec.kw + kx];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                    out.data[(oc_abs * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fp32::{self, MatF32};
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        for &(c, h, w, oc, k, s, p, groups) in &[
+            (3usize, 8usize, 8usize, 5usize, 3usize, 1usize, 1usize, 1usize),
+            (4, 7, 9, 6, 3, 2, 1, 1),
+            (2, 6, 6, 4, 1, 1, 0, 1),
+            (4, 6, 6, 4, 3, 1, 1, 4), // depthwise
+            (4, 6, 6, 8, 3, 1, 1, 2), // grouped
+        ] {
+            let spec = ConvSpec::new(c, oc, k, s, p).grouped(groups);
+            let x = Tensor::random(&[1, c, h, w], 12, -1.0, 1.0);
+            let wlen = spec.weight_len();
+            let weights: Vec<f32> = Tensor::random(&[1, 1, 1, wlen], 13, -1.0, 1.0).data;
+            let want = conv2d_direct(&x, &weights, &[], &spec);
+
+            // GEMM path per group.
+            let (oh, ow) = spec.out_hw(h, w);
+            let cg = c / groups;
+            let og = oc / groups;
+            let kk = cg * spec.kh * spec.kw;
+            let mut got = Tensor::zeros(&[1, oc, oh, ow]);
+            let mut cols = Vec::new();
+            for g in 0..groups {
+                im2col_f32(&x, &spec, g, &mut cols);
+                let a = MatF32::from_values(&cols, oh * ow, kk);
+                let wslice = &weights[g * og * kk..(g + 1) * og * kk];
+                let wm = MatF32::from_values(wslice, og, kk);
+                let mut out = vec![0f32; oh * ow * og];
+                fp32::gemm(&a, &wm, &mut out);
+                // out is [M × og] row-major → scatter to NCHW.
+                for m in 0..oh * ow {
+                    for n in 0..og {
+                        got.data[((g * og + n) * oh * ow) + m] = out[m * og + n];
+                    }
+                }
+            }
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("c={c} groups={groups}: {e}"));
+        }
+    }
+
+    #[test]
+    fn code_and_f32_lowering_agree() {
+        let spec = ConvSpec::new(2, 3, 3, 1, 1);
+        let (h, w) = (5, 5);
+        // Codes 0..3 as floats.
+        let codes: Vec<u8> = (0..2 * h * w).map(|i| (i % 4) as u8).collect();
+        let x = Tensor::from_vec(
+            &[1, 2, h, w],
+            codes.iter().map(|&c| c as f32).collect(),
+        );
+        let mut fcols = Vec::new();
+        im2col_f32(&x, &spec, 0, &mut fcols);
+        let mut ccols = Vec::new();
+        im2col_codes(&codes, 2, h, w, &spec, 0, 0, &mut ccols);
+        assert_eq!(fcols.len(), ccols.len());
+        for (f, c) in fcols.iter().zip(ccols.iter()) {
+            assert_eq!(*f, *c as f32);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Neural-network substrate: tensors, im2col convolution lowering, layer
+//! graph, and the model zoo whose convolution shapes drive the paper's
+//! evaluation (Fig. 5/6, Tab. 4/5).
+
+pub mod graph;
+pub mod im2col;
+pub mod tensor;
+pub mod zoo;
+
+pub use graph::{Graph, Node, Op};
+pub use tensor::Tensor;
+
+/// A 2-D convolution specification (NCHW).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+}
+
+impl ConvSpec {
+    pub fn new(in_ch: usize, out_ch: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Self { in_ch, out_ch, kh: k, kw: k, stride, pad, groups: 1 }
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        assert_eq!(self.in_ch % groups, 0);
+        assert_eq!(self.out_ch % groups, 0);
+        self.groups = groups;
+        self
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// GEMM dimensions for an input of spatial size (h, w), per group:
+    /// M = out pixels, K = (in_ch/g)·kh·kw, N = out_ch/g.
+    pub fn gemm_size(&self, h: usize, w: usize) -> crate::kernels::GemmSize {
+        let (oh, ow) = self.out_hw(h, w);
+        crate::kernels::GemmSize {
+            m: oh * ow,
+            n: self.out_ch / self.groups,
+            k: self.in_ch / self.groups * self.kh * self.kw,
+        }
+    }
+
+    /// Weight element count.
+    pub fn weight_len(&self) -> usize {
+        self.out_ch * (self.in_ch / self.groups) * self.kh * self.kw
+    }
+}
+
+/// A conv layer entry in a model's evaluation inventory: the spec plus
+/// the input spatial size it runs at — enough to derive the paper's
+/// (M, N, K) per-layer GEMM shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    pub name: &'static str,
+    pub spec: ConvSpec,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl LayerShape {
+    pub fn gemm(&self) -> crate::kernels::GemmSize {
+        self.spec.gemm_size(self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shapes() {
+        let s = ConvSpec::new(3, 64, 7, 2, 3);
+        assert_eq!(s.out_hw(224, 224), (112, 112));
+        let s = ConvSpec::new(64, 64, 3, 1, 1);
+        assert_eq!(s.out_hw(56, 56), (56, 56));
+        let s = ConvSpec::new(64, 128, 1, 2, 0);
+        assert_eq!(s.out_hw(56, 56), (28, 28));
+    }
+
+    #[test]
+    fn gemm_size_matches_paper_convention() {
+        // ResNet 3x3 @ 56x56, 64ch: M = 3136, N = 64, K = 576.
+        let s = ConvSpec::new(64, 64, 3, 1, 1);
+        let g = s.gemm_size(56, 56);
+        assert_eq!((g.m, g.n, g.k), (3136, 64, 576));
+    }
+
+    #[test]
+    fn grouped_conv_gemm() {
+        // Depthwise 3x3 @ 112x112, 32ch: per-group K = 9, N = 1.
+        let s = ConvSpec::new(32, 32, 3, 1, 1).grouped(32);
+        let g = s.gemm_size(112, 112);
+        assert_eq!((g.m, g.n, g.k), (112 * 112, 1, 9));
+        assert_eq!(s.weight_len(), 32 * 9);
+    }
+}

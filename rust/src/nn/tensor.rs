@@ -1,0 +1,179 @@
+//! Minimal NCHW f32 tensor.
+
+use crate::util::rng::Rng;
+
+/// A dense f32 tensor with explicit shape (row-major / C order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn random(shape: &[usize], seed: u64, lo: f32, hi: f32) -> Self {
+        let mut t = Self::zeros(shape);
+        let mut rng = Rng::new(seed);
+        rng.fill_f32(&mut t.data, lo, hi);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// NCHW accessors (shape must be 4-D).
+    pub fn nchw(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "expected NCHW, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (_, cc, hh, ww) = self.nchw();
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise add (shapes must match) — residual connections.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Concatenate along channels (dim 1, NCHW) — inception blocks.
+    pub fn concat_channels(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let (n, _, h, w) = parts[0].nchw();
+        let c_total: usize = parts.iter().map(|p| p.nchw().1).sum();
+        let mut out = Tensor::zeros(&[n, c_total, h, w]);
+        let hw = h * w;
+        for ni in 0..n {
+            let mut c_off = 0usize;
+            for p in parts {
+                let (_, pc, ph, pw) = p.nchw();
+                assert_eq!((ph, pw), (h, w), "spatial mismatch in concat");
+                let src = &p.data[ni * pc * hw..(ni + 1) * pc * hw];
+                let dst_start = (ni * c_total + c_off) * hw;
+                out.data[dst_start..dst_start + pc * hw].copy_from_slice(src);
+                c_off += pc;
+            }
+        }
+        out
+    }
+
+    /// 2-D max pool (NCHW).
+    pub fn max_pool(&self, k: usize, stride: usize, pad: usize) -> Tensor {
+        let (n, c, h, w) = self.nchw();
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let mut out = Tensor::zeros(&[n, c, oh, ow]);
+        for ni in 0..n {
+            for ci in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * stride + ky;
+                                let ix = ox * stride + kx;
+                                if iy < pad || ix < pad {
+                                    continue;
+                                }
+                                let (iy, ix) = (iy - pad, ix - pad);
+                                if iy < h && ix < w {
+                                    m = m.max(self.at4(ni, ci, iy, ix));
+                                }
+                            }
+                        }
+                        out.data[((ni * c + ci) * oh + oy) * ow + ox] = m;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global average pool → [N, C, 1, 1].
+    pub fn global_avg_pool(&self) -> Tensor {
+        let (n, c, h, w) = self.nchw();
+        let mut out = Tensor::zeros(&[n, c, 1, 1]);
+        let hw = (h * w) as f32;
+        for ni in 0..n {
+            for ci in 0..c {
+                let start = (ni * c + ci) * h * w;
+                let s: f32 = self.data[start..start + h * w].iter().sum();
+                out.data[ni * c + ci] = s / hw;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_channels_layout() {
+        let a = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let c = Tensor::concat_channels(&[&a, &b]);
+        assert_eq!(c.shape, vec![1, 3, 2, 2]);
+        assert_eq!(&c.data[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&c.data[4..], &(0..8).map(|x| x as f32).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let t = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            (0..16).map(|x| x as f32).collect(),
+        );
+        let p = t.max_pool(2, 2, 0);
+        assert_eq!(p.shape, vec![1, 1, 2, 2]);
+        assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn global_avg_pool_values() {
+        let t = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 10., 10., 10., 10.]);
+        let p = t.global_avg_pool();
+        assert_eq!(p.shape, vec![1, 2, 1, 1]);
+        assert_eq!(p.data, vec![2.5, 10.0]);
+    }
+
+    #[test]
+    fn residual_add() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, 4.0]);
+        assert_eq!(a.add(&b).data, vec![4.0, 6.0]);
+    }
+}

@@ -1,0 +1,410 @@
+//! Model zoo — graph builders for every network in the paper's evaluation
+//! (Fig. 5/6, Tab. 4/5): MobileNetV1, ResNet18/34/50, ResNeXt101,
+//! GoogleNet, InceptionV3, VGG16, plus a small CNN used by tests and the
+//! serving demos. Weights are He-initialised from a seed (pretrained
+//! checkpoints are not reproducible offline; latency is weight-agnostic).
+
+use super::graph::{Graph, Op};
+use super::{ConvSpec, LayerShape};
+use crate::util::rng::Rng;
+
+/// All model names available from [`build`] / [`layer_inventory`].
+pub const MODELS: [&str; 9] = [
+    "small_cnn",
+    "mobilenet_v1",
+    "resnet18",
+    "resnet34",
+    "resnet50",
+    "resnext101",
+    "googlenet",
+    "inception_v3",
+    "vgg16",
+];
+
+/// Build a model graph by name.
+pub fn build(name: &str, num_classes: usize, seed: u64) -> crate::Result<Graph> {
+    let mut rng = Rng::new(seed);
+    let g = match name {
+        "small_cnn" => small_cnn(num_classes, &mut rng),
+        "mobilenet_v1" => mobilenet_v1(num_classes, &mut rng),
+        "resnet18" => resnet(18, num_classes, &mut rng),
+        "resnet34" => resnet(34, num_classes, &mut rng),
+        "resnet50" => resnet(50, num_classes, &mut rng),
+        "resnext101" => resnext101(num_classes, &mut rng),
+        "googlenet" => googlenet(num_classes, &mut rng),
+        "inception_v3" => inception_v3(num_classes, &mut rng),
+        "vgg16" => vgg16(num_classes, &mut rng),
+        other => return Err(crate::Error::Config(format!("unknown model '{other}'"))),
+    };
+    g.validate()?;
+    Ok(g)
+}
+
+/// Conv layer inventory (name, spec, input H, input W) for a model —
+/// the per-layer (M, N, K) shapes of the paper's Fig. 5.
+pub fn layer_inventory(name: &str) -> crate::Result<Vec<LayerShape>> {
+    let g = build(name, 1000, 0)?;
+    let inv = g.conv_inventory()?;
+    // Leak the names: LayerShape carries &'static str for bench labels.
+    Ok(inv
+        .into_iter()
+        .map(|(n, spec, h, w)| LayerShape {
+            name: Box::leak(n.into_boxed_str()),
+            spec,
+            h,
+            w,
+        })
+        .collect())
+}
+
+/// Small CNN (CIFAR-scale) for tests, the quickstart and the server demo.
+pub fn small_cnn(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("small_cnn", (3, 32, 32));
+    let c1 = g.conv("conv1", ConvSpec::new(3, 16, 3, 1, 1), true, Graph::INPUT, rng);
+    let p1 = g.push("pool1", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![c1]);
+    let c2 = g.conv("conv2", ConvSpec::new(16, 32, 3, 1, 1), true, p1, rng);
+    let p2 = g.push("pool2", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![c2]);
+    let c3 = g.conv("conv3", ConvSpec::new(32, 64, 3, 1, 1), true, p2, rng);
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![c3]);
+    fc(&mut g, "fc", 64, num_classes, gap, rng);
+    g
+}
+
+fn fc(g: &mut Graph, name: &str, in_f: usize, out_f: usize, input: usize, rng: &mut Rng) -> usize {
+    let mut w = vec![0f32; in_f * out_f];
+    rng.fill_normal(&mut w, (1.0 / in_f as f32).sqrt());
+    let bias = vec![0f32; out_f];
+    g.push(name, Op::Fc { in_f, out_f, weights: w, bias }, vec![input])
+}
+
+/// MobileNetV1 (1.0×, 224) — depthwise-separable stacks.
+pub fn mobilenet_v1(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("mobilenet_v1", (3, 224, 224));
+    let mut cur = g.conv("conv1", ConvSpec::new(3, 32, 3, 2, 1), true, Graph::INPUT, rng);
+    // (in, out, stride of the depthwise)
+    let cfg: [(usize, usize, usize); 13] = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    for (i, &(cin, cout, s)) in cfg.iter().enumerate() {
+        let dw = ConvSpec::new(cin, cin, 3, s, 1).grouped(cin);
+        cur = g.conv(format!("dw{}", i + 1), dw, true, cur, rng);
+        let pw = ConvSpec::new(cin, cout, 1, 1, 0);
+        cur = g.conv(format!("pw{}", i + 1), pw, true, cur, rng);
+    }
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![cur]);
+    fc(&mut g, "fc", 1024, num_classes, gap, rng);
+    g
+}
+
+/// ResNet-18/34 (basic blocks) and ResNet-50 (bottlenecks).
+pub fn resnet(depth: usize, num_classes: usize, rng: &mut Rng) -> Graph {
+    let (blocks, bottleneck): ([usize; 4], bool) = match depth {
+        18 => ([2, 2, 2, 2], false),
+        34 => ([3, 4, 6, 3], false),
+        50 => ([3, 4, 6, 3], true),
+        _ => panic!("unsupported resnet depth {depth}"),
+    };
+    let mut g = Graph::new(format!("resnet{depth}"), (3, 224, 224));
+    let c1 = g.conv("conv1", ConvSpec::new(3, 64, 7, 2, 3), true, Graph::INPUT, rng);
+    let mut cur = g.push("pool1", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![c1]);
+    let widths = [64usize, 128, 256, 512];
+    let expansion = if bottleneck { 4 } else { 1 };
+    let mut in_ch = 64usize;
+    for (stage, (&w, &nblocks)) in widths.iter().zip(blocks.iter()).enumerate() {
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let out_ch = w * expansion;
+            let tag = format!("s{}b{}", stage + 1, b + 1);
+            let identity = cur;
+            let main = if bottleneck {
+                let c1 = g.conv(format!("{tag}.c1"), ConvSpec::new(in_ch, w, 1, 1, 0), true, cur, rng);
+                let c2 = g.conv(format!("{tag}.c2"), ConvSpec::new(w, w, 3, stride, 1), true, c1, rng);
+                g.conv(format!("{tag}.c3"), ConvSpec::new(w, out_ch, 1, 1, 0), false, c2, rng)
+            } else {
+                let c1 = g.conv(format!("{tag}.c1"), ConvSpec::new(in_ch, w, 3, stride, 1), true, cur, rng);
+                g.conv(format!("{tag}.c2"), ConvSpec::new(w, w, 3, 1, 1), false, c1, rng)
+            };
+            let shortcut = if stride != 1 || in_ch != out_ch {
+                g.conv(
+                    format!("{tag}.down"),
+                    ConvSpec::new(in_ch, out_ch, 1, stride, 0),
+                    false,
+                    identity,
+                    rng,
+                )
+            } else {
+                identity
+            };
+            cur = g.push(format!("{tag}.add"), Op::Add { relu: true }, vec![main, shortcut]);
+            in_ch = out_ch;
+        }
+    }
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![cur]);
+    fc(&mut g, "fc", in_ch, num_classes, gap, rng);
+    g
+}
+
+/// ResNeXt-101 (32×4d): bottlenecks with 32-group 3×3 convs.
+pub fn resnext101(num_classes: usize, rng: &mut Rng) -> Graph {
+    let blocks = [3usize, 4, 23, 3];
+    let mut g = Graph::new("resnext101", (3, 224, 224));
+    let c1 = g.conv("conv1", ConvSpec::new(3, 64, 7, 2, 3), true, Graph::INPUT, rng);
+    let mut cur = g.push("pool1", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![c1]);
+    let mut in_ch = 64usize;
+    for (stage, &nblocks) in blocks.iter().enumerate() {
+        // 32x4d: inner width = 128, 256, 512, 1024; out = 256..2048.
+        let width = 128 << stage;
+        let out_ch = 256 << stage;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let tag = format!("s{}b{}", stage + 1, b + 1);
+            let identity = cur;
+            let c1 = g.conv(format!("{tag}.c1"), ConvSpec::new(in_ch, width, 1, 1, 0), true, cur, rng);
+            let c2 = g.conv(
+                format!("{tag}.c2"),
+                ConvSpec::new(width, width, 3, stride, 1).grouped(32),
+                true,
+                c1,
+                rng,
+            );
+            let c3 = g.conv(format!("{tag}.c3"), ConvSpec::new(width, out_ch, 1, 1, 0), false, c2, rng);
+            let shortcut = if stride != 1 || in_ch != out_ch {
+                g.conv(format!("{tag}.down"), ConvSpec::new(in_ch, out_ch, 1, stride, 0), false, identity, rng)
+            } else {
+                identity
+            };
+            cur = g.push(format!("{tag}.add"), Op::Add { relu: true }, vec![c3, shortcut]);
+            in_ch = out_ch;
+        }
+    }
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![cur]);
+    fc(&mut g, "fc", in_ch, num_classes, gap, rng);
+    g
+}
+
+/// One GoogLeNet inception module.
+#[allow(clippy::too_many_arguments)]
+fn inception_module(
+    g: &mut Graph,
+    tag: &str,
+    input: usize,
+    in_ch: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pool_proj: usize,
+    rng: &mut Rng,
+) -> (usize, usize) {
+    let b1 = g.conv(format!("{tag}.1x1"), ConvSpec::new(in_ch, c1, 1, 1, 0), true, input, rng);
+    let b2a = g.conv(format!("{tag}.3x3r"), ConvSpec::new(in_ch, c3r, 1, 1, 0), true, input, rng);
+    let b2 = g.conv(format!("{tag}.3x3"), ConvSpec::new(c3r, c3, 3, 1, 1), true, b2a, rng);
+    let b3a = g.conv(format!("{tag}.5x5r"), ConvSpec::new(in_ch, c5r, 1, 1, 0), true, input, rng);
+    let b3 = g.conv(format!("{tag}.5x5"), ConvSpec::new(c5r, c5, 5, 1, 2), true, b3a, rng);
+    let pool = g.push(format!("{tag}.pool"), Op::MaxPool { k: 3, stride: 1, pad: 1 }, vec![input]);
+    let b4 = g.conv(format!("{tag}.proj"), ConvSpec::new(in_ch, pool_proj, 1, 1, 0), true, pool, rng);
+    let cat = g.push(format!("{tag}.cat"), Op::Concat, vec![b1, b2, b3, b4]);
+    (cat, c1 + c3 + c5 + pool_proj)
+}
+
+/// GoogLeNet (Inception v1).
+pub fn googlenet(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("googlenet", (3, 224, 224));
+    let c1 = g.conv("conv1", ConvSpec::new(3, 64, 7, 2, 3), true, Graph::INPUT, rng);
+    let p1 = g.push("pool1", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![c1]);
+    let c2 = g.conv("conv2r", ConvSpec::new(64, 64, 1, 1, 0), true, p1, rng);
+    let c3 = g.conv("conv2", ConvSpec::new(64, 192, 3, 1, 1), true, c2, rng);
+    let p2 = g.push("pool2", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![c3]);
+    let (m3a, ch) = inception_module(&mut g, "3a", p2, 192, 64, 96, 128, 16, 32, 32, rng);
+    let (m3b, ch) = inception_module(&mut g, "3b", m3a, ch, 128, 128, 192, 32, 96, 64, rng);
+    let p3 = g.push("pool3", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![m3b]);
+    let (m4a, ch2) = inception_module(&mut g, "4a", p3, ch, 192, 96, 208, 16, 48, 64, rng);
+    let (m4b, ch2) = inception_module(&mut g, "4b", m4a, ch2, 160, 112, 224, 24, 64, 64, rng);
+    let (m4c, ch2) = inception_module(&mut g, "4c", m4b, ch2, 128, 128, 256, 24, 64, 64, rng);
+    let (m4d, ch2) = inception_module(&mut g, "4d", m4c, ch2, 112, 144, 288, 32, 64, 64, rng);
+    let (m4e, ch2) = inception_module(&mut g, "4e", m4d, ch2, 256, 160, 320, 32, 128, 128, rng);
+    let p4 = g.push("pool4", Op::MaxPool { k: 3, stride: 2, pad: 1 }, vec![m4e]);
+    let (m5a, ch3) = inception_module(&mut g, "5a", p4, ch2, 256, 160, 320, 32, 128, 128, rng);
+    let (m5b, ch3) = inception_module(&mut g, "5b", m5a, ch3, 384, 192, 384, 48, 128, 128, rng);
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![m5b]);
+    fc(&mut g, "fc", ch3, num_classes, gap, rng);
+    g
+}
+
+/// InceptionV3 (299×299) — stem + the three inception stage families,
+/// expressed with standard 1×1/3×3/5×5-equivalent factorizations.
+pub fn inception_v3(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("inception_v3", (3, 299, 299));
+    let c1 = g.conv("stem1", ConvSpec::new(3, 32, 3, 2, 0), true, Graph::INPUT, rng);
+    let c2 = g.conv("stem2", ConvSpec::new(32, 32, 3, 1, 0), true, c1, rng);
+    let c3 = g.conv("stem3", ConvSpec::new(32, 64, 3, 1, 1), true, c2, rng);
+    let p1 = g.push("stem.pool1", Op::MaxPool { k: 3, stride: 2, pad: 0 }, vec![c3]);
+    let c4 = g.conv("stem4", ConvSpec::new(64, 80, 1, 1, 0), true, p1, rng);
+    let c5 = g.conv("stem5", ConvSpec::new(80, 192, 3, 1, 0), true, c4, rng);
+    let mut cur = g.push("stem.pool2", Op::MaxPool { k: 3, stride: 2, pad: 0 }, vec![c5]);
+    // 3 × inception-A at 35×35 (5x5 branch factorised as two 3x3).
+    let mut ch = 192usize;
+    for (i, pool_ch) in [32usize, 64, 64].into_iter().enumerate() {
+        let tag = format!("a{}", i + 1);
+        let b1 = g.conv(format!("{tag}.1x1"), ConvSpec::new(ch, 64, 1, 1, 0), true, cur, rng);
+        let b2a = g.conv(format!("{tag}.5r"), ConvSpec::new(ch, 48, 1, 1, 0), true, cur, rng);
+        let b2 = g.conv(format!("{tag}.5"), ConvSpec::new(48, 64, 5, 1, 2), true, b2a, rng);
+        let b3a = g.conv(format!("{tag}.3r"), ConvSpec::new(ch, 64, 1, 1, 0), true, cur, rng);
+        let b3b = g.conv(format!("{tag}.3a"), ConvSpec::new(64, 96, 3, 1, 1), true, b3a, rng);
+        let b3 = g.conv(format!("{tag}.3b"), ConvSpec::new(96, 96, 3, 1, 1), true, b3b, rng);
+        let pool = g.push(format!("{tag}.pool"), Op::MaxPool { k: 3, stride: 1, pad: 1 }, vec![cur]);
+        let b4 = g.conv(format!("{tag}.proj"), ConvSpec::new(ch, pool_ch, 1, 1, 0), true, pool, rng);
+        cur = g.push(format!("{tag}.cat"), Op::Concat, vec![b1, b2, b3, b4]);
+        ch = 64 + 64 + 96 + pool_ch;
+    }
+    // Reduction-A to 17×17.
+    let r1 = g.conv("redA.3", ConvSpec::new(ch, 384, 3, 2, 0), true, cur, rng);
+    let r2a = g.conv("redA.dr", ConvSpec::new(ch, 64, 1, 1, 0), true, cur, rng);
+    let r2b = g.conv("redA.da", ConvSpec::new(64, 96, 3, 1, 1), true, r2a, rng);
+    let r2 = g.conv("redA.db", ConvSpec::new(96, 96, 3, 2, 0), true, r2b, rng);
+    let rp = g.push("redA.pool", Op::MaxPool { k: 3, stride: 2, pad: 0 }, vec![cur]);
+    cur = g.push("redA.cat", Op::Concat, vec![r1, r2, rp]);
+    ch = 384 + 96 + ch;
+    // 4 × inception-B at 17×17 (7x7 factorised as 1x7+7x1 ≈ one 7-tap
+    // pair; we model it with k=7 padding-3 separable pairs).
+    for i in 0..4 {
+        let tag = format!("b{}", i + 1);
+        let w7 = [128usize, 160, 160, 192][i];
+        let b1 = g.conv(format!("{tag}.1x1"), ConvSpec::new(ch, 192, 1, 1, 0), true, cur, rng);
+        // The 1×7+7×1 factorised pair is modelled as one 7×7 (same
+        // receptive field and output shape; the separable pair's two
+        // smaller GEMMs are covered by other layers in the inventory).
+        let b2a = g.conv(format!("{tag}.7r"), ConvSpec::new(ch, w7, 1, 1, 0), true, cur, rng);
+        let b2 = g.conv(format!("{tag}.7"), ConvSpec::new(w7, 192, 7, 1, 3), true, b2a, rng);
+        let pool = g.push(format!("{tag}.pool"), Op::MaxPool { k: 3, stride: 1, pad: 1 }, vec![cur]);
+        let b4 = g.conv(format!("{tag}.proj"), ConvSpec::new(ch, 192, 1, 1, 0), true, pool, rng);
+        cur = g.push(format!("{tag}.cat"), Op::Concat, vec![b1, b2, b4]);
+        ch = 192 * 3;
+    }
+    // Reduction-B to 8×8 and 2 × inception-C.
+    let rb1a = g.conv("redB.3r", ConvSpec::new(ch, 192, 1, 1, 0), true, cur, rng);
+    let rb1 = g.conv("redB.3", ConvSpec::new(192, 320, 3, 2, 0), true, rb1a, rng);
+    let rb2a = g.conv("redB.7r", ConvSpec::new(ch, 192, 1, 1, 0), true, cur, rng);
+    let rb2b = g.conv("redB.7", ConvSpec::new(192, 192, 7, 1, 3), true, rb2a, rng);
+    let rb2 = g.conv("redB.33", ConvSpec::new(192, 192, 3, 2, 0), true, rb2b, rng);
+    let rbp = g.push("redB.pool", Op::MaxPool { k: 3, stride: 2, pad: 0 }, vec![cur]);
+    cur = g.push("redB.cat", Op::Concat, vec![rb1, rb2, rbp]);
+    ch = 320 + 192 + ch;
+    for i in 0..2 {
+        let tag = format!("c{}", i + 1);
+        let b1 = g.conv(format!("{tag}.1x1"), ConvSpec::new(ch, 320, 1, 1, 0), true, cur, rng);
+        let b2a = g.conv(format!("{tag}.3r"), ConvSpec::new(ch, 384, 1, 1, 0), true, cur, rng);
+        let b2 = g.conv(format!("{tag}.3"), ConvSpec::new(384, 768, 3, 1, 1), true, b2a, rng);
+        let b3a = g.conv(format!("{tag}.d3r"), ConvSpec::new(ch, 448, 1, 1, 0), true, cur, rng);
+        let b3b = g.conv(format!("{tag}.d3a"), ConvSpec::new(448, 384, 3, 1, 1), true, b3a, rng);
+        let b3 = g.conv(format!("{tag}.d3b"), ConvSpec::new(384, 768, 3, 1, 1), true, b3b, rng);
+        let pool = g.push(format!("{tag}.pool"), Op::MaxPool { k: 3, stride: 1, pad: 1 }, vec![cur]);
+        let b4 = g.conv(format!("{tag}.proj"), ConvSpec::new(ch, 192, 1, 1, 0), true, pool, rng);
+        cur = g.push(format!("{tag}.cat"), Op::Concat, vec![b1, b2, b3, b4]);
+        ch = 320 + 768 + 768 + 192;
+    }
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![cur]);
+    fc(&mut g, "fc", ch, num_classes, gap, rng);
+    g
+}
+
+/// VGG16.
+pub fn vgg16(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("vgg16", (3, 224, 224));
+    let cfg: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut cur = Graph::INPUT;
+    let mut in_ch = 3usize;
+    for (stage, &(width, reps)) in cfg.iter().enumerate() {
+        for r in 0..reps {
+            cur = g.conv(
+                format!("conv{}_{}", stage + 1, r + 1),
+                ConvSpec::new(in_ch, width, 3, 1, 1),
+                true,
+                cur,
+                rng,
+            );
+            in_ch = width;
+        }
+        cur = g.push(
+            format!("pool{}", stage + 1),
+            Op::MaxPool { k: 2, stride: 2, pad: 0 },
+            vec![cur],
+        );
+    }
+    // Classifier: GAP-style reduction instead of the 4096-wide FCs (the
+    // paper's eval is conv-bound; the FCs are latency-irrelevant here).
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![cur]);
+    fc(&mut g, "fc", 512, num_classes, gap, rng);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_validate_and_infer() {
+        for name in MODELS {
+            let g = build(name, 10, 1).unwrap_or_else(|e| panic!("{name}: {e}"));
+            g.infer_shapes().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.conv_count() > 0, "{name} has no convs");
+        }
+    }
+
+    #[test]
+    fn conv_counts_match_architectures() {
+        // Known conv counts (conv layers incl. downsample projections).
+        assert_eq!(build("vgg16", 10, 0).unwrap().conv_count(), 13);
+        assert_eq!(build("mobilenet_v1", 10, 0).unwrap().conv_count(), 27);
+        assert_eq!(build("resnet18", 10, 0).unwrap().conv_count(), 20);
+        assert_eq!(build("resnet34", 10, 0).unwrap().conv_count(), 36);
+        assert_eq!(build("resnet50", 10, 0).unwrap().conv_count(), 53);
+        // ResNeXt101: 3+4+23+3 blocks × 3 convs + 4 downsamples + stem.
+        assert_eq!(build("resnext101", 10, 0).unwrap().conv_count(), 1 + 33 * 3 + 4);
+        // GoogLeNet: 3 stem + 9 modules × 6 convs.
+        assert_eq!(build("googlenet", 10, 0).unwrap().conv_count(), 3 + 9 * 6);
+    }
+
+    #[test]
+    fn resnet18_shapes() {
+        let g = build("resnet18", 1000, 0).unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        // Final add before gap: [1, 512, 7, 7].
+        let gap_in = &shapes[shapes.len() - 3];
+        assert_eq!(gap_in, &vec![1, 512, 7, 7]);
+    }
+
+    #[test]
+    fn inventory_has_paper_scale_shapes() {
+        let inv = layer_inventory("resnet18").unwrap();
+        // Contains the classic (3136, 64, 576) GEMM.
+        assert!(inv.iter().any(|l| {
+            let g = l.gemm();
+            (g.m, g.n, g.k) == (3136, 64, 576)
+        }));
+        let inv = layer_inventory("mobilenet_v1").unwrap();
+        // Pointwise 1x1 @ 112×112: (12544, 64, 32).
+        assert!(inv.iter().any(|l| {
+            let g = l.gemm();
+            (g.m, g.n, g.k) == (12544, 64, 32)
+        }));
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(build("resnet99", 10, 0).is_err());
+    }
+}

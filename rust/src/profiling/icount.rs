@@ -1,0 +1,90 @@
+//! Symbolic instruction-count model for the packing schemes (paper
+//! Tab. 3): average number of *visible* vector instructions (AND / shift
+//! / OR / shuffle) needed to retrieve one LUT entry for one
+//! weight-activation pair, derived from the exact instruction sequences
+//! in [`crate::kernels::lut16::avx2`].
+//!
+//! The model is kept in lock-step with the kernels by construction (each
+//! scheme's counts are the per-128-value totals of its `dot_scheme_*`
+//! inner loop divided by 4 rounds of 32 lookups), and the tab3 bench
+//! cross-checks the *measured* cycle ordering against it.
+
+/// Per-output instruction counts for one packing scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstrCount {
+    pub and: f64,
+    pub shift: f64,
+    pub or: f64,
+    pub shuffle: f64,
+    /// Extra 32-byte loads per 128 values relative to dense/dense
+    /// (bandwidth cost of the offline re-arrangements).
+    pub extra_loads: f64,
+}
+
+impl InstrCount {
+    pub fn total(&self) -> f64 {
+        self.and + self.shift + self.or + self.shuffle
+    }
+}
+
+/// Our reconstruction's counts (see kernels::pack module docs; the
+/// paper's own numbers for a–d are 5.5 / 4.5 / 4.5 / 4.0).
+pub fn scheme_icount(scheme: crate::kernels::pack::Scheme) -> InstrCount {
+    use crate::kernels::pack::Scheme;
+    match scheme {
+        // dot_scheme_a: per 128 values: 6 shifts, 8 ands, 4 ors, 4 shuffles.
+        Scheme::A => InstrCount { and: 2.0, shift: 1.5, or: 1.0, shuffle: 1.0, extra_loads: 0.0 },
+        // dot_scheme_b: hoisted temporaries — same op classes, 6/8/4/4
+        // with two of the shifts off the critical path; we count the
+        // issued ops (ILP gain shows up in cycles, not counts).
+        Scheme::B => InstrCount { and: 2.0, shift: 1.5, or: 1.0, shuffle: 1.0, extra_loads: 0.0 },
+        // dot_scheme_c: weights arrive ready (ByteHi): 3 shifts, 4 ands,
+        // 4 ors, 4 shuffles per 128 values + 3 extra 32B weight loads.
+        Scheme::C => InstrCount { and: 1.0, shift: 0.75, or: 1.0, shuffle: 1.0, extra_loads: 3.0 },
+        // dot_scheme_d: 2 ors, 2 ands, 2 shifts, 4 shuffles per 128
+        // values + 2 extra 32B loads (both operands at nibble density).
+        Scheme::D => InstrCount { and: 0.5, shift: 0.5, or: 0.5, shuffle: 1.0, extra_loads: 2.0 },
+    }
+}
+
+/// The paper's Tab. 3 reference values, for side-by-side reporting.
+pub fn paper_tab3(scheme: crate::kernels::pack::Scheme) -> InstrCount {
+    use crate::kernels::pack::Scheme;
+    match scheme {
+        Scheme::A => InstrCount { and: 2.0, shift: 1.5, or: 1.0, shuffle: 1.0, extra_loads: 0.0 },
+        Scheme::B => InstrCount { and: 2.0, shift: 1.0, or: 0.5, shuffle: 1.0, extra_loads: 0.0 },
+        Scheme::C => InstrCount { and: 2.0, shift: 0.5, or: 1.0, shuffle: 1.0, extra_loads: 0.0 },
+        Scheme::D => InstrCount { and: 2.0, shift: 0.5, or: 0.5, shuffle: 1.0, extra_loads: 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::Scheme;
+
+    #[test]
+    fn paper_totals_match_tab3() {
+        assert_eq!(paper_tab3(Scheme::A).total(), 5.5);
+        assert_eq!(paper_tab3(Scheme::B).total(), 4.5);
+        assert_eq!(paper_tab3(Scheme::C).total(), 4.5);
+        assert_eq!(paper_tab3(Scheme::D).total(), 4.0);
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // Both models agree on the headline ordering: a worst, d best.
+        let ours: Vec<f64> = Scheme::ALL.iter().map(|&s| scheme_icount(s).total()).collect();
+        assert!(ours[0] >= ours[1] && ours[1] >= ours[2] && ours[2] > ours[3]);
+        assert_eq!(scheme_icount(Scheme::A).total(), 5.5);
+        assert_eq!(scheme_icount(Scheme::D).total(), 2.5);
+    }
+
+    #[test]
+    fn every_scheme_pays_one_shuffle() {
+        for s in Scheme::ALL {
+            assert_eq!(scheme_icount(s).shuffle, 1.0);
+            assert_eq!(paper_tab3(s).shuffle, 1.0);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Profiling substrates: the per-stage timers behind the Fig. 7/8 kernel
+//! breakdowns (replacing the paper's ONNX-Runtime/VTune tooling) and the
+//! symbolic instruction-count model behind Tab. 3.
+
+pub mod icount;
+pub mod stages;
+
+pub use icount::{scheme_icount, InstrCount};
+pub use stages::{Stage, StageProfile};

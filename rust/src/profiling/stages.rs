@@ -1,0 +1,169 @@
+//! Per-stage wall-clock profiling (paper Fig. 7/8): activation
+//! quantization, im2col, activation packing, Lut-Conv (unpack + lookup +
+//! accumulate), dequantization, and everything else.
+
+use std::time::Instant;
+
+/// Pipeline stages of one quantized convolution (Fig. 7's categories,
+/// plus im2col which the paper folds into packing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// f32 → codes.
+    Quantize,
+    /// Convolution lowering (code im2col).
+    Im2col,
+    /// Bit-packing of activation codes.
+    Pack,
+    /// The LUT convolution itself (unpack + lookup + accumulate).
+    LutConv,
+    /// i32/f32 accumulators → f32 output (+ bias/ReLU).
+    Dequant,
+    /// Non-conv ops (pool, add, concat, fc).
+    Other,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Quantize,
+        Stage::Im2col,
+        Stage::Pack,
+        Stage::LutConv,
+        Stage::Dequant,
+        Stage::Other,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Quantize => "act-quantize",
+            Stage::Im2col => "im2col",
+            Stage::Pack => "act-pack",
+            Stage::LutConv => "lut-conv",
+            Stage::Dequant => "dequantize",
+            Stage::Other => "other",
+        }
+    }
+
+    fn index(&self) -> usize {
+        Stage::ALL.iter().position(|s| s == self).unwrap()
+    }
+}
+
+/// Accumulated per-stage times (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct StageProfile {
+    secs: [f64; 6],
+    calls: [u64; 6],
+}
+
+impl StageProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.index()] += secs;
+        self.calls[stage.index()] += 1;
+    }
+
+    /// Time a closure into a stage.
+    pub fn time<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn secs(&self, stage: Stage) -> f64 {
+        self.secs[stage.index()]
+    }
+
+    pub fn calls(&self, stage: Stage) -> u64 {
+        self.calls[stage.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Fraction of total time per stage.
+    pub fn fractions(&self) -> Vec<(Stage, f64)> {
+        let t = self.total().max(1e-12);
+        Stage::ALL.iter().map(|&s| (s, self.secs(s) / t)).collect()
+    }
+
+    pub fn merge(&mut self, other: &StageProfile) {
+        for i in 0..6 {
+            self.secs[i] += other.secs[i];
+            self.calls[i] += other.calls[i];
+        }
+    }
+
+    /// Render a Fig. 7-style table row set.
+    pub fn render(&self, label: &str) -> String {
+        let mut s = format!("{label}: total {:.3} ms\n", self.total() * 1e3);
+        for (stage, frac) in self.fractions() {
+            if self.calls(stage) == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "  {:<14} {:>9.3} ms  {:>5.1}%  ({} calls)\n",
+                stage.name(),
+                self.secs(stage) * 1e3,
+                frac * 100.0,
+                self.calls(stage)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_fractions() {
+        let mut p = StageProfile::new();
+        p.add(Stage::Quantize, 1.0);
+        p.add(Stage::LutConv, 3.0);
+        p.add(Stage::LutConv, 1.0);
+        assert_eq!(p.total(), 5.0);
+        assert_eq!(p.calls(Stage::LutConv), 2);
+        let f: f64 = p
+            .fractions()
+            .iter()
+            .find(|(s, _)| *s == Stage::LutConv)
+            .unwrap()
+            .1;
+        assert!((f - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_counts() {
+        let mut p = StageProfile::new();
+        let v = p.time(Stage::Pack, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.calls(Stage::Pack), 1);
+        assert!(p.secs(Stage::Pack) >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageProfile::new();
+        a.add(Stage::Dequant, 1.0);
+        let mut b = StageProfile::new();
+        b.add(Stage::Dequant, 2.0);
+        a.merge(&b);
+        assert_eq!(a.secs(Stage::Dequant), 3.0);
+        assert_eq!(a.calls(Stage::Dequant), 2);
+    }
+
+    #[test]
+    fn render_contains_stage_names() {
+        let mut p = StageProfile::new();
+        p.add(Stage::LutConv, 0.5);
+        let r = p.render("layer1");
+        assert!(r.contains("lut-conv"));
+        assert!(r.contains("layer1"));
+    }
+}

@@ -1,0 +1,271 @@
+//! Lookup-table construction (paper §3.2).
+//!
+//! - [`Lut16`]: the 16-entry (2-bit × 2-bit) product table used by the
+//!   `pshufb` kernels, generalised to 64 entries (3-bit) and 256 entries
+//!   (4-bit) per Tab. 2. Entries are stored **biased to u8** so the SIMD
+//!   kernel can accumulate with `vpsadbw` without overflow: the kernel
+//!   epilogue subtracts `bias · k_padded + pad · v0w·v0a`.
+//! - [`Lut16F32`]: same index space, f32 entries — supports *non-uniform*
+//!   quantization where products are real-valued (§5.3).
+//! - [`Lut65k`]: the 2^16-entry table indexed by (4 weight crumbs, 4
+//!   activation crumbs); entries are exact i8 block dot-products.
+
+use super::{F32Codebook, IntCodebook};
+
+/// Index convention shared by every kernel in this crate:
+/// `index = (weight_code << bits) | activation_code`.
+#[inline]
+pub fn lut_index(w_code: u8, a_code: u8, bits: u32) -> usize {
+    ((w_code as usize) << bits) | a_code as usize
+}
+
+/// Integer product LUT with biased-u8 storage.
+///
+/// `table[(cw << bits) | ca] = Vw(cw) * Va(ca) + bias`, with `bias` chosen
+/// so every entry fits in `0..=255` (2-bit signed products span [-4, 4], so
+/// bias = 4 and entries span 0..=8; the SAD accumulator then never wraps
+/// for any K the framework supports).
+#[derive(Clone, Debug)]
+pub struct Lut16 {
+    pub bits: u32,
+    /// Biased entries, length `4^bits` (16 / 64 / 256).
+    pub table: Vec<u8>,
+    /// The bias added to every entry.
+    pub bias: i32,
+    /// Product of the code-0 values — the padding correction term.
+    pub pad_product: i32,
+    /// Raw (unbiased) products, kept for oracles and the scalar kernels.
+    pub raw: Vec<i32>,
+}
+
+impl Lut16 {
+    pub fn build(w_cb: &IntCodebook, a_cb: &IntCodebook) -> Self {
+        assert_eq!(w_cb.bits, a_cb.bits, "mixed-bitwidth LUT unsupported");
+        let bits = w_cb.bits;
+        let n = 1usize << bits;
+        let mut raw = vec![0i32; n * n];
+        let mut min = i32::MAX;
+        let mut max = i32::MIN;
+        for cw in 0..n {
+            for ca in 0..n {
+                let p = w_cb.values[cw] * a_cb.values[ca];
+                raw[(cw << bits) | ca] = p;
+                min = min.min(p);
+                max = max.max(p);
+            }
+        }
+        let bias = -min;
+        assert!(
+            max + bias <= u8::MAX as i32,
+            "biased product range {min}..{max} exceeds u8 — use wider LUT entries"
+        );
+        let table = raw.iter().map(|&p| (p + bias) as u8).collect();
+        Lut16 {
+            bits,
+            table,
+            bias,
+            pad_product: w_cb.values[0] * a_cb.values[0],
+            raw,
+        }
+    }
+
+    /// Number of entries (16, 64 or 256 — paper Tab. 2).
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Table size in bits (paper Tab. 2 row "LUT size").
+    pub fn size_bits(&self) -> usize {
+        self.table.len() * 8
+    }
+
+    /// How many 256-bit AVX2 registers hold the table (Tab. 2).
+    /// The 16-entry table is held in *one* register (two mirrored 128-bit
+    /// lanes); larger tables need `entries/32` registers.
+    pub fn avx2_registers(&self) -> usize {
+        (self.size_bits() + 255) / 256
+    }
+
+    /// Unbiased product for a code pair — the scalar/oracle path.
+    #[inline]
+    pub fn product(&self, cw: u8, ca: u8) -> i32 {
+        self.raw[lut_index(cw, ca, self.bits)]
+    }
+
+    /// Epilogue correction: `real = sad_acc - correction(k_padded, pad)`.
+    #[inline]
+    pub fn correction(&self, k_padded: usize, pad: usize) -> i64 {
+        self.bias as i64 * k_padded as i64 + self.pad_product as i64 * pad as i64
+    }
+}
+
+/// f32-entry LUT for non-uniform quantization (paper §5.3: "The LUT can
+/// store either integer or floating-point values").
+#[derive(Clone, Debug)]
+pub struct Lut16F32 {
+    pub bits: u32,
+    pub table: Vec<f32>,
+    /// f32 padding correction per padded element.
+    pub pad_product: f32,
+}
+
+impl Lut16F32 {
+    pub fn build(w_cb: &F32Codebook, a_cb: &F32Codebook) -> Self {
+        assert_eq!(w_cb.bits, a_cb.bits);
+        let bits = w_cb.bits;
+        let n = 1usize << bits;
+        let mut table = vec![0f32; n * n];
+        for cw in 0..n {
+            for ca in 0..n {
+                table[(cw << bits) | ca] = w_cb.values[cw] * a_cb.values[ca];
+            }
+        }
+        Lut16F32 { bits, table, pad_product: w_cb.values[0] * a_cb.values[0] }
+    }
+
+    #[inline]
+    pub fn product(&self, cw: u8, ca: u8) -> f32 {
+        self.table[lut_index(cw, ca, self.bits)]
+    }
+}
+
+/// The LUT-65k table (paper §3.2): index = (weight byte << 8) | act byte,
+/// where each byte holds 4 packed 2-bit crumbs; the entry is the exact
+/// 4-element block dot product. For any pair of 2-bit codebooks the block
+/// product spans at most [-16, 16], so entries are exact i8.
+#[derive(Clone, Debug)]
+pub struct Lut65k {
+    pub table: Vec<i8>,
+    /// Correction for zero-padding: code-0/code-0 product per padded crumb.
+    pub pad_product: i32,
+}
+
+impl Lut65k {
+    pub fn build(w_cb: &IntCodebook, a_cb: &IntCodebook) -> Self {
+        assert_eq!(w_cb.bits, 2, "LUT-65k is defined for 2-bit operands");
+        assert_eq!(a_cb.bits, 2);
+        let mut table = vec![0i8; 1 << 16];
+        // Entry for (wb, ab) = sum_i Vw(crumb_i(wb)) * Va(crumb_i(ab)).
+        // Build incrementally: precompute per-crumb-pair contributions.
+        let mut prod = [[0i32; 4]; 4];
+        for (cw, row) in prod.iter_mut().enumerate() {
+            for (ca, p) in row.iter_mut().enumerate() {
+                *p = w_cb.values[cw] * a_cb.values[ca];
+            }
+        }
+        for wb in 0..256usize {
+            let w = [wb & 3, (wb >> 2) & 3, (wb >> 4) & 3, (wb >> 6) & 3];
+            for ab in 0..256usize {
+                let a = [ab & 3, (ab >> 2) & 3, (ab >> 4) & 3, (ab >> 6) & 3];
+                let mut s = 0i32;
+                for i in 0..4 {
+                    s += prod[w[i]][a[i]];
+                }
+                debug_assert!((-128..=127).contains(&s));
+                table[(wb << 8) | ab] = s as i8;
+            }
+        }
+        Lut65k { table, pad_product: prod[0][0] }
+    }
+
+    /// Table size in bytes (paper: 64 KB).
+    pub fn size_bytes(&self) -> usize {
+        self.table.len()
+    }
+
+    #[inline]
+    pub fn block_product(&self, w_byte: u8, a_byte: u8) -> i32 {
+        self.table[((w_byte as usize) << 8) | a_byte as usize] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::IntCodebook;
+
+    #[test]
+    fn lut16_signed_2bit_matches_manual() {
+        let cb = IntCodebook::signed(2); // values -2..1
+        let lut = Lut16::build(&cb, &cb);
+        assert_eq!(lut.entries(), 16);
+        assert_eq!(lut.size_bits(), 128);
+        assert_eq!(lut.avx2_registers(), 1);
+        for cw in 0..4u8 {
+            for ca in 0..4u8 {
+                let expect = (cw as i32 - 2) * (ca as i32 - 2);
+                assert_eq!(lut.product(cw, ca), expect);
+                assert_eq!(
+                    lut.table[lut_index(cw, ca, 2)] as i32 - lut.bias,
+                    expect
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lut16_bias_is_tight() {
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        // Signed 2-bit products span [-2, 4]: min is (-2)(1) = -2 → bias 2.
+        assert_eq!(lut.bias, 2);
+        assert!(lut.table.iter().all(|&e| e <= 6));
+    }
+
+    #[test]
+    fn lut16_unsigned_has_zero_bias() {
+        let cb = IntCodebook::unsigned(2);
+        let lut = Lut16::build(&cb, &cb);
+        assert_eq!(lut.bias, 0);
+        assert_eq!(lut.product(3, 3), 9);
+        assert_eq!(lut.pad_product, 0);
+    }
+
+    #[test]
+    fn lut_scaling_tab2() {
+        // Paper Tab. 2: entries 16/64/256, sizes 128/512/2048 bits,
+        // registers 1/2/8.
+        for (bits, entries, size_bits, regs) in
+            [(2u32, 16, 128, 1), (3, 64, 512, 2), (4, 256, 2048, 8)]
+        {
+            let cb = IntCodebook::unsigned(bits);
+            let lut = Lut16::build(&cb, &cb);
+            assert_eq!(lut.entries(), entries);
+            assert_eq!(lut.size_bits(), size_bits);
+            assert_eq!(lut.avx2_registers(), regs);
+        }
+    }
+
+    #[test]
+    fn lut65k_block_products() {
+        let cb = IntCodebook::signed(2);
+        let lut = Lut65k::build(&cb, &cb);
+        assert_eq!(lut.size_bytes(), 65536);
+        // w crumbs (0,1,2,3) → values (-2,-1,0,1); a the same.
+        let wb = 0b11_10_01_00u8;
+        let ab = 0b11_10_01_00u8;
+        // dot = (-2)(-2) + (-1)(-1) + 0 + 1 = 6
+        assert_eq!(lut.block_product(wb, ab), 6);
+        // All-zero bytes: 4 * (-2)(-2) = 16 (max entry).
+        assert_eq!(lut.block_product(0, 0), 16);
+        assert_eq!(lut.pad_product, 4);
+    }
+
+    #[test]
+    fn lut16_f32_products() {
+        let wcb = F32Codebook::new(2, vec![-1.2, -0.4, 0.4, 1.2]);
+        let acb = F32Codebook::new(2, vec![0.0, 0.5, 1.0, 1.5]);
+        let lut = Lut16F32::build(&wcb, &acb);
+        assert!((lut.product(0, 3) - (-1.8)).abs() < 1e-6);
+        assert!((lut.product(3, 1) - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn correction_accounts_bias_and_padding() {
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        // k=100 real + 28 pad = 128 padded.
+        let corr = lut.correction(128, 28);
+        assert_eq!(corr, lut.bias as i64 * 128 + 4 * 28);
+    }
+}

@@ -1,0 +1,136 @@
+//! Quantization: uniform (affine / symmetric, LSQ-style learned step) and
+//! non-uniform (arbitrary codebooks, LCQ-like k-means), plus lookup-table
+//! construction for the DeepGEMM kernels (§3.2, §5.3 of the paper).
+//!
+//! Terminology used throughout the crate:
+//!
+//! - a **code** is the b-bit integer stored in packed buffers, always in
+//!   `0 .. 2^b` (unsigned storage even for signed quantizers);
+//! - a **codebook** maps a code to its integer or real *value*
+//!   (e.g. signed uniform 2-bit: code c → value c - 2);
+//! - the **LUT** stores precomputed products `V_w(cw) · V_a(ca)` for every
+//!   (weight code, activation code) pair — integer-valued products go in
+//!   8-bit tables usable by the `pshufb` kernels, real-valued products in
+//!   f32 tables usable by the float-LUT kernel (non-uniform quantization).
+
+pub mod lut;
+pub mod nonuniform;
+pub mod uniform;
+
+pub use lut::{Lut16, Lut16F32, Lut65k};
+pub use nonuniform::kmeans_codebook;
+pub use uniform::{QuantParams, Quantizer};
+
+/// Maximum bitwidth the LUT kernels support (paper Tab. 2: 2, 3, 4).
+pub const MAX_BITS: u32 = 4;
+
+/// A codebook: code -> integer value. `values[c]` for code `c`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntCodebook {
+    pub bits: u32,
+    pub values: Vec<i32>,
+}
+
+impl IntCodebook {
+    pub fn new(bits: u32, values: Vec<i32>) -> Self {
+        assert!(bits >= 1 && bits <= MAX_BITS);
+        assert_eq!(values.len(), 1usize << bits);
+        Self { bits, values }
+    }
+
+    /// Unsigned (unipolar) uniform codebook: code c -> c.
+    pub fn unsigned(bits: u32) -> Self {
+        Self::new(bits, (0..(1i32 << bits)).collect())
+    }
+
+    /// Signed (bipolar) uniform codebook: code c -> c - 2^(b-1).
+    pub fn signed(bits: u32) -> Self {
+        let off = 1i32 << (bits - 1);
+        Self::new(bits, (0..(1i32 << bits)).map(|c| c - off).collect())
+    }
+
+    #[inline]
+    pub fn value(&self, code: u8) -> i32 {
+        self.values[code as usize]
+    }
+
+    pub fn min_value(&self) -> i32 {
+        *self.values.iter().min().unwrap()
+    }
+
+    pub fn max_value(&self) -> i32 {
+        *self.values.iter().max().unwrap()
+    }
+}
+
+/// A real-valued codebook (non-uniform quantization levels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct F32Codebook {
+    pub bits: u32,
+    pub values: Vec<f32>,
+}
+
+impl F32Codebook {
+    pub fn new(bits: u32, values: Vec<f32>) -> Self {
+        assert!(bits >= 1 && bits <= MAX_BITS);
+        assert_eq!(values.len(), 1usize << bits);
+        Self { bits, values }
+    }
+
+    /// Codebook induced by an integer codebook and a scale factor.
+    pub fn from_int(cb: &IntCodebook, scale: f32) -> Self {
+        Self::new(cb.bits, cb.values.iter().map(|&v| v as f32 * scale).collect())
+    }
+
+    #[inline]
+    pub fn value(&self, code: u8) -> f32 {
+        self.values[code as usize]
+    }
+
+    /// Encode a real value to the nearest codebook entry (non-uniform
+    /// quantization is nearest-level by definition).
+    pub fn encode(&self, x: f32) -> u8 {
+        let mut best = 0usize;
+        let mut bd = f32::INFINITY;
+        for (i, &v) in self.values.iter().enumerate() {
+            let d = (x - v).abs();
+            if d < bd {
+                bd = d;
+                best = i;
+            }
+        }
+        best as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsigned_signed_codebooks() {
+        let u = IntCodebook::unsigned(2);
+        assert_eq!(u.values, vec![0, 1, 2, 3]);
+        let s = IntCodebook::signed(2);
+        assert_eq!(s.values, vec![-2, -1, 0, 1]);
+        assert_eq!(s.min_value(), -2);
+        assert_eq!(s.max_value(), 1);
+        let s3 = IntCodebook::signed(3);
+        assert_eq!(s3.values, vec![-4, -3, -2, -1, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn f32_codebook_encode_nearest() {
+        let cb = F32Codebook::new(2, vec![-1.5, -0.3, 0.4, 2.0]);
+        assert_eq!(cb.encode(-2.0), 0);
+        assert_eq!(cb.encode(-0.2), 1);
+        assert_eq!(cb.encode(0.5), 2);
+        assert_eq!(cb.encode(10.0), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn codebook_wrong_len_panics() {
+        IntCodebook::new(2, vec![0, 1]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Non-uniform quantization (paper §5.3): codebooks whose levels are
+//! arbitrary reals, e.g. learned by LCQ or fitted by k-means. The LUT
+//! kernels support these natively because the table stores *products*, not
+//! operands — bit-serial and ULPPACK cannot (integer-only).
+
+use super::F32Codebook;
+
+/// Fit a 2^bits-level codebook to `data` by 1-D k-means (Lloyd's
+/// algorithm), initialised at uniform quantiles. This plays the role of a
+/// trained non-uniform quantizer (LCQ et al.) for the §5.3 flexibility
+/// experiments.
+pub fn kmeans_codebook(data: &[f32], bits: u32, iters: usize) -> F32Codebook {
+    let k = 1usize << bits;
+    assert!(!data.is_empty());
+    let mut sorted = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Quantile init.
+    let mut centers: Vec<f32> = (0..k)
+        .map(|i| {
+            let pos = (i as f64 + 0.5) / k as f64 * (sorted.len() - 1) as f64;
+            sorted[pos.round() as usize]
+        })
+        .collect();
+    let mut sums = vec![0f64; k];
+    let mut counts = vec![0usize; k];
+    for _ in 0..iters {
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+        // Assign: centers are sorted, so boundaries are midpoints and a
+        // linear sweep over sorted data suffices.
+        let mut ci = 0usize;
+        for &x in &sorted {
+            while ci + 1 < k && (x - centers[ci]).abs() > (x - centers[ci + 1]).abs() {
+                ci += 1;
+            }
+            // ci can only move forward for sorted data; but a value far
+            // left of the current center still belongs to an earlier one.
+            let mut best = ci;
+            if ci > 0 && (x - centers[ci - 1]).abs() < (x - centers[best]).abs() {
+                best = ci - 1;
+            }
+            sums[best] += x as f64;
+            counts[best] += 1;
+        }
+        for i in 0..k {
+            if counts[i] > 0 {
+                centers[i] = (sums[i] / counts[i] as f64) as f32;
+            }
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    F32Codebook::new(bits, centers)
+}
+
+/// Mean squared quantization error of a codebook on data.
+pub fn codebook_mse(cb: &F32Codebook, data: &[f32]) -> f64 {
+    data.iter()
+        .map(|&x| {
+            let d = (cb.value(cb.encode(x)) - x) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Quantizer;
+    use crate::util::rng::Rng;
+
+    fn normalish(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn kmeans_beats_uniform_on_gaussian() {
+        // The paper's motivation for non-uniform support: lower mean
+        // quantization error on bell-shaped weight distributions.
+        let data = normalish(20_000, 17);
+        let km = kmeans_codebook(&data, 2, 30);
+        let uq = Quantizer::symmetric(&data, 2);
+        let uniform_cb = F32Codebook::from_int(&uq.params.codebook(), uq.params.scale);
+        let e_km = codebook_mse(&km, &data);
+        let e_u = codebook_mse(&uniform_cb, &data);
+        assert!(
+            e_km < e_u,
+            "kmeans mse {e_km} should beat uniform mse {e_u}"
+        );
+    }
+
+    #[test]
+    fn kmeans_centers_sorted_and_in_range() {
+        let data = normalish(5000, 23);
+        for bits in 1..=4 {
+            let cb = kmeans_codebook(&data, bits, 15);
+            assert_eq!(cb.values.len(), 1 << bits);
+            assert!(cb.values.windows(2).all(|w| w[0] <= w[1]));
+            let (lo, hi) = data
+                .iter()
+                .fold((f32::MAX, f32::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+            assert!(cb.values.iter().all(|&c| c >= lo && c <= hi));
+        }
+    }
+
+    #[test]
+    fn kmeans_exact_on_k_clusters() {
+        // 4 tight clusters, 2 bits → centers land on the clusters.
+        let mut data = Vec::new();
+        for &c in &[-3.0f32, -1.0, 1.0, 3.0] {
+            for i in 0..100 {
+                data.push(c + (i % 10) as f32 * 1e-3);
+            }
+        }
+        let cb = kmeans_codebook(&data, 2, 25);
+        for (got, want) in cb.values.iter().zip([-3.0f32, -1.0, 1.0, 3.0]) {
+            assert!((got - want).abs() < 0.05, "{got} vs {want}");
+        }
+    }
+}

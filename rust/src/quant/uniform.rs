@@ -1,0 +1,211 @@
+//! Uniform affine quantization (paper §2.1, Eq. 1) and LSQ-style
+//! calibration of the step size.
+//!
+//! The rust side consumes quantizers calibrated either here (min/max or
+//! MSE-grid calibration) or by the python LSQ training loop (L2); both
+//! reduce to a `QuantParams { scale, zero_point }` plus a codebook.
+
+use super::IntCodebook;
+
+/// Affine quantization parameters: `code = clip(round(x / scale) + zp)`,
+/// `value(code) = scale * (code - zp)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub bits: u32,
+    /// Signed (bipolar) or unsigned (unipolar) code range.
+    pub signed: bool,
+}
+
+impl QuantParams {
+    pub fn code_min(&self) -> i32 {
+        0
+    }
+
+    pub fn code_max(&self) -> i32 {
+        (1 << self.bits) - 1
+    }
+
+    /// The integer codebook induced by these parameters: code c maps to
+    /// integer value (c - zp); the real value is `scale * value`.
+    pub fn codebook(&self) -> IntCodebook {
+        IntCodebook::new(
+            self.bits,
+            (0..(1 << self.bits)).map(|c| c - self.zero_point).collect(),
+        )
+    }
+}
+
+/// A calibrated quantizer.
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    pub params: QuantParams,
+}
+
+impl Quantizer {
+    /// Symmetric (weight-style) quantizer from data min/max: zero-point at
+    /// mid-range, scale covering max |x|. For b=2 signed this yields codes
+    /// {0,1,2,3} → values {-2,-1,0,1} × scale, matching LSQ's weight grid.
+    pub fn symmetric(data: &[f32], bits: u32) -> Self {
+        let amax = data.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+        let half = (1i32 << (bits - 1)) as f32;
+        Quantizer {
+            params: QuantParams {
+                scale: amax / half,
+                zero_point: 1 << (bits - 1),
+                bits,
+                signed: true,
+            },
+        }
+    }
+
+    /// Asymmetric (activation-style, post-ReLU) quantizer from min/max:
+    /// unsigned codes covering [0, max].
+    pub fn asymmetric_unsigned(data: &[f32], bits: u32) -> Self {
+        let max = data.iter().fold(0f32, |m, &x| m.max(x)).max(1e-8);
+        let levels = ((1i32 << bits) - 1) as f32;
+        Quantizer {
+            params: QuantParams { scale: max / levels, zero_point: 0, bits, signed: false },
+        }
+    }
+
+    /// LSQ-style step-size refinement: grid-search the scale that minimizes
+    /// MSE on the calibration data (the inference-time analogue of LSQ's
+    /// learned step; the python L2 layer learns it by SGD instead).
+    pub fn mse_refined(data: &[f32], bits: u32, signed: bool) -> Self {
+        let base = if signed {
+            Self::symmetric(data, bits)
+        } else {
+            Self::asymmetric_unsigned(data, bits)
+        };
+        let mut best = base.params.scale;
+        let mut best_err = f32::INFINITY;
+        for i in 0..48 {
+            let s = base.params.scale * (0.25 + 0.025 * i as f32);
+            let q = Quantizer {
+                params: QuantParams { scale: s, ..base.params },
+            };
+            let err: f32 = data
+                .iter()
+                .map(|&x| {
+                    let d = q.dequantize_one(q.quantize_one(x)) - x;
+                    d * d
+                })
+                .sum();
+            if err < best_err {
+                best_err = err;
+                best = s;
+            }
+        }
+        Quantizer { params: QuantParams { scale: best, ..base.params } }
+    }
+
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> u8 {
+        let q = (x / self.params.scale).round() as i32 + self.params.zero_point;
+        q.clamp(self.params.code_min(), self.params.code_max()) as u8
+    }
+
+    #[inline]
+    pub fn dequantize_one(&self, code: u8) -> f32 {
+        (code as i32 - self.params.zero_point) as f32 * self.params.scale
+    }
+
+    pub fn quantize(&self, xs: &[f32], out: &mut [u8]) {
+        assert_eq!(xs.len(), out.len());
+        let inv = 1.0 / self.params.scale;
+        let zp = self.params.zero_point;
+        let lo = self.params.code_min();
+        let hi = self.params.code_max();
+        for (x, o) in xs.iter().zip(out.iter_mut()) {
+            let q = (x * inv).round() as i32 + zp;
+            *o = q.clamp(lo, hi) as u8;
+        }
+    }
+
+    pub fn dequantize(&self, codes: &[u8], out: &mut [f32]) {
+        assert_eq!(codes.len(), out.len());
+        let s = self.params.scale;
+        let zp = self.params.zero_point;
+        for (c, o) in codes.iter().zip(out.iter_mut()) {
+            *o = (*c as i32 - zp) as f32 * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn symmetric_2bit_grid() {
+        let data = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let q = Quantizer::symmetric(&data, 2);
+        assert_eq!(q.params.zero_point, 2);
+        assert!((q.params.scale - 0.5).abs() < 1e-6);
+        assert_eq!(q.quantize_one(-1.0), 0); // value -2 * 0.5
+        assert_eq!(q.quantize_one(0.0), 2);
+        assert_eq!(q.quantize_one(0.5), 3);
+        assert_eq!(q.quantize_one(10.0), 3); // clips
+        assert_eq!(q.quantize_one(-10.0), 0);
+    }
+
+    #[test]
+    fn asymmetric_unsigned_covers_range() {
+        let data = [0.0f32, 1.0, 2.0, 3.0];
+        let q = Quantizer::asymmetric_unsigned(&data, 2);
+        assert_eq!(q.params.zero_point, 0);
+        assert_eq!(q.quantize_one(0.0), 0);
+        assert_eq!(q.quantize_one(3.0), 3);
+        assert!((q.dequantize_one(3) - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(5);
+        let mut data = vec![0f32; 1000];
+        rng.fill_f32(&mut data, -2.0, 2.0);
+        let q = Quantizer::symmetric(&data, 4);
+        for &x in &data {
+            let err = (q.dequantize_one(q.quantize_one(x)) - x).abs();
+            // Inside the grid the error is ≤ scale/2; at the positive edge
+            // the signed grid tops out at (2^(b-1)-1)·scale, so values near
+            // +amax clip with error up to one full step.
+            assert!(err <= q.params.scale + 1e-5, "err {err} x {x}");
+        }
+    }
+
+    #[test]
+    fn mse_refined_not_worse_than_minmax() {
+        let mut rng = Rng::new(6);
+        let mut data = vec![0f32; 4000];
+        rng.fill_normal(&mut data, 1.0);
+        // Add an outlier that hurts pure min/max calibration.
+        data[0] = 12.0;
+        let mse = |q: &Quantizer| -> f32 {
+            data.iter()
+                .map(|&x| {
+                    let d = q.dequantize_one(q.quantize_one(x)) - x;
+                    d * d
+                })
+                .sum()
+        };
+        let minmax = Quantizer::symmetric(&data, 2);
+        let refined = Quantizer::mse_refined(&data, 2, true);
+        assert!(mse(&refined) <= mse(&minmax) + 1e-3);
+        // With a big outlier, refinement should shrink the step.
+        assert!(refined.params.scale < minmax.params.scale);
+    }
+
+    #[test]
+    fn codebook_matches_dequant() {
+        let q = Quantizer::symmetric(&[-1.0, 1.0], 2);
+        let cb = q.params.codebook();
+        for c in 0..4u8 {
+            let via_cb = cb.value(c) as f32 * q.params.scale;
+            assert!((via_cb - q.dequantize_one(c)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the rust runtime (which consumes it).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Tensor spec in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub hlo: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    /// Optional golden input/output JSON (relative path).
+    pub golden: Option<String>,
+    /// Free-form tags (e.g. kernel="lut_gemm", bits="2").
+    pub tags: std::collections::BTreeMap<String, String>,
+}
+
+/// The manifest document.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn tensor_list(v: Option<&Json>) -> crate::Result<Vec<TensorMeta>> {
+    let arr = v
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| crate::Error::Config("manifest: missing tensor list".into()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for t in arr {
+        let shape = t
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| crate::Error::Config("manifest: tensor missing shape".into()))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = t
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        out.push(TensorMeta { shape, dtype });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let doc = Json::parse(text).map_err(crate::Error::Msg)?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::Error::Config("manifest: no 'artifacts' array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| crate::Error::Config("manifest: artifact missing name".into()))?
+                .to_string();
+            let hlo = a
+                .get("hlo")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| crate::Error::Config(format!("manifest: {name} missing hlo")))?
+                .to_string();
+            let golden = a.get("golden").and_then(|v| v.as_str()).map(|s| s.to_string());
+            let mut tags = std::collections::BTreeMap::new();
+            if let Some(obj) = a.get("tags").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    if let Some(s) = v.as_str() {
+                        tags.insert(k.clone(), s.to_string());
+                    }
+                }
+            }
+            artifacts.push(ArtifactMeta {
+                name,
+                hlo,
+                inputs: tensor_list(a.get("inputs"))?,
+                outputs: tensor_list(a.get("outputs"))?,
+                golden,
+                tags,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            crate::Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "lut_gemm_8x16x64",
+         "hlo": "lut_gemm_8x16x64.hlo.txt",
+         "inputs": [{"shape": [8, 64], "dtype": "f32"},
+                    {"shape": [16, 64], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 16], "dtype": "f32"}],
+         "golden": "lut_gemm_8x16x64.golden.json",
+         "tags": {"kernel": "lut_gemm", "bits": "2"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.name, "lut_gemm_8x16x64");
+        assert_eq!(a.inputs[0].shape, vec![8, 64]);
+        assert_eq!(a.outputs[0].shape, vec![8, 16]);
+        assert_eq!(a.golden.as_deref(), Some("lut_gemm_8x16x64.golden.json"));
+        assert_eq!(a.tags["bits"], "2");
+        assert_eq!(m.names(), vec!["lut_gemm_8x16x64"]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"hlo": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_mentions_make() {
+        let err = Manifest::load(Path::new("/nonexistent/manifest.json")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the python/JAX
+//! build layer (`make artifacts` → `artifacts/*.hlo.txt` + manifest) and
+//! executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Python never runs on the request path: artifacts are AOT-lowered once;
+//! this module compiles them at startup and serves `execute` calls from
+//! the coordinator. Interchange is HLO *text* (see DESIGN.md §6 /
+//! aot_recipe): jax ≥ 0.5 emits 64-bit instruction ids in serialized
+//! protos that xla_extension 0.5.1 rejects, while the text parser
+//! reassigns ids.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModule {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModule {
+    /// Execute with f32 inputs (shapes validated against the manifest);
+    /// returns the flattened f32 outputs.
+    pub fn execute_f32(&self, inputs: &[Vec<f32>]) -> crate::Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(crate::Error::Shape(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(self.meta.inputs.iter()) {
+            let want: usize = spec.shape.iter().product();
+            if data.len() != want {
+                return Err(crate::Error::Shape(format!(
+                    "{}: input expects {want} elements ({:?}), got {}",
+                    self.meta.name,
+                    spec.shape,
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| crate::Error::Runtime(format!("reshape: {e}")))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| crate::Error::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::Error::Runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| crate::Error::Runtime(format!("to_tuple: {e}")))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outs.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| crate::Error::Runtime(format!("to_vec: {e}")))?,
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// The PJRT runtime: one CPU client + compiled module cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    modules: HashMap<String, LoadedModule>,
+}
+
+impl PjrtRuntime {
+    /// Open an artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| crate::Error::Runtime(format!("pjrt cpu client: {e}")))?;
+        Ok(Self { client, dir, manifest, modules: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> crate::Result<&LoadedModule> {
+        if !self.modules.contains_key(name) {
+            let meta = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| crate::Error::Config(format!("unknown artifact '{name}'")))?
+                .clone();
+            let path = self.dir.join(&meta.hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| crate::Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| crate::Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| crate::Error::Runtime(format!("compile {name}: {e}")))?;
+            self.modules.insert(name.to_string(), LoadedModule { meta, exe });
+        }
+        Ok(&self.modules[name])
+    }
+
+    /// Run an artifact's golden check: execute with the recorded inputs
+    /// and compare against recorded outputs. Returns max abs error.
+    pub fn check_golden(&mut self, name: &str) -> crate::Result<f32> {
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| crate::Error::Config(format!("unknown artifact '{name}'")))?
+            .clone();
+        let golden_file = meta
+            .golden
+            .as_ref()
+            .ok_or_else(|| crate::Error::Config(format!("{name} has no golden data")))?;
+        let text = std::fs::read_to_string(self.dir.join(golden_file))?;
+        let doc = Json::parse(&text).map_err(crate::Error::Msg)?;
+        let inputs: Vec<Vec<f32>> = doc
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::Error::Config("golden: no inputs".into()))?
+            .iter()
+            .map(|v| v.as_f32_vec().unwrap_or_default())
+            .collect();
+        let wants: Vec<Vec<f32>> = doc
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::Error::Config("golden: no outputs".into()))?
+            .iter()
+            .map(|v| v.as_f32_vec().unwrap_or_default())
+            .collect();
+        let module = self.load(name)?;
+        let outs = module.execute_f32(&inputs)?;
+        if outs.len() != wants.len() {
+            return Err(crate::Error::Shape(format!(
+                "golden: {} outputs vs {} recorded",
+                outs.len(),
+                wants.len()
+            )));
+        }
+        let mut max_err = 0f32;
+        for (got, want) in outs.iter().zip(wants.iter()) {
+            if got.len() != want.len() {
+                return Err(crate::Error::Shape("golden output length mismatch".into()));
+            }
+            for (g, w) in got.iter().zip(want.iter()) {
+                max_err = max_err.max((g - w).abs());
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/pjrt_integration.rs —
+    // they need `make artifacts` to have run. Manifest parsing is tested
+    // in the `manifest` module.
+}

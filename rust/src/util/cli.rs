@@ -1,0 +1,173 @@
+//! Minimal CLI argument parser substrate (replaces the unavailable `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed getters and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without program name). The first non-dash token is the
+    /// subcommand; later non-dash tokens are positional.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let takes: BTreeMap<&str, bool> =
+            specs.iter().map(|s| (s.name, s.takes_value)).collect();
+        let mut out = Args::default();
+        for s in specs {
+            if let (Some(d), true) = (s.default, s.takes_value) {
+                out.opts.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                match takes.get(key.as_str()) {
+                    Some(true) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                                .clone(),
+                        };
+                        out.opts.insert(key, val);
+                    }
+                    Some(false) => {
+                        if inline_val.is_some() {
+                            return Err(format!("--{key} does not take a value"));
+                        }
+                        out.flags.push(key);
+                    }
+                    None => return Err(format!("unknown option --{key}")),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad float '{v}'")),
+        }
+    }
+}
+
+/// Render usage text from specs.
+pub fn usage(program: &str, about: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n\nCOMMANDS:\n");
+    for (c, h) in commands {
+        s.push_str(&format!("  {c:<16} {h}\n"));
+    }
+    s.push_str("\nOPTIONS:\n");
+    for o in specs {
+        let tail = if o.takes_value {
+            match o.default {
+                Some(d) => format!(" <v> (default: {d})"),
+                None => " <v>".to_string(),
+            }
+        } else {
+            String::new()
+        };
+        s.push_str(&format!("  --{}{tail}\n      {}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "model", help: "model name", takes_value: true, default: Some("resnet18") },
+            OptSpec { name: "iters", help: "iterations", takes_value: true, default: None },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&sv(&["bench", "--model", "vgg16", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = Args::parse(&sv(&["run", "--iters=7"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 7);
+        assert_eq!(a.get("model"), Some("resnet18")); // default applied
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["x", "--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["x", "--iters"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["x", "--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_getter_errors() {
+        let a = Args::parse(&sv(&["x", "--iters", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("deepgemm", "test", &[("serve", "run server")], &specs());
+        assert!(u.contains("serve"));
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: resnet18"));
+    }
+}

@@ -1,0 +1,47 @@
+//! Substrate utilities the offline image lacks: PRNG, statistics, CLI
+//! parsing, JSON, a thread pool, and a small property-testing framework.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Align `n` up to the next multiple of `a` (a > 0).
+#[inline]
+pub fn align_up(n: usize, a: usize) -> usize {
+    debug_assert!(a > 0);
+    n.div_ceil(a) * a
+}
+
+/// Geometric mean of a slice of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 4), 0);
+        assert_eq!(align_up(1, 4), 4);
+        assert_eq!(align_up(4, 4), 4);
+        assert_eq!(align_up(5, 4), 8);
+        assert_eq!(align_up(127, 128), 128);
+        assert_eq!(align_up(129, 128), 256);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,159 @@
+//! Tiny property-testing substrate (replaces the unavailable `proptest`).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it performs greedy size-shrinking (if the generator supports it)
+//! and panics with the seed + minimal counterexample description so a
+//! failure is reproducible.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+///
+/// `shrink` receives a failing input and yields smaller candidates; the
+/// first candidate that still fails replaces the counterexample and
+/// shrinking restarts (greedy descent, bounded to 200 steps).
+pub fn check_with_shrink<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink.
+            let mut cur = input;
+            let mut msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in shrink(&cur) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= 200 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  minimal counterexample: {cur:?}"
+            );
+        }
+    }
+}
+
+/// Property check without shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check_with_shrink(seed, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Standard shrinker for a vector: halve it, drop chunks, zero elements.
+pub fn shrink_vec<T: Clone + Default>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n > 1 {
+        out.push(v[1..].to_vec());
+        out.push(v[..n - 1].to_vec());
+    }
+    // Zero out the first non-default element.
+    out
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |r| r.below(100) as i64,
+            |&x| {
+                if x + 1 > x {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            2,
+            100,
+            |r| r.below(1000) as i64,
+            |&x| if x < 900 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // Property: all vectors have length < 4. Shrinker should reduce a
+        // big failing vector toward something small-but-still-failing.
+        let result = std::panic::catch_unwind(|| {
+            check_with_shrink(
+                3,
+                50,
+                |r| {
+                    let n = r.range(0, 64);
+                    (0..n).map(|_| r.below(10) as u8).collect::<Vec<u8>>()
+                },
+                |v| shrink_vec(v),
+                |v| {
+                    if v.len() < 4 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {} >= 4", v.len()))
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        // The minimal counterexample should have been shrunk to exactly 4.
+        assert!(msg.contains("len 4 >= 4"), "msg: {msg}");
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

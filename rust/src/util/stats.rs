@@ -1,0 +1,166 @@
+//! Robust summary statistics for the benchmark harness.
+
+/// Summary statistics over a set of timing samples (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let median = percentile_sorted(&s, 0.5);
+        let mut devs: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            median,
+            min: s[0],
+            max: s[n - 1],
+            stddev: var.sqrt(),
+            mad: percentile_sorted(&devs, 0.5),
+            p05: percentile_sorted(&s, 0.05),
+            p95: percentile_sorted(&s, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice, `q` in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Histogram with fixed bucket boundaries — used by the coordinator's
+/// latency metrics.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `bounds` must be ascending; an implicit +inf bucket is appended.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let n = bounds.len() + 1;
+        Self { bounds, counts: vec![0; n], sum: 0.0, count: 0 }
+    }
+
+    /// Exponential buckets: `base * growth^i` for i in 0..n.
+    pub fn exponential(base: f64, growth: f64, n: usize) -> Self {
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = base;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= growth;
+        }
+        Self::new(bounds)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                return if hi.is_finite() { (lo + hi) / 2.0 } else { lo };
+            }
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant() {
+        let s = Summary::from_samples(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn summary_known() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 1.5811388).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 40.0);
+        assert!((percentile_sorted(&s, 0.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::exponential(1e-6, 2.0, 20);
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 2e-4 && p50 < 2e-3, "p50 {p50}");
+        assert!(h.mean() > 4e-4 && h.mean() < 6e-4);
+    }
+}

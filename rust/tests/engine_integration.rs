@@ -1,0 +1,138 @@
+//! Engine integration across backends on a real (small) model and on a
+//! sliced ResNet-18 — heavier tests that exercise grouped convs,
+//! residuals, and all engine paths together.
+
+use deepgemm::engine::{output_snr, CompiledModel};
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::graph::{forward_fp32, Graph, Op};
+use deepgemm::nn::{zoo, ConvSpec, Tensor};
+use deepgemm::profiling::{Stage, StageProfile};
+use deepgemm::util::rng::Rng;
+
+/// A ResNet-ish block graph at small spatial size: stem conv, two
+/// residual blocks (one with a grouped 3×3), GAP + FC.
+fn mini_resnet(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new("mini_resnet", (3, 24, 24));
+    let c1 = g.conv("stem", ConvSpec::new(3, 16, 3, 1, 1), true, Graph::INPUT, &mut rng);
+    // Block 1.
+    let b1a = g.conv("b1a", ConvSpec::new(16, 16, 3, 1, 1), true, c1, &mut rng);
+    let b1b = g.conv("b1b", ConvSpec::new(16, 16, 3, 1, 1), false, b1a, &mut rng);
+    let add1 = g.push("add1", Op::Add { relu: true }, vec![b1b, c1]);
+    // Block 2 (grouped conv + downsample).
+    let b2a = g.conv("b2a", ConvSpec::new(16, 32, 1, 1, 0), true, add1, &mut rng);
+    let b2b = g.conv("b2b", ConvSpec::new(32, 32, 3, 2, 1).grouped(4), true, b2a, &mut rng);
+    let b2c = g.conv("b2c", ConvSpec::new(32, 32, 1, 1, 0), false, b2b, &mut rng);
+    let down = g.conv("down", ConvSpec::new(16, 32, 1, 2, 0), false, add1, &mut rng);
+    let add2 = g.push("add2", Op::Add { relu: true }, vec![b2c, down]);
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![add2]);
+    let mut wfc = vec![0f32; 32 * 5];
+    rng.fill_normal(&mut wfc, 0.2);
+    g.push("fc", Op::Fc { in_f: 32, out_f: 5, weights: wfc, bias: vec![0.0; 5] }, vec![gap]);
+    g
+}
+
+#[test]
+fn all_backends_run_mini_resnet() {
+    let g = mini_resnet(1);
+    let x = Tensor::random(&[1, 3, 24, 24], 2, -1.0, 1.0);
+    let want = forward_fp32(&g, &x).unwrap();
+    for backend in [
+        Backend::Fp32,
+        Backend::Int8,
+        Backend::Lut16(Scheme::A),
+        Backend::Lut16(Scheme::B),
+        Backend::Lut16(Scheme::C),
+        Backend::Lut16(Scheme::D),
+        Backend::LutWide(3),
+        Backend::LutWide(4),
+        Backend::Lut65k,
+        Backend::Lut16F32,
+        Backend::BitSerial,
+        Backend::UlpPack,
+        Backend::Portable,
+    ] {
+        let m = CompiledModel::compile(g.clone(), backend, &[x.clone()]).unwrap();
+        let mut prof = StageProfile::new();
+        let y = m.forward(&x, &mut prof).unwrap();
+        assert_eq!(y.shape, want.shape, "{}", backend.name());
+        assert!(y.data.iter().all(|v| v.is_finite()), "{}", backend.name());
+        if backend == Backend::Fp32 {
+            deepgemm::util::prop::assert_close(&y.data, &want.data, 1e-4, 1e-4).unwrap();
+        } else {
+            let snr = output_snr(&g, &m, &x).unwrap();
+            let floor = match backend {
+                Backend::Int8 => 25.0,
+                Backend::LutWide(4) => 8.0,
+                Backend::LutWide(3) => 4.0,
+                _ => 0.5,
+            };
+            assert!(snr > floor, "{}: snr {snr:.1}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn grouped_conv_engines_agree() {
+    // The 2-bit integer engines share quantizers → identical outputs even
+    // through grouped convolutions.
+    let g = mini_resnet(3);
+    let x = Tensor::random(&[1, 3, 24, 24], 4, -1.0, 1.0);
+    let mut reference: Option<Vec<f32>> = None;
+    for backend in [
+        Backend::Lut16(Scheme::A),
+        Backend::Lut16(Scheme::D),
+        Backend::Lut65k,
+        Backend::Portable,
+        Backend::BitSerial,
+        Backend::UlpPack,
+    ] {
+        let m = CompiledModel::compile(g.clone(), backend, &[x.clone()]).unwrap();
+        let mut prof = StageProfile::new();
+        let y = m.forward(&x, &mut prof).unwrap();
+        match &reference {
+            None => reference = Some(y.data),
+            Some(r) => deepgemm::util::prop::assert_close(&y.data, r, 2e-4, 2e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", backend.name())),
+        }
+    }
+}
+
+#[test]
+fn mixed_precision_compile_applies_overrides() {
+    let g = mini_resnet(5);
+    let x = Tensor::random(&[1, 3, 24, 24], 6, -1.0, 1.0);
+    let mixed = CompiledModel::compile_with(
+        g.clone(),
+        Backend::Lut16(Scheme::D),
+        &[x.clone()],
+        &|_, spec| (spec.in_ch == 3).then_some(Backend::Int8),
+    )
+    .unwrap();
+    let uniform =
+        CompiledModel::compile(g.clone(), Backend::Lut16(Scheme::D), &[x.clone()]).unwrap();
+    let snr_mixed = output_snr(&g, &mixed, &x).unwrap();
+    let snr_uni = output_snr(&g, &uniform, &x).unwrap();
+    // Int8 first layer should not hurt (usually helps).
+    assert!(snr_mixed >= snr_uni - 1.0, "mixed {snr_mixed:.1} vs uniform {snr_uni:.1}");
+}
+
+#[test]
+fn depthwise_runs_direct_path_on_mobilenet_slice() {
+    // First few MobileNet layers at reduced resolution: dw conv must be
+    // handled (direct f32) with no Quantize stage recorded for it.
+    let mut rng = Rng::new(7);
+    let mut g = Graph::new("mobile_slice", (3, 32, 32));
+    let c1 = g.conv("conv1", ConvSpec::new(3, 8, 3, 2, 1), true, Graph::INPUT, &mut rng);
+    let dw = g.conv("dw1", ConvSpec::new(8, 8, 3, 1, 1).grouped(8), true, c1, &mut rng);
+    let _pw = g.conv("pw1", ConvSpec::new(8, 16, 1, 1, 0), true, dw, &mut rng);
+    let x = Tensor::random(&[1, 3, 32, 32], 8, -1.0, 1.0);
+    let m = CompiledModel::compile(g.clone(), Backend::Lut16(Scheme::D), &[x.clone()]).unwrap();
+    let mut prof = StageProfile::new();
+    let y = m.forward(&x, &mut prof).unwrap();
+    assert_eq!(y.shape, vec![1, 16, 16, 16]);
+    // Quantized stages recorded for the two pointwise/regular convs only.
+    assert_eq!(prof.calls(Stage::Quantize), 2);
+    assert!(prof.calls(Stage::Other) > 0); // the depthwise direct path
+}

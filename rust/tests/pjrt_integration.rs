@@ -1,0 +1,109 @@
+//! PJRT integration: the python-AOT → rust-load contract.
+//!
+//! Needs `make artifacts` to have produced `artifacts/` — tests skip
+//! (with a loud message) when it is missing so `cargo test` stays green
+//! on a fresh checkout.
+
+use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+use deepgemm::kernels::{lut16, CodeMat};
+use deepgemm::quant::{IntCodebook, Lut16};
+use deepgemm::runtime::PjrtRuntime;
+use deepgemm::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn all_goldens_pass() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).expect("open runtime");
+    let names: Vec<String> = rt.manifest.names().iter().map(|s| s.to_string()).collect();
+    assert!(!names.is_empty());
+    for name in names {
+        let err = rt.check_golden(&name).expect("golden");
+        assert!(err < 1e-3, "{name}: max_abs_err {err}");
+    }
+}
+
+#[test]
+fn pjrt_quant_gemm_matches_rust_native_kernel() {
+    // Cross-layer parity: the AOT'd python pipeline (quantize → pallas
+    // LUT GEMM → dequant) must agree with the rust-native LUT kernel
+    // under the same fixed quantizers (model.quant_gemm_pipeline):
+    //   acts:  scale 1/3, zp 0 (unsigned);  weights: scale 1/2, zp 2.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).expect("open runtime");
+    let name = "quant_gemm_m8_n16_k64_w2a2";
+    let (m, n, k) = (8usize, 16usize, 64usize);
+
+    let mut rng = Rng::new(77);
+    let mut a = vec![0f32; m * k];
+    let mut w = vec![0f32; n * k];
+    rng.fill_f32(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut w, 0.4);
+
+    let module = rt.load(name).expect("load");
+    let outs = module.execute_f32(&[a.clone(), w.clone()]).expect("exec");
+    let pjrt_out = &outs[0];
+    assert_eq!(pjrt_out.len(), m * n);
+
+    // Rust-native reproduction with identical quantization semantics
+    // (floor(x/s + 0.5), matching python's tie-deterministic rounding).
+    let qa = |x: f32| ((x / (1.0 / 3.0) + 0.5).floor() as i32).clamp(0, 3) as u8;
+    let qw = |x: f32| ((x / 0.5 + 0.5).floor() as i32 + 2).clamp(0, 3) as u8;
+    let a_codes = CodeMat::from_data(m, k, 2, a.iter().map(|&x| qa(x)).collect());
+    let w_codes = CodeMat::from_data(n, k, 2, w.iter().map(|&x| qw(x)).collect());
+    let lut = Lut16::build(&IntCodebook::signed(2), &IntCodebook::unsigned(2));
+    let ap = pack_activations(&a_codes, Scheme::D);
+    let wp = pack_weights(&w_codes, Scheme::D);
+    let mut acc = vec![0i32; m * n];
+    lut16::gemm(&ap, &wp, &lut, Scheme::D, &mut acc);
+    let scale = (1.0f32 / 3.0) * 0.5;
+
+    for i in 0..m * n {
+        let native = acc[i] as f32 * scale;
+        assert!(
+            (native - pjrt_out[i]).abs() < 1e-4,
+            "element {i}: native {native} vs pjrt {}",
+            pjrt_out[i]
+        );
+    }
+}
+
+#[test]
+fn manifest_tags_describe_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::open(&dir).expect("open runtime");
+    let gemms: Vec<_> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.tags.get("kernel").map(|s| s.as_str()) == Some("lut_gemm"))
+        .collect();
+    assert!(gemms.len() >= 3, "expected ≥3 lut_gemm artifacts");
+    for a in gemms {
+        assert_eq!(a.tags["bits"], "2");
+        assert_eq!(a.inputs.len(), 2);
+        let m: usize = a.tags["m"].parse().unwrap();
+        let n: usize = a.tags["n"].parse().unwrap();
+        assert_eq!(a.outputs[0].shape, vec![m, n]);
+    }
+}
+
+#[test]
+fn execute_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).expect("open runtime");
+    let module = rt.load("quant_gemm_m8_n16_k64_w2a2").expect("load");
+    assert!(module.execute_f32(&[vec![0.0; 3]]).is_err()); // wrong arity
+    assert!(module
+        .execute_f32(&[vec![0.0; 7], vec![0.0; 16 * 64]])
+        .is_err()); // wrong length
+}

@@ -1,0 +1,126 @@
+//! Coordinator integration: router + batcher + TCP server under
+//! concurrent load, multi-model routing, and failure behaviour.
+
+use deepgemm::coordinator::{server, BatcherConfig, Client, Router, ServerConfig};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::util::json::Json;
+use deepgemm::util::rng::Rng;
+use std::sync::Arc;
+
+fn model(classes: usize, backend: Backend, seed: u64) -> CompiledModel {
+    let mut rng = Rng::new(seed);
+    let g = zoo::small_cnn(classes, &mut rng);
+    CompiledModel::compile(g, backend, &[]).unwrap()
+}
+
+#[test]
+fn multi_model_router_under_concurrent_load() {
+    let mut router = Router::new();
+    // Two entries under different names via graph rename.
+    let m1 = model(4, Backend::Lut16(Scheme::D), 1);
+    let mut m2 = model(6, Backend::Int8, 2);
+    m2.name = "small_cnn_int8".into();
+    m2.graph.name = "small_cnn_int8".into();
+    router.register(m1, BatcherConfig::default());
+    router.register(m2, BatcherConfig::default());
+    let router = Arc::new(router);
+    assert_eq!(router.models(), vec!["small_cnn", "small_cnn_int8"]);
+
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                let x = Tensor::random(&[1, 3, 32, 32], i, -1.0, 1.0);
+                let name = if i % 2 == 0 { "small_cnn" } else { "small_cnn_int8" };
+                let resp = r.infer(name, x).unwrap();
+                resp.output.len()
+            })
+        })
+        .collect();
+    let lens: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(lens.iter().filter(|&&l| l == 4).count(), 6);
+    assert_eq!(lens.iter().filter(|&&l| l == 6).count(), 6);
+    assert_eq!(router.metrics.counters().completed, 12);
+    assert_eq!(router.metrics.counters().errors, 0);
+}
+
+#[test]
+fn tcp_server_survives_bad_clients_then_serves_good_ones() {
+    let mut router = Router::new();
+    router.register(model(3, Backend::Lut16(Scheme::D), 3), BatcherConfig::default());
+    let router = Arc::new(router);
+    let (addr, _h) =
+        server::spawn(router, &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+
+    // Bad client: garbage line.
+    let mut bad = Client::connect(&addr.to_string()).unwrap();
+    let resp = bad.call(&Json::str("not-a-request")).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+    // Good client still served.
+    let mut good = Client::connect(&addr.to_string()).unwrap();
+    let input = vec![0.1f32; 3 * 32 * 32];
+    let resp = good.infer("small_cnn", &input).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(resp.get("output").unwrap().as_arr().unwrap().len(), 3);
+    assert!(resp.get("compute_ms").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn batching_improves_throughput_metrics() {
+    let mut router = Router::new();
+    router.register(
+        model(4, Backend::Lut16(Scheme::D), 4),
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(15),
+            queue_cap: 64,
+        },
+    );
+    let router = Arc::new(router);
+    let handles: Vec<_> = (0..24)
+        .map(|i| {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                let x = Tensor::random(&[1, 3, 32, 32], i, -1.0, 1.0);
+                r.infer("small_cnn", x).unwrap().batch_size
+            })
+        })
+        .collect();
+    let sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let c = router.metrics.counters();
+    assert_eq!(c.completed, 24);
+    assert!(c.batches < 24, "batches {} should be < requests", c.batches);
+    assert!(sizes.iter().any(|&s| s > 1), "no multi-request batch formed");
+}
+
+#[test]
+fn rejected_requests_are_counted_not_crashed() {
+    let mut router = Router::new();
+    router.register(
+        model(3, Backend::Lut16(Scheme::D), 5),
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(0),
+            queue_cap: 1,
+        },
+    );
+    let router = Arc::new(router);
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            let r = router.clone();
+            std::thread::spawn(move || {
+                let x = Tensor::random(&[1, 3, 32, 32], i, -1.0, 1.0);
+                r.infer("small_cnn", x).is_ok()
+            })
+        })
+        .collect();
+    let oks = handles.into_iter().filter(|h| true).map(|h| h.join().unwrap()).filter(|&b| b).count();
+    let c = router.metrics.counters();
+    assert_eq!(c.requests, 32);
+    assert_eq!(c.completed as usize, oks);
+    assert_eq!(c.completed + c.rejected, 32, "{c:?}");
+}
