@@ -25,6 +25,10 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
 
+    // Apples-to-apples with the paper's single-core numbers: pin the
+    // tiled LUT engine to one worker (INT8 is single-threaded anyway).
+    deepgemm::kernels::tile::set_default_threads(1);
+
     println!("== building ResNet-18 (random init, 1000 classes) ==");
     let graph = zoo::build("resnet18", 1000, 0).expect("build");
     println!(

@@ -26,6 +26,9 @@ fn bench_model(model: &CompiledModel, x: &Tensor) -> f64 {
 }
 
 fn main() {
+    // Single-threaded so the per-backend latency table compares kernels,
+    // not core counts.
+    deepgemm::kernels::tile::set_default_threads(1);
     let mut rng = Rng::new(5);
     let graph = zoo::small_cnn(10, &mut rng);
     let x = Tensor::random(&[1, 3, 32, 32], 8, -1.0, 1.0);

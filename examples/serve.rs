@@ -26,7 +26,11 @@ fn main() {
     router.register(model, BatcherConfig { max_batch: 8, ..Default::default() });
     let router = Arc::new(router);
     let (addr, _handle) =
-        server::spawn(router.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).expect("bind");
+        server::spawn(
+            router.clone(),
+            &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("bind");
     println!("server on {addr}; {n_clients} clients × {per_client} requests");
 
     let t0 = Instant::now();

@@ -8,26 +8,22 @@
 //! majority (the paper's headline profiling insight and the motivation
 //! for schemes b–d and future work).
 
-use deepgemm::bench::{bench, BenchOpts, Table};
+use deepgemm::bench::{bench, threads_axis, BenchOpts, Table};
 use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::pack::{self, Scheme};
-use deepgemm::kernels::{Backend, CodeMat};
+use deepgemm::kernels::{tile, Backend, CodeMat};
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::profiling::{Stage, StageProfile};
 use deepgemm::quant::{IntCodebook, Lut16};
 
-fn stage_table(model_name: &str, backend: Backend, iters: usize) -> Table {
-    let graph = zoo::build(model_name, 1000, 0).expect("build");
-    let (c, h, w) = graph.input_chw;
-    let x = Tensor::random(&[1, c, h, w], 3, -1.0, 1.0);
-    let model = CompiledModel::compile(graph, backend, &[x.clone()]).expect("compile");
+fn stage_table(model: &CompiledModel, x: &Tensor, iters: usize) -> Table {
     let mut prof = StageProfile::new();
-    model.forward(&x, &mut StageProfile::new()).expect("warmup");
+    model.forward(x, &mut StageProfile::new()).expect("warmup");
     for _ in 0..iters {
-        model.forward(&x, &mut prof).expect("fwd");
+        model.forward(x, &mut prof).expect("fwd");
     }
     let mut t = Table::new(
-        format!("Fig 7 — stage breakdown: {model_name} / {}", backend.name()),
+        format!("Fig 7 — stage breakdown: {} / {}", model.name, model.backend.name()),
         &["ms", "% of total"],
     );
     let total = prof.total();
@@ -100,11 +96,26 @@ mod split {
 
 fn main() {
     let quick = std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1");
-    // Stage breakdown on a real network.
-    let model = if quick { "small_cnn" } else { "resnet18" };
-    let t = stage_table(model, Backend::Lut16(Scheme::D), if quick { 1 } else { 2 });
-    print!("{}", t.render());
-    t.write_json("fig7_stages").expect("json");
+    // Stage breakdown on a real network, one table per --threads entry
+    // (the Lut-Conv share shrinks as the tiled plan fans out).
+    let model_name = if quick { "small_cnn" } else { "resnet18" };
+    let graph = zoo::build(model_name, 1000, 0).expect("build");
+    let (c, h, w) = graph.input_chw;
+    let x = Tensor::random(&[1, c, h, w], 3, -1.0, 1.0);
+    // Compile once — only the forward passes depend on the thread count.
+    let model =
+        CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[x.clone()]).expect("compile");
+    for &nt in &threads_axis(&[1]) {
+        tile::set_default_threads(nt);
+        let mut t = stage_table(&model, &x, if quick { 1 } else { 2 });
+        t.title = format!("{} [threads={nt}]", t.title);
+        print!("{}", t.render());
+        // The bare artifact name stays reserved for the single-thread
+        // paper-comparison numbers; other counts get their own file.
+        let file =
+            if nt == 1 { "fig7_stages".to_string() } else { format!("fig7_stages_t{nt}") };
+        t.write_json(&file).expect("json");
+    }
 
     // Intra-LutConv split (paper: unpack ≈ 80% of Lut-Conv).
     #[cfg(target_arch = "x86_64")]

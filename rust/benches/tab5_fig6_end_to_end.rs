@@ -9,17 +9,22 @@
 //!
 //! Full-size ImageNet graphs at 224²/299² are heavy on one debug core;
 //! DEEPGEMM_BENCH_QUICK=1 restricts to ResNet18 + GoogleNet.
+//!
+//! `--threads N[,M,...]` (after `--` under `cargo bench`) adds a
+//! thread-count axis for the tiled lut16 engine: one row per
+//! (model, threads) pair. INT8 stays on its row-streaming kernel, so
+//! speedup-vs-int8 grows with the thread count.
 
-use deepgemm::bench::Table;
+use deepgemm::bench::{threads_axis, Table};
 use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::Backend;
+use deepgemm::kernels::{tile, Backend};
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::profiling::StageProfile;
 use deepgemm::util::geomean;
 use std::time::Instant;
 
-fn run_model(model: CompiledModel, x: &Tensor, iters: usize) -> f64 {
+fn run_model(model: &CompiledModel, x: &Tensor, iters: usize) -> f64 {
     let mut prof = StageProfile::new();
     model.forward(x, &mut prof).expect("warmup"); // warmup
     let mut best = f64::INFINITY;
@@ -46,9 +51,10 @@ fn main() {
         ]
     };
     let iters = if quick { 1 } else { 2 };
+    let threads = threads_axis(&[1]);
     let mut t = Table::new(
         "Tab 5 / Fig 6 — end-to-end speedup over INT8",
-        &["int8 ms", "lut16-d ms", "speedup", "paper"],
+        &["threads", "int8 ms", "lut16-d ms", "speedup", "paper"],
     );
     let mut sps = Vec::new();
     for (name, paper) in &models {
@@ -59,18 +65,33 @@ fn main() {
         let calib = [x.clone()];
         eprintln!("[e2e] compiling {name} for int8...");
         let m_int8 = CompiledModel::compile(graph.clone(), Backend::Int8, &calib).expect("int8");
-        let t_int8 = run_model(m_int8, &x, iters);
+        tile::set_default_threads(1); // int8 baseline is row-streaming anyway
+        let t_int8 = run_model(&m_int8, &x, iters);
         eprintln!("[e2e] compiling {name} for lut16-d...");
         let m_lut =
             CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &calib).expect("lut");
-        let t_lut = run_model(m_lut, &x, iters);
-        let sp = t_int8 / t_lut;
-        sps.push(sp);
-        eprintln!("[e2e] {name}: int8 {:.1} ms, lut {:.1} ms, speedup {sp:.3}", t_int8 * 1e3, t_lut * 1e3);
-        t.row(*name, vec![t_int8 * 1e3, t_lut * 1e3, sp, *paper]);
+        for &nt in &threads {
+            tile::set_default_threads(nt);
+            let t_lut = run_model(&m_lut, &x, iters);
+            let sp = t_int8 / t_lut;
+            if nt == *threads.iter().max().unwrap() {
+                sps.push(sp);
+            }
+            eprintln!(
+                "[e2e] {name} t={nt}: int8 {:.1} ms, lut {:.1} ms, speedup {sp:.3}",
+                t_int8 * 1e3,
+                t_lut * 1e3
+            );
+            // Bare model name for the single-thread row — keeps the
+            // default run's labels comparable with older artifacts.
+            let label =
+                if nt == 1 { (*name).to_string() } else { format!("{name}@t{nt}") };
+            t.row(label, vec![nt as f64, t_int8 * 1e3, t_lut * 1e3, sp, *paper]);
+        }
     }
-    t.row("average", vec![f64::NAN, f64::NAN, geomean(&sps), 1.58]);
+    t.row("average", vec![f64::NAN, f64::NAN, f64::NAN, geomean(&sps), 1.58]);
     t.note("depthwise convs run the same direct path in both engines; non-conv ops identical");
+    t.note("lut16-d runs the tiled plan at the given thread count; int8 is single-threaded");
     print!("{}", t.render());
     t.write_json("tab5_fig6_end_to_end").expect("write json");
 }

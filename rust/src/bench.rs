@@ -42,6 +42,35 @@ impl BenchOpts {
     }
 }
 
+/// Parse a `--threads` axis from the bench binary's argv: `--threads 4`
+/// or `--threads 1,2,4` (also `--threads=4`). Bench binaries are plain
+/// `main`s (`harness = false`), so flags arrive directly — with
+/// `cargo bench`, pass them after `--`. Falls back to `default` when the
+/// flag is absent; malformed entries are ignored.
+pub fn threads_axis(default: &[usize]) -> Vec<usize> {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut spec: Option<String> = None;
+    for (i, arg) in argv.iter().enumerate() {
+        if let Some(v) = arg.strip_prefix("--threads=") {
+            spec = Some(v.to_string());
+        } else if arg == "--threads" {
+            spec = argv.get(i + 1).cloned();
+        }
+    }
+    let mut parsed: Vec<usize> = spec
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    // Sorted + deduplicated so axis consumers can rely on "max is last"
+    // and duplicates can't double-count a configuration.
+    parsed.sort_unstable();
+    parsed.dedup();
+    if parsed.is_empty() {
+        default.to_vec()
+    } else {
+        parsed
+    }
+}
+
 /// One benchmark's measurements.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -190,6 +219,12 @@ mod tests {
         });
         assert!(r.secs() > 0.0);
         assert!(r.summary.n >= 1);
+    }
+
+    #[test]
+    fn threads_axis_defaults_without_flag() {
+        // Bench argv in the test harness has no --threads flag.
+        assert_eq!(threads_axis(&[1, 4]), vec![1, 4]);
     }
 
     #[test]

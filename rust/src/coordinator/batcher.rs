@@ -4,6 +4,12 @@
 //! latency/throughput knob). Bounded queues give natural backpressure:
 //! when the queue is full the router rejects instead of buffering
 //! unboundedly.
+//!
+//! A formed batch is executed as *one* fused forward
+//! ([`CompiledModel::forward_batch`]): the batch dimension is stacked
+//! into the GEMM's M, so all requests in the batch share a single
+//! planned (tiled, multi-threaded) GEMM per layer instead of replaying
+//! the model per request.
 
 use crate::coordinator::metrics::Metrics;
 use crate::engine::CompiledModel;
@@ -103,22 +109,47 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
         }
         metrics.on_batch(batch.len());
         let bsize = batch.len();
-        for job in batch {
-            let queue_secs = job.enqueued.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let mut prof = StageProfile::new();
-            let result = model.forward(&job.input, &mut prof).map(|y| InferResponse {
-                argmax: crate::engine::argmax(&y.data),
-                output: y.data,
-                queue_secs,
-                compute_secs: t0.elapsed().as_secs_f64(),
-                batch_size: bsize,
-            });
-            match &result {
-                Ok(r) => metrics.on_complete(r.queue_secs + r.compute_secs, r.queue_secs),
-                Err(_) => metrics.on_error(),
+        // Fuse the batch into one forward: batch rows become GEMM M.
+        let (inputs, meta): (Vec<Tensor>, Vec<(Instant, SyncSender<crate::Result<InferResponse>>)>) =
+            batch.into_iter().map(|j| (j.input, (j.enqueued, j.reply))).unzip();
+        let queue_secs: Vec<f64> =
+            meta.iter().map(|(enq, _)| enq.elapsed().as_secs_f64()).collect();
+        let t0 = Instant::now();
+        let mut prof = StageProfile::new();
+        let result = model.forward_batch(&inputs, &mut prof);
+        // Every request in the fused batch waits for the whole forward,
+        // so each one's compute latency IS the batch compute time.
+        let compute_secs = t0.elapsed().as_secs_f64();
+        match result {
+            Ok(ys) => {
+                for ((y, (_, reply)), q) in ys.into_iter().zip(meta).zip(queue_secs) {
+                    let resp = InferResponse {
+                        argmax: crate::engine::argmax(&y.data),
+                        output: y.data,
+                        queue_secs: q,
+                        compute_secs,
+                        batch_size: bsize,
+                    };
+                    metrics.on_complete(q + compute_secs, q);
+                    let _ = reply.send(Ok(resp));
+                }
             }
-            let _ = job.reply.send(result);
+            Err(e) => {
+                // Batch-level failure: every waiter gets the error. (The
+                // router's per-model shape check means a fused batch is
+                // always uniform, so per-request divergence is
+                // unreachable.) The first waiter receives the original
+                // error so variant matching keeps working.
+                let msg = e.to_string();
+                let mut original = Some(e);
+                for (_, reply) in meta {
+                    metrics.on_error();
+                    let payload = original
+                        .take()
+                        .unwrap_or_else(|| crate::Error::Runtime(msg.clone()));
+                    let _ = reply.send(Err(payload));
+                }
+            }
         }
     }
 }

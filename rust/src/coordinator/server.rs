@@ -19,11 +19,15 @@ use std::sync::Arc;
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Worker threads for tiled GEMM execution (0 = all available
+    /// cores) — the same process-wide knob as the CLI's `--threads`,
+    /// so serving and benching share one setting.
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7070".into() }
+        Self { addr: "127.0.0.1:7070".into(), threads: 0 }
     }
 }
 
@@ -42,6 +46,12 @@ pub fn spawn(
     router: Arc<Router>,
     cfg: &ServerConfig,
 ) -> crate::Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    // 0 means "leave the process-wide knob alone" — a second server (or
+    // embedding host) with a default config must not reset a previously
+    // configured thread count.
+    if cfg.threads != 0 {
+        crate::kernels::tile::set_default_threads(cfg.threads);
+    }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -223,7 +233,9 @@ mod tests {
         let mut r = Router::new();
         r.register(model, BatcherConfig::default());
         let r = Arc::new(r);
-        let (addr, _h) = spawn(r.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+        let (addr, _h) =
+            spawn(r.clone(), &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+                .unwrap();
         (addr, r)
     }
 

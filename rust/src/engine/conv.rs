@@ -2,15 +2,20 @@
 //! LUT, the activation quantizer, and the instrumented forward pass.
 
 use crate::kernels::pack::{self, Packed, Scheme};
-use crate::kernels::{bitserial, int8, lut16, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat};
-use crate::nn::im2col::im2col_codes;
+use crate::kernels::{
+    bitserial, int8, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan,
+    PlanOpts,
+};
+use crate::nn::im2col::im2col_codes_append;
 use crate::nn::{ConvSpec, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::{uniform::Quantizer, F32Codebook, Lut16, Lut16F32, Lut65k};
 
 /// Offline-prepared weights for one conv layer (one entry per group).
 pub enum PreparedWeights {
-    Lut16 { packed: Vec<Packed>, lut: Lut16, scheme: Scheme },
+    /// LUT-16 runs through the tiled plan/execute layer: weight panels
+    /// are repacked once here, at compile time.
+    Lut16 { plans: Vec<GemmPlan>, lut: Lut16, scheme: Scheme },
     LutWide { packed: Vec<Packed>, lut: Lut16 },
     Lut65k { packed: Vec<Packed>, lut: Lut65k },
     Lut16F32 { packed: Vec<Packed>, lut: Lut16F32 },
@@ -24,8 +29,8 @@ impl PreparedWeights {
     /// Bytes held by the packed weight representation (model-size metric).
     pub fn packed_bytes(&self) -> usize {
         match self {
-            PreparedWeights::Lut16 { packed, .. }
-            | PreparedWeights::LutWide { packed, .. }
+            PreparedWeights::Lut16 { plans, .. } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::LutWide { packed, .. }
             | PreparedWeights::Lut65k { packed, .. }
             | PreparedWeights::Lut16F32 { packed, .. }
             | PreparedWeights::Portable { packed, .. } => packed.iter().map(|p| p.bytes()).sum(),
@@ -96,7 +101,12 @@ impl CompiledConv {
             Backend::Lut16(scheme) => {
                 let (w_cb, a_cb) = cbs();
                 PreparedWeights::Lut16 {
-                    packed: group_codes.iter().map(|c| pack::pack_weights(c, scheme)).collect(),
+                    plans: group_codes
+                        .iter()
+                        .map(|c| {
+                            GemmPlan::new(&pack::pack_weights(c, scheme), scheme, PlanOpts::default())
+                        })
+                        .collect(),
                     lut: Lut16::build(&w_cb, &a_cb),
                     scheme,
                 }
@@ -185,69 +195,100 @@ impl CompiledConv {
 
     /// Instrumented quantized forward for a single image.
     pub fn forward(&self, x: &Tensor, prof: &mut StageProfile) -> crate::Result<Tensor> {
-        let (_, c, h, w) = x.nchw();
+        let mut ys = self.forward_batch(&[x], prof)?;
+        Ok(ys.pop().expect("one output per image"))
+    }
+
+    /// Instrumented quantized forward for a whole batch: the batch
+    /// dimension is fused into the GEMM's M (rows = B·oh·ow), so every
+    /// image in the batch shares one planned GEMM per group — the
+    /// tiled/threaded execution amortizes LUT loads, weight-panel
+    /// traffic and thread fan-out across the batch.
+    pub fn forward_batch(
+        &self,
+        xs: &[&Tensor],
+        prof: &mut StageProfile,
+    ) -> crate::Result<Vec<Tensor>> {
+        let bsz = xs.len();
+        if bsz == 0 {
+            return Ok(Vec::new());
+        }
+        let (_, c, h, w) = xs[0].nchw();
         if c != self.spec.in_ch {
             return Err(crate::Error::Shape(format!(
                 "conv expects C={}, got {c}",
                 self.spec.in_ch
             )));
         }
+        if xs.iter().any(|x| x.nchw() != xs[0].nchw()) {
+            return Err(crate::Error::Shape("batch images must share one shape".into()));
+        }
         let (oh, ow) = self.spec.out_hw(h, w);
         let groups = self.spec.groups;
         let og = self.spec.out_ch / groups;
         let kk = self.spec.in_ch / groups * self.spec.kh * self.spec.kw;
-        let m = oh * ow;
+        let m1 = oh * ow;
+        let m = bsz * m1;
         let s_out = self.w_scale * self.act_q.params.scale;
 
-        // Stage 1 — activation quantization (whole tensor, once).
-        let codes = prof.time(Stage::Quantize, || {
-            let mut codes = vec![0u8; x.data.len()];
-            self.act_q.quantize(&x.data, &mut codes);
-            codes
+        // Stage 1 — activation quantization (each whole tensor, once).
+        let codes: Vec<Vec<u8>> = prof.time(Stage::Quantize, || {
+            xs.iter()
+                .map(|x| {
+                    let mut codes = vec![0u8; x.data.len()];
+                    self.act_q.quantize(&x.data, &mut codes);
+                    codes
+                })
+                .collect()
         });
         let pad_code = self.act_q.quantize_one(0.0);
+        let bits = match self.backend {
+            Backend::Int8 => 8,
+            Backend::LutWide(b) => b,
+            _ => 2,
+        };
 
-        let mut out = Tensor::zeros(&[1, self.spec.out_ch, oh, ow]);
-        let mut cols: Vec<u8> = Vec::new();
+        let mut outs: Vec<Tensor> =
+            (0..bsz).map(|_| Tensor::zeros(&[1, self.spec.out_ch, oh, ow])).collect();
+        let mut fused: Vec<u8> = Vec::new();
         for g in 0..groups {
-            // Stage 2 — im2col on codes.
+            // Stage 2 — im2col on codes, every image lowered directly
+            // into its slice of the batch-fused M×K buffer (no copy).
             prof.time(Stage::Im2col, || {
-                im2col_codes(&codes, c, h, w, &self.spec, g, pad_code, &mut cols)
+                fused.clear();
+                fused.reserve(m * kk);
+                for img in &codes {
+                    im2col_codes_append(img, c, h, w, &self.spec, g, pad_code, &mut fused);
+                }
             });
-            let col_mat = CodeMat::from_data(
-                m,
-                kk,
-                match self.backend {
-                    Backend::Int8 => 8,
-                    Backend::LutWide(b) => b,
-                    _ => 2,
-                },
-                std::mem::take(&mut cols),
-            );
+            let col_mat = CodeMat::from_data(m, kk, bits, std::mem::take(&mut fused));
 
             // Stages 3+4 — pack + GEMM (+ per-backend extras), then
-            // stage 5 — dequantize into the output plane.
+            // stage 5 — dequantize into each image's output plane.
             let acc = self.gemm_group(&col_mat, g, m, og, kk, prof)?;
             let bias = &self.bias;
             let relu = self.relu;
             prof.time(Stage::Dequant, || {
-                for mi in 0..m {
-                    for ni in 0..og {
-                        let oc = g * og + ni;
-                        let mut v = match &acc {
-                            Acc::I32(a) => a[mi * og + ni] as f32 * s_out,
-                            Acc::F32(a) => a[mi * og + ni],
-                        } + if bias.is_empty() { 0.0 } else { bias[oc] };
-                        if relu {
-                            v = v.max(0.0);
+                for (bi, out) in outs.iter_mut().enumerate() {
+                    for mi in 0..m1 {
+                        let row = bi * m1 + mi;
+                        for ni in 0..og {
+                            let oc = g * og + ni;
+                            let mut v = match &acc {
+                                Acc::I32(a) => a[row * og + ni] as f32 * s_out,
+                                Acc::F32(a) => a[row * og + ni],
+                            } + if bias.is_empty() { 0.0 } else { bias[oc] };
+                            if relu {
+                                v = v.max(0.0);
+                            }
+                            out.data[oc * m1 + mi] = v;
                         }
-                        out.data[oc * m + mi] = v;
                     }
                 }
             });
-            cols = col_mat.data; // reuse allocation
+            fused = col_mat.data; // reuse allocation
         }
-        Ok(out)
+        Ok(outs)
     }
 
     fn gemm_group(
@@ -261,9 +302,9 @@ impl CompiledConv {
     ) -> crate::Result<Acc> {
         let mut acc = vec![0i32; m * og];
         match &self.weights {
-            PreparedWeights::Lut16 { packed, lut, scheme } => {
+            PreparedWeights::Lut16 { plans, lut, scheme } => {
                 let a = prof.time(Stage::Pack, || pack::pack_activations(col, *scheme));
-                prof.time(Stage::LutConv, || lut16::gemm(&a, &packed[g], lut, *scheme, &mut acc));
+                prof.time(Stage::LutConv, || plans[g].execute(&a, lut, &mut acc));
             }
             PreparedWeights::LutWide { packed, lut } => {
                 let a = prof.time(Stage::Pack, || lut16_wide::pack_wide(col));

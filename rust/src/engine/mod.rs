@@ -7,6 +7,27 @@
 //! Depthwise convolutions run a direct f32 path in *every* engine (as
 //! real deployments do — QNNPACK itself ships dedicated depthwise
 //! kernels), so engine-vs-engine ratios reflect the GEMM kernels.
+//!
+//! ## Plan/execute architecture
+//!
+//! Compilation follows a plan/execute split (see
+//! [`crate::kernels::tile`]): everything derivable from the *weights*
+//! alone happens once in [`CompiledConv::prepare`] — quantization,
+//! offline packing, LUT construction, and for the LUT-16 backend a
+//! [`crate::kernels::GemmPlan`] whose weight panels are repacked
+//! panel-contiguously for the cache-blocked, register-tiled,
+//! multi-threaded execution path. At request time only
+//! activation-dependent work runs, and [`CompiledModel::forward_batch`]
+//! fuses a whole batch into the GEMM's M dimension so all requests in a
+//! dynamic batch share one planned GEMM per layer.
+//!
+//! **How a new backend opts into tiling:** pack weights into the
+//! `Packed` layout its scheme declares, build a `GemmPlan` in its
+//! `prepare` arm (instead of storing raw packed rows), and call
+//! `plan.execute(..)` in `gemm_group`. Worker-thread count is the
+//! process-wide knob (`--threads` on the CLI, `ServerConfig::threads`
+//! when serving, `crate::kernels::tile::set_default_threads` directly);
+//! backends that keep their row-streaming kernels simply ignore it.
 
 mod conv;
 
@@ -79,22 +100,48 @@ impl CompiledModel {
 
     /// Forward pass (single image), accumulating stage times into `prof`.
     pub fn forward(&self, x: &Tensor, prof: &mut StageProfile) -> crate::Result<Tensor> {
-        let mut outs: Vec<Tensor> = Vec::with_capacity(self.graph.nodes.len());
+        let mut ys = self.forward_batch(std::slice::from_ref(x), prof)?;
+        Ok(ys.pop().expect("one output per image"))
+    }
+
+    /// Batched forward pass: quantized conv layers fuse the whole batch
+    /// into one planned GEMM per group (batch rows stacked into M);
+    /// the remaining ops run per image. Outputs keep input order, and
+    /// every output is bit-identical to a single-image [`Self::forward`].
+    pub fn forward_batch(
+        &self,
+        xs: &[Tensor],
+        prof: &mut StageProfile,
+    ) -> crate::Result<Vec<Tensor>> {
+        let bsz = xs.len();
+        if bsz == 0 {
+            return Ok(Vec::new());
+        }
+        let mut outs: Vec<Vec<Tensor>> = Vec::with_capacity(self.graph.nodes.len());
         for (i, n) in self.graph.nodes.iter().enumerate() {
             macro_rules! get {
-                ($id:expr) => {
+                ($id:expr, $bi:expr) => {
                     if $id == Graph::INPUT {
-                        x
+                        &xs[$bi]
                     } else {
-                        &outs[$id]
+                        &outs[$id][$bi]
                     }
                 };
             }
-            let y = match &n.op {
+            let ys: Vec<Tensor> = match &n.op {
                 Op::Conv { spec, weights, bias, relu } => match &self.convs[i] {
-                    Some(cc) => cc.forward(get!(n.inputs[0]), prof)?,
-                    None => prof.time(Stage::Other, || {
-                        let y = crate::nn::im2col::conv2d_direct(get!(n.inputs[0]), weights, bias, spec);
+                    Some(cc) => {
+                        let ins: Vec<&Tensor> =
+                            (0..bsz).map(|bi| get!(n.inputs[0], bi)).collect();
+                        cc.forward_batch(&ins, prof)?
+                    }
+                    None => per_image(bsz, prof, |bi| {
+                        let y = crate::nn::im2col::conv2d_direct(
+                            get!(n.inputs[0], bi),
+                            weights,
+                            bias,
+                            spec,
+                        );
                         if *relu {
                             y.map(|v| v.max(0.0))
                         } else {
@@ -103,11 +150,13 @@ impl CompiledModel {
                     }),
                 },
                 Op::MaxPool { k, stride, pad } => {
-                    prof.time(Stage::Other, || get!(n.inputs[0]).max_pool(*k, *stride, *pad))
+                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).max_pool(*k, *stride, *pad))
                 }
-                Op::GlobalAvgPool => prof.time(Stage::Other, || get!(n.inputs[0]).global_avg_pool()),
-                Op::Fc { in_f, out_f, weights, bias } => prof.time(Stage::Other, || {
-                    let xin = get!(n.inputs[0]);
+                Op::GlobalAvgPool => {
+                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).global_avg_pool())
+                }
+                Op::Fc { in_f, out_f, weights, bias } => per_image(bsz, prof, |bi| {
+                    let xin = get!(n.inputs[0], bi);
                     let mut y = Tensor::zeros(&[1, *out_f]);
                     for o in 0..*out_f {
                         let mut acc = bias[o];
@@ -118,23 +167,24 @@ impl CompiledModel {
                     }
                     y
                 }),
-                Op::Add { relu } => prof.time(Stage::Other, || {
-                    let y = get!(n.inputs[0]).add(get!(n.inputs[1]));
+                Op::Add { relu } => per_image(bsz, prof, |bi| {
+                    let y = get!(n.inputs[0], bi).add(get!(n.inputs[1], bi));
                     if *relu {
                         y.map(|v| v.max(0.0))
                     } else {
                         y
                     }
                 }),
-                Op::Relu => prof.time(Stage::Other, || get!(n.inputs[0]).map(|v| v.max(0.0))),
-                Op::Concat => prof.time(Stage::Other, || {
-                    let parts: Vec<&Tensor> = n.inputs.iter().map(|&id| -> &Tensor {
-                        if id == Graph::INPUT { x } else { &outs[id] }
-                    }).collect();
+                Op::Relu => {
+                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).map(|v| v.max(0.0)))
+                }
+                Op::Concat => per_image(bsz, prof, |bi| {
+                    let parts: Vec<&Tensor> =
+                        n.inputs.iter().map(|&id| -> &Tensor { get!(id, bi) }).collect();
                     Tensor::concat_channels(&parts)
                 }),
             };
-            outs.push(y);
+            outs.push(ys);
         }
         Ok(outs.swap_remove(self.graph.output))
     }
@@ -145,6 +195,11 @@ impl CompiledModel {
         let y = self.forward(x, &mut prof)?;
         Ok(argmax(&y.data))
     }
+}
+
+/// Run a per-image op over the batch, timing each image as `Other`.
+fn per_image(bsz: usize, prof: &mut StageProfile, f: impl Fn(usize) -> Tensor) -> Vec<Tensor> {
+    (0..bsz).map(|bi| prof.time(Stage::Other, || f(bi))).collect()
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -362,6 +417,37 @@ mod tests {
         for st in [Stage::Quantize, Stage::Im2col, Stage::Pack, Stage::LutConv, Stage::Dequant] {
             assert!(prof.calls(st) > 0, "stage {} never recorded", st.name());
         }
+    }
+
+    #[test]
+    fn forward_batch_matches_single_forwards() {
+        let g = small();
+        let m = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let xs: Vec<Tensor> =
+            (0..3).map(|i| Tensor::random(&[1, 3, 32, 32], 20 + i, -1.0, 1.0)).collect();
+        let mut prof = StageProfile::new();
+        let batched = m.forward_batch(&xs, &mut prof).unwrap();
+        assert_eq!(batched.len(), xs.len());
+        for (x, yb) in xs.iter().zip(batched.iter()) {
+            let y = m.forward(x, &mut StageProfile::new()).unwrap();
+            assert_eq!(y.data, yb.data, "batched forward must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn forward_batch_empty_and_residual_graph() {
+        // Residual/grouped graphs must thread the batch through Add and
+        // grouped convs correctly.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let g = zoo::small_cnn(4, &mut rng);
+        let m = CompiledModel::compile(g, Backend::Int8, &[]).unwrap();
+        let mut prof = StageProfile::new();
+        assert!(m.forward_batch(&[], &mut prof).unwrap().is_empty());
+        let xs: Vec<Tensor> =
+            (0..2).map(|i| Tensor::random(&[1, 3, 32, 32], 40 + i, -1.0, 1.0)).collect();
+        let ys = m.forward_batch(&xs, &mut prof).unwrap();
+        assert_eq!(ys.len(), 2);
+        assert_eq!(ys[0].data.len(), 4);
     }
 
     #[test]

@@ -156,7 +156,12 @@ pub(crate) mod avx2 {
     /// values the activation index-parts (3 shifts + 4 ands) are computed
     /// once and OR-combined with each column's weight parts.
     #[target_feature(enable = "avx2")]
-    unsafe fn dot4_dense(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+    pub(crate) unsafe fn dot4_dense(
+        arow: &[u8],
+        wrows: [&[u8]; 4],
+        lut: &Lut16,
+        k_padded: usize,
+    ) -> i64x4 {
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let mc = _mm256_set1_epi8(0x0C);
@@ -203,7 +208,12 @@ pub(crate) mod avx2 {
 
     /// 1×4 microkernel for scheme c (ready weight bytes).
     #[target_feature(enable = "avx2")]
-    unsafe fn dot4_scheme_c(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+    pub(crate) unsafe fn dot4_scheme_c(
+        arow: &[u8],
+        wrows: [&[u8]; 4],
+        lut: &Lut16,
+        k_padded: usize,
+    ) -> i64x4 {
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let zero = _mm256_setzero_si256();
@@ -240,7 +250,12 @@ pub(crate) mod avx2 {
     /// OR depends on both operands, so only the activation loads are
     /// shared; independent accumulators still hide SAD latency.
     #[target_feature(enable = "avx2")]
-    unsafe fn dot4_scheme_d(arow: &[u8], wrows: [&[u8]; 4], lut: &Lut16, k_padded: usize) -> i64x4 {
+    pub(crate) unsafe fn dot4_scheme_d(
+        arow: &[u8],
+        wrows: [&[u8]; 4],
+        lut: &Lut16,
+        k_padded: usize,
+    ) -> i64x4 {
         let lutv = load_lut(lut);
         let mf = _mm256_set1_epi8(0x0F);
         let zero = _mm256_setzero_si256();
@@ -274,7 +289,7 @@ pub(crate) mod avx2 {
     }
 
     #[allow(non_camel_case_types)]
-    type i64x4 = [i64; 4];
+    pub(crate) type i64x4 = [i64; 4];
 
     /// Scheme a: naive dense/dense. Per 128 values: 6 shifts, 8 ands,
     /// 4 ors, 4 shuffles (Tab. 3 column a: 1.5/2/1/1 per output).

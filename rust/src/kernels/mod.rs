@@ -25,6 +25,9 @@
 //! - [`ulppack`] — sub-byte-packed multiply baseline (Won et al.)
 //! - [`portable`] — scalar LUT kernel (the "Arm without tbl" stand-in,
 //!   paper Fig. 8)
+//! - [`tile`] — the plan/execute layer: cache-blocked, register-tiled,
+//!   multi-threaded execution of the LUT kernels (build a [`GemmPlan`]
+//!   offline, execute it per batch)
 
 pub mod bitserial;
 pub mod fp32;
@@ -35,7 +38,10 @@ pub mod lut16_wide;
 pub mod lut65k;
 pub mod pack;
 pub mod portable;
+pub mod tile;
 pub mod ulppack;
+
+pub use tile::{GemmPlan, PlanOpts, TileShape};
 
 use crate::quant::IntCodebook;
 
@@ -185,8 +191,29 @@ impl Backend {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Backend> {
-        Some(match s {
+    /// Every name [`Backend::parse`] accepts (aliases included).
+    pub const NAMES: [&'static str; 15] = [
+        "fp32",
+        "int8",
+        "lut16",
+        "lut16-a",
+        "lut16-b",
+        "lut16-c",
+        "lut16-d",
+        "lut2",
+        "lut3b",
+        "lut4b",
+        "lut65k",
+        "lut16-f32",
+        "bitserial",
+        "ulppack",
+        "portable",
+    ];
+
+    /// Parse a backend name; unknown names report the valid set instead
+    /// of failing silently.
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        Ok(match s {
             "fp32" => Backend::Fp32,
             "int8" => Backend::Int8,
             "lut16" | "lut16-d" | "lut2" => Backend::Lut16(pack::Scheme::D),
@@ -200,7 +227,12 @@ impl Backend {
             "bitserial" => Backend::BitSerial,
             "ulppack" => Backend::UlpPack,
             "portable" => Backend::Portable,
-            _ => return None,
+            other => {
+                return Err(format!(
+                    "unknown backend '{other}' (valid backends: {})",
+                    Backend::NAMES.join(", ")
+                ))
+            }
         })
     }
 }
@@ -246,7 +278,17 @@ mod tests {
             Backend::Portable,
         ] {
             let parsed = Backend::parse(&b.name());
-            assert_eq!(parsed, Some(b), "{}", b.name());
+            assert_eq!(parsed, Ok(b), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn backend_parse_reports_valid_names() {
+        let err = Backend::parse("lut128").unwrap_err();
+        assert!(err.contains("unknown backend 'lut128'"), "{err}");
+        for name in Backend::NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+            assert!(Backend::parse(name).is_ok(), "'{name}' must parse");
         }
     }
 

@@ -1,0 +1,794 @@
+//! Cache-blocked, register-tiled, multi-threaded LUT-GEMM execution
+//! plans (the T-MAC-style scaling layer on top of the paper's kernels).
+//!
+//! The row-streaming kernels in [`super::lut16`] walk whole K rows one
+//! output column group at a time, which is fine while everything fits in
+//! L2 but leaves large GEMMs memory-bound and single-threaded. This
+//! module decomposes an M×N×K LUT-GEMM the way high-performance BLAS
+//! does:
+//!
+//! - **K blocking** (`kc` values, a multiple of [`K_BLOCK`]): each
+//!   activation/weight row fragment streamed by the micro-kernel fits in
+//!   L1 and is reused across a whole output tile.
+//! - **Panel-contiguous weight repacking** ([`WeightPanels`], done once
+//!   at plan time): the 2-bit code rows are re-laid-out as NR-row panels
+//!   split at `kc` boundaries so the micro-kernel reads weights as one
+//!   forward stream instead of `stride`-separated rows (FullPack's
+//!   panel-contiguity argument applied to sub-byte codes).
+//! - **Register tiling** (MR×NR = 4×4): the 16-entry LUT is loaded once
+//!   per tile ([`super::lut16::avx2::load_lut`]) and up to sixteen
+//!   independent `vpsadbw` accumulator chains hide the accumulate
+//!   latency; per-tile, every activation vector load is amortized over
+//!   NR columns and every weight vector load over MR rows.
+//! - **Worker parallelism**: the (M-block × N-panel-group) task grid is
+//!   executed on the process-wide [`ThreadPool`]; each task owns a
+//!   disjoint output region, so no synchronization is needed beyond the
+//!   scope join.
+//!
+//! The scalar fallback path unpacks the same panel fragments and drives
+//! [`Lut16::product`], so non-AVX2 hosts execute the identical plan.
+//!
+//! Thread count resolution: a plan built with `threads = 0` (the
+//! default) reads the process-wide knob set by [`set_default_threads`]
+//! — the CLI's `--threads` flag, the server config and the benches all
+//! share it — which itself defaults to the machine's available
+//! parallelism.
+
+use super::lut16;
+use super::pack::{unpack_row, Packed, Scheme};
+use super::K_BLOCK;
+use crate::quant::Lut16;
+use crate::util::pool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Rows of the register tile (activation side).
+pub const MR: usize = 4;
+/// Columns of the register tile (weight side).
+pub const NR: usize = 4;
+
+/// Cache-block sizes, in *values* (codes) for `kc` and rows/columns for
+/// `mc`/`nc`. Normalised on plan construction: `kc` to a multiple of
+/// [`K_BLOCK`], `mc`/`nc` to multiples of the register tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    pub mc: usize,
+    pub nc: usize,
+    pub kc: usize,
+}
+
+impl Default for TileShape {
+    fn default() -> Self {
+        // kc = 1024 values keeps a nibble-packed row fragment at 512 B
+        // (L1-resident under the 4-row activation block), nc = 64 puts a
+        // weight panel group at <=32 KiB, mc = 32 bounds the activation
+        // block at 16 KiB.
+        Self { mc: 32, nc: 64, kc: 1024 }
+    }
+}
+
+impl TileShape {
+    fn normalized(self) -> TileShape {
+        TileShape {
+            mc: (self.mc / MR).max(1) * MR,
+            nc: (self.nc / NR).max(1) * NR,
+            kc: (self.kc / K_BLOCK).max(1) * K_BLOCK,
+        }
+    }
+}
+
+/// Plan-construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOpts {
+    pub shape: TileShape,
+    /// Worker threads; 0 = use the process-wide default (see
+    /// [`set_default_threads`]).
+    pub threads: usize,
+}
+
+impl Default for PlanOpts {
+    fn default() -> Self {
+        Self { shape: TileShape::default(), threads: 0 }
+    }
+}
+
+/// Process-wide default worker-thread count; 0 = available parallelism.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide worker-thread default used by plans built with
+/// `threads = 0` (0 restores "all available cores").
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The resolved process-wide worker-thread default.
+pub fn default_threads() -> usize {
+    resolve_threads(0)
+}
+
+fn resolve_threads(plan_threads: usize) -> usize {
+    let t = if plan_threads == 0 {
+        DEFAULT_THREADS.load(Ordering::Relaxed)
+    } else {
+        plan_threads
+    };
+    if t == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        t
+    }
+}
+
+/// Lazily-built process-wide GEMM worker pool, recreated when the
+/// requested size changes (in-flight executes keep the old pool alive
+/// through their own `Arc`).
+static POOL: Mutex<Option<(usize, Arc<ThreadPool>)>> = Mutex::new(None);
+
+fn global_pool(threads: usize) -> Arc<ThreadPool> {
+    let mut guard = POOL.lock().unwrap();
+    if let Some((size, pool)) = &*guard {
+        if *size == threads {
+            return pool.clone();
+        }
+    }
+    let pool = Arc::new(ThreadPool::new(threads));
+    *guard = Some((threads, pool.clone()));
+    pool
+}
+
+/// Weight codes repacked panel-contiguously: for every NR-row panel and
+/// every K block, the panel rows' packed fragments are stored back to
+/// back, so a micro-kernel invocation reads one forward byte stream.
+#[derive(Clone, Debug)]
+pub struct WeightPanels {
+    /// Output columns (weight rows).
+    pub n: usize,
+    pub k: usize,
+    pub k_padded: usize,
+    pub layout: super::pack::Layout,
+    /// Bytes per [`K_BLOCK`]-value chunk of one row in `layout`.
+    chunk_bytes: usize,
+    /// Rows per panel (= [`NR`]).
+    nr: usize,
+    /// K-block size in values.
+    pub kc: usize,
+    /// Chunks per K block (last block may be short).
+    block_chunks: Vec<usize>,
+    /// Prefix sums of `block_chunks` (length `blocks + 1`).
+    prefix: Vec<usize>,
+    /// Byte offset of each panel in `data` (length `panels + 1`).
+    panel_start: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl WeightPanels {
+    fn build(w: &Packed, nr: usize, kc: usize) -> Self {
+        let chunk_bytes = w.layout.bytes_for(K_BLOCK);
+        let total_chunks = w.k_padded / K_BLOCK;
+        let kc_chunks = kc / K_BLOCK;
+        let blocks = total_chunks.div_ceil(kc_chunks);
+        let mut block_chunks = Vec::with_capacity(blocks);
+        let mut prefix = Vec::with_capacity(blocks + 1);
+        prefix.push(0usize);
+        for b in 0..blocks {
+            let c = kc_chunks.min(total_chunks - b * kc_chunks);
+            block_chunks.push(c);
+            prefix.push(prefix[b] + c);
+        }
+        let n = w.rows;
+        let stride = total_chunks * chunk_bytes;
+        debug_assert_eq!(stride, w.stride, "layout stride mismatch");
+        let panels = n.div_ceil(nr.max(1));
+        let mut panel_start = Vec::with_capacity(panels + 1);
+        panel_start.push(0usize);
+        let mut data = vec![0u8; n * stride];
+        let mut off = 0usize;
+        for p in 0..panels {
+            let r0 = p * nr;
+            let rows_p = (n - r0).min(nr);
+            for b in 0..blocks {
+                let c0 = prefix[b] * chunk_bytes;
+                let c1 = prefix[b + 1] * chunk_bytes;
+                for r in 0..rows_p {
+                    let src = &w.row(r0 + r)[c0..c1];
+                    data[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+            }
+            panel_start.push(off);
+        }
+        debug_assert_eq!(off, data.len());
+        WeightPanels {
+            n,
+            k: w.k,
+            k_padded: w.k_padded,
+            layout: w.layout,
+            chunk_bytes,
+            nr,
+            kc,
+            block_chunks,
+            prefix,
+            panel_start,
+            data,
+        }
+    }
+
+    /// Number of K blocks.
+    pub fn blocks(&self) -> usize {
+        self.block_chunks.len()
+    }
+
+    /// Values covered by K block `b` (always a multiple of [`K_BLOCK`]).
+    pub fn block_vals(&self, b: usize) -> usize {
+        self.block_chunks[b] * K_BLOCK
+    }
+
+    /// Bytes held by the repacked weights (same count as the source
+    /// [`Packed`] — repacking permutes, it does not expand).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Packed fragment of panel `p`, K block `b`, panel-local row `r`.
+    #[inline]
+    fn frag(&self, p: usize, b: usize, r: usize) -> &[u8] {
+        let rows_p = (self.n - p * self.nr).min(self.nr);
+        debug_assert!(r < rows_p);
+        let frag_bytes = self.block_chunks[b] * self.chunk_bytes;
+        let start =
+            self.panel_start[p] + rows_p * self.prefix[b] * self.chunk_bytes + r * frag_bytes;
+        &self.data[start..start + frag_bytes]
+    }
+}
+
+/// A compiled GEMM execution plan: fixed weights (N×K, panel-repacked),
+/// runtime activations (any M). Build once offline, execute per batch —
+/// the batcher fuses the batch dimension into M so all requests in a
+/// batch share one planned GEMM.
+#[derive(Clone, Debug)]
+pub struct GemmPlan {
+    pub scheme: Scheme,
+    pub shape: TileShape,
+    /// Worker threads; 0 = process-wide default at execute time.
+    pub threads: usize,
+    pub panels: WeightPanels,
+}
+
+/// Raw output pointer shared across the task grid; every task writes a
+/// disjoint (M-range × N-range) region.
+#[derive(Clone, Copy)]
+struct SendMut(*mut i32);
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+impl GemmPlan {
+    /// Build a plan from offline-packed weights (`scheme.w_layout()`).
+    pub fn new(w: &Packed, scheme: Scheme, opts: PlanOpts) -> GemmPlan {
+        assert_eq!(w.layout, scheme.w_layout(), "weights packed for wrong scheme");
+        let shape = opts.shape.normalized();
+        let panels = WeightPanels::build(w, NR, shape.kc);
+        GemmPlan { scheme, shape, threads: opts.threads, panels }
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.panels.n
+    }
+
+    /// Reduction length (unpadded).
+    pub fn k(&self) -> usize {
+        self.panels.k
+    }
+
+    /// Bytes held by the plan's packed weights.
+    pub fn packed_bytes(&self) -> usize {
+        self.panels.bytes()
+    }
+
+    /// Execute the plan: `out[m][n] = Σ_k Vw(w[n][k]) · Va(a[m][k])`,
+    /// exactly as [`super::lut16::gemm`] computes it (bit-identical).
+    pub fn execute(&self, a: &Packed, lut: &Lut16, out: &mut [i32]) {
+        let m = a.rows;
+        let n = self.panels.n;
+        assert_eq!(a.layout, self.scheme.a_layout(), "activations packed for wrong scheme");
+        assert_eq!(a.k, self.panels.k, "K mismatch");
+        assert_eq!(a.k_padded, self.panels.k_padded, "K padding mismatch");
+        assert_eq!(out.len(), m * n, "output buffer size mismatch");
+        assert_eq!(lut.bits, 2, "GemmPlan drives the 2-bit LUT-16 kernels");
+        if m == 0 || n == 0 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let use_avx2 = false;
+        // Same exactness gate as the row-streaming dispatcher: the 1×4 /
+        // 4×4 kernels batch 4 rounds of biased bytes per SAD.
+        let max_entry = *lut.table.iter().max().unwrap_or(&0) as u32;
+        let tile4_ok = 4 * max_entry < 256;
+
+        let mc = self.shape.mc;
+        let nc = self.shape.nc;
+        let m_blocks = m.div_ceil(mc);
+        let n_blocks = n.div_ceil(nc);
+        let tasks = m_blocks * n_blocks;
+        // The pool is sized by the resolved knob alone (stable across
+        // layers — resizing respawns OS threads); small task grids just
+        // submit fewer jobs than there are workers.
+        let threads = resolve_threads(self.threads);
+        let outp = SendMut(out.as_mut_ptr());
+        if threads <= 1 || tasks <= 1 {
+            for mb in 0..m_blocks {
+                for nb in 0..n_blocks {
+                    self.run_region(
+                        a,
+                        lut,
+                        outp,
+                        mb * mc,
+                        ((mb + 1) * mc).min(m),
+                        nb * nc,
+                        ((nb + 1) * nc).min(n),
+                        use_avx2,
+                        tile4_ok,
+                    );
+                }
+            }
+            return;
+        }
+        let pool = global_pool(threads);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
+        for mb in 0..m_blocks {
+            for nb in 0..n_blocks {
+                jobs.push(Box::new(move || {
+                    self.run_region(
+                        a,
+                        lut,
+                        outp,
+                        mb * mc,
+                        ((mb + 1) * mc).min(m),
+                        nb * nc,
+                        ((nb + 1) * nc).min(n),
+                        use_avx2,
+                        tile4_ok,
+                    );
+                }));
+            }
+        }
+        pool.scope_run(jobs);
+    }
+
+    /// Compute one disjoint output region `[m0, m1) × [n0, n1)`:
+    /// K-block outer loop, NR-panel middle loop, MR-row tile inner loop,
+    /// raw partial sums accumulated into `out`, pad correction applied
+    /// once at the end.
+    #[allow(clippy::too_many_arguments)]
+    fn run_region(
+        &self,
+        a: &Packed,
+        lut: &Lut16,
+        out: SendMut,
+        m0: usize,
+        m1: usize,
+        n0: usize,
+        n1: usize,
+        use_avx2: bool,
+        tile4_ok: bool,
+    ) {
+        let n = self.panels.n;
+        let outp = out.0;
+        for mi in m0..m1 {
+            for ni in n0..n1 {
+                // SAFETY: this task owns [m0,m1)×[n0,n1) exclusively.
+                unsafe { *outp.add(mi * n + ni) = 0 };
+            }
+        }
+        let kc = self.panels.kc;
+        // Scalar-path scratch (unused — and left empty — under AVX2).
+        let (mut a_buf, mut w_buf) = if use_avx2 {
+            (Vec::new(), Vec::new())
+        } else {
+            (vec![0u8; kc], vec![0u8; NR * kc])
+        };
+        let a_chunk = a.layout.bytes_for(K_BLOCK);
+        let p0 = n0 / NR;
+        let p1 = n1.div_ceil(NR);
+        for b in 0..self.panels.blocks() {
+            let vals = self.panels.block_vals(b);
+            let a_off = self.panels.prefix[b] * a_chunk;
+            let a_len = self.panels.block_chunks[b] * a_chunk;
+            for p in p0..p1 {
+                let pn0 = p * NR;
+                let nt = (n1 - pn0).min(NR);
+                let mut wf = [self.panels.frag(p, b, 0); NR];
+                for (r, slot) in wf.iter_mut().enumerate().take(nt).skip(1) {
+                    *slot = self.panels.frag(p, b, r);
+                }
+                if !use_avx2 {
+                    // Scalar path: decode the panel's weight fragments
+                    // once per (block, panel), not once per M-tile.
+                    let w_layout = self.scheme.w_layout();
+                    for (j, frag) in wf.iter().enumerate().take(nt) {
+                        unpack_row(frag, vals, w_layout, &mut w_buf[j * kc..j * kc + vals]);
+                    }
+                }
+                let mut t0 = m0;
+                while t0 < m1 {
+                    let mt = (m1 - t0).min(MR);
+                    let mut ar = [&a.row(t0)[a_off..a_off + a_len]; MR];
+                    for (i, slot) in ar.iter_mut().enumerate().take(mt).skip(1) {
+                        *slot = &a.row(t0 + i)[a_off..a_off + a_len];
+                    }
+                    let mut sums = [[0i64; NR]; MR];
+                    self.compute_tile(
+                        &ar, &wf, lut, vals, mt, nt, use_avx2, tile4_ok, &mut a_buf,
+                        &mut w_buf, &mut sums,
+                    );
+                    for (i, row) in sums.iter().enumerate().take(mt) {
+                        for (j, s) in row.iter().enumerate().take(nt) {
+                            // SAFETY: disjoint region, see above.
+                            unsafe {
+                                let slot = outp.add((t0 + i) * n + (pn0 + j));
+                                *slot = (*slot).wrapping_add(*s as i32);
+                            }
+                        }
+                    }
+                    t0 += mt;
+                }
+            }
+        }
+        // The blocks above summed over every padded value (pad codes are
+        // 0 on both operands → `pad_product` each); correct once.
+        let pad_corr = lut.pad_product as i64 * a.pad() as i64;
+        if pad_corr != 0 {
+            for mi in m0..m1 {
+                for ni in n0..n1 {
+                    // SAFETY: disjoint region, see above.
+                    unsafe { *outp.add(mi * n + ni) -= pad_corr as i32 };
+                }
+            }
+        }
+    }
+
+    /// One MR×NR (or remainder) tile over one K block: `sums[i][j]` gets
+    /// the *raw* (unbiased) Σ over the block's values, padding included.
+    #[allow(clippy::too_many_arguments)]
+    #[allow(unused_variables)]
+    fn compute_tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        lut: &Lut16,
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        use_avx2: bool,
+        tile4_ok: bool,
+        a_buf: &mut [u8],
+        w_buf: &mut [u8],
+        sums: &mut [[i64; NR]; MR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2 {
+            let bias_corr = lut.bias as i64 * vals as i64;
+            // SAFETY: AVX2 availability checked by the caller; all row
+            // fragments cover exactly `vals` values in their layouts.
+            unsafe {
+                if nt == NR && tile4_ok {
+                    match self.scheme {
+                        Scheme::D if mt == MR => {
+                            let s = simd::dot4x4_scheme_d(
+                                [ar[0], ar[1], ar[2], ar[3]],
+                                [wf[0], wf[1], wf[2], wf[3]],
+                                lut,
+                                vals,
+                            );
+                            for i in 0..MR {
+                                for j in 0..NR {
+                                    sums[i][j] = s[i][j] - bias_corr;
+                                }
+                            }
+                        }
+                        Scheme::A | Scheme::B => {
+                            for i in 0..mt {
+                                let s = lut16::avx2::dot4_dense(
+                                    ar[i],
+                                    [wf[0], wf[1], wf[2], wf[3]],
+                                    lut,
+                                    vals,
+                                );
+                                for j in 0..NR {
+                                    sums[i][j] = s[j] - bias_corr;
+                                }
+                            }
+                        }
+                        Scheme::C => {
+                            for i in 0..mt {
+                                let s = lut16::avx2::dot4_scheme_c(
+                                    ar[i],
+                                    [wf[0], wf[1], wf[2], wf[3]],
+                                    lut,
+                                    vals,
+                                );
+                                for j in 0..NR {
+                                    sums[i][j] = s[j] - bias_corr;
+                                }
+                            }
+                        }
+                        Scheme::D => {
+                            for i in 0..mt {
+                                let s = lut16::avx2::dot4_scheme_d(
+                                    ar[i],
+                                    [wf[0], wf[1], wf[2], wf[3]],
+                                    lut,
+                                    vals,
+                                );
+                                for j in 0..NR {
+                                    sums[i][j] = s[j] - bias_corr;
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for i in 0..mt {
+                        for j in 0..nt {
+                            let s = match self.scheme {
+                                Scheme::A => lut16::avx2::dot_scheme_a(ar[i], wf[j], lut, vals),
+                                Scheme::B => lut16::avx2::dot_scheme_b(ar[i], wf[j], lut, vals),
+                                Scheme::C => lut16::avx2::dot_scheme_c(ar[i], wf[j], lut, vals),
+                                Scheme::D => lut16::avx2::dot_scheme_d(ar[i], wf[j], lut, vals),
+                            };
+                            sums[i][j] = s - bias_corr;
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        // Portable scalar fallback: weights were already decoded into
+        // `w_buf` by the caller (once per block/panel); unpack only the
+        // activation rows here.
+        let a_layout = self.scheme.a_layout();
+        let kc = self.panels.kc;
+        for i in 0..mt {
+            unpack_row(ar[i], vals, a_layout, &mut a_buf[..vals]);
+            for j in 0..nt {
+                let wrow = &w_buf[j * kc..j * kc + vals];
+                let mut s = 0i64;
+                for (wc, ac) in wrow.iter().zip(a_buf[..vals].iter()) {
+                    s += lut.product(*wc, *ac) as i64;
+                }
+                sums[i][j] = s;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use crate::kernels::lut16::avx2::{hsum_epi64, load_lut};
+    use crate::kernels::K_BLOCK;
+    use crate::quant::Lut16;
+    use std::arch::x86_64::*;
+
+    /// 4×4 register-tiled micro-kernel for scheme d over one K block:
+    /// the LUT is loaded once per tile, each 32-byte activation load is
+    /// reused against all four weight columns and each weight load
+    /// against all four activation rows, with sixteen independent SAD
+    /// accumulator chains. Exact under the caller's `tile4_ok` gate
+    /// (2 rounds of biased bytes per SAD, stricter 4-round gate applied).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4x4_scheme_d(
+        arows: [&[u8]; 4],
+        wrows: [&[u8]; 4],
+        lut: &Lut16,
+        vals: usize,
+    ) -> [[i64; 4]; 4] {
+        let lutv = load_lut(lut);
+        let mf = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        let mut acc = [[_mm256_setzero_si256(); 4]; 4];
+        let chunks = vals / K_BLOCK;
+        for c in 0..chunks {
+            for half in 0..2 {
+                let off = 64 * c + 32 * half;
+                let va = [
+                    _mm256_loadu_si256(arows[0].as_ptr().add(off) as *const __m256i),
+                    _mm256_loadu_si256(arows[1].as_ptr().add(off) as *const __m256i),
+                    _mm256_loadu_si256(arows[2].as_ptr().add(off) as *const __m256i),
+                    _mm256_loadu_si256(arows[3].as_ptr().add(off) as *const __m256i),
+                ];
+                for j in 0..4 {
+                    let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
+                    for (i, vai) in va.iter().enumerate() {
+                        let fused = _mm256_or_si256(vw, *vai);
+                        let ilo = _mm256_and_si256(fused, mf);
+                        let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                        let sum8 = _mm256_add_epi8(
+                            _mm256_shuffle_epi8(lutv, ilo),
+                            _mm256_shuffle_epi8(lutv, ihi),
+                        );
+                        acc[i][j] = _mm256_add_epi64(acc[i][j], _mm256_sad_epu8(sum8, zero));
+                    }
+                }
+            }
+        }
+        let mut out = [[0i64; 4]; 4];
+        for (i, row) in acc.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                out[i][j] = hsum_epi64(*v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack::{pack_activations, pack_weights};
+    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::quant::IntCodebook;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Small blocks so modest shapes already exercise multi-block K,
+    /// multi-panel N and remainder tiles on every edge.
+    fn tiny_shape() -> TileShape {
+        TileShape { mc: 8, nc: 8, kc: K_BLOCK }
+    }
+
+    fn check_plan(
+        scheme: Scheme,
+        signed: bool,
+        m: usize,
+        n: usize,
+        k: usize,
+        threads: usize,
+        shape: TileShape,
+        seed: u64,
+    ) {
+        let w_cb = if signed { IntCodebook::signed(2) } else { IntCodebook::unsigned(2) };
+        let a_cb = IntCodebook::unsigned(2);
+        let a = CodeMat::random(m, k, 2, seed);
+        let w = CodeMat::random(n, k, 2, seed ^ 0x5EED);
+        let lut = Lut16::build(&w_cb, &a_cb);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
+        let ap = pack_activations(&a, scheme);
+        let wp = pack_weights(&w, scheme);
+        let plan = GemmPlan::new(&wp, scheme, PlanOpts { shape, threads });
+        let mut got = vec![0i32; m * n];
+        plan.execute(&ap, &lut, &mut got);
+        assert_eq!(
+            got, want,
+            "scheme {scheme:?} signed={signed} m={m} n={n} k={k} threads={threads}"
+        );
+    }
+
+    #[test]
+    fn tiled_matches_oracle_odd_shapes_all_schemes() {
+        // M, N, K deliberately not multiples of MR/NR/KC.
+        for scheme in Scheme::ALL {
+            for &(m, n, k) in
+                &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 9, 129), (7, 6, 257), (4, 4, 300)]
+            {
+                for &threads in &[1usize, 2, 4] {
+                    check_plan(scheme, true, m, n, k, threads, tiny_shape(), 11 + k as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_oracle_property() {
+        prop::check(
+            0x711E,
+            30,
+            |r: &mut Rng| {
+                (
+                    r.range(1, 14),
+                    r.range(1, 14),
+                    r.range(1, 400),
+                    [1usize, 2, 4][r.range(0, 3)],
+                    r.next_u64(),
+                )
+            },
+            |&(m, n, k, threads, seed)| {
+                for scheme in Scheme::ALL {
+                    let w_cb = IntCodebook::signed(2);
+                    let a_cb = IntCodebook::unsigned(2);
+                    let a = CodeMat::random(m, k, 2, seed);
+                    let w = CodeMat::random(n, k, 2, seed ^ 1);
+                    let lut = Lut16::build(&w_cb, &a_cb);
+                    let mut want = vec![0i32; m * n];
+                    oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
+                    let ap = pack_activations(&a, scheme);
+                    let wp = pack_weights(&w, scheme);
+                    let plan =
+                        GemmPlan::new(&wp, scheme, PlanOpts { shape: tiny_shape(), threads });
+                    let mut got = vec![0i32; m * n];
+                    plan.execute(&ap, &lut, &mut got);
+                    if got != want {
+                        return Err(format!(
+                            "scheme {scheme:?} diverges at m={m} n={n} k={k} threads={threads}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiled_equals_row_streaming_default_shape() {
+        // Bigger-than-one-block shape under the production TileShape,
+        // compared bit-for-bit against the row-streaming kernel.
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let (m, n, k) = (37, 70, 2500);
+        let a = CodeMat::random(m, k, 2, 3);
+        let w = CodeMat::random(n, k, 2, 4);
+        for scheme in Scheme::ALL {
+            let ap = pack_activations(&a, scheme);
+            let wp = pack_weights(&w, scheme);
+            let mut want = vec![0i32; m * n];
+            lut16::gemm(&ap, &wp, &lut, scheme, &mut want);
+            for threads in [1usize, 4] {
+                let plan = GemmPlan::new(&wp, scheme, PlanOpts { threads, ..Default::default() });
+                let mut got = vec![0i32; m * n];
+                plan.execute(&ap, &lut, &mut got);
+                assert_eq!(got, want, "scheme {scheme:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_codebooks_and_unsigned() {
+        for scheme in Scheme::ALL {
+            check_plan(scheme, false, 6, 10, 200, 2, tiny_shape(), 77);
+        }
+    }
+
+    #[test]
+    fn big_entry_lut_disables_tile4_but_stays_exact() {
+        // max entry 225 → 4·entry ≥ 256: the 1×4/4×4 kernels are skipped
+        // and the per-column kernels must still match the oracle.
+        let cb = IntCodebook::new(2, vec![0, 1, 8, 15]);
+        let lut = Lut16::build(&cb, &cb);
+        assert!(4 * *lut.table.iter().max().unwrap() as u32 >= 256);
+        let (m, n, k) = (5, 6, 260);
+        let a = CodeMat::random(m, k, 2, 9);
+        let w = CodeMat::random(n, k, 2, 10);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+        for scheme in Scheme::ALL {
+            let ap = pack_activations(&a, scheme);
+            let wp = pack_weights(&w, scheme);
+            let plan = GemmPlan::new(&wp, scheme, PlanOpts { shape: tiny_shape(), threads: 2 });
+            let mut got = vec![0i32; m * n];
+            plan.execute(&ap, &lut, &mut got);
+            assert_eq!(got, want, "scheme {scheme:?}");
+        }
+    }
+
+    #[test]
+    fn panels_preserve_bytes_and_shape() {
+        let w = CodeMat::random(11, 700, 2, 5);
+        for scheme in Scheme::ALL {
+            let wp = pack_weights(&w, scheme);
+            let plan = GemmPlan::new(&wp, scheme, PlanOpts::default());
+            assert_eq!(plan.n(), 11);
+            assert_eq!(plan.k(), 700);
+            assert_eq!(plan.packed_bytes(), wp.data.len());
+        }
+    }
+
+    #[test]
+    fn thread_resolution_is_sane() {
+        // Explicit plan threads win; the auto default is at least 1.
+        // (The process-wide knob itself is exercised by the server tests,
+        // which set it through ServerConfig.)
+        assert_eq!(resolve_threads(5), 5);
+        assert!(default_threads() >= 1);
+    }
+}

@@ -39,19 +39,42 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+/// offline build has no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("runtime error: {0}")]
+    Io(std::io::Error),
     Runtime(String),
-    #[error("{0}")]
     Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -6,8 +6,9 @@ use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::Backend;
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::profiling::StageProfile;
+#[cfg(feature = "pjrt")]
 use deepgemm::runtime::PjrtRuntime;
-use deepgemm::util::cli::{usage, Args, OptSpec};
+use deepgemm::util::cli::{self, usage, Args, OptSpec};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -22,6 +23,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "classes", help: "classifier width", takes_value: true, default: Some("10") },
         OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
         OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+        cli::threads_opt(),
         OptSpec { name: "verbose", help: "chatty output", takes_value: false, default: None },
     ]
 }
@@ -59,8 +61,7 @@ fn main() {
 
 fn parse_backend(args: &Args) -> Result<Backend, deepgemm::Error> {
     let name = args.get_or("backend", "lut16-d");
-    Backend::parse(name)
-        .ok_or_else(|| deepgemm::Error::Config(format!("unknown backend '{name}'")))
+    Backend::parse(name).map_err(deepgemm::Error::Config)
 }
 
 fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
@@ -79,6 +80,9 @@ fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
+    // One process-wide GEMM-threads knob, shared by every command.
+    let threads = args.get_usize("threads", 0).map_err(deepgemm::Error::Config)?;
+    deepgemm::kernels::tile::set_default_threads(threads);
     match cmd {
         "help" => {
             println!("{}", usage("deepgemm", "ultra low-precision LUT inference", &COMMANDS, &specs()));
@@ -111,7 +115,10 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
                 queue_cap: 128,
             };
             router.register(model, cfg);
-            serve(Arc::new(router), &ServerConfig { addr: args.get_or("addr", "127.0.0.1:7070").into() })
+            serve(
+                Arc::new(router),
+                &ServerConfig { addr: args.get_or("addr", "127.0.0.1:7070").into(), threads },
+            )
         }
         "infer" => {
             let model = compile_model(args)?;
@@ -144,6 +151,13 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
             println!("{}", prof.render(&format!("{} / {}", model.name, model.backend.name())));
             Ok(())
         }
+        #[cfg(not(feature = "pjrt"))]
+        "artifacts" => Err(deepgemm::Error::Config(
+            "this binary was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the xla crate) to run artifact checks"
+                .into(),
+        )),
+        #[cfg(feature = "pjrt")]
         "artifacts" => {
             let dir = args.get_or("artifacts", "artifacts");
             let mut rt = PjrtRuntime::open(dir)?;

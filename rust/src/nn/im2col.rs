@@ -59,17 +59,36 @@ pub fn im2col_codes(
     pad_code: u8,
     out: &mut Vec<u8>,
 ) {
+    out.clear();
+    im2col_codes_append(codes, c, h, w, spec, g, pad_code, out);
+}
+
+/// [`im2col_codes`] in append mode: the lowered rows are written after
+/// `out`'s existing contents. Lets batched convolution stack every
+/// image's column matrix directly into one M-fused buffer without an
+/// intermediate copy.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_codes_append(
+    codes: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    spec: &ConvSpec,
+    g: usize,
+    pad_code: u8,
+    out: &mut Vec<u8>,
+) {
     assert_eq!(codes.len(), c * h * w);
     assert_eq!(c, spec.in_ch);
     let (oh, ow) = spec.out_hw(h, w);
     let cg = spec.in_ch / spec.groups;
     let k = cg * spec.kh * spec.kw;
-    out.clear();
-    out.resize(oh * ow * k, 0);
+    let base = out.len();
+    out.resize(base + oh * ow * k, 0);
     let c0 = g * cg;
     for oy in 0..oh {
         for ox in 0..ow {
-            let row = (oy * ow + ox) * k;
+            let row = base + (oy * ow + ox) * k;
             let mut col = 0usize;
             for ci in 0..cg {
                 let plane = (c0 + ci) * h * w;

@@ -8,21 +8,30 @@
 //! aot_recipe): jax ≥ 0.5 emits 64-bit instruction ids in serialized
 //! protos that xla_extension 0.5.1 rejects, while the text parser
 //! reassigns ids.
+//!
+//! The executor requires the `xla` crate and is gated behind the
+//! off-by-default `pjrt` cargo feature (the offline build image cannot
+//! fetch it); the [`manifest`] contract is always available.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct LoadedModule {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModule {
     /// Execute with f32 inputs (shapes validated against the manifest);
     /// returns the flattened f32 outputs.
@@ -75,6 +84,7 @@ impl LoadedModule {
 }
 
 /// The PJRT runtime: one CPU client + compiled module cache.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     pub dir: PathBuf,
@@ -82,6 +92,7 @@ pub struct PjrtRuntime {
     modules: HashMap<String, LoadedModule>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Open an artifacts directory (must contain `manifest.json`).
     pub fn open(dir: impl AsRef<Path>) -> crate::Result<Self> {

@@ -97,6 +97,19 @@ impl Args {
     }
 }
 
+/// The shared `--threads` option spec: worker threads for tiled GEMM
+/// execution. The default `0` means "all available cores" — resolution
+/// happens in one place, `crate::kernels::tile` (the CLI, the serving
+/// config and the benches all feed that knob).
+pub fn threads_opt() -> OptSpec {
+    OptSpec {
+        name: "threads",
+        help: "worker threads for tiled GEMM execution (0 = all available cores)",
+        takes_value: true,
+        default: Some("0"),
+    }
+}
+
 /// Render usage text from specs.
 pub fn usage(program: &str, about: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
     let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n\nCOMMANDS:\n");
@@ -161,6 +174,15 @@ mod tests {
     fn typed_getter_errors() {
         let a = Args::parse(&sv(&["x", "--iters", "abc"]), &specs()).unwrap();
         assert!(a.get_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn threads_opt_parses_with_auto_default() {
+        let specs = vec![threads_opt()];
+        let a = Args::parse(&sv(&["bench", "--threads", "4"]), &specs).unwrap();
+        assert_eq!(a.get_usize("threads", 0).unwrap(), 4);
+        let auto = Args::parse(&sv(&["bench"]), &specs).unwrap();
+        assert_eq!(auto.get_usize("threads", 1).unwrap(), 0, "default is 0 = auto");
     }
 
     #[test]

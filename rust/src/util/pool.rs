@@ -70,6 +70,78 @@ impl ThreadPool {
             g = self.shared.done_cv.wait(g).unwrap();
         }
     }
+
+    /// Run a batch of jobs that may borrow the caller's stack and block
+    /// until all of them have finished — the `scope`-style join helper
+    /// used by tiled GEMM execution.
+    ///
+    /// Panicking jobs are caught on the worker (so the pool survives) and
+    /// the first panic is re-thrown here once every job has completed.
+    ///
+    /// Must not be called from inside a pool job: the caller would occupy
+    /// a worker slot while waiting, and with one worker that deadlocks.
+    pub fn scope_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+        type Pending = (Mutex<usize>, Condvar);
+        // Join guard: waits for every *submitted* job on drop — including
+        // an unwind mid-submission — so workers can never outlive the
+        // borrows the jobs capture (same discipline as std::thread::scope).
+        struct Join<'a>(&'a Pending);
+        impl Drop for Join<'_> {
+            fn drop(&mut self) {
+                let (mx, cv) = self.0;
+                let mut left = mx.lock().unwrap();
+                while *left > 0 {
+                    left = cv.wait(left).unwrap();
+                }
+            }
+        }
+        let pending: Arc<Pending> = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let first_panic: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
+        {
+            let _join = Join(&*pending);
+            for job in jobs {
+                // SAFETY: `_join` blocks (even on unwind) until every
+                // submitted job has run, so the borrows captured by `job`
+                // outlive its execution. The transmute only erases the
+                // `'env` lifetime bound.
+                let job: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(job) };
+                *pending.0.lock().unwrap() += 1;
+                let rem = pending.clone();
+                let slot = first_panic.clone();
+                let wrapper = move || {
+                    if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                        let mut s = slot.lock().unwrap();
+                        if s.is_none() {
+                            *s = Some(p);
+                        }
+                    }
+                    let (mx, cv) = &*rem;
+                    let mut left = mx.lock().unwrap();
+                    *left -= 1;
+                    if *left == 0 {
+                        cv.notify_all();
+                    }
+                };
+                // `execute` can only panic before enqueuing (poisoned
+                // queue lock); undo the count so the guard doesn't wait
+                // for a job that never entered the queue.
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| self.execute(wrapper))) {
+                    let (mx, cv) = &*pending;
+                    *mx.lock().unwrap() -= 1;
+                    cv.notify_all();
+                    drop(_join); // join already-submitted jobs first
+                    resume_unwind(p);
+                }
+            }
+            // `_join` drops here, blocking until all jobs are done.
+        }
+        if let Some(p) = first_panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -127,6 +199,42 @@ mod tests {
     fn wait_idle_with_no_jobs() {
         let pool = ThreadPool::new(2);
         pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn scope_run_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let sum = AtomicU64::new(0);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for chunk in data.chunks(7) {
+            let sum = &sum;
+            jobs.push(Box::new(move || {
+                sum.fetch_add(chunk.iter().sum::<u64>(), Ordering::SeqCst);
+            }));
+        }
+        pool.scope_run(jobs);
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn scope_run_propagates_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_run(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("job boom")),
+            ]);
+        }));
+        assert!(r.is_err(), "panic must propagate to the scope caller");
+        // The pool must still run jobs afterwards.
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 
     #[test]

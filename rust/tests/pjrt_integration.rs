@@ -2,7 +2,9 @@
 //!
 //! Needs `make artifacts` to have produced `artifacts/` — tests skip
 //! (with a loud message) when it is missing so `cargo test` stays green
-//! on a fresh checkout.
+//! on a fresh checkout. The whole suite additionally requires the
+//! `pjrt` cargo feature (the `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
 use deepgemm::kernels::{lut16, CodeMat};

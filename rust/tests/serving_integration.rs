@@ -53,7 +53,8 @@ fn tcp_server_survives_bad_clients_then_serves_good_ones() {
     router.register(model(3, Backend::Lut16(Scheme::D), 3), BatcherConfig::default());
     let router = Arc::new(router);
     let (addr, _h) =
-        server::spawn(router, &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+        server::spawn(router, &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+            .unwrap();
 
     // Bad client: garbage line.
     let mut bad = Client::connect(&addr.to_string()).unwrap();
