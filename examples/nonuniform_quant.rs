@@ -6,7 +6,7 @@
 //!     cargo run --release --example nonuniform_quant
 
 use deepgemm::kernels::pack::{pack, Scheme};
-use deepgemm::kernels::{lut16_f32, oracle_gemm_f32, CodeMat};
+use deepgemm::kernels::{oracle_gemm_f32, CodeMat, GemmPlan, Lut16F32Tile, PlanOpts};
 use deepgemm::quant::nonuniform::{codebook_mse, kmeans_codebook};
 use deepgemm::quant::{F32Codebook, Lut16F32, Quantizer};
 use deepgemm::util::rng::Rng;
@@ -43,8 +43,9 @@ fn main() {
     let lut = Lut16F32::build(&km, &a_levels);
     let ap = pack(&a_codes, Scheme::D.a_layout());
     let wp = pack(&w, Scheme::D.w_layout());
+    let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), PlanOpts::default());
     let mut out = vec![0f32; m * n];
-    lut16_f32::gemm(&ap, &wp, &lut, &mut out);
+    plan.execute(&ap, &mut out);
     let mut want = vec![0f32; m * n];
     oracle_gemm_f32(&a_codes, &w, &km, &a_levels, &mut want);
     let max_err = out

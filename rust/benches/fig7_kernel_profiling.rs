@@ -96,25 +96,39 @@ mod split {
 
 fn main() {
     let quick = std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1");
-    // Stage breakdown on a real network, one table per --threads entry
-    // (the Lut-Conv share shrinks as the tiled plan fans out).
+    // Stage breakdown on a real network, one table per (backend,
+    // --threads entry): every tiled backend — lut16-d, the int8
+    // baseline and the 4-bit wide LUT — fans out on the same axis, so
+    // the Lut-Conv share shrinks comparably across engines.
     let model_name = if quick { "small_cnn" } else { "resnet18" };
     let graph = zoo::build(model_name, 1000, 0).expect("build");
     let (c, h, w) = graph.input_chw;
     let x = Tensor::random(&[1, c, h, w], 3, -1.0, 1.0);
-    // Compile once — only the forward passes depend on the thread count.
-    let model =
-        CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[x.clone()]).expect("compile");
-    for &nt in &threads_axis(&[1]) {
-        tile::set_default_threads(nt);
-        let mut t = stage_table(&model, &x, if quick { 1 } else { 2 });
-        t.title = format!("{} [threads={nt}]", t.title);
-        print!("{}", t.render());
-        // The bare artifact name stays reserved for the single-thread
-        // paper-comparison numbers; other counts get their own file.
-        let file =
-            if nt == 1 { "fig7_stages".to_string() } else { format!("fig7_stages_t{nt}") };
-        t.write_json(&file).expect("json");
+    let backends = [
+        ("lut16-d", Backend::Lut16(Scheme::D)),
+        ("int8", Backend::Int8),
+        ("lut4b", Backend::LutWide(4)),
+    ];
+    for (bname, backend) in backends {
+        // Compile once per backend — only the forward passes depend on
+        // the thread count.
+        let model = CompiledModel::compile(graph.clone(), backend, &[x.clone()])
+            .expect("compile");
+        for &nt in &threads_axis(&[1]) {
+            tile::set_default_threads(nt);
+            let mut t = stage_table(&model, &x, if quick { 1 } else { 2 });
+            t.title = format!("{} [threads={nt}]", t.title);
+            print!("{}", t.render());
+            // The bare artifact names stay reserved for the lut16-d
+            // paper-comparison numbers; other backends get their own
+            // files.
+            let file = match (bname, nt) {
+                ("lut16-d", 1) => "fig7_stages".to_string(),
+                ("lut16-d", _) => format!("fig7_stages_t{nt}"),
+                _ => format!("fig7_stages_{bname}_t{nt}"),
+            };
+            t.write_json(&file).expect("json");
+        }
     }
 
     // Intra-LutConv split (paper: unpack ≈ 80% of Lut-Conv).

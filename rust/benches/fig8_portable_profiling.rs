@@ -11,7 +11,7 @@
 use deepgemm::bench::{support, BenchOpts, Table};
 use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::{Backend, GemmSize};
+use deepgemm::kernels::{tile, Backend, GemmSize};
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::profiling::{Stage, StageProfile};
 use deepgemm::util::geomean;
@@ -23,6 +23,9 @@ fn main() {
         max_samples: 30,
         ..BenchOpts::from_env()
     };
+    // The portable kernel is single-threaded scalar; pin its tiled
+    // competitors to one worker so the comparison stays one-core.
+    tile::set_default_threads(1);
     // Stage profile with the portable kernel (small_cnn keeps the scalar
     // path tractable — the RPi in the paper is ~20x slower than its x86).
     let graph = zoo::build("small_cnn", 10, 0).expect("build");

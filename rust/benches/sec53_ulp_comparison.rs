@@ -10,7 +10,7 @@
 
 use deepgemm::bench::{support, BenchOpts, Table};
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::{Backend, GemmSize};
+use deepgemm::kernels::{tile, Backend, GemmSize};
 use deepgemm::quant::{IntCodebook, Lut16};
 use deepgemm::util::geomean;
 
@@ -21,6 +21,9 @@ fn main() {
         max_samples: 40,
         ..BenchOpts::from_env()
     };
+    // Bit-serial and ULPPACK remain row-streaming single-thread; pin
+    // the tiled backends to one worker so the §5.3 race stays fair.
+    tile::set_default_threads(1);
     // (1) method comparison on MobileNetV1 shapes.
     let layers = support::model_gemms("mobilenet_v1").expect("inventory");
     let methods = [

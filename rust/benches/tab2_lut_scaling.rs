@@ -6,12 +6,22 @@
 //! from 2-bit (1 shuffle) to 3-bit (2 tables + blends) to 4-bit (16
 //! tables + compare/mask).
 
-use deepgemm::bench::{support, BenchOpts, Table};
-use deepgemm::kernels::{Backend, GemmSize};
+use deepgemm::bench::{support, threads_axis, BenchOpts, Table};
+use deepgemm::kernels::{tile, Backend, GemmSize};
 use deepgemm::quant::{IntCodebook, Lut16};
 
 fn main() {
     let opts = BenchOpts::from_env();
+    // Kernel-level comparison: single-core like the paper unless a
+    // --threads override is given (all backends run tiled plans). This
+    // bench has no thread axis — a multi-value list collapses to its
+    // maximum, loudly.
+    let taxis = threads_axis(&[1]);
+    let nt = *taxis.last().unwrap();
+    if taxis.len() > 1 {
+        eprintln!("[tab2] no thread axis here; measuring at the max, --threads {nt}");
+    }
+    tile::set_default_threads(nt);
     let size = GemmSize::new(128, 64, 576);
     let mut t = Table::new(
         "Tab 2 — scaling LUT-16 to larger bitwidths",
@@ -55,6 +65,11 @@ fn main() {
         "paper Tab.2: entries 16/64/256, size 128/512/2048 bits, regs 1/2/8, all fit L1; gemm at (M,N,K)=({},{},{})",
         size.m, size.n, size.k
     ));
+    t.note(format!("tiled plans at {nt} worker thread(s) (paper setting: 1)"));
     print!("{}", t.render());
-    t.write_json("tab2_lut_scaling").expect("write json");
+    // Bare artifact name stays reserved for the single-thread
+    // paper-setting numbers (same convention as fig7).
+    let file =
+        if nt == 1 { "tab2_lut_scaling".to_string() } else { format!("tab2_lut_scaling_t{nt}") };
+    t.write_json(&file).expect("write json");
 }

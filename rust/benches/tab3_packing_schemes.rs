@@ -7,13 +7,23 @@
 //! b–d differ in detail from the paper's (see kernels::pack docs); both
 //! count sets are printed side by side.
 
-use deepgemm::bench::{bench, support, BenchOpts, Table};
+use deepgemm::bench::{bench, support, threads_axis, BenchOpts, Table};
 use deepgemm::kernels::pack::{self, Scheme};
-use deepgemm::kernels::{Backend, CodeMat, GemmSize};
+use deepgemm::kernels::{tile, Backend, CodeMat, GemmSize};
 use deepgemm::profiling::icount::{paper_tab3, scheme_icount};
 
 fn main() {
     let opts = BenchOpts::from_env();
+    // Scheme comparison at one worker (the paper's single-core setting)
+    // unless --threads overrides it; all schemes run tiled plans. This
+    // bench has no thread axis — a multi-value list collapses to its
+    // maximum, loudly.
+    let taxis = threads_axis(&[1]);
+    let nt = *taxis.last().unwrap();
+    if taxis.len() > 1 {
+        eprintln!("[tab3] no thread axis here; measuring at the max, --threads {nt}");
+    }
+    tile::set_default_threads(nt);
     let size = GemmSize::new(128, 64, 1152);
     let mut t = Table::new(
         "Tab 3 — packing schemes: instructions per output (ours | paper) + measured",
@@ -51,8 +61,16 @@ fn main() {
         size.m, size.n, size.k
     ));
     t.note("scheme c trades 4x weight bytes for zero unpack shifts; d nibble-packs both operands (2x bytes)");
+    t.note(format!("tiled plans at {nt} worker thread(s) (paper setting: 1)"));
     print!("{}", t.render());
-    t.write_json("tab3_packing_schemes").expect("write json");
+    // Bare artifact name stays reserved for the single-thread
+    // paper-setting numbers (same convention as fig7).
+    let file = if nt == 1 {
+        "tab3_packing_schemes".to_string()
+    } else {
+        format!("tab3_packing_schemes_t{nt}")
+    };
+    t.write_json(&file).expect("write json");
 
     // Sanity: measured ordering must put d at or near the front.
     let times: Vec<f64> = t.rows.iter().map(|(_, v)| v[6]).collect();

@@ -6,9 +6,9 @@
 //! Expected shape on this testbed: LUT-16 > 1× everywhere except very
 //! small K, gap growing with K (the kernel is vectorized along K).
 
-use deepgemm::bench::{support, BenchOpts, Table};
+use deepgemm::bench::{support, threads_axis, BenchOpts, Table};
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::Backend;
+use deepgemm::kernels::{tile, Backend};
 use deepgemm::util::geomean;
 
 fn main() {
@@ -18,6 +18,16 @@ fn main() {
         max_samples: 40,
         ..BenchOpts::from_env()
     };
+    // Both engines execute tiled plans; pin to one worker (the paper's
+    // single-core setting) unless --threads overrides it. This bench
+    // has no thread axis — a multi-value list collapses to its maximum,
+    // loudly.
+    let taxis = threads_axis(&[1]);
+    let nt = *taxis.last().unwrap();
+    if taxis.len() > 1 {
+        eprintln!("[tab4] no thread axis here; measuring at the max, --threads {nt}");
+    }
+    tile::set_default_threads(nt);
     let models = [
         ("mobilenet_v1", 1.74),
         ("resnet18", 1.64),
@@ -57,11 +67,18 @@ fn main() {
         all_geo.push(geo);
         fig5.note(format!("geomean speedup = {geo:.3} (paper: {paper})"));
         print!("{}", fig5.render());
-        fig5.write_json(&format!("fig5_{model}")).expect("write json");
+        // Bare artifact names stay reserved for the single-thread
+        // paper-setting numbers (same convention as fig7).
+        let file =
+            if nt == 1 { format!("fig5_{model}") } else { format!("fig5_{model}_t{nt}") };
+        fig5.write_json(&file).expect("write json");
         summary.row(model, vec![geo, paper]);
     }
     summary.row("average", vec![geomean(&all_geo), 1.66]);
     summary.note("backend lut16-d (scheme d) vs QNNPACK-style int8 (unpack+pmaddwd)");
+    summary.note(format!("both tiled, at {nt} worker thread(s) (paper setting: 1)"));
     print!("{}", summary.render());
-    summary.write_json("tab4_geomeans").expect("write json");
+    let file =
+        if nt == 1 { "tab4_geomeans".to_string() } else { format!("tab4_geomeans_t{nt}") };
+    summary.write_json(&file).expect("write json");
 }

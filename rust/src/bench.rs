@@ -254,16 +254,20 @@ mod tests {
 pub mod support {
     use crate::kernels::pack::{self, Scheme};
     use crate::kernels::{
-        bitserial, fp32, int8, lut16, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend,
-        CodeMat, GemmSize,
+        bitserial, fp32, int8, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan,
+        GemmSize, Int8Tile, Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts,
     };
     use crate::quant::{F32Codebook, IntCodebook, Lut16, Lut16F32, Lut65k};
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     /// A ready-to-run GEMM problem for one backend: calling `run`
     /// executes exactly one GEMM (activation packing is *excluded* — the
     /// per-layer comparisons time the kernel itself, as the paper's
-    /// Fig. 5 does; end-to-end costs are covered by tab5/fig7).
+    /// Fig. 5 does; end-to-end costs are covered by tab5/fig7). The
+    /// LUT backends and INT8 execute tiled [`GemmPlan`]s; worker count
+    /// follows the process-wide `--threads` knob (kernel-level benches
+    /// pin it to one thread to match the paper's single-core setting).
     pub struct PreparedGemm {
         pub size: GemmSize,
         pub backend: Backend,
@@ -300,10 +304,12 @@ pub mod support {
                 let mut rng = Rng::new(seed);
                 let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
                 let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
-                let a = int8::A8::from_codes(&acodes, m, k, 128);
-                let w = int8::W8::from_values(&wvals, n, k);
+                let (wp, row_sums) = int8::pack_weights_i8(&wvals, n, k);
+                let plan = GemmPlan::new(&wp, Int8Tile::new(128, row_sums), PlanOpts::default());
+                let am = CodeMat::from_data(m, k, 8, acodes);
+                let ap = pack::pack(&am, pack::Layout::Int8);
                 Box::new(move || {
-                    int8::gemm(&a, &w, &mut out_i);
+                    plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
                 })
             }
@@ -315,8 +321,9 @@ pub mod support {
                 let lut = Lut16::build(&cb, &acb);
                 let ap = pack::pack_activations(&a, scheme);
                 let wp = pack::pack_weights(&w, scheme);
+                let plan = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut), PlanOpts::default());
                 Box::new(move || {
-                    lut16::gemm(&ap, &wp, &lut, scheme, &mut out_i);
+                    plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
                 })
             }
@@ -328,8 +335,9 @@ pub mod support {
                 let lut = Lut16::build(&cb, &acb);
                 let ap = lut16_wide::pack_wide(&a);
                 let wp = lut16_wide::pack_wide(&w);
+                let plan = GemmPlan::new(&wp, LutWideTile::new(lut), PlanOpts::default());
                 Box::new(move || {
-                    lut16_wide::gemm(&ap, &wp, &lut, &mut out_i);
+                    plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
                 })
             }
@@ -338,11 +346,12 @@ pub mod support {
                 let acb = IntCodebook::unsigned(2);
                 let a = CodeMat::random(m, k, 2, seed);
                 let w = CodeMat::random(n, k, 2, seed ^ 1);
-                let lut = Lut65k::build(&cb, &acb);
+                let lut = Arc::new(Lut65k::build(&cb, &acb));
                 let ap = lut65k::pack_dense(&a);
                 let wp = lut65k::pack_dense(&w);
+                let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), PlanOpts::default());
                 Box::new(move || {
-                    lut65k::gemm(&ap, &wp, &lut, &mut out_i);
+                    plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
                 })
             }
@@ -354,9 +363,10 @@ pub mod support {
                 let lut = Lut16F32::build(&wcb, &acb);
                 let ap = pack::pack(&a, Scheme::D.a_layout());
                 let wp = pack::pack(&w, Scheme::D.w_layout());
+                let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), PlanOpts::default());
                 let mut out = vec![0f32; m * n];
                 Box::new(move || {
-                    lut16_f32::gemm(&ap, &wp, &lut, &mut out);
+                    plan.execute(&ap, &mut out);
                     std::hint::black_box(&out);
                 })
             }

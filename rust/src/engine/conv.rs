@@ -3,23 +3,30 @@
 
 use crate::kernels::pack::{self, Packed, Scheme};
 use crate::kernels::{
-    bitserial, int8, lut16_f32, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan,
-    PlanOpts,
+    bitserial, int8, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan, Int8Tile,
+    Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts,
 };
 use crate::nn::im2col::im2col_codes_append;
 use crate::nn::{ConvSpec, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::{uniform::Quantizer, F32Codebook, Lut16, Lut16F32, Lut65k};
+use std::sync::Arc;
 
 /// Offline-prepared weights for one conv layer (one entry per group).
+/// Every table-driven backend and the INT8 baseline hold tiled
+/// [`GemmPlan`]s — weight panels repacked once here, at compile time —
+/// so they all execute cache-blocked, register-tiled and multi-threaded.
 pub enum PreparedWeights {
-    /// LUT-16 runs through the tiled plan/execute layer: weight panels
-    /// are repacked once here, at compile time.
-    Lut16 { plans: Vec<GemmPlan>, lut: Lut16, scheme: Scheme },
-    LutWide { packed: Vec<Packed>, lut: Lut16 },
-    Lut65k { packed: Vec<Packed>, lut: Lut65k },
-    Lut16F32 { packed: Vec<Packed>, lut: Lut16F32 },
-    Int8 { w: Vec<int8::W8> },
+    /// 2-bit LUT-16 plans (schemes a–d).
+    Lut16 { plans: Vec<GemmPlan<Lut16Tile>> },
+    /// 3/4-bit wide-LUT plans.
+    LutWide { plans: Vec<GemmPlan<LutWideTile>> },
+    /// LUT-65k plans (the 64 KB table is shared across groups).
+    Lut65k { plans: Vec<GemmPlan<Lut65kTile>> },
+    /// f32-entry LUT plans (non-uniform quantization).
+    Lut16F32 { plans: Vec<GemmPlan<Lut16F32Tile>> },
+    /// INT8 baseline plans (zero-point fold baked into the kernel).
+    Int8 { plans: Vec<GemmPlan<Int8Tile>> },
     BitSerial { planes: Vec<bitserial::Planes>, w_code_sums: Vec<Vec<i32>> },
     Ulp { packed: Vec<ulppack::UlpPacked>, w_code_sums: Vec<Vec<i32>> },
     Portable { packed: Vec<Packed>, lut: Lut16 },
@@ -29,12 +36,12 @@ impl PreparedWeights {
     /// Bytes held by the packed weight representation (model-size metric).
     pub fn packed_bytes(&self) -> usize {
         match self {
-            PreparedWeights::Lut16 { plans, .. } => plans.iter().map(|p| p.packed_bytes()).sum(),
-            PreparedWeights::LutWide { packed, .. }
-            | PreparedWeights::Lut65k { packed, .. }
-            | PreparedWeights::Lut16F32 { packed, .. }
-            | PreparedWeights::Portable { packed, .. } => packed.iter().map(|p| p.bytes()).sum(),
-            PreparedWeights::Int8 { w } => w.iter().map(|x| x.data.len()).sum(),
+            PreparedWeights::Lut16 { plans } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::LutWide { plans } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::Lut65k { plans } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::Lut16F32 { plans } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::Int8 { plans } => plans.iter().map(|p| p.packed_bytes()).sum(),
+            PreparedWeights::Portable { packed, .. } => packed.iter().map(|p| p.bytes()).sum(),
             PreparedWeights::BitSerial { planes, .. } => {
                 planes.iter().map(|p| p.data.len() * 8).sum()
             }
@@ -100,41 +107,68 @@ impl CompiledConv {
         let prepared = match backend {
             Backend::Lut16(scheme) => {
                 let (w_cb, a_cb) = cbs();
+                let lut = Lut16::build(&w_cb, &a_cb);
                 PreparedWeights::Lut16 {
                     plans: group_codes
                         .iter()
                         .map(|c| {
-                            GemmPlan::new(&pack::pack_weights(c, scheme), scheme, PlanOpts::default())
+                            GemmPlan::new(
+                                &pack::pack_weights(c, scheme),
+                                Lut16Tile::new(scheme, lut.clone()),
+                                PlanOpts::default(),
+                            )
                         })
                         .collect(),
-                    lut: Lut16::build(&w_cb, &a_cb),
-                    scheme,
                 }
             }
             Backend::LutWide(_) => {
                 let (w_cb, a_cb) = cbs();
+                let lut = Lut16::build(&w_cb, &a_cb);
                 PreparedWeights::LutWide {
-                    packed: group_codes.iter().map(lut16_wide::pack_wide).collect(),
-                    lut: Lut16::build(&w_cb, &a_cb),
+                    plans: group_codes
+                        .iter()
+                        .map(|c| {
+                            GemmPlan::new(
+                                &lut16_wide::pack_wide(c),
+                                LutWideTile::new(lut.clone()),
+                                PlanOpts::default(),
+                            )
+                        })
+                        .collect(),
                 }
             }
             Backend::Lut65k => {
                 let (w_cb, a_cb) = cbs();
+                let lut = Arc::new(Lut65k::build(&w_cb, &a_cb));
                 PreparedWeights::Lut65k {
-                    packed: group_codes.iter().map(lut65k::pack_dense).collect(),
-                    lut: Lut65k::build(&w_cb, &a_cb),
+                    plans: group_codes
+                        .iter()
+                        .map(|c| {
+                            GemmPlan::new(
+                                &lut65k::pack_dense(c),
+                                Lut65kTile::new(lut.clone()),
+                                PlanOpts::default(),
+                            )
+                        })
+                        .collect(),
                 }
             }
             Backend::Lut16F32 => {
                 let (w_cb, a_cb) = cbs();
                 let w_f = F32Codebook::from_int(&w_cb, w_scale);
                 let a_f = F32Codebook::from_int(&a_cb, act_q.params.scale);
+                let lut = Lut16F32::build(&w_f, &a_f);
                 PreparedWeights::Lut16F32 {
-                    packed: group_codes
+                    plans: group_codes
                         .iter()
-                        .map(|c| pack::pack(c, Scheme::D.w_layout()))
+                        .map(|c| {
+                            GemmPlan::new(
+                                &pack::pack(c, Scheme::D.w_layout()),
+                                Lut16F32Tile::new(lut.clone()),
+                                PlanOpts::default(),
+                            )
+                        })
                         .collect(),
-                    lut: Lut16F32::build(&w_f, &a_f),
                 }
             }
             Backend::Portable => {
@@ -148,16 +182,22 @@ impl CompiledConv {
                 }
             }
             Backend::Int8 => {
-                // i8 values are the centered codes (code − zp).
-                let w = group_codes
+                // i8 values are the centered codes (code − zp); the
+                // activation zero-point fold is baked into the kernel.
+                let plans = group_codes
                     .iter()
                     .map(|c| {
                         let vals: Vec<i8> =
                             c.data.iter().map(|&code| (code as i32 - w_zp) as i8).collect();
-                        int8::W8::from_values(&vals, og, kk)
+                        let (packed, row_sums) = int8::pack_weights_i8(&vals, og, kk);
+                        GemmPlan::new(
+                            &packed,
+                            Int8Tile::new(a_zp, row_sums),
+                            PlanOpts::default(),
+                        )
                     })
                     .collect();
-                PreparedWeights::Int8 { w }
+                PreparedWeights::Int8 { plans }
             }
             Backend::BitSerial => {
                 let planes = group_codes
@@ -302,33 +342,33 @@ impl CompiledConv {
     ) -> crate::Result<Acc> {
         let mut acc = vec![0i32; m * og];
         match &self.weights {
-            PreparedWeights::Lut16 { plans, lut, scheme } => {
-                let a = prof.time(Stage::Pack, || pack::pack_activations(col, *scheme));
-                prof.time(Stage::LutConv, || plans[g].execute(&a, lut, &mut acc));
+            PreparedWeights::Lut16 { plans } => {
+                let plan = &plans[g];
+                let a =
+                    prof.time(Stage::Pack, || pack::pack_activations(col, plan.kernel.scheme));
+                prof.time(Stage::LutConv, || plan.execute(&a, &mut acc));
             }
-            PreparedWeights::LutWide { packed, lut } => {
+            PreparedWeights::LutWide { plans } => {
                 let a = prof.time(Stage::Pack, || lut16_wide::pack_wide(col));
-                prof.time(Stage::LutConv, || lut16_wide::gemm(&a, &packed[g], lut, &mut acc));
+                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
             }
-            PreparedWeights::Lut65k { packed, lut } => {
+            PreparedWeights::Lut65k { plans } => {
                 let a = prof.time(Stage::Pack, || lut65k::pack_dense(col));
-                prof.time(Stage::LutConv, || lut65k::gemm(&a, &packed[g], lut, &mut acc));
+                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
             }
-            PreparedWeights::Lut16F32 { packed, lut } => {
+            PreparedWeights::Lut16F32 { plans } => {
                 let a = prof.time(Stage::Pack, || pack::pack(col, Scheme::D.a_layout()));
                 let mut facc = vec![0f32; m * og];
-                prof.time(Stage::LutConv, || lut16_f32::gemm(&a, &packed[g], lut, &mut facc));
+                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut facc));
                 return Ok(Acc::F32(facc));
             }
             PreparedWeights::Portable { packed, lut } => {
                 let a = prof.time(Stage::Pack, || pack::pack(col, pack::Layout::Dense));
                 prof.time(Stage::LutConv, || portable::gemm(&a, &packed[g], lut, &mut acc));
             }
-            PreparedWeights::Int8 { w } => {
-                let a = prof.time(Stage::Pack, || {
-                    int8::A8::from_codes(&col.data, m, kk, self.a_zp)
-                });
-                prof.time(Stage::LutConv, || int8::gemm(&a, &w[g], &mut acc));
+            PreparedWeights::Int8 { plans } => {
+                let a = prof.time(Stage::Pack, || pack::pack(col, pack::Layout::Int8));
+                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
             }
             PreparedWeights::BitSerial { planes, w_code_sums } => {
                 let (a, a_sums) = prof.time(Stage::Pack, || {

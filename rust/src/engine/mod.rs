@@ -13,21 +13,23 @@
 //! Compilation follows a plan/execute split (see
 //! [`crate::kernels::tile`]): everything derivable from the *weights*
 //! alone happens once in [`CompiledConv::prepare`] — quantization,
-//! offline packing, LUT construction, and for the LUT-16 backend a
-//! [`crate::kernels::GemmPlan`] whose weight panels are repacked
-//! panel-contiguously for the cache-blocked, register-tiled,
-//! multi-threaded execution path. At request time only
+//! offline packing, LUT construction, and for every table-driven
+//! backend *and* the INT8 baseline a [`crate::kernels::GemmPlan`] whose
+//! weight panels are repacked panel-contiguously for the cache-blocked,
+//! register-tiled, multi-threaded execution path. At request time only
 //! activation-dependent work runs, and [`CompiledModel::forward_batch`]
 //! fuses a whole batch into the GEMM's M dimension so all requests in a
 //! dynamic batch share one planned GEMM per layer.
 //!
-//! **How a new backend opts into tiling:** pack weights into the
-//! `Packed` layout its scheme declares, build a `GemmPlan` in its
-//! `prepare` arm (instead of storing raw packed rows), and call
+//! **How a new backend opts into tiling:** implement
+//! [`crate::kernels::TileKernel`] next to its packing code (see the
+//! walkthrough in [`crate::kernels`]), build a `GemmPlan` from the
+//! packed weights + kernel in its `prepare` arm, and call
 //! `plan.execute(..)` in `gemm_group`. Worker-thread count is the
 //! process-wide knob (`--threads` on the CLI, `ServerConfig::threads`
-//! when serving, `crate::kernels::tile::set_default_threads` directly);
-//! backends that keep their row-streaming kernels simply ignore it.
+//! when serving, [`crate::kernels::tile::set_default_threads`]
+//! directly); the few remaining row-streaming baselines (bit-serial,
+//! ULPPACK, the portable scalar kernel) simply ignore it.
 
 mod conv;
 

@@ -6,112 +6,108 @@
 //! with `pmaddwd`; the activation zero-point is folded out via the
 //! precomputed per-column weight sums (`Σ a·w − za·Σw`). We reproduce
 //! exactly that structure so the baseline is honest: it is the fastest
-//! *faithful* rendering of the library the paper measured against.
+//! *faithful* rendering of the library the paper measured against — and
+//! [`Int8Tile`] runs it through the same cache-blocked, panel-repacked,
+//! multi-threaded [`crate::kernels::GemmPlan`] driver as the LUT
+//! kernels, so every LUT-vs-INT8 number is a tiled-vs-tiled comparison.
+//!
+//! Operands use [`Layout::Int8`] (one byte per value, K padded to
+//! [`crate::kernels::K_BLOCK`] with zeros): activations store their raw
+//! u8 codes, weights their centered i8 values bit-cast to u8. Zero
+//! padding is neutral because padded weights are 0 and the zero-point
+//! fold uses row sums over the real K only.
 
-use crate::util::align_up;
+use super::pack::{pack, Layout, Packed};
+use super::tile::{TileKernel, MR, NR};
+use super::CodeMat;
 
-/// INT8 values-per-inner-iteration (one 32-byte AVX2 load).
-pub const K_BLOCK8: usize = 32;
-
-/// Packed u8 activation matrix, rows × k (padded), plus zero point.
-#[derive(Clone, Debug)]
-pub struct A8 {
-    pub rows: usize,
-    pub k: usize,
-    pub k_padded: usize,
-    pub zero_point: i32,
-    pub data: Vec<u8>,
+/// Pack centered i8 weight values (transposed: `rows` output columns ×
+/// `k`) into the INT8 plan layout, returning the packed buffer and the
+/// per-row value sums used for the zero-point fold (computed offline,
+/// as QNNPACK does).
+pub fn pack_weights_i8(values: &[i8], rows: usize, k: usize) -> (Packed, Vec<i32>) {
+    assert_eq!(values.len(), rows * k);
+    let codes: Vec<u8> = values.iter().map(|&v| v as u8).collect();
+    let cm = CodeMat::from_data(rows, k, 8, codes);
+    let packed = pack(&cm, Layout::Int8);
+    let row_sums = (0..rows)
+        .map(|r| values[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum())
+        .collect();
+    (packed, row_sums)
 }
 
-impl A8 {
-    pub fn new(rows: usize, k: usize, zero_point: i32) -> Self {
-        let k_padded = align_up(k.max(1), K_BLOCK8);
-        Self { rows, k, k_padded, zero_point, data: vec![0; rows * k_padded] }
-    }
-
-    pub fn from_codes(codes: &[u8], rows: usize, k: usize, zero_point: i32) -> Self {
-        assert_eq!(codes.len(), rows * k);
-        let mut a = Self::new(rows, k, zero_point);
-        for r in 0..rows {
-            let (kp, dst) = (a.k_padded, &mut a.data);
-            dst[r * kp..r * kp + k].copy_from_slice(&codes[r * k..(r + 1) * k]);
-            // Padding with the zero-point makes padded products exactly
-            // zero after the fold (pad contributes za·w − za·w).
-            for p in dst[r * kp + k..(r + 1) * kp].iter_mut() {
-                *p = zero_point as u8;
-            }
-        }
-        a
-    }
-
-    #[inline]
-    pub fn row(&self, r: usize) -> &[u8] {
-        &self.data[r * self.k_padded..(r + 1) * self.k_padded]
-    }
-}
-
-/// Packed i8 weight matrix (transposed: n rows of k), with per-row sums
-/// for zero-point folding (computed offline, as QNNPACK does).
+/// The INT8 tile kernel: `pmaddwd` MACs over u8 activations × i8
+/// weights, zero-point folded per output column in the epilogue.
 #[derive(Clone, Debug)]
-pub struct W8 {
-    pub rows: usize,
-    pub k: usize,
-    pub k_padded: usize,
-    pub data: Vec<i8>,
+pub struct Int8Tile {
+    /// Activation zero-point (code space).
+    pub za: i32,
+    /// Per-output-column weight value sums (over the real K).
     pub row_sums: Vec<i32>,
 }
 
-impl W8 {
-    pub fn from_values(values: &[i8], rows: usize, k: usize) -> Self {
-        assert_eq!(values.len(), rows * k);
-        let k_padded = align_up(k.max(1), K_BLOCK8);
-        let mut data = vec![0i8; rows * k_padded];
-        let mut row_sums = vec![0i32; rows];
-        for r in 0..rows {
-            data[r * k_padded..r * k_padded + k].copy_from_slice(&values[r * k..(r + 1) * k]);
-            row_sums[r] = values[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum();
-        }
-        Self { rows, k, k_padded, data, row_sums }
-    }
-
-    #[inline]
-    pub fn row(&self, r: usize) -> &[i8] {
-        &self.data[r * self.k_padded..(r + 1) * self.k_padded]
+impl Int8Tile {
+    /// Build the kernel from the activation zero-point and the weight
+    /// row sums returned by [`pack_weights_i8`].
+    pub fn new(za: i32, row_sums: Vec<i32>) -> Int8Tile {
+        Int8Tile { za, row_sums }
     }
 }
 
-/// Scalar reference: `out[m][n] = Σ_k (a[m][k] − za) · w[n][k]`.
-pub fn gemm_scalar(a: &A8, w: &W8, out: &mut [i32]) {
-    assert_eq!(a.k, w.k);
-    assert_eq!(out.len(), a.rows * w.rows);
-    for m in 0..a.rows {
-        let arow = a.row(m);
-        for n in 0..w.rows {
-            let wrow = w.row(n);
-            let mut acc = 0i64;
-            for k in 0..a.k {
-                acc += (arow[k] as i32 - a.zero_point) as i64 * wrow[k] as i64;
-            }
-            out[m * w.rows + n] = acc as i32;
-        }
-    }
-}
+impl TileKernel for Int8Tile {
+    type Acc = i32;
 
-/// Dispatch to AVX2 when available.
-pub fn gemm(a: &A8, w: &W8, out: &mut [i32]) {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            unsafe { avx2::gemm(a, w, out) };
+    fn a_layout(&self) -> Layout {
+        Layout::Int8
+    }
+
+    fn w_layout(&self) -> Layout {
+        Layout::Int8
+    }
+
+    #[allow(unused_variables)]
+    fn tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        use_avx2: bool,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [[i32; NR]; MR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2 {
+            // SAFETY: AVX2 availability checked by the caller; fragments
+            // hold exactly `vals` bytes (one per value).
+            unsafe { avx2::tile_i8(ar, wf, vals, mt, nt, sums) };
             return;
         }
+        // Portable scalar fallback: bytes are values, no decode needed.
+        for i in 0..mt {
+            let arow = &ar[i][..vals];
+            for j in 0..nt {
+                let mut acc = 0i64;
+                for (wb, ab) in wf[j][..vals].iter().zip(arow.iter()) {
+                    acc += (*wb as i8) as i64 * *ab as i64;
+                }
+                sums[i][j] = acc as i32;
+            }
+        }
     }
-    gemm_scalar(a, w, out);
+
+    fn epilogue(&self, col: usize, _a_pad: usize) -> i32 {
+        // Fold the zero-point: Σ(a−za)w = Σ a·w − za·Σw. K padding is
+        // neutral (padded weights are 0; row sums span the real K only).
+        self.za.wrapping_mul(self.row_sums[col])
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::*;
     use std::arch::x86_64::*;
 
     #[inline]
@@ -125,37 +121,41 @@ mod avx2 {
         _mm_cvtsi128_si32(s)
     }
 
-    /// QNNPACK-style microkernel: unpack u8/i8 → i16, pmaddwd, i32 adds;
-    /// zero-point folded via precomputed weight row sums.
+    /// QNNPACK-style tile micro-kernel: each 32-byte activation load is
+    /// unpacked to i16 lanes once and `pmaddwd`-accumulated against all
+    /// four weight columns (four independent i32 accumulator chains).
     #[target_feature(enable = "avx2")]
-    pub unsafe fn gemm(a: &A8, w: &W8, out: &mut [i32]) {
+    pub(crate) unsafe fn tile_i8(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        sums: &mut [[i32; 4]; 4],
+    ) {
         let zero = _mm256_setzero_si256();
-        for m in 0..a.rows {
-            let arow = a.row(m);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
-                let mut acc = _mm256_setzero_si256();
-                let mut kb = 0usize;
-                while kb < a.k_padded {
-                    let va = _mm256_loadu_si256(arow.as_ptr().add(kb) as *const __m256i);
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let mut kb = 0usize;
+            while kb < vals {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(kb) as *const __m256i);
+                // u8 → u16 (zero extend): activations are unsigned.
+                let a_lo = _mm256_unpacklo_epi8(va, zero);
+                let a_hi = _mm256_unpackhi_epi8(va, zero);
+                for (j, wrow) in wf.iter().enumerate().take(nt) {
                     let vw = _mm256_loadu_si256(wrow.as_ptr().add(kb) as *const __m256i);
-                    // u8 → u16 (zero extend): activations are unsigned.
-                    let a_lo = _mm256_unpacklo_epi8(va, zero);
-                    let a_hi = _mm256_unpackhi_epi8(va, zero);
                     // i8 → i16 (sign extend via compare trick, QNNPACK's
                     // punpck + sign-mask idiom).
                     let wsign = _mm256_cmpgt_epi8(zero, vw);
                     let w_lo = _mm256_unpacklo_epi8(vw, wsign);
                     let w_hi = _mm256_unpackhi_epi8(vw, wsign);
-                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_lo, w_lo));
-                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_hi, w_hi));
-                    kb += K_BLOCK8;
+                    acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_lo, w_lo));
+                    acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_hi, w_hi));
                 }
-                let dot = hsum_epi32(acc);
-                // Fold the zero-point: Σ(a−za)w = Σ a·w − za·Σw.
-                // Padding used a = za, w = 0, so it contributed nothing,
-                // but za·Σw uses the true row sum over real k only.
-                out[m * w.rows + n] = dot - a.zero_point * w.row_sums[n];
+                kb += 32;
+            }
+            for (j, a) in acc.iter().enumerate().take(nt) {
+                sums[i][j] = hsum_epi32(*a);
             }
         }
     }
@@ -164,23 +164,49 @@ mod avx2 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::{GemmPlan, PlanOpts};
     use crate::util::rng::Rng;
 
-    fn random_problem(m: usize, n: usize, k: usize, seed: u64) -> (A8, W8) {
+    /// Scalar reference: `out[m][n] = Σ_k (a[m][k] − za) · w[n][k]`.
+    fn reference(acodes: &[u8], wvals: &[i8], za: i32, m: usize, n: usize, k: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0i64;
+                for t in 0..k {
+                    acc += (acodes[mi * k + t] as i32 - za) as i64 * wvals[ni * k + t] as i64;
+                }
+                out[mi * n + ni] = acc as i32;
+            }
+        }
+        out
+    }
+
+    fn run_plan(acodes: &[u8], wvals: &[i8], za: i32, m: usize, n: usize, k: usize) -> Vec<i32> {
+        let (wp, row_sums) = pack_weights_i8(wvals, n, k);
+        let plan = GemmPlan::new(&wp, Int8Tile::new(za, row_sums), PlanOpts::default());
+        let am = CodeMat::from_data(m, k, 8, acodes.to_vec());
+        let ap = pack(&am, Layout::Int8);
+        let mut out = vec![0i32; m * n];
+        plan.execute(&ap, &mut out);
+        out
+    }
+
+    fn random_problem(m: usize, n: usize, k: usize, seed: u64) -> (Vec<u8>, Vec<i8>) {
         let mut rng = Rng::new(seed);
         let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
         let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
-        (A8::from_codes(&acodes, m, k, 128), W8::from_values(&wvals, n, k))
+        (acodes, wvals)
     }
 
     #[test]
-    fn avx2_matches_scalar() {
-        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 4, 31), (2, 5, 32), (4, 3, 33), (2, 2, 1000)] {
+    fn plan_matches_reference() {
+        for &(m, n, k) in
+            &[(1usize, 1usize, 1usize), (3, 4, 31), (2, 5, 32), (4, 3, 33), (2, 2, 1000)]
+        {
             let (a, w) = random_problem(m, n, k, k as u64 * 31 + 7);
-            let mut want = vec![0i32; m * n];
-            gemm_scalar(&a, &w, &mut want);
-            let mut got = vec![0i32; m * n];
-            gemm(&a, &w, &mut got);
+            let want = reference(&a, &w, 128, m, n, k);
+            let got = run_plan(&a, &w, 128, m, n, k);
             assert_eq!(got, want, "m={m} n={n} k={k}");
         }
     }
@@ -188,11 +214,8 @@ mod tests {
     #[test]
     fn zero_point_fold_by_hand() {
         // a = [130, 126], za = 128 → centered (2, -2); w = [3, 5].
-        let a = A8::from_codes(&[130, 126], 1, 2, 128);
-        let w = W8::from_values(&[3, 5], 1, 2);
-        let mut out = vec![0i32; 1];
-        gemm(&a, &w, &mut out);
-        assert_eq!(out[0], 2 * 3 + (-2) * 5);
+        let got = run_plan(&[130, 126], &[3, 5], 128, 1, 1, 2);
+        assert_eq!(got[0], 2 * 3 + (-2) * 5);
     }
 
     #[test]
@@ -200,21 +223,22 @@ mod tests {
         // 255 × -128 × k: well inside i32 for the K range we use, but
         // exercises the i16 lane boundaries inside pmaddwd.
         let k = 4096;
-        let a = A8::from_codes(&vec![255u8; k], 1, k, 0);
-        let w = W8::from_values(&vec![-128i8; k], 1, k);
-        let mut out = vec![0i32; 1];
-        gemm(&a, &w, &mut out);
-        assert_eq!(out[0], 255 * -128 * k as i32);
+        let got = run_plan(&vec![255u8; k], &vec![-128i8; k], 0, 1, 1, k);
+        assert_eq!(got[0], 255 * -128 * k as i32);
     }
 
     #[test]
     fn padding_is_neutral() {
-        // k = 5 (heavy padding to 32) must equal the k = 5 scalar result.
+        // k = 5 (heavy padding to 128) must equal the k = 5 reference.
         let (a, w) = random_problem(3, 3, 5, 99);
-        let mut want = vec![0i32; 9];
-        gemm_scalar(&a, &w, &mut want);
-        let mut got = vec![0i32; 9];
-        gemm(&a, &w, &mut got);
-        assert_eq!(got, want);
+        assert_eq!(run_plan(&a, &w, 128, 3, 3, 5), reference(&a, &w, 128, 3, 3, 5));
+    }
+
+    #[test]
+    fn weight_row_sums_span_real_k_only() {
+        let (wp, sums) = pack_weights_i8(&[1, 2, 3, -4, 5, -6], 2, 3);
+        assert_eq!(wp.k, 3);
+        assert_eq!(wp.k_padded % crate::kernels::K_BLOCK, 0);
+        assert_eq!(sums, vec![6, -5]);
     }
 }

@@ -15,7 +15,7 @@
 //! differ only in how the index vectors are produced.
 
 use super::pack::{Packed, Scheme};
-use super::{CodeMat, K_BLOCK};
+use super::K_BLOCK;
 use crate::quant::Lut16;
 
 /// Scalar reference implementation — works on any platform, used as the
@@ -52,19 +52,6 @@ pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, scheme: Scheme, out: &mut [i32]
         }
     }
     gemm_scalar(a, w, lut, out);
-}
-
-/// Convenience: quantized codes in, i32 accumulators out (packs
-/// activations on the fly; weights must be pre-packed offline).
-pub fn gemm_from_codes(
-    a_codes: &CodeMat,
-    w_packed: &Packed,
-    lut: &Lut16,
-    scheme: Scheme,
-    out: &mut [i32],
-) {
-    let a = super::pack::pack_activations(a_codes, scheme);
-    gemm(&a, w_packed, lut, scheme, out);
 }
 
 #[cfg(target_arch = "x86_64")]

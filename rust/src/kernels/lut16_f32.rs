@@ -7,44 +7,94 @@
 //! lookup becomes a pair of `vpermps` (8-entry f32 permutes) blended on
 //! index bit 3, and accumulation is `vaddps`. Latency is *independent of
 //! the sign or uniformity of the levels* — the flexibility claim the
-//! §5.3 bench quantifies.
+//! §5.3 bench quantifies. [`Lut16F32Tile`] plugs the lookup loop into
+//! the tiled plan/execute layer ([`crate::kernels::GemmPlan`]) with f32
+//! accumulators; tiling regroups the reduction per K block, so results
+//! can differ from a straight-line sum by normal f32 rounding (the
+//! tests compare against the f64 oracle with a tolerance).
 
-use super::pack::{Layout, Packed};
+use super::pack::{unpack_row, Layout};
+use super::tile::{TileKernel, MR, NR};
 use crate::quant::Lut16F32;
 
-/// Scalar reference.
-pub fn gemm_scalar(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
-    assert_eq!(a.k, w.k);
-    assert_eq!(out.len(), a.rows * w.rows);
-    let k = a.k;
-    let mut ac = vec![0u8; k];
-    let mut wc = vec![0u8; k];
-    for m in 0..a.rows {
-        super::pack::unpack_row(a.row(m), k, a.layout, &mut ac);
-        for n in 0..w.rows {
-            super::pack::unpack_row(w.row(n), k, w.layout, &mut wc);
-            let mut acc = 0f64;
-            for i in 0..k {
-                acc += lut.product(wc[i], ac[i]) as f64;
-            }
-            out[m * w.rows + n] = acc as f32;
-        }
+/// The f32-entry LUT tile kernel (scheme-d layouts: weights
+/// [`Layout::NibbleHi`], activations [`Layout::NibbleLo`]).
+#[derive(Clone, Debug)]
+pub struct Lut16F32Tile {
+    /// 16-entry f32 product table.
+    pub lut: Lut16F32,
+}
+
+impl Lut16F32Tile {
+    /// Wrap a 2-bit f32 LUT into a tile kernel.
+    pub fn new(lut: Lut16F32) -> Lut16F32Tile {
+        assert_eq!(lut.bits, 2, "Lut16F32Tile drives the 2-bit f32-entry LUT kernel");
+        Lut16F32Tile { lut }
     }
 }
 
-/// Dispatch. Requires scheme-d layouts (weights [`Layout::NibbleHi`],
-/// activations [`Layout::NibbleLo`]).
-pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
-    assert_eq!(a.layout, Layout::NibbleLo);
-    assert_eq!(w.layout, Layout::NibbleHi);
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            unsafe { avx2::gemm(a, w, lut, out) };
-            return;
+impl TileKernel for Lut16F32Tile {
+    type Acc = f32;
+
+    fn a_layout(&self) -> Layout {
+        Layout::NibbleLo
+    }
+
+    fn w_layout(&self) -> Layout {
+        Layout::NibbleHi
+    }
+
+    fn prep_panel(
+        &self,
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        kc: usize,
+        w_scratch: &mut [u8],
+    ) {
+        for (j, frag) in wf.iter().enumerate().take(nt) {
+            unpack_row(frag, vals, Layout::NibbleHi, &mut w_scratch[j * kc..j * kc + vals]);
         }
     }
-    gemm_scalar(a, w, lut, out);
+
+    #[allow(unused_variables)]
+    fn tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        use_avx2: bool,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [[f32; NR]; MR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2 {
+            // SAFETY: AVX2 availability checked by the caller; fragments
+            // cover exactly `vals` values in the nibble layouts.
+            unsafe { avx2::tile_f32(ar, wf, &self.lut, vals, mt, nt, sums) };
+            return;
+        }
+        // Portable scalar fallback over the codes staged by `prep_panel`.
+        for i in 0..mt {
+            unpack_row(ar[i], vals, Layout::NibbleLo, &mut a_scratch[..vals]);
+            for j in 0..nt {
+                let wrow = &w_scratch[j * kc..j * kc + vals];
+                let mut s = 0f64;
+                for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
+                    s += self.lut.product(*wc, *ac) as f64;
+                }
+                sums[i][j] = s as f32;
+            }
+        }
+    }
+
+    fn epilogue(&self, _col: usize, a_pad: usize) -> f32 {
+        self.lut.pad_product * a_pad as f32
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -74,17 +124,24 @@ mod avx2 {
         _mm256_blendv_ps(lo, hi, sel)
     }
 
+    /// f32 tile kernel over one K block: the two table registers are
+    /// loaded once per tile and reused across all mt×nt fragment pairs.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn gemm(a: &Packed, w: &Packed, lut: &Lut16F32, out: &mut [f32]) {
+    pub(crate) unsafe fn tile_f32(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        lut: &Lut16F32,
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        sums: &mut [[f32; 4]; 4],
+    ) {
         let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
         let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
         let mf = _mm256_set1_epi8(0x0F);
-        let pad_corr = lut.pad_product * a.pad() as f32;
-        let bytes = a.k_padded / 2;
-        for m in 0..a.rows {
-            let arow = a.row(m);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
+        let bytes = vals / 2;
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            for (j, wrow) in wf.iter().enumerate().take(nt) {
                 let mut acc = _mm256_setzero_ps();
                 let mut off = 0usize;
                 while off < bytes {
@@ -108,7 +165,7 @@ mod avx2 {
                     }
                     off += 32;
                 }
-                out[m * w.rows + n] = hsum_ps(acc) - pad_corr;
+                sums[i][j] = hsum_ps(acc);
             }
         }
     }
@@ -118,7 +175,7 @@ mod avx2 {
 mod tests {
     use super::*;
     use crate::kernels::pack::{pack, Scheme};
-    use crate::kernels::{oracle_gemm_f32, CodeMat};
+    use crate::kernels::{oracle_gemm_f32, CodeMat, GemmPlan, PlanOpts};
     use crate::quant::{F32Codebook, Lut16F32};
     use crate::util::prop::assert_close;
 
@@ -130,12 +187,10 @@ mod tests {
         oracle_gemm_f32(&a, &w, wcb, acb, &mut want);
         let ap = pack(&a, Scheme::D.a_layout());
         let wp = pack(&w, Scheme::D.w_layout());
+        let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), PlanOpts::default());
         let mut got = vec![0f32; m * n];
-        gemm(&ap, &wp, &lut, &mut got);
+        plan.execute(&ap, &mut got);
         assert_close(&got, &want, 1e-3, 1e-4).unwrap();
-        let mut got_s = vec![0f32; m * n];
-        gemm_scalar(&ap, &wp, &lut, &mut got_s);
-        assert_close(&got_s, &want, 1e-3, 1e-4).unwrap();
     }
 
     #[test]

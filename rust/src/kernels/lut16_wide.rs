@@ -1,4 +1,5 @@
-//! LUT-16 generalised to 3-bit and 4-bit operands (paper §3.3, Tab. 2).
+//! LUT-16 generalised to 3-bit and 4-bit operands (paper §3.3, Tab. 2),
+//! as the [`LutWideTile`] micro-kernel of the tiled plan/execute layer.
 //!
 //! - 3-bit: 64-entry table, 6-bit index `(w << 3) | a`; the table spans
 //!   two AVX2 registers — we hold it as four 16-entry sub-tables and
@@ -10,10 +11,14 @@
 //!   table, as Tab. 2 lists).
 //!
 //! Both use the [`Layout::Dense3`]/[`Layout::Dense4`] packings (2 codes
-//! per byte) and the same biased-u8 + `vpsadbw` accumulation as the 2-bit
-//! kernel.
+//! per byte) and the same biased-u8 + `vpsadbw` accumulation as the
+//! 2-bit kernel. One SAD per 32-byte round keeps the accumulation exact
+//! for every table the builder accepts. Execution goes through
+//! [`crate::kernels::GemmPlan`]; there is no standalone row-streaming
+//! driver anymore.
 
-use super::pack::{pack, Layout, Packed};
+use super::pack::{pack, unpack_row, Layout, Packed};
+use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
 use crate::quant::Lut16;
 
@@ -26,39 +31,115 @@ pub fn pack_wide(codes: &CodeMat) -> Packed {
     }
 }
 
-/// Scalar reference for any bitwidth.
-pub fn gemm_scalar(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
-    assert_eq!(a.k, w.k);
-    assert_eq!(out.len(), a.rows * w.rows);
-    let k = a.k;
-    let mut ac = vec![0u8; k];
-    let mut wc = vec![0u8; k];
-    for m in 0..a.rows {
-        super::pack::unpack_row(a.row(m), k, a.layout, &mut ac);
-        for n in 0..w.rows {
-            super::pack::unpack_row(w.row(n), k, w.layout, &mut wc);
-            let mut acc = 0i64;
-            for i in 0..k {
-                acc += lut.product(wc[i], ac[i]) as i64;
-            }
-            out[m * w.rows + n] = acc as i32;
+/// The 3/4-bit wide-LUT tile kernel: multi-register `pshufb` tables with
+/// blend/compare sub-table selection, i32 accumulate.
+#[derive(Clone, Debug)]
+pub struct LutWideTile {
+    /// 64- or 256-entry biased product table (3- or 4-bit codes).
+    pub lut: Lut16,
+}
+
+impl LutWideTile {
+    /// Wrap a 3- or 4-bit LUT into a tile kernel.
+    pub fn new(lut: Lut16) -> LutWideTile {
+        assert!(
+            lut.bits == 3 || lut.bits == 4,
+            "LutWideTile drives the 3/4-bit LUT kernels, got {} bits",
+            lut.bits
+        );
+        LutWideTile { lut }
+    }
+
+    /// Operand bit-width (3 or 4).
+    pub fn bits(&self) -> u32 {
+        self.lut.bits
+    }
+
+    fn layout(&self) -> Layout {
+        if self.lut.bits == 3 {
+            Layout::Dense3
+        } else {
+            Layout::Dense4
         }
     }
 }
 
-pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            match lut.bits {
-                3 => unsafe { avx2::gemm3(a, w, lut, out) },
-                4 => unsafe { avx2::gemm4(a, w, lut, out) },
-                _ => gemm_scalar(a, w, lut, out),
+impl TileKernel for LutWideTile {
+    type Acc = i32;
+
+    fn a_layout(&self) -> Layout {
+        self.layout()
+    }
+
+    fn w_layout(&self) -> Layout {
+        self.layout()
+    }
+
+    fn prep_panel(
+        &self,
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        kc: usize,
+        w_scratch: &mut [u8],
+    ) {
+        let layout = self.layout();
+        for (j, frag) in wf.iter().enumerate().take(nt) {
+            unpack_row(frag, vals, layout, &mut w_scratch[j * kc..j * kc + vals]);
+        }
+    }
+
+    #[allow(unused_variables)]
+    fn tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        use_avx2: bool,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [[i32; NR]; MR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2 {
+            let bias_corr = self.lut.bias as i64 * vals as i64;
+            // SAFETY: AVX2 availability checked by the caller; fragments
+            // cover exactly `vals` values in the Dense3/Dense4 layouts.
+            let raw = unsafe {
+                if self.lut.bits == 3 {
+                    avx2::tile3(ar, wf, &self.lut, vals, mt, nt)
+                } else {
+                    avx2::tile4(ar, wf, &self.lut, vals, mt, nt)
+                }
+            };
+            for (i, row) in raw.iter().enumerate().take(mt) {
+                for (j, s) in row.iter().enumerate().take(nt) {
+                    sums[i][j] = (*s - bias_corr) as i32;
+                }
             }
             return;
         }
+        // Portable scalar fallback over the codes staged by `prep_panel`.
+        let layout = self.layout();
+        for i in 0..mt {
+            unpack_row(ar[i], vals, layout, &mut a_scratch[..vals]);
+            for j in 0..nt {
+                let wrow = &w_scratch[j * kc..j * kc + vals];
+                let mut s = 0i64;
+                for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
+                    s += self.lut.product(*wc, *ac) as i64;
+                }
+                sums[i][j] = s as i32;
+            }
+        }
     }
-    gemm_scalar(a, w, lut, out);
+
+    fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
+        (self.lut.pad_product as i64 * a_pad as i64) as i32
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -67,10 +148,19 @@ mod avx2 {
     use crate::kernels::lut16::avx2::hsum_epi64;
     use std::arch::x86_64::*;
 
-    /// 3-bit kernel. Dense3: codes at bits [2:0] and [6:4]; 64 values per
-    /// 32-byte load, two rounds per load.
+    /// 3-bit tile kernel over one K block. Dense3: codes at bits [2:0]
+    /// and [6:4]; 64 values per 32-byte load, two rounds per load. The
+    /// four 16-entry sub-tables are loaded once per tile and each
+    /// activation load is amortized over the four weight columns.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn gemm3(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    pub(crate) unsafe fn tile3(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        lut: &Lut16,
+        vals: usize,
+        mt: usize,
+        nt: usize,
+    ) -> [[i64; 4]; 4] {
         debug_assert_eq!(lut.table.len(), 64);
         // Four 16-entry sub-tables, each broadcast to both lanes.
         let mut sub = [_mm256_setzero_si256(); 4];
@@ -81,26 +171,23 @@ mod avx2 {
         let m7 = _mm256_set1_epi8(0x07);
         let m38 = _mm256_set1_epi8(0x38);
         let zero = _mm256_setzero_si256();
-        let corr = lut.correction(a.k_padded, a.pad());
-        let bytes = a.k_padded / 2;
-        for mi in 0..a.rows {
-            let arow = a.row(mi);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
-                let mut acc = _mm256_setzero_si256();
-                let mut off = 0usize;
-                while off < bytes {
-                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+        let bytes = vals / 2;
+        let mut out = [[0i64; 4]; 4];
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let mut off = 0usize;
+            while off < bytes {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                // round 0: codes at [2:0]; round 1: at [6:4].
+                let ca0 = _mm256_and_si256(va, m7);
+                let ca1 = _mm256_and_si256(_mm256_srli_epi32(va, 4), m7);
+                for (j, wrow) in wf.iter().enumerate().take(nt) {
                     let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                    // round 0: codes at [2:0]; round 1: at [6:4].
                     for r in 0..2 {
                         let (ca, cw) = if r == 0 {
-                            (_mm256_and_si256(va, m7), _mm256_and_si256(_mm256_slli_epi32(vw, 3), m38))
+                            (ca0, _mm256_and_si256(_mm256_slli_epi32(vw, 3), m38))
                         } else {
-                            (
-                                _mm256_and_si256(_mm256_srli_epi32(va, 4), m7),
-                                _mm256_and_si256(_mm256_srli_epi32(vw, 1), m38),
-                            )
+                            (ca1, _mm256_and_si256(_mm256_srli_epi32(vw, 1), m38))
                         };
                         let idx = _mm256_or_si256(cw, ca); // 6-bit index
                         // Select sub-table by bits [5:4] using blendv on
@@ -120,19 +207,30 @@ mod avx2 {
                             s23,
                             _mm256_slli_epi32(idx, 2), // bit5 → bit7
                         );
-                        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
                     }
-                    off += 32;
                 }
-                out[mi * w.rows + n] = (hsum_epi64(acc) - corr) as i32;
+                off += 32;
+            }
+            for (j, a) in acc.iter().enumerate().take(nt) {
+                out[i][j] = hsum_epi64(*a);
             }
         }
+        out
     }
 
-    /// 4-bit kernel. Dense4: codes at [3:0], [7:4]; 16 sub-tables
-    /// selected by the weight code via compare+mask accumulation.
+    /// 4-bit tile kernel over one K block. Dense4: codes at [3:0],
+    /// [7:4]; 16 sub-tables selected by the weight code via
+    /// compare+mask accumulation, loaded once per tile.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn gemm4(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    pub(crate) unsafe fn tile4(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        lut: &Lut16,
+        vals: usize,
+        mt: usize,
+        nt: usize,
+    ) -> [[i64; 4]; 4] {
         debug_assert_eq!(lut.table.len(), 256);
         let mut sub = [_mm256_setzero_si256(); 16];
         for (t, s) in sub.iter_mut().enumerate() {
@@ -141,27 +239,24 @@ mod avx2 {
         }
         let mf = _mm256_set1_epi8(0x0F);
         let zero = _mm256_setzero_si256();
-        let corr = lut.correction(a.k_padded, a.pad());
-        let bytes = a.k_padded / 2;
-        for mi in 0..a.rows {
-            let arow = a.row(mi);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
-                let mut acc = _mm256_setzero_si256();
-                let mut off = 0usize;
-                while off < bytes {
-                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+        let bytes = vals / 2;
+        let mut out = [[0i64; 4]; 4];
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let mut off = 0usize;
+            while off < bytes {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                let ca0 = _mm256_and_si256(va, mf);
+                let ca1 = _mm256_and_si256(_mm256_srli_epi16(va, 4), mf);
+                for (j, wrow) in wf.iter().enumerate().take(nt) {
                     let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
                     for r in 0..2 {
                         let (ca, cw) = if r == 0 {
-                            (_mm256_and_si256(va, mf), _mm256_and_si256(vw, mf))
+                            (ca0, _mm256_and_si256(vw, mf))
                         } else {
-                            (
-                                _mm256_and_si256(_mm256_srli_epi16(va, 4), mf),
-                                _mm256_and_si256(_mm256_srli_epi16(vw, 4), mf),
-                            )
+                            (ca1, _mm256_and_si256(_mm256_srli_epi16(vw, 4), mf))
                         };
-                        // prod[j] = sub[cw[j]][ca[j]] — accumulate over
+                        // prod[b] = sub[cw[b]][ca[b]] — accumulate over
                         // the 16 possible weight codes with masks.
                         let mut prod = _mm256_setzero_si256();
                         for (t, s) in sub.iter().enumerate() {
@@ -171,20 +266,23 @@ mod avx2 {
                                 _mm256_and_si256(_mm256_shuffle_epi8(*s, ca), sel),
                             );
                         }
-                        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
                     }
-                    off += 32;
                 }
-                out[mi * w.rows + n] = (hsum_epi64(acc) - corr) as i32;
+                off += 32;
+            }
+            for (j, a) in acc.iter().enumerate().take(nt) {
+                out[i][j] = hsum_epi64(*a);
             }
         }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::kernels::{oracle_gemm_i32, CodeMat, GemmPlan, PlanOpts};
     use crate::quant::IntCodebook;
 
     fn check(bits: u32, signed: bool, m: usize, n: usize, k: usize, seed: u64) {
@@ -196,17 +294,17 @@ mod tests {
         oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
         let ap = pack_wide(&a);
         let wp = pack_wide(&w);
+        let plan = GemmPlan::new(&wp, LutWideTile::new(lut), PlanOpts::default());
         let mut got = vec![0i32; m * n];
-        gemm(&ap, &wp, &lut, &mut got);
+        plan.execute(&ap, &mut got);
         assert_eq!(got, want, "bits={bits} signed={signed} m={m} n={n} k={k}");
-        let mut got_s = vec![0i32; m * n];
-        gemm_scalar(&ap, &wp, &lut, &mut got_s);
-        assert_eq!(got_s, want);
     }
 
     #[test]
     fn matches_oracle_3bit() {
-        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)] {
+        for &(m, n, k) in
+            &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)]
+        {
             check(3, false, m, n, k, k as u64 + 31);
             check(3, true, m, n, k, k as u64 + 32);
         }
@@ -214,7 +312,9 @@ mod tests {
 
     #[test]
     fn matches_oracle_4bit() {
-        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)] {
+        for &(m, n, k) in
+            &[(1usize, 1usize, 1usize), (2, 3, 63), (3, 2, 64), (2, 2, 129), (2, 2, 600)]
+        {
             check(4, false, m, n, k, k as u64 + 41);
             check(4, true, m, n, k, k as u64 + 42);
         }
@@ -230,8 +330,16 @@ mod tests {
         let lut = Lut16::build(&cb, &cb);
         let ap = pack_wide(&a);
         let wp = pack_wide(&w);
+        let plan = GemmPlan::new(&wp, LutWideTile::new(lut), PlanOpts::default());
         let mut out = vec![0i32; 1];
-        gemm(&ap, &wp, &lut, &mut out);
+        plan.execute(&ap, &mut out);
         assert_eq!(out[0], 225 * k as i32);
+    }
+
+    #[test]
+    fn rejects_2bit_lut() {
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        assert!(std::panic::catch_unwind(|| LutWideTile::new(lut)).is_err());
     }
 }

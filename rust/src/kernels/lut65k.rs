@@ -1,5 +1,5 @@
-//! LUT-65k GEMM kernel (paper §3.2): a 2^16-entry table of 4-element
-//! block dot products, indexed by (packed weight byte, packed activation
+//! LUT-65k kernel (paper §3.2): a 2^16-entry table of 4-element block
+//! dot products, indexed by (packed weight byte, packed activation
 //! byte). One lookup covers four MACs; the index is built by byte
 //! interleaving, which removes per-crumb masking/shifting entirely — the
 //! paper's trade of unpacking work for a larger (L2-resident, 64 KB)
@@ -7,80 +7,130 @@
 //!
 //! The hot loop is scalar by design: AVX2 has no 16-bit-indexed gather
 //! cheaper than ~1 lookup/cycle, which is exactly what scalar L1/L2 loads
-//! achieve with 4-way unrolling; the bench shows where the bigger table
-//! wins and loses against LUT-16 (cache-residency ablation).
+//! achieve with 4-way unrolling. [`Lut65kTile`] plugs that loop into the
+//! tiled plan/execute layer, which still buys this backend the
+//! cache-blocked K reuse, panel-contiguous weight streams and worker
+//! threads of [`crate::kernels::GemmPlan`] — the table stays L2-resident
+//! while a whole MR×NR tile reuses each fragment.
 
 use super::pack::{pack, Layout, Packed};
+use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
 use crate::quant::Lut65k;
+use std::sync::Arc;
 
 /// Pack codes densely (4 crumbs/byte) for the LUT-65k kernel.
 pub fn pack_dense(codes: &CodeMat) -> Packed {
     pack(codes, Layout::Dense)
 }
 
-/// `out[m][n] = Σ_k Vw(w[k]) · Va(a[k])` via 4-MAC block lookups.
-pub fn gemm(a: &Packed, w: &Packed, lut: &Lut65k, out: &mut [i32]) {
-    assert_eq!(a.k, w.k);
-    assert_eq!(a.layout, Layout::Dense);
-    assert_eq!(w.layout, Layout::Dense);
-    assert_eq!(out.len(), a.rows * w.rows);
-    let bytes = a.k_padded / 4;
-    // Padding correction: padded crumbs are code 0 on both sides.
-    let pad_corr = lut.pad_product * a.pad() as i32;
-    let table = &lut.table;
-    for m in 0..a.rows {
-        let arow = &a.row(m)[..bytes];
-        for n in 0..w.rows {
-            let wrow = &w.row(n)[..bytes];
-            // 4-way unrolled scalar lookup loop; indices are
-            // (w_byte << 8) | a_byte.
-            let mut acc0 = 0i32;
-            let mut acc1 = 0i32;
-            let mut acc2 = 0i32;
-            let mut acc3 = 0i32;
-            let mut i = 0usize;
-            while i + 4 <= bytes {
-                // SAFETY-free fast path: indices are < 65536 by
-                // construction (u8 << 8 | u8).
-                acc0 += table[((wrow[i] as usize) << 8) | arow[i] as usize] as i32;
-                acc1 += table[((wrow[i + 1] as usize) << 8) | arow[i + 1] as usize] as i32;
-                acc2 += table[((wrow[i + 2] as usize) << 8) | arow[i + 2] as usize] as i32;
-                acc3 += table[((wrow[i + 3] as usize) << 8) | arow[i + 3] as usize] as i32;
-                i += 4;
+/// The LUT-65k tile kernel: scalar 16-bit-indexed block-product lookups
+/// (4 MACs per lookup), i32 accumulate. The 64 KB table is shared via
+/// `Arc` so multi-group layers do not duplicate it.
+#[derive(Clone, Debug)]
+pub struct Lut65kTile {
+    /// The 2^16-entry block-product table.
+    pub lut: Arc<Lut65k>,
+}
+
+impl Lut65kTile {
+    /// Wrap a shared LUT-65k table into a tile kernel.
+    pub fn new(lut: Arc<Lut65k>) -> Lut65kTile {
+        Lut65kTile { lut }
+    }
+}
+
+impl TileKernel for Lut65kTile {
+    type Acc = i32;
+
+    fn a_layout(&self) -> Layout {
+        Layout::Dense
+    }
+
+    fn w_layout(&self) -> Layout {
+        Layout::Dense
+    }
+
+    fn tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        _use_avx2: bool,
+        _kc: usize,
+        _a_scratch: &mut [u8],
+        _w_scratch: &[u8],
+        sums: &mut [[i32; NR]; MR],
+    ) {
+        // Scalar by design on every host (see module docs).
+        let bytes = vals / 4;
+        let table = &self.lut.table;
+        for i in 0..mt {
+            let arow = &ar[i][..bytes];
+            for j in 0..nt {
+                let wrow = &wf[j][..bytes];
+                // 4-way unrolled lookup loop; indices are
+                // (w_byte << 8) | a_byte, always < 65536.
+                let mut acc0 = 0i32;
+                let mut acc1 = 0i32;
+                let mut acc2 = 0i32;
+                let mut acc3 = 0i32;
+                let mut t = 0usize;
+                while t + 4 <= bytes {
+                    acc0 += table[((wrow[t] as usize) << 8) | arow[t] as usize] as i32;
+                    acc1 += table[((wrow[t + 1] as usize) << 8) | arow[t + 1] as usize] as i32;
+                    acc2 += table[((wrow[t + 2] as usize) << 8) | arow[t + 2] as usize] as i32;
+                    acc3 += table[((wrow[t + 3] as usize) << 8) | arow[t + 3] as usize] as i32;
+                    t += 4;
+                }
+                while t < bytes {
+                    acc0 += table[((wrow[t] as usize) << 8) | arow[t] as usize] as i32;
+                    t += 1;
+                }
+                sums[i][j] = acc0 + acc1 + acc2 + acc3;
             }
-            while i < bytes {
-                acc0 += table[((wrow[i] as usize) << 8) | arow[i] as usize] as i32;
-                i += 1;
-            }
-            out[m * w.rows + n] = acc0 + acc1 + acc2 + acc3 - pad_corr;
         }
+    }
+
+    fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
+        // Padded crumbs are code 0 on both sides.
+        self.lut.pad_product * a_pad as i32
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{oracle_gemm_i32, CodeMat};
+    use crate::kernels::{oracle_gemm_i32, CodeMat, GemmPlan, PlanOpts};
     use crate::quant::IntCodebook;
 
     fn check(m: usize, n: usize, k: usize, signed: bool, seed: u64) {
         let cb = if signed { IntCodebook::signed(2) } else { IntCodebook::unsigned(2) };
         let a = CodeMat::random(m, k, 2, seed);
         let w = CodeMat::random(n, k, 2, seed ^ 0xAA);
-        let lut = Lut65k::build(&cb, &cb);
+        let lut = Arc::new(Lut65k::build(&cb, &cb));
         let mut want = vec![0i32; m * n];
         oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
         let ap = pack_dense(&a);
         let wp = pack_dense(&w);
+        let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), PlanOpts::default());
         let mut got = vec![0i32; m * n];
-        gemm(&ap, &wp, &lut, &mut got);
+        plan.execute(&ap, &mut got);
         assert_eq!(got, want, "m={m} n={n} k={k} signed={signed}");
     }
 
     #[test]
     fn matches_oracle() {
-        for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 3), (3, 4, 127), (2, 3, 128), (2, 2, 129), (2, 2, 640)] {
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (2, 3, 3),
+            (3, 4, 127),
+            (2, 3, 128),
+            (2, 2, 129),
+            (2, 2, 640),
+        ] {
             check(m, n, k, false, k as u64 + 1);
             check(m, n, k, true, k as u64 + 2);
         }

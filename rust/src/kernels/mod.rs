@@ -13,21 +13,78 @@
 //! codebooks from [`crate::quant`]. Floating-point LUT kernels produce f32
 //! accumulators with the same structure.
 //!
-//! Modules:
+//! # Architecture: pack → LUT → plan → execute
+//!
+//! A GEMM travels through four stages, split between compile time and
+//! request time:
+//!
+//! 1. **Packing** ([`pack`]): codes are bit-packed into a [`pack::Layout`]
+//!    — the paper's schemes a–d (§4.1, Fig. 4) map onto layouts via
+//!    [`pack::Scheme::w_layout`] / [`pack::Scheme::a_layout`]. Weights
+//!    pack offline, activations per request; K is always padded to
+//!    [`K_BLOCK`] values with code 0 (kernels correct for the padding in
+//!    their epilogue).
+//! 2. **LUT build** ([`crate::quant::lut`]): products `Vw(cw)·Va(ca)` are
+//!    precomputed per (weight code, activation code) pair — 16/64/256
+//!    biased-u8 entries for 2/3/4-bit ([`crate::quant::Lut16`]), 2^16 i8
+//!    block products ([`crate::quant::Lut65k`]), or 16 f32 entries for
+//!    non-uniform quantization ([`crate::quant::Lut16F32`]). Offline.
+//! 3. **Plan** ([`tile`]): [`GemmPlan::new`] repacks the packed weight
+//!    rows panel-contiguously ([`tile::WeightPanels`]) and fixes the
+//!    MC/NC/KC cache-block shape. Offline, once per weight matrix.
+//! 4. **Execute** ([`GemmPlan::execute`]): the blocked, multi-threaded
+//!    driver walks K blocks × weight panels × MR×NR register tiles and
+//!    calls the backend's [`TileKernel`] for the per-tile arithmetic.
+//!    Per request; the engine's batcher fuses a whole batch into M.
+//!
+//! Every table-driven backend and the INT8 baseline execute through this
+//! one driver, so cache blocking, panel contiguity and the `--threads`
+//! knob apply uniformly and cross-backend comparisons are
+//! tiled-vs-tiled. Only the row-streaming baselines ([`bitserial`],
+//! [`ulppack`], [`portable`]) and the single-shot reference kernel in
+//! [`lut16`] stay outside it.
+//!
+//! # Adding a backend
+//!
+//! To plug a new table-driven GEMM into the planned/tiled/threaded path:
+//!
+//! 1. Give it a [`pack::Layout`] (or reuse one) describing its packed
+//!    bytes-per-[`K_BLOCK`] so [`tile::WeightPanels`] can repack rows.
+//! 2. Implement [`TileKernel`] next to its packing code: declare the
+//!    operand layouts, compute one MR×NR register tile over one K block
+//!    in `tile` (AVX2 path gated on `use_avx2`, scalar fallback via the
+//!    scratch buffers — see [`tile::TileKernel::prep_panel`]), and
+//!    report per-column over-counts (K padding, zero-point folds) from
+//!    `epilogue`. [`Lut16Tile`] is the canonical example;
+//!    [`Int8Tile`] shows a non-LUT integer kernel and
+//!    [`Lut16F32Tile`] an f32 accumulator.
+//! 3. Build a [`GemmPlan`] from the packed weights + kernel in the
+//!    engine's `CompiledConv::prepare` arm and call `plan.execute(..)`
+//!    in its GEMM dispatch (see [`crate::engine`]).
+//! 4. Test it against [`oracle_gemm_i32`] / [`oracle_gemm_f32`] across
+//!    odd shapes and 1/2/4 threads (see the property tests in `tile`).
+//!
+//! Worker-thread count resolves at execute time from the process-wide
+//! knob ([`tile::set_default_threads`]); plans built with `threads = 0`
+//! follow it automatically.
+//!
+//! # Modules
+//!
 //! - [`pack`] — bit-packing layouts & schemes a–d (paper §4.1, Fig. 4)
-//! - [`lut16`] — LUT-16 `pshufb` kernels, 2-bit (paper §3.2, Alg. 1)
-//! - [`lut16_wide`] — 3-bit / 4-bit LUT kernels (paper Tab. 2)
-//! - [`lut16_f32`] — f32-entry LUT kernel for non-uniform quantization
-//! - [`lut65k`] — the 2^16-entry block-product kernel (paper §3.2)
-//! - [`int8`] — QNNPACK-style INT8 baseline (the paper's denominator)
+//! - [`lut16`] — LUT-16 `pshufb` kernels, 2-bit (paper §3.2, Alg. 1):
+//!   the row-streaming reference the tiled plan is tested against
+//! - [`lut16_wide`] — 3-bit / 4-bit LUT tile kernel (paper Tab. 2)
+//! - [`lut16_f32`] — f32-entry LUT tile kernel (non-uniform quantization)
+//! - [`lut65k`] — the 2^16-entry block-product tile kernel (paper §3.2)
+//! - [`int8`] — QNNPACK-style INT8 baseline tile kernel (the paper's
+//!   denominator)
 //! - [`fp32`] — FP32 reference GEMM
 //! - [`bitserial`] — AND+popcount baseline (Cowan et al.)
 //! - [`ulppack`] — sub-byte-packed multiply baseline (Won et al.)
 //! - [`portable`] — scalar LUT kernel (the "Arm without tbl" stand-in,
 //!   paper Fig. 8)
-//! - [`tile`] — the plan/execute layer: cache-blocked, register-tiled,
-//!   multi-threaded execution of the LUT kernels (build a [`GemmPlan`]
-//!   offline, execute it per batch)
+//! - [`tile`] — the plan/execute layer: [`GemmPlan`], [`TileKernel`] and
+//!   the cache-blocked, register-tiled, multi-threaded driver
 
 pub mod bitserial;
 pub mod fp32;
@@ -38,10 +95,15 @@ pub mod lut16_wide;
 pub mod lut65k;
 pub mod pack;
 pub mod portable;
+#[warn(missing_docs)]
 pub mod tile;
 pub mod ulppack;
 
-pub use tile::{GemmPlan, PlanOpts, TileShape};
+pub use int8::Int8Tile;
+pub use lut16_f32::Lut16F32Tile;
+pub use lut16_wide::LutWideTile;
+pub use lut65k::Lut65kTile;
+pub use tile::{Accum, GemmPlan, Lut16Tile, PlanOpts, TileKernel, TileShape};
 
 use crate::quant::IntCodebook;
 
@@ -279,6 +341,23 @@ mod tests {
         ] {
             let parsed = Backend::parse(&b.name());
             assert_eq!(parsed, Ok(b), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn all_names_parse_and_roundtrip() {
+        // Satellite contract: every advertised name parses, and the
+        // parsed backend's canonical `name()` parses back to the same
+        // backend (canonical names may differ from aliases — e.g.
+        // "lut16"/"lut2" → "lut16-d", "lut3b"/"lut4b" → themselves).
+        for name in Backend::NAMES {
+            let b = Backend::parse(name).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(
+                Backend::parse(&b.name()),
+                Ok(b),
+                "name()/parse round-trip broken for '{name}' → '{}'",
+                b.name()
+            );
         }
     }
 

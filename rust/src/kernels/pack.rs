@@ -53,6 +53,9 @@ pub enum Layout {
     Dense3,
     /// 4-bit, 2 codes/byte at bits [3:0],[7:4].
     Dense4,
+    /// 8-bit, 1 code/byte — the INT8 baseline's layout (weights store
+    /// their i8 values bit-cast to u8; activations store raw u8 codes).
+    Int8,
 }
 
 impl Layout {
@@ -63,7 +66,7 @@ impl Layout {
             Layout::NibbleHi | Layout::NibbleLo | Layout::Dense3 | Layout::Dense4 => {
                 k.div_ceil(2)
             }
-            Layout::ByteHi => k,
+            Layout::ByteHi | Layout::Int8 => k,
         }
     }
 
@@ -72,6 +75,7 @@ impl Layout {
             Layout::Dense | Layout::NibbleHi | Layout::NibbleLo | Layout::ByteHi => 2,
             Layout::Dense3 => 3,
             Layout::Dense4 => 4,
+            Layout::Int8 => 8,
         }
     }
 }
@@ -233,6 +237,9 @@ pub fn pack_row(src: &[u8], dst: &mut [u8], layout: Layout) {
                 dst[i / 2] |= (c & 0x0F) << (4 * (i % 2));
             }
         }
+        Layout::Int8 => {
+            dst[..src.len()].copy_from_slice(src);
+        }
     }
 }
 
@@ -271,6 +278,9 @@ pub fn unpack_row(src: &[u8], k: usize, layout: Layout, out: &mut [u8]) {
             for (i, o) in out.iter_mut().enumerate().take(k) {
                 *o = (src[i / 2] >> (4 * (i % 2))) & 0x0F;
             }
+        }
+        Layout::Int8 => {
+            out[..k].copy_from_slice(&src[..k]);
         }
     }
 }
@@ -345,6 +355,7 @@ mod tests {
             Layout::ByteHi,
             Layout::Dense3,
             Layout::Dense4,
+            Layout::Int8,
         ] {
             prop::check(
                 0xC0FFEE ^ layout.bits() as u64,
@@ -402,6 +413,7 @@ mod tests {
         assert_eq!(Layout::NibbleHi.bytes_for(128), 64);
         assert_eq!(Layout::Dense4.bytes_for(128), 64);
         assert_eq!(Layout::ByteHi.bytes_for(128), 128);
+        assert_eq!(Layout::Int8.bytes_for(128), 128);
     }
 
     #[test]

@@ -1,32 +1,39 @@
-//! Cache-blocked, register-tiled, multi-threaded LUT-GEMM execution
-//! plans (the T-MAC-style scaling layer on top of the paper's kernels).
+//! Cache-blocked, register-tiled, multi-threaded GEMM execution plans
+//! (the T-MAC-style scaling layer on top of the paper's kernels).
 //!
-//! The row-streaming kernels in [`super::lut16`] walk whole K rows one
-//! output column group at a time, which is fine while everything fits in
-//! L2 but leaves large GEMMs memory-bound and single-threaded. This
-//! module decomposes an M×N×K LUT-GEMM the way high-performance BLAS
-//! does:
+//! Every table-driven backend in this crate — the 2-bit LUT-16 schemes,
+//! the 3/4-bit wide LUTs, the 2^16-entry block-product table, the
+//! f32-entry LUT and the INT8 baseline — executes through the same
+//! [`GemmPlan`] driver, which decomposes an M×N×K GEMM the way
+//! high-performance BLAS does:
 //!
 //! - **K blocking** (`kc` values, a multiple of [`K_BLOCK`]): each
 //!   activation/weight row fragment streamed by the micro-kernel fits in
 //!   L1 and is reused across a whole output tile.
 //! - **Panel-contiguous weight repacking** ([`WeightPanels`], done once
-//!   at plan time): the 2-bit code rows are re-laid-out as NR-row panels
+//!   at plan time): packed code rows are re-laid-out as NR-row panels
 //!   split at `kc` boundaries so the micro-kernel reads weights as one
 //!   forward stream instead of `stride`-separated rows (FullPack's
-//!   panel-contiguity argument applied to sub-byte codes).
-//! - **Register tiling** (MR×NR = 4×4): the 16-entry LUT is loaded once
-//!   per tile ([`super::lut16::avx2::load_lut`]) and up to sixteen
-//!   independent `vpsadbw` accumulator chains hide the accumulate
-//!   latency; per-tile, every activation vector load is amortized over
-//!   NR columns and every weight vector load over MR rows.
+//!   panel-contiguity argument applied to sub-byte codes). The repack is
+//!   layout-agnostic: it permutes whole [`K_BLOCK`]-value chunks, so any
+//!   [`Layout`] — from 2-bit nibbles to one-byte INT8 — panels the same
+//!   way.
+//! - **Register tiling** (MR×NR = 4×4): lookup tables are loaded into
+//!   registers once per tile, every activation vector load is amortized
+//!   over NR columns and every weight vector load over MR rows, and
+//!   independent accumulator chains hide the accumulate latency.
 //! - **Worker parallelism**: the (M-block × N-panel-group) task grid is
-//!   executed on the process-wide [`ThreadPool`]; each task owns a
-//!   disjoint output region, so no synchronization is needed beyond the
-//!   scope join.
+//!   executed on the process-wide thread pool; each task owns a disjoint
+//!   output region, so no synchronization is needed beyond the scope
+//!   join.
 //!
-//! The scalar fallback path unpacks the same panel fragments and drives
-//! [`Lut16::product`], so non-AVX2 hosts execute the identical plan.
+//! What the blocked driver does *not* know is how to compute a tile:
+//! that is the per-backend [`TileKernel`] — see the trait docs and the
+//! "adding a backend" walkthrough in [`crate::kernels`]. This module
+//! provides the 2-bit LUT-16 kernel ([`Lut16Tile`]); the other backends
+//! implement the trait next to their packing code
+//! ([`super::lut16_wide::LutWideTile`], [`super::lut65k::Lut65kTile`],
+//! [`super::lut16_f32::Lut16F32Tile`], [`super::int8::Int8Tile`]).
 //!
 //! Thread count resolution: a plan built with `threads = 0` (the
 //! default) reads the process-wide knob set by [`set_default_threads`]
@@ -35,7 +42,7 @@
 //! parallelism.
 
 use super::lut16;
-use super::pack::{unpack_row, Packed, Scheme};
+use super::pack::{unpack_row, Layout, Packed, Scheme};
 use super::K_BLOCK;
 use crate::quant::Lut16;
 use crate::util::pool::ThreadPool;
@@ -52,8 +59,11 @@ pub const NR: usize = 4;
 /// [`K_BLOCK`], `mc`/`nc` to multiples of the register tile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileShape {
+    /// Rows of the activation block (multiple of [`MR`]).
     pub mc: usize,
+    /// Columns of the weight-panel group (multiple of [`NR`]).
     pub nc: usize,
+    /// Values per K block (multiple of [`K_BLOCK`]).
     pub kc: usize,
 }
 
@@ -80,15 +90,20 @@ impl TileShape {
 /// Plan-construction options.
 #[derive(Clone, Copy, Debug)]
 pub struct PlanOpts {
+    /// Cache-block sizes (normalised on construction).
     pub shape: TileShape,
     /// Worker threads; 0 = use the process-wide default (see
     /// [`set_default_threads`]).
     pub threads: usize,
+    /// Skip the AVX2 micro-kernels and run the kernel's portable scalar
+    /// path even when the host supports AVX2. Testing/diagnostics knob —
+    /// it is how the scalar fallbacks stay oracle-tested on AVX2 CI.
+    pub force_scalar: bool,
 }
 
 impl Default for PlanOpts {
     fn default() -> Self {
-        Self { shape: TileShape::default(), threads: 0 }
+        Self { shape: TileShape::default(), threads: 0, force_scalar: false }
     }
 }
 
@@ -136,16 +151,132 @@ fn global_pool(threads: usize) -> Arc<ThreadPool> {
     pool
 }
 
+/// An accumulator scalar a [`TileKernel`] can produce: `i32` for the
+/// integer backends, `f32` for the float-entry LUT.
+pub trait Accum: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// Additive identity.
+    const ZERO: Self;
+    /// Addition (wrapping for integers, IEEE for floats).
+    fn acc_add(self, rhs: Self) -> Self;
+    /// Subtraction (wrapping for integers, IEEE for floats).
+    fn acc_sub(self, rhs: Self) -> Self;
+}
+
+impl Accum for i32 {
+    const ZERO: Self = 0;
+    #[inline]
+    fn acc_add(self, rhs: Self) -> Self {
+        self.wrapping_add(rhs)
+    }
+    #[inline]
+    fn acc_sub(self, rhs: Self) -> Self {
+        self.wrapping_sub(rhs)
+    }
+}
+
+impl Accum for f32 {
+    const ZERO: Self = 0.0;
+    #[inline]
+    fn acc_add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    #[inline]
+    fn acc_sub(self, rhs: Self) -> Self {
+        self - rhs
+    }
+}
+
+/// The per-backend register-tile micro-kernel a [`GemmPlan`] drives.
+///
+/// The blocked driver owns *where* compute happens (K blocks, weight
+/// panels, MR×NR output tiles, worker threads); a `TileKernel` owns
+/// *how*: given panel-contiguous weight fragments and activation row
+/// fragments covering one K block, it fills an MR×NR grid of raw block
+/// dot products. Implementations typically dispatch to an AVX2 path
+/// when `use_avx2` is true and fall back to decode-and-multiply via the
+/// scalar scratch buffers otherwise.
+///
+/// Contract:
+/// - `tile` must **write** (not accumulate) `sums[i][j]` for every
+///   `i < mt, j < nt`; the driver adds them into the output and never
+///   reads beyond `mt`×`nt`.
+/// - Sums must cover all `vals` values of the fragment, padding
+///   included; padding (and any table bias) is removed by returning its
+///   per-output total from [`TileKernel::epilogue`], which the driver
+///   subtracts exactly once per output element after the K-block loop.
+pub trait TileKernel: Send + Sync {
+    /// Accumulator scalar written to the output buffer.
+    type Acc: Accum;
+
+    /// Activation layout [`GemmPlan::execute`] expects.
+    fn a_layout(&self) -> Layout;
+
+    /// Weight layout [`GemmPlan::new`] expects.
+    fn w_layout(&self) -> Layout;
+
+    /// Stage a weight panel for the scalar path — called once per
+    /// (K block, weight panel) when AVX2 is unavailable, so per-panel
+    /// decode work is not repeated for every M tile. `w_scratch` holds
+    /// [`NR`] rows of `kc` bytes each (row `j` at offset `j * kc`).
+    /// The default does nothing (kernels that read packed bytes
+    /// directly need no staging).
+    fn prep_panel(
+        &self,
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        kc: usize,
+        w_scratch: &mut [u8],
+    ) {
+        let _ = (wf, vals, nt, kc, w_scratch);
+    }
+
+    /// Compute one MR×NR (or remainder) register tile over one K block:
+    /// `ar[i]` / `wf[j]` are the packed activation / panel-contiguous
+    /// weight fragments covering `vals` values (a multiple of
+    /// [`K_BLOCK`]). Entries of `ar` beyond `mt` and `wf` beyond `nt`
+    /// are duplicates of valid fragments, so unconditional 4-wide
+    /// kernels stay in bounds. `a_scratch` (`kc` bytes) and `w_scratch`
+    /// (staged by [`TileKernel::prep_panel`]) are only allocated when
+    /// `use_avx2` is false.
+    #[allow(clippy::too_many_arguments)]
+    fn tile(
+        &self,
+        ar: &[&[u8]; MR],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        mt: usize,
+        nt: usize,
+        use_avx2: bool,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [[Self::Acc; NR]; MR],
+    );
+
+    /// Per-output correction subtracted once after the K-block loop:
+    /// whatever the raw block sums over-counted for output column `col`
+    /// — K-padding products, zero-point folds (`col` indexes per-column
+    /// state such as weight row sums), but *not* table bias, which
+    /// kernels remove per block inside [`TileKernel::tile`].
+    fn epilogue(&self, col: usize, a_pad: usize) -> Self::Acc;
+}
+
 /// Weight codes repacked panel-contiguously: for every NR-row panel and
 /// every K block, the panel rows' packed fragments are stored back to
 /// back, so a micro-kernel invocation reads one forward byte stream.
+/// Works for any [`Layout`]: repacking permutes whole
+/// [`K_BLOCK`]-value chunks and never looks inside them.
 #[derive(Clone, Debug)]
 pub struct WeightPanels {
     /// Output columns (weight rows).
     pub n: usize,
+    /// Reduction length (unpadded values).
     pub k: usize,
+    /// Reduction length padded to a multiple of [`K_BLOCK`].
     pub k_padded: usize,
-    pub layout: super::pack::Layout,
+    /// Physical layout of the packed fragments.
+    pub layout: Layout,
     /// Bytes per [`K_BLOCK`]-value chunk of one row in `layout`.
     chunk_bytes: usize,
     /// Rows per panel (= [`NR`]).
@@ -242,32 +373,71 @@ impl WeightPanels {
 }
 
 /// A compiled GEMM execution plan: fixed weights (N×K, panel-repacked),
-/// runtime activations (any M). Build once offline, execute per batch —
-/// the batcher fuses the batch dimension into M so all requests in a
-/// batch share one planned GEMM.
+/// runtime activations (any M), and the per-backend [`TileKernel`] that
+/// computes register tiles. Build once offline, execute per batch — the
+/// batcher fuses the batch dimension into M so all requests in a batch
+/// share one planned GEMM.
 #[derive(Clone, Debug)]
-pub struct GemmPlan {
-    pub scheme: Scheme,
+pub struct GemmPlan<K: TileKernel> {
+    /// The per-backend micro-kernel (owns LUTs / zero-point state).
+    pub kernel: K,
+    /// Cache-block sizes (normalised).
     pub shape: TileShape,
     /// Worker threads; 0 = process-wide default at execute time.
     pub threads: usize,
+    /// Run the portable scalar path even on AVX2 hosts (see
+    /// [`PlanOpts::force_scalar`]).
+    pub force_scalar: bool,
+    /// Panel-contiguous repacked weights.
     pub panels: WeightPanels,
 }
 
 /// Raw output pointer shared across the task grid; every task writes a
 /// disjoint (M-range × N-range) region.
-#[derive(Clone, Copy)]
-struct SendMut(*mut i32);
-unsafe impl Send for SendMut {}
-unsafe impl Sync for SendMut {}
+struct SendMut<T>(*mut T);
 
-impl GemmPlan {
-    /// Build a plan from offline-packed weights (`scheme.w_layout()`).
-    pub fn new(w: &Packed, scheme: Scheme, opts: PlanOpts) -> GemmPlan {
-        assert_eq!(w.layout, scheme.w_layout(), "weights packed for wrong scheme");
+impl<T> Clone for SendMut<T> {
+    fn clone(&self) -> Self {
+        SendMut(self.0)
+    }
+}
+impl<T> Copy for SendMut<T> {}
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
+
+impl<K: TileKernel> GemmPlan<K> {
+    /// Build a plan from offline-packed weights (`kernel.w_layout()`).
+    ///
+    /// # Examples
+    ///
+    /// Build a 2-bit scheme-d plan (weights are packed offline, panels
+    /// repacked here, once):
+    ///
+    /// ```
+    /// use deepgemm::kernels::pack::{pack_weights, Scheme};
+    /// use deepgemm::kernels::{CodeMat, GemmPlan, Lut16Tile, PlanOpts};
+    /// use deepgemm::quant::{IntCodebook, Lut16};
+    ///
+    /// let w = CodeMat::random(8, 200, 2, 2);
+    /// let lut = Lut16::build(&IntCodebook::signed(2), &IntCodebook::unsigned(2));
+    /// let plan = GemmPlan::new(
+    ///     &pack_weights(&w, Scheme::D),
+    ///     Lut16Tile::new(Scheme::D, lut),
+    ///     PlanOpts::default(),
+    /// );
+    /// assert_eq!((plan.n(), plan.k()), (8, 200));
+    /// ```
+    pub fn new(w: &Packed, kernel: K, opts: PlanOpts) -> GemmPlan<K> {
+        assert_eq!(w.layout, kernel.w_layout(), "weights packed for wrong kernel");
         let shape = opts.shape.normalized();
         let panels = WeightPanels::build(w, NR, shape.kc);
-        GemmPlan { scheme, shape, threads: opts.threads, panels }
+        GemmPlan {
+            kernel,
+            shape,
+            threads: opts.threads,
+            force_scalar: opts.force_scalar,
+            panels,
+        }
     }
 
     /// Output columns.
@@ -286,26 +456,47 @@ impl GemmPlan {
     }
 
     /// Execute the plan: `out[m][n] = Σ_k Vw(w[n][k]) · Va(a[m][k])`,
-    /// exactly as [`super::lut16::gemm`] computes it (bit-identical).
-    pub fn execute(&self, a: &Packed, lut: &Lut16, out: &mut [i32]) {
+    /// bit-identical to the backend's reference kernel for integer
+    /// accumulators (f32 plans regroup the reduction per K block).
+    ///
+    /// # Examples
+    ///
+    /// Execute against the scalar oracle:
+    ///
+    /// ```
+    /// use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+    /// use deepgemm::kernels::{oracle_gemm_i32, CodeMat, GemmPlan, Lut16Tile, PlanOpts};
+    /// use deepgemm::quant::{IntCodebook, Lut16};
+    ///
+    /// let (w_cb, a_cb) = (IntCodebook::signed(2), IntCodebook::unsigned(2));
+    /// let a = CodeMat::random(2, 150, 2, 7);
+    /// let w = CodeMat::random(5, 150, 2, 8);
+    /// let plan = GemmPlan::new(
+    ///     &pack_weights(&w, Scheme::D),
+    ///     Lut16Tile::new(Scheme::D, Lut16::build(&w_cb, &a_cb)),
+    ///     PlanOpts::default(),
+    /// );
+    /// let mut got = vec![0i32; 2 * 5];
+    /// plan.execute(&pack_activations(&a, Scheme::D), &mut got);
+    ///
+    /// let mut want = vec![0i32; 2 * 5];
+    /// oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
+    /// assert_eq!(got, want);
+    /// ```
+    pub fn execute(&self, a: &Packed, out: &mut [K::Acc]) {
         let m = a.rows;
         let n = self.panels.n;
-        assert_eq!(a.layout, self.scheme.a_layout(), "activations packed for wrong scheme");
+        assert_eq!(a.layout, self.kernel.a_layout(), "activations packed for wrong kernel");
         assert_eq!(a.k, self.panels.k, "K mismatch");
         assert_eq!(a.k_padded, self.panels.k_padded, "K padding mismatch");
         assert_eq!(out.len(), m * n, "output buffer size mismatch");
-        assert_eq!(lut.bits, 2, "GemmPlan drives the 2-bit LUT-16 kernels");
         if m == 0 || n == 0 {
             return;
         }
         #[cfg(target_arch = "x86_64")]
-        let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
+        let use_avx2 = std::arch::is_x86_feature_detected!("avx2") && !self.force_scalar;
         #[cfg(not(target_arch = "x86_64"))]
         let use_avx2 = false;
-        // Same exactness gate as the row-streaming dispatcher: the 1×4 /
-        // 4×4 kernels batch 4 rounds of biased bytes per SAD.
-        let max_entry = *lut.table.iter().max().unwrap_or(&0) as u32;
-        let tile4_ok = 4 * max_entry < 256;
 
         let mc = self.shape.mc;
         let nc = self.shape.nc;
@@ -322,14 +513,12 @@ impl GemmPlan {
                 for nb in 0..n_blocks {
                     self.run_region(
                         a,
-                        lut,
                         outp,
                         mb * mc,
                         ((mb + 1) * mc).min(m),
                         nb * nc,
                         ((nb + 1) * nc).min(n),
                         use_avx2,
-                        tile4_ok,
                     );
                 }
             }
@@ -342,14 +531,12 @@ impl GemmPlan {
                 jobs.push(Box::new(move || {
                     self.run_region(
                         a,
-                        lut,
                         outp,
                         mb * mc,
                         ((mb + 1) * mc).min(m),
                         nb * nc,
                         ((nb + 1) * nc).min(n),
                         use_avx2,
-                        tile4_ok,
                     );
                 }));
             }
@@ -359,27 +546,26 @@ impl GemmPlan {
 
     /// Compute one disjoint output region `[m0, m1) × [n0, n1)`:
     /// K-block outer loop, NR-panel middle loop, MR-row tile inner loop,
-    /// raw partial sums accumulated into `out`, pad correction applied
-    /// once at the end.
+    /// raw partial sums accumulated into `out`, per-column epilogue
+    /// correction applied once at the end.
     #[allow(clippy::too_many_arguments)]
     fn run_region(
         &self,
         a: &Packed,
-        lut: &Lut16,
-        out: SendMut,
+        out: SendMut<K::Acc>,
         m0: usize,
         m1: usize,
         n0: usize,
         n1: usize,
         use_avx2: bool,
-        tile4_ok: bool,
     ) {
         let n = self.panels.n;
         let outp = out.0;
+        let zero = <K::Acc as Accum>::ZERO;
         for mi in m0..m1 {
             for ni in n0..n1 {
                 // SAFETY: this task owns [m0,m1)×[n0,n1) exclusively.
-                unsafe { *outp.add(mi * n + ni) = 0 };
+                unsafe { *outp.add(mi * n + ni) = zero };
             }
         }
         let kc = self.panels.kc;
@@ -404,12 +590,7 @@ impl GemmPlan {
                     *slot = self.panels.frag(p, b, r);
                 }
                 if !use_avx2 {
-                    // Scalar path: decode the panel's weight fragments
-                    // once per (block, panel), not once per M-tile.
-                    let w_layout = self.scheme.w_layout();
-                    for (j, frag) in wf.iter().enumerate().take(nt) {
-                        unpack_row(frag, vals, w_layout, &mut w_buf[j * kc..j * kc + vals]);
-                    }
+                    self.kernel.prep_panel(&wf, vals, nt, kc, &mut w_buf);
                 }
                 let mut t0 = m0;
                 while t0 < m1 {
@@ -418,17 +599,16 @@ impl GemmPlan {
                     for (i, slot) in ar.iter_mut().enumerate().take(mt).skip(1) {
                         *slot = &a.row(t0 + i)[a_off..a_off + a_len];
                     }
-                    let mut sums = [[0i64; NR]; MR];
-                    self.compute_tile(
-                        &ar, &wf, lut, vals, mt, nt, use_avx2, tile4_ok, &mut a_buf,
-                        &mut w_buf, &mut sums,
+                    let mut sums = [[zero; NR]; MR];
+                    self.kernel.tile(
+                        &ar, &wf, vals, mt, nt, use_avx2, kc, &mut a_buf, &w_buf, &mut sums,
                     );
                     for (i, row) in sums.iter().enumerate().take(mt) {
                         for (j, s) in row.iter().enumerate().take(nt) {
                             // SAFETY: disjoint region, see above.
                             unsafe {
                                 let slot = outp.add((t0 + i) * n + (pn0 + j));
-                                *slot = (*slot).wrapping_add(*s as i32);
+                                *slot = (*slot).acc_add(*s);
                             }
                         }
                     }
@@ -436,44 +616,98 @@ impl GemmPlan {
                 }
             }
         }
-        // The blocks above summed over every padded value (pad codes are
-        // 0 on both operands → `pad_product` each); correct once.
-        let pad_corr = lut.pad_product as i64 * a.pad() as i64;
-        if pad_corr != 0 {
+        // The blocks above summed over every padded value; the kernel
+        // reports each output column's over-count exactly once.
+        let a_pad = a.pad();
+        for ni in n0..n1 {
+            let corr = self.kernel.epilogue(ni, a_pad);
             for mi in m0..m1 {
-                for ni in n0..n1 {
-                    // SAFETY: disjoint region, see above.
-                    unsafe { *outp.add(mi * n + ni) -= pad_corr as i32 };
+                // SAFETY: disjoint region, see above.
+                unsafe {
+                    let slot = outp.add(mi * n + ni);
+                    *slot = (*slot).acc_sub(corr);
                 }
             }
         }
     }
+}
 
-    /// One MR×NR (or remainder) tile over one K block: `sums[i][j]` gets
-    /// the *raw* (unbiased) Σ over the block's values, padding included.
-    #[allow(clippy::too_many_arguments)]
+/// The 2-bit LUT-16 tile kernel (paper §3.2 / §4.1): register-tiled
+/// `pshufb` lookups with `vpsadbw` accumulation, one micro-kernel per
+/// packing scheme a–d.
+#[derive(Clone, Debug)]
+pub struct Lut16Tile {
+    /// Packing scheme (decides both operand layouts and the unpack
+    /// instruction sequence).
+    pub scheme: Scheme,
+    /// 16-entry biased product table.
+    pub lut: Lut16,
+    /// Whether the 1×4 / 4×4 kernels are exact for this table (they
+    /// batch 4 rounds of biased bytes per SAD).
+    tile4_ok: bool,
+}
+
+impl Lut16Tile {
+    /// Wrap a 2-bit LUT and a packing scheme into a tile kernel.
+    pub fn new(scheme: Scheme, lut: Lut16) -> Lut16Tile {
+        assert_eq!(lut.bits, 2, "Lut16Tile drives the 2-bit LUT-16 kernels");
+        // Same exactness gate as the row-streaming dispatcher: the 1×4 /
+        // 4×4 kernels batch 4 rounds of biased bytes per SAD.
+        let max_entry = *lut.table.iter().max().unwrap_or(&0) as u32;
+        let tile4_ok = 4 * max_entry < 256;
+        Lut16Tile { scheme, lut, tile4_ok }
+    }
+}
+
+impl TileKernel for Lut16Tile {
+    type Acc = i32;
+
+    fn a_layout(&self) -> Layout {
+        self.scheme.a_layout()
+    }
+
+    fn w_layout(&self) -> Layout {
+        self.scheme.w_layout()
+    }
+
+    fn prep_panel(
+        &self,
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        kc: usize,
+        w_scratch: &mut [u8],
+    ) {
+        // Scalar path: decode the panel's weight fragments once per
+        // (block, panel), not once per M-tile.
+        let w_layout = self.scheme.w_layout();
+        for (j, frag) in wf.iter().enumerate().take(nt) {
+            unpack_row(frag, vals, w_layout, &mut w_scratch[j * kc..j * kc + vals]);
+        }
+    }
+
     #[allow(unused_variables)]
-    fn compute_tile(
+    fn tile(
         &self,
         ar: &[&[u8]; MR],
         wf: &[&[u8]; NR],
-        lut: &Lut16,
         vals: usize,
         mt: usize,
         nt: usize,
         use_avx2: bool,
-        tile4_ok: bool,
-        a_buf: &mut [u8],
-        w_buf: &mut [u8],
-        sums: &mut [[i64; NR]; MR],
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [[i32; NR]; MR],
     ) {
+        let lut = &self.lut;
         #[cfg(target_arch = "x86_64")]
         if use_avx2 {
             let bias_corr = lut.bias as i64 * vals as i64;
             // SAFETY: AVX2 availability checked by the caller; all row
             // fragments cover exactly `vals` values in their layouts.
             unsafe {
-                if nt == NR && tile4_ok {
+                if nt == NR && self.tile4_ok {
                     match self.scheme {
                         Scheme::D if mt == MR => {
                             let s = simd::dot4x4_scheme_d(
@@ -484,7 +718,7 @@ impl GemmPlan {
                             );
                             for i in 0..MR {
                                 for j in 0..NR {
-                                    sums[i][j] = s[i][j] - bias_corr;
+                                    sums[i][j] = (s[i][j] - bias_corr) as i32;
                                 }
                             }
                         }
@@ -497,7 +731,7 @@ impl GemmPlan {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = s[j] - bias_corr;
+                                    sums[i][j] = (s[j] - bias_corr) as i32;
                                 }
                             }
                         }
@@ -510,7 +744,7 @@ impl GemmPlan {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = s[j] - bias_corr;
+                                    sums[i][j] = (s[j] - bias_corr) as i32;
                                 }
                             }
                         }
@@ -523,7 +757,7 @@ impl GemmPlan {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = s[j] - bias_corr;
+                                    sums[i][j] = (s[j] - bias_corr) as i32;
                                 }
                             }
                         }
@@ -537,7 +771,7 @@ impl GemmPlan {
                                 Scheme::C => lut16::avx2::dot_scheme_c(ar[i], wf[j], lut, vals),
                                 Scheme::D => lut16::avx2::dot_scheme_d(ar[i], wf[j], lut, vals),
                             };
-                            sums[i][j] = s - bias_corr;
+                            sums[i][j] = (s - bias_corr) as i32;
                         }
                     }
                 }
@@ -545,21 +779,26 @@ impl GemmPlan {
             return;
         }
         // Portable scalar fallback: weights were already decoded into
-        // `w_buf` by the caller (once per block/panel); unpack only the
-        // activation rows here.
+        // `w_scratch` by `prep_panel` (once per block/panel); unpack
+        // only the activation rows here.
         let a_layout = self.scheme.a_layout();
-        let kc = self.panels.kc;
         for i in 0..mt {
-            unpack_row(ar[i], vals, a_layout, &mut a_buf[..vals]);
+            unpack_row(ar[i], vals, a_layout, &mut a_scratch[..vals]);
             for j in 0..nt {
-                let wrow = &w_buf[j * kc..j * kc + vals];
+                let wrow = &w_scratch[j * kc..j * kc + vals];
                 let mut s = 0i64;
-                for (wc, ac) in wrow.iter().zip(a_buf[..vals].iter()) {
+                for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
                     s += lut.product(*wc, *ac) as i64;
                 }
-                sums[i][j] = s;
+                sums[i][j] = s as i32;
             }
         }
+    }
+
+    fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
+        // Padding is code 0 on both operands → `pad_product` per padded
+        // value (table bias is removed per block inside `tile`).
+        (self.lut.pad_product as i64 * a_pad as i64) as i32
     }
 }
 
@@ -625,9 +864,13 @@ mod simd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::pack::{pack_activations, pack_weights};
-    use crate::kernels::{oracle_gemm_i32, CodeMat};
-    use crate::quant::IntCodebook;
+    use crate::kernels::int8::Int8Tile;
+    use crate::kernels::lut16_f32::Lut16F32Tile;
+    use crate::kernels::lut16_wide::LutWideTile;
+    use crate::kernels::lut65k::Lut65kTile;
+    use crate::kernels::pack::{pack, pack_activations, pack_weights};
+    use crate::kernels::{int8, lut16_wide, lut65k, oracle_gemm_f32, oracle_gemm_i32, CodeMat};
+    use crate::quant::{F32Codebook, IntCodebook, Lut16F32, Lut65k};
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -656,13 +899,22 @@ mod tests {
         oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
         let ap = pack_activations(&a, scheme);
         let wp = pack_weights(&w, scheme);
-        let plan = GemmPlan::new(&wp, scheme, PlanOpts { shape, threads });
-        let mut got = vec![0i32; m * n];
-        plan.execute(&ap, &lut, &mut got);
-        assert_eq!(
-            got, want,
-            "scheme {scheme:?} signed={signed} m={m} n={n} k={k} threads={threads}"
-        );
+        // Both the AVX2 micro-kernels (when the host has them) and the
+        // portable scalar fallback must match the oracle.
+        for &force_scalar in &[false, true] {
+            let plan = GemmPlan::new(
+                &wp,
+                Lut16Tile::new(scheme, lut.clone()),
+                PlanOpts { shape, threads, force_scalar },
+            );
+            let mut got = vec![0i32; m * n];
+            plan.execute(&ap, &mut got);
+            assert_eq!(
+                got, want,
+                "scheme {scheme:?} signed={signed} m={m} n={n} k={k} threads={threads} \
+                 force_scalar={force_scalar}"
+            );
+        }
     }
 
     #[test]
@@ -704,10 +956,13 @@ mod tests {
                     oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
                     let ap = pack_activations(&a, scheme);
                     let wp = pack_weights(&w, scheme);
-                    let plan =
-                        GemmPlan::new(&wp, scheme, PlanOpts { shape: tiny_shape(), threads });
+                    let plan = GemmPlan::new(
+                        &wp,
+                        Lut16Tile::new(scheme, lut),
+                        PlanOpts { shape: tiny_shape(), threads, ..Default::default() },
+                    );
                     let mut got = vec![0i32; m * n];
-                    plan.execute(&ap, &lut, &mut got);
+                    plan.execute(&ap, &mut got);
                     if got != want {
                         return Err(format!(
                             "scheme {scheme:?} diverges at m={m} n={n} k={k} threads={threads}"
@@ -734,9 +989,13 @@ mod tests {
             let mut want = vec![0i32; m * n];
             lut16::gemm(&ap, &wp, &lut, scheme, &mut want);
             for threads in [1usize, 4] {
-                let plan = GemmPlan::new(&wp, scheme, PlanOpts { threads, ..Default::default() });
+                let plan = GemmPlan::new(
+                    &wp,
+                    Lut16Tile::new(scheme, lut.clone()),
+                    PlanOpts { threads, ..Default::default() },
+                );
                 let mut got = vec![0i32; m * n];
-                plan.execute(&ap, &lut, &mut got);
+                plan.execute(&ap, &mut got);
                 assert_eq!(got, want, "scheme {scheme:?} threads={threads}");
             }
         }
@@ -764,9 +1023,13 @@ mod tests {
         for scheme in Scheme::ALL {
             let ap = pack_activations(&a, scheme);
             let wp = pack_weights(&w, scheme);
-            let plan = GemmPlan::new(&wp, scheme, PlanOpts { shape: tiny_shape(), threads: 2 });
+            let plan = GemmPlan::new(
+                &wp,
+                Lut16Tile::new(scheme, lut.clone()),
+                PlanOpts { shape: tiny_shape(), threads: 2, ..Default::default() },
+            );
             let mut got = vec![0i32; m * n];
-            plan.execute(&ap, &lut, &mut got);
+            plan.execute(&ap, &mut got);
             assert_eq!(got, want, "scheme {scheme:?}");
         }
     }
@@ -774,9 +1037,12 @@ mod tests {
     #[test]
     fn panels_preserve_bytes_and_shape() {
         let w = CodeMat::random(11, 700, 2, 5);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
         for scheme in Scheme::ALL {
             let wp = pack_weights(&w, scheme);
-            let plan = GemmPlan::new(&wp, scheme, PlanOpts::default());
+            let plan =
+                GemmPlan::new(&wp, Lut16Tile::new(scheme, lut.clone()), PlanOpts::default());
             assert_eq!(plan.n(), 11);
             assert_eq!(plan.k(), 700);
             assert_eq!(plan.packed_bytes(), wp.data.len());
@@ -790,5 +1056,227 @@ mod tests {
         // which set it through ServerConfig.)
         assert_eq!(resolve_threads(5), 5);
         assert!(default_threads() >= 1);
+    }
+
+    // ---- newly tiled backends vs their oracles -----------------------
+
+    #[test]
+    fn wide_plan_matches_oracle_odd_shapes() {
+        for bits in [3u32, 4] {
+            for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 9, 129), (6, 7, 300)] {
+                for &threads in &[1usize, 2, 4] {
+                    let w_cb = IntCodebook::signed(bits);
+                    let a_cb = IntCodebook::unsigned(bits);
+                    let a = CodeMat::random(m, k, bits, k as u64 + bits as u64);
+                    let w = CodeMat::random(n, k, bits, k as u64 ^ 0xB0);
+                    let lut = Lut16::build(&w_cb, &a_cb);
+                    let mut want = vec![0i32; m * n];
+                    oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
+                    let ap = lut16_wide::pack_wide(&a);
+                    let wp = lut16_wide::pack_wide(&w);
+                    for &force_scalar in &[false, true] {
+                        let plan = GemmPlan::new(
+                            &wp,
+                            LutWideTile::new(lut.clone()),
+                            PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                        );
+                        let mut got = vec![0i32; m * n];
+                        plan.execute(&ap, &mut got);
+                        assert_eq!(
+                            got, want,
+                            "bits={bits} m={m} n={n} k={k} threads={threads} \
+                             force_scalar={force_scalar}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut65k_plan_matches_oracle_odd_shapes() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 9, 129), (6, 7, 300)] {
+            for &threads in &[1usize, 2, 4] {
+                let cb = IntCodebook::signed(2);
+                let a = CodeMat::random(m, k, 2, k as u64 + 65);
+                let w = CodeMat::random(n, k, 2, k as u64 + 66);
+                let lut = std::sync::Arc::new(Lut65k::build(&cb, &cb));
+                let mut want = vec![0i32; m * n];
+                oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+                let ap = lut65k::pack_dense(&a);
+                let wp = lut65k::pack_dense(&w);
+                let plan = GemmPlan::new(
+                    &wp,
+                    Lut65kTile::new(lut),
+                    PlanOpts { shape: tiny_shape(), threads, ..Default::default() },
+                );
+                let mut got = vec![0i32; m * n];
+                plan.execute(&ap, &mut got);
+                assert_eq!(got, want, "m={m} n={n} k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_plan_matches_oracle_odd_shapes() {
+        let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
+        let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 9, 129), (6, 7, 300)] {
+            for &threads in &[1usize, 2, 4] {
+                let a = CodeMat::random(m, k, 2, k as u64 + 91);
+                let w = CodeMat::random(n, k, 2, k as u64 + 92);
+                let lut = Lut16F32::build(&wcb, &acb);
+                let mut want = vec![0f32; m * n];
+                oracle_gemm_f32(&a, &w, &wcb, &acb, &mut want);
+                let ap = pack(&a, Layout::NibbleLo);
+                let wp = pack(&w, Layout::NibbleHi);
+                for &force_scalar in &[false, true] {
+                    let plan = GemmPlan::new(
+                        &wp,
+                        Lut16F32Tile::new(lut.clone()),
+                        PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                    );
+                    let mut got = vec![0f32; m * n];
+                    plan.execute(&ap, &mut got);
+                    prop::assert_close(&got, &want, 1e-3, 1e-4).unwrap_or_else(|e| {
+                        panic!("m={m} n={n} k={k} threads={threads} scalar={force_scalar}: {e}")
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_plan_matches_oracle_odd_shapes() {
+        let za = 128i32;
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 9, 129), (6, 7, 300)] {
+            for &threads in &[1usize, 2, 4] {
+                let mut rng = Rng::new(k as u64 * 31 + threads as u64);
+                let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+                let mut want = vec![0i32; m * n];
+                for mi in 0..m {
+                    for ni in 0..n {
+                        let mut acc = 0i64;
+                        for t in 0..k {
+                            acc += (acodes[mi * k + t] as i32 - za) as i64
+                                * wvals[ni * k + t] as i64;
+                        }
+                        want[mi * n + ni] = acc as i32;
+                    }
+                }
+                let (wp, row_sums) = int8::pack_weights_i8(&wvals, n, k);
+                let am = CodeMat::from_data(m, k, 8, acodes);
+                let ap = pack(&am, Layout::Int8);
+                for &force_scalar in &[false, true] {
+                    let plan = GemmPlan::new(
+                        &wp,
+                        Int8Tile::new(za, row_sums.clone()),
+                        PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                    );
+                    let mut got = vec![0i32; m * n];
+                    plan.execute(&ap, &mut got);
+                    assert_eq!(
+                        got, want,
+                        "m={m} n={n} k={k} threads={threads} force_scalar={force_scalar}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_backends_property_multi_threaded() {
+        // One generator, every integer backend, random odd shapes and
+        // thread counts — the cross-backend analogue of the lut16
+        // property test above.
+        prop::check(
+            0xBAC2,
+            12,
+            |r: &mut Rng| {
+                (
+                    r.range(1, 10),
+                    r.range(1, 10),
+                    r.range(1, 300),
+                    [1usize, 2, 4][r.range(0, 3)],
+                    r.next_u64(),
+                )
+            },
+            |&(m, n, k, threads, seed)| {
+                // lut65k
+                {
+                    let cb = IntCodebook::signed(2);
+                    let a = CodeMat::random(m, k, 2, seed);
+                    let w = CodeMat::random(n, k, 2, seed ^ 2);
+                    let lut = std::sync::Arc::new(Lut65k::build(&cb, &cb));
+                    let mut want = vec![0i32; m * n];
+                    oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+                    let plan = GemmPlan::new(
+                        &lut65k::pack_dense(&w),
+                        Lut65kTile::new(lut),
+                        PlanOpts { shape: tiny_shape(), threads, ..Default::default() },
+                    );
+                    let mut got = vec![0i32; m * n];
+                    plan.execute(&lut65k::pack_dense(&a), &mut got);
+                    if got != want {
+                        return Err(format!("lut65k diverges at m={m} n={n} k={k} t={threads}"));
+                    }
+                }
+                // wide 3/4-bit
+                for bits in [3u32, 4] {
+                    let w_cb = IntCodebook::signed(bits);
+                    let a_cb = IntCodebook::unsigned(bits);
+                    let a = CodeMat::random(m, k, bits, seed ^ 3);
+                    let w = CodeMat::random(n, k, bits, seed ^ 4);
+                    let lut = Lut16::build(&w_cb, &a_cb);
+                    let mut want = vec![0i32; m * n];
+                    oracle_gemm_i32(&a, &w, &w_cb, &a_cb, &mut want);
+                    let plan = GemmPlan::new(
+                        &lut16_wide::pack_wide(&w),
+                        LutWideTile::new(lut),
+                        PlanOpts { shape: tiny_shape(), threads, ..Default::default() },
+                    );
+                    let mut got = vec![0i32; m * n];
+                    plan.execute(&lut16_wide::pack_wide(&a), &mut got);
+                    if got != want {
+                        return Err(format!(
+                            "lut{bits}b diverges at m={m} n={n} k={k} t={threads}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn batch_fused_m_equals_per_image_execution() {
+        // The batcher stacks B images of m1 rows each into one GEMM of
+        // M = B·m1 rows; the fused output must equal the per-image runs
+        // bit-for-bit (row order preserved).
+        let (bsz, m1, n, k) = (3usize, 5usize, 9usize, 200usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 50);
+        let wp = pack_weights(&w, Scheme::D);
+        let plan = GemmPlan::new(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts { shape: tiny_shape(), threads: 2, ..Default::default() },
+        );
+        let images: Vec<CodeMat> =
+            (0..bsz).map(|b| CodeMat::random(m1, k, 2, 60 + b as u64)).collect();
+        let mut fused_codes = Vec::new();
+        for img in &images {
+            fused_codes.extend_from_slice(&img.data);
+        }
+        let fused = CodeMat::from_data(bsz * m1, k, 2, fused_codes);
+        let mut got = vec![0i32; bsz * m1 * n];
+        plan.execute(&pack_activations(&fused, Scheme::D), &mut got);
+        for (b, img) in images.iter().enumerate() {
+            let mut single = vec![0i32; m1 * n];
+            plan.execute(&pack_activations(img, Scheme::D), &mut single);
+            assert_eq!(&got[b * m1 * n..(b + 1) * m1 * n], &single[..], "image {b}");
+        }
     }
 }

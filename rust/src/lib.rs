@@ -9,7 +9,10 @@
 //! - [`kernels`] — the paper's contribution: bit-packing schemes (a–d),
 //!   LUT-16 / LUT-65k AVX2 GEMM kernels for 2/3/4-bit operands, plus every
 //!   baseline the paper compares against (FP32, QNNPACK-style INT8,
-//!   bit-serial, ULPPACK) implemented from scratch.
+//!   bit-serial, ULPPACK) implemented from scratch — all table-driven
+//!   backends and INT8 execute through one cache-blocked, register-tiled,
+//!   multi-threaded plan/execute layer (`GemmPlan` + per-backend
+//!   `TileKernel`s; see the module docs for the architecture).
 //! - [`quant`] — uniform (affine / LSQ-style) and non-uniform codebook
 //!   quantization, and lookup-table construction for signed/unsigned,
 //!   integer/float entries.

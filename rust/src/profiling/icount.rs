@@ -2,7 +2,7 @@
 //! Tab. 3): average number of *visible* vector instructions (AND / shift
 //! / OR / shuffle) needed to retrieve one LUT entry for one
 //! weight-activation pair, derived from the exact instruction sequences
-//! in [`crate::kernels::lut16::avx2`].
+//! in the `avx2` submodule of [`crate::kernels::lut16`].
 //!
 //! The model is kept in lock-step with the kernels by construction (each
 //! scheme's counts are the per-128-value totals of its `dot_scheme_*`

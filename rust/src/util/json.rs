@@ -55,7 +55,7 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
-    /// Array of numbers → Vec<f32> (used for golden vectors).
+    /// Array of numbers → `Vec<f32>` (used for golden vectors).
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         let arr = self.as_arr()?;
         let mut out = Vec::with_capacity(arr.len());
