@@ -18,9 +18,13 @@ use deepgemm::quant::{IntCodebook, Lut16};
 
 fn stage_table(model: &CompiledModel, x: &Tensor, iters: usize) -> Table {
     let mut prof = StageProfile::new();
-    model.forward(x, &mut StageProfile::new()).expect("warmup");
+    // Reuse one ExecCtx across iterations, exactly like a serving worker:
+    // the warmup grows arena + scratch, the timed runs are allocation-free.
+    let mut ctx = model.new_ctx();
+    let xs = std::slice::from_ref(x);
+    model.forward_batch_with(xs, &mut ctx, &mut StageProfile::new()).expect("warmup");
     for _ in 0..iters {
-        model.forward(x, &mut prof).expect("fwd");
+        model.forward_batch_with(xs, &mut ctx, &mut prof).expect("fwd");
     }
     let mut t = Table::new(
         format!("Fig 7 — stage breakdown: {} / {}", model.name, model.backend.name()),

@@ -33,9 +33,12 @@ fn main() {
     let model =
         CompiledModel::compile(graph, Backend::Portable, &[x.clone()]).expect("compile");
     let mut prof = StageProfile::new();
-    model.forward(&x, &mut StageProfile::new()).expect("warmup");
+    // Serving-style context reuse: warmup grows the buffers once.
+    let mut ctx = model.new_ctx();
+    let xs = std::slice::from_ref(&x);
+    model.forward_batch_with(xs, &mut ctx, &mut StageProfile::new()).expect("warmup");
     for _ in 0..5 {
-        model.forward(&x, &mut prof).expect("fwd");
+        model.forward_batch_with(xs, &mut ctx, &mut prof).expect("fwd");
     }
     let mut t = Table::new(
         "Fig 8 — stage breakdown with the portable (no-byte-shuffle) kernel",

@@ -27,11 +27,16 @@ use std::time::Instant;
 
 fn run_model(model: &CompiledModel, x: &Tensor, iters: usize) -> f64 {
     let mut prof = StageProfile::new();
-    model.forward(x, &mut prof).expect("warmup"); // warmup
+    // Reuse one ExecCtx across iterations (the serving steady state):
+    // the warmup run grows the planned arena + scratch, the timed runs
+    // perform no allocation in the conv pipeline.
+    let mut ctx = model.new_ctx();
+    let xs = std::slice::from_ref(x);
+    model.forward_batch_with(xs, &mut ctx, &mut prof).expect("warmup");
     let mut best = f64::INFINITY;
     for _ in 0..iters {
         let t0 = Instant::now();
-        model.forward(x, &mut prof).expect("forward");
+        model.forward_batch_with(xs, &mut ctx, &mut prof).expect("forward");
         best = best.min(t0.elapsed().as_secs_f64());
     }
     best

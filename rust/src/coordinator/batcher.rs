@@ -88,6 +88,19 @@ impl Drop for BatchWorker {
 }
 
 fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, rx: Receiver<Job>) {
+    // One execution context per worker, reused across batches: the
+    // compiled plan's arena + conv scratch grow to the largest batch
+    // seen, after which steady-state forwards allocate nothing in the
+    // quantize→im2col→pack→GEMM→dequant pipeline. Report the static
+    // memory plan once at startup.
+    let mut ctx = model.new_ctx();
+    metrics.set_arena_planned(&model.name, model.plan.arena_bytes_per_image() as u64);
+    eprintln!(
+        "batcher-{}: static memory plan = {} arena slots, {} B/image",
+        model.name,
+        model.plan.n_slots(),
+        model.plan.arena_bytes_per_image()
+    );
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -116,12 +129,16 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
             meta.iter().map(|(enq, _)| enq.elapsed().as_secs_f64()).collect();
         let t0 = Instant::now();
         let mut prof = StageProfile::new();
-        let result = model.forward_batch(&inputs, &mut prof);
+        let warm = ctx.runs() > 0;
+        let result = model.forward_batch_with(&inputs, &mut ctx, &mut prof);
         // Every request in the fused batch waits for the whole forward,
         // so each one's compute latency IS the batch compute time.
         let compute_secs = t0.elapsed().as_secs_f64();
         match result {
             Ok(ys) => {
+                if warm {
+                    metrics.on_ctx_reuse();
+                }
                 for ((y, (_, reply)), q) in ys.into_iter().zip(meta).zip(queue_secs) {
                     let resp = InferResponse {
                         argmax: crate::engine::argmax(&y.data),
@@ -208,6 +225,21 @@ mod tests {
         // batch must have had > 1 request.
         assert!(c.batches < 16, "no batching happened: {} batches", c.batches);
         assert!(resps.iter().any(|r| r.batch_size > 1));
+    }
+
+    #[test]
+    fn ctx_is_reused_across_batches() {
+        let (w, m) = worker(2, 1, 16);
+        for _ in 0..3 {
+            let rx = submit(&w);
+            rx.recv().unwrap().unwrap();
+        }
+        let c = m.counters();
+        assert_eq!(c.completed, 3);
+        assert!(c.ctx_reuses >= 2, "steady-state batches must reuse the worker ctx");
+        let planned = m.arena_planned();
+        assert_eq!(planned.len(), 1);
+        assert!(planned[0].1 > 0, "planned arena bytes must be reported at startup");
     }
 
     #[test]

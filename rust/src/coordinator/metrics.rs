@@ -1,6 +1,9 @@
-//! Serving metrics: counters + latency/batch-size histograms.
+//! Serving metrics: counters + latency/batch-size histograms, plus the
+//! static-memory-plan gauges (planned arena bytes per model, execution-
+//! context reuse) that make the zero-allocation steady state observable.
 
 use crate::util::stats::Histogram;
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -10,6 +13,9 @@ pub struct Counters {
     pub rejected: u64,
     pub errors: u64,
     pub batches: u64,
+    /// Batches served on an already-warm `ExecCtx` (steady-state,
+    /// allocation-free forwards).
+    pub ctx_reuses: u64,
 }
 
 struct Inner {
@@ -17,6 +23,9 @@ struct Inner {
     latency: Histogram,
     queue_time: Histogram,
     batch_size: Histogram,
+    /// Planned per-image arena bytes per model (set once per worker at
+    /// startup, from the compile-time `ExecPlan`).
+    arena_planned: HashMap<String, u64>,
 }
 
 /// Thread-safe metrics sink shared by router, batchers and server.
@@ -38,8 +47,29 @@ impl Metrics {
                 latency: Histogram::exponential(1e-5, 1.6, 40),
                 queue_time: Histogram::exponential(1e-6, 1.6, 40),
                 batch_size: Histogram::new((1..=64).map(|x| x as f64).collect()),
+                arena_planned: HashMap::new(),
             }),
         }
+    }
+
+    /// Record a model's compile-time arena plan (per-image bytes) —
+    /// called once per batch worker at startup.
+    pub fn set_arena_planned(&self, model: &str, bytes: u64) {
+        self.inner.lock().unwrap().arena_planned.insert(model.to_string(), bytes);
+    }
+
+    /// Planned arena bytes per model, sorted by model name.
+    pub fn arena_planned(&self) -> Vec<(String, u64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(String, u64)> =
+            g.arena_planned.iter().map(|(k, &b)| (k.clone(), b)).collect();
+        v.sort();
+        v
+    }
+
+    /// A batch served on an already-warm execution context.
+    pub fn on_ctx_reuse(&self) {
+        self.inner.lock().unwrap().counters.ctx_reuses += 1;
     }
 
     pub fn on_request(&self) {
@@ -76,11 +106,23 @@ impl Metrics {
         let g = self.inner.lock().unwrap();
         let c = g.counters;
         let mean_batch = g.batch_size.mean();
+        let mut arena: Vec<(&String, &u64)> = g.arena_planned.iter().collect();
+        arena.sort();
+        let arena_str = if arena.is_empty() {
+            "-".to_string()
+        } else {
+            arena
+                .iter()
+                .map(|(m, b)| format!("{m}={b}B/img"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
         format!(
             "requests={} completed={} rejected={} errors={} batches={}\n\
              latency p50={:.2}ms p95={:.2}ms mean={:.2}ms\n\
              queue   p50={:.3}ms p95={:.3}ms\n\
-             batch   mean={:.2}",
+             batch   mean={:.2}\n\
+             arena   planned {arena_str}  ctx_reuses={}",
             c.requests,
             c.completed,
             c.rejected,
@@ -92,6 +134,7 @@ impl Metrics {
             g.queue_time.quantile(0.5) * 1e3,
             g.queue_time.quantile(0.95) * 1e3,
             mean_batch,
+            c.ctx_reuses,
         )
     }
 }
@@ -115,6 +158,22 @@ mod tests {
         assert_eq!(c.batches, 1);
         let r = m.render();
         assert!(r.contains("requests=2"));
+    }
+
+    #[test]
+    fn arena_gauges_render_and_accumulate() {
+        let m = Metrics::new();
+        m.set_arena_planned("small_cnn", 12_345);
+        m.set_arena_planned("resnet18", 99);
+        m.on_ctx_reuse();
+        m.on_ctx_reuse();
+        assert_eq!(m.counters().ctx_reuses, 2);
+        let planned = m.arena_planned();
+        assert_eq!(planned.len(), 2);
+        assert_eq!(planned[0].0, "resnet18"); // sorted by name
+        let r = m.render();
+        assert!(r.contains("small_cnn=12345B/img"), "{r}");
+        assert!(r.contains("ctx_reuses=2"), "{r}");
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!      "compute_ms": 1.2, "queue_ms": 0.1, "batch": 4}
 //!   → {"cmd": "metrics"}        ← {"ok": true, "metrics": "..."}
 //!   → {"cmd": "models"}         ← {"ok": true, "models": [...]}
+//!   → {"cmd": "stats"}          ← {"ok": true, "models": [{"name",
+//!                                  "arena_planned_bytes_per_image"}], "ctx_reuses": N}
+//!                                  (static memory plan + ctx reuse; the warm arena
+//!                                  scales with the served batch size)
 //!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
 
 use crate::coordinator::router::Router;
@@ -121,6 +125,29 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                 (
                     "models",
                     Json::Arr(router.models().iter().map(|m| Json::str(*m)).collect()),
+                ),
+            ]),
+            "stats" => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "models",
+                    Json::Arr(
+                        router
+                            .metrics
+                            .arena_planned()
+                            .into_iter()
+                            .map(|(name, bytes)| {
+                                Json::obj(vec![
+                                    ("name", Json::str(name)),
+                                    ("arena_planned_bytes_per_image", Json::num(bytes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "ctx_reuses",
+                    Json::num(router.metrics.counters().ctx_reuses as f64),
                 ),
             ]),
             "shutdown" => {
@@ -252,6 +279,16 @@ mod tests {
         assert!(m.dump().contains("small_cnn"));
         let met = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
         assert!(met.get("metrics").unwrap().as_str().unwrap().contains("completed=1"));
+        // Stats endpoint: static memory plan per model + ctx reuse count.
+        let st = c.call(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true), "{st:?}");
+        let models = st.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().as_str(), Some("small_cnn"));
+        assert!(
+            models[0].get("arena_planned_bytes_per_image").unwrap().as_f64().unwrap() > 0.0
+        );
+        assert!(st.get("ctx_reuses").is_some());
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Per-layer compiled convolution state: quantized + packed weights, the
-//! LUT, the activation quantizer, and the instrumented forward pass.
+//! LUT, the activation quantizer, and the instrumented forward pass. At
+//! request time the pipeline runs entirely in caller-provided buffers
+//! ([`ConvScratch`] + output slab), so steady-state serving allocates
+//! nothing here.
 
+use crate::kernels::fp32::MatF32;
 use crate::kernels::pack::{self, Packed, Scheme};
 use crate::kernels::{
     bitserial, int8, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan, Int8Tile,
@@ -11,6 +15,72 @@ use crate::nn::{ConvSpec, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::{uniform::Quantizer, F32Codebook, Lut16, Lut16F32, Lut65k};
 use std::sync::Arc;
+
+/// Reusable scratch for the quantized conv pipeline (plus the batched
+/// FC GEMM): activation codes, the batch-fused im2col matrix, the
+/// packed activation operand and the accumulators. Owned by an
+/// [`crate::engine::ExecCtx`] and shared across all layers of a model —
+/// every buffer grows to the largest layer seen and is then reused, so
+/// repeated forwards perform no heap allocation.
+#[derive(Debug)]
+pub struct ConvScratch {
+    /// Quantized activation codes for the whole input slab.
+    codes: Vec<u8>,
+    /// Batch-fused im2col code matrix (M×K, one group at a time).
+    fused: Vec<u8>,
+    /// Packed activation operand (layout switches per backend).
+    packed: Packed,
+    /// Integer accumulator (i32 backends).
+    acc_i32: Vec<i32>,
+    /// Float accumulator (the f32-entry LUT backend).
+    acc_f32: Vec<f32>,
+    /// Activation row sums (bit-serial / ULPPACK signed fixup).
+    a_sums: Vec<i32>,
+    /// Bit-plane operand (bit-serial backend).
+    planes: bitserial::Planes,
+    /// Packed-multiply operand (ULPPACK backend).
+    ulp: ulppack::UlpPacked,
+    /// Batched FC activation matrix (fp32 GEMM).
+    pub(crate) fc: MatF32,
+}
+
+impl Default for ConvScratch {
+    fn default() -> Self {
+        ConvScratch {
+            codes: Vec::new(),
+            fused: Vec::new(),
+            packed: Packed::empty(),
+            acc_i32: Vec::new(),
+            acc_f32: Vec::new(),
+            a_sums: Vec::new(),
+            planes: bitserial::Planes::empty(),
+            ulp: ulppack::UlpPacked::empty(),
+            fc: MatF32::empty(),
+        }
+    }
+}
+
+impl ConvScratch {
+    /// Bytes currently held by the scratch buffers.
+    pub fn footprint_bytes(&self) -> usize {
+        self.codes.capacity()
+            + self.fused.capacity()
+            + self.packed.data.capacity()
+            + self.acc_i32.capacity() * 4
+            + self.acc_f32.capacity() * 4
+            + self.a_sums.capacity() * 4
+            + self.planes.data.capacity() * 8
+            + self.ulp.data.capacity() * 2
+            + self.fc.data.capacity() * 4
+    }
+}
+
+/// Which scratch accumulator a GEMM dispatch filled.
+#[derive(Clone, Copy)]
+enum AccKind {
+    I32,
+    F32,
+}
 
 /// Offline-prepared weights for one conv layer (one entry per group).
 /// Every table-driven backend and the INT8 baseline hold tiled
@@ -233,35 +303,53 @@ impl CompiledConv {
         })
     }
 
-    /// Instrumented quantized forward for a single image.
+    /// Instrumented quantized forward for a single image (testing /
+    /// one-shot convenience — serving goes through the compiled model's
+    /// scratch-reusing batch path).
     pub fn forward(&self, x: &Tensor, prof: &mut StageProfile) -> crate::Result<Tensor> {
-        let mut ys = self.forward_batch(&[x], prof)?;
-        Ok(ys.pop().expect("one output per image"))
-    }
-
-    /// Instrumented quantized forward for a whole batch: the batch
-    /// dimension is fused into the GEMM's M (rows = B·oh·ow), so every
-    /// image in the batch shares one planned GEMM per group — the
-    /// tiled/threaded execution amortizes LUT loads, weight-panel
-    /// traffic and thread fan-out across the batch.
-    pub fn forward_batch(
-        &self,
-        xs: &[&Tensor],
-        prof: &mut StageProfile,
-    ) -> crate::Result<Vec<Tensor>> {
-        let bsz = xs.len();
-        if bsz == 0 {
-            return Ok(Vec::new());
-        }
-        let (_, c, h, w) = xs[0].nchw();
+        let (_, c, h, w) = x.nchw();
         if c != self.spec.in_ch {
             return Err(crate::Error::Shape(format!(
                 "conv expects C={}, got {c}",
                 self.spec.in_ch
             )));
         }
-        if xs.iter().any(|x| x.nchw() != xs[0].nchw()) {
-            return Err(crate::Error::Shape("batch images must share one shape".into()));
+        let (oh, ow) = self.spec.out_hw(h, w);
+        let mut scratch = ConvScratch::default();
+        let mut out = Tensor::zeros(&[1, self.spec.out_ch, oh, ow]);
+        self.forward_batch_into(&x.data, 1, h, w, &mut scratch, &mut out.data, prof)?;
+        Ok(out)
+    }
+
+    /// Instrumented quantized forward for a whole batch slab: `x` holds
+    /// `bsz` images image-major (`[bsz, C, H, W]`), `out` receives the
+    /// `[bsz, out_ch, oh, ow]` result. The batch dimension is fused into
+    /// the GEMM's M (rows = B·oh·ow), so every image in the batch shares
+    /// one planned GEMM per group — the tiled/threaded execution
+    /// amortizes LUT loads, weight-panel traffic and thread fan-out
+    /// across the batch. Every intermediate lives in `scratch`: once its
+    /// buffers have grown to this layer's sizes, repeated calls perform
+    /// no heap allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_into(
+        &self,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        scratch: &mut ConvScratch,
+        out: &mut [f32],
+        prof: &mut StageProfile,
+    ) -> crate::Result<()> {
+        if bsz == 0 {
+            return Ok(());
+        }
+        let c = self.spec.in_ch;
+        if x.len() != bsz * c * h * w {
+            return Err(crate::Error::Shape(format!(
+                "conv expects {bsz}·{c}·{h}·{w} input elements, got {}",
+                x.len()
+            )));
         }
         let (oh, ow) = self.spec.out_hw(h, w);
         let groups = self.spec.groups;
@@ -269,17 +357,21 @@ impl CompiledConv {
         let kk = self.spec.in_ch / groups * self.spec.kh * self.spec.kw;
         let m1 = oh * ow;
         let m = bsz * m1;
+        if out.len() != bsz * self.spec.out_ch * m1 {
+            return Err(crate::Error::Shape(format!(
+                "conv output buffer holds {}, expected {}",
+                out.len(),
+                bsz * self.spec.out_ch * m1
+            )));
+        }
         let s_out = self.w_scale * self.act_q.params.scale;
 
-        // Stage 1 — activation quantization (each whole tensor, once).
-        let codes: Vec<Vec<u8>> = prof.time(Stage::Quantize, || {
-            xs.iter()
-                .map(|x| {
-                    let mut codes = vec![0u8; x.data.len()];
-                    self.act_q.quantize(&x.data, &mut codes);
-                    codes
-                })
-                .collect()
+        // Stage 1 — activation quantization (the whole slab, once).
+        prof.time(Stage::Quantize, || {
+            if scratch.codes.len() != x.len() {
+                scratch.codes.resize(x.len(), 0);
+            }
+            self.act_q.quantize(x, &mut scratch.codes);
         });
         let pad_code = self.act_q.quantize_one(0.0);
         let bits = match self.backend {
@@ -288,49 +380,61 @@ impl CompiledConv {
             _ => 2,
         };
 
-        let mut outs: Vec<Tensor> =
-            (0..bsz).map(|_| Tensor::zeros(&[1, self.spec.out_ch, oh, ow])).collect();
-        let mut fused: Vec<u8> = Vec::new();
+        let chw = c * h * w;
+        let out_elems = self.spec.out_ch * m1;
         for g in 0..groups {
             // Stage 2 — im2col on codes, every image lowered directly
             // into its slice of the batch-fused M×K buffer (no copy).
             prof.time(Stage::Im2col, || {
-                fused.clear();
-                fused.reserve(m * kk);
-                for img in &codes {
-                    im2col_codes_append(img, c, h, w, &self.spec, g, pad_code, &mut fused);
+                scratch.fused.clear();
+                scratch.fused.reserve(m * kk);
+                for bi in 0..bsz {
+                    im2col_codes_append(
+                        &scratch.codes[bi * chw..(bi + 1) * chw],
+                        c,
+                        h,
+                        w,
+                        &self.spec,
+                        g,
+                        pad_code,
+                        &mut scratch.fused,
+                    );
                 }
             });
-            let col_mat = CodeMat::from_data(m, kk, bits, std::mem::take(&mut fused));
+            let col_mat = CodeMat::from_data(m, kk, bits, std::mem::take(&mut scratch.fused));
 
             // Stages 3+4 — pack + GEMM (+ per-backend extras), then
             // stage 5 — dequantize into each image's output plane.
-            let acc = self.gemm_group(&col_mat, g, m, og, kk, prof)?;
+            let acc = self.gemm_group(&col_mat, g, m, og, kk, scratch, prof)?;
             let bias = &self.bias;
             let relu = self.relu;
             prof.time(Stage::Dequant, || {
-                for (bi, out) in outs.iter_mut().enumerate() {
+                for bi in 0..bsz {
+                    let obase = bi * out_elems;
                     for mi in 0..m1 {
                         let row = bi * m1 + mi;
                         for ni in 0..og {
                             let oc = g * og + ni;
-                            let mut v = match &acc {
-                                Acc::I32(a) => a[row * og + ni] as f32 * s_out,
-                                Acc::F32(a) => a[row * og + ni],
+                            let mut v = match acc {
+                                AccKind::I32 => scratch.acc_i32[row * og + ni] as f32 * s_out,
+                                AccKind::F32 => scratch.acc_f32[row * og + ni],
                             } + if bias.is_empty() { 0.0 } else { bias[oc] };
                             if relu {
                                 v = v.max(0.0);
                             }
-                            out.data[oc * m1 + mi] = v;
+                            out[obase + oc * m1 + mi] = v;
                         }
                     }
                 }
             });
-            fused = col_mat.data; // reuse allocation
+            scratch.fused = col_mat.data; // hand the buffer back
         }
-        Ok(outs)
+        Ok(())
     }
 
+    /// Pack + GEMM for one group, entirely in `scratch` buffers; returns
+    /// which accumulator (`acc_i32` / `acc_f32`) holds the result.
+    #[allow(clippy::too_many_arguments)]
     fn gemm_group(
         &self,
         col: &CodeMat,
@@ -338,62 +442,114 @@ impl CompiledConv {
         m: usize,
         og: usize,
         kk: usize,
+        scratch: &mut ConvScratch,
         prof: &mut StageProfile,
-    ) -> crate::Result<Acc> {
-        let mut acc = vec![0i32; m * og];
+    ) -> crate::Result<AccKind> {
+        // Size the integer accumulator only for the backends that use it
+        // (the f32-entry LUT sizes acc_f32 in its own arm instead).
+        if !matches!(&self.weights, PreparedWeights::Lut16F32 { .. })
+            && scratch.acc_i32.len() != m * og
+        {
+            scratch.acc_i32.resize(m * og, 0);
+        }
         match &self.weights {
             PreparedWeights::Lut16 { plans } => {
                 let plan = &plans[g];
-                let a =
-                    prof.time(Stage::Pack, || pack::pack_activations(col, plan.kernel.scheme));
-                prof.time(Stage::LutConv, || plan.execute(&a, &mut acc));
+                prof.time(Stage::Pack, || {
+                    pack::pack_into(col, plan.kernel.scheme.a_layout(), &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    plan.execute(&scratch.packed, &mut scratch.acc_i32)
+                });
             }
             PreparedWeights::LutWide { plans } => {
-                let a = prof.time(Stage::Pack, || lut16_wide::pack_wide(col));
-                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
+                prof.time(Stage::Pack, || lut16_wide::pack_wide_into(col, &mut scratch.packed));
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute(&scratch.packed, &mut scratch.acc_i32)
+                });
             }
             PreparedWeights::Lut65k { plans } => {
-                let a = prof.time(Stage::Pack, || lut65k::pack_dense(col));
-                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
+                prof.time(Stage::Pack, || lut65k::pack_dense_into(col, &mut scratch.packed));
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute(&scratch.packed, &mut scratch.acc_i32)
+                });
             }
             PreparedWeights::Lut16F32 { plans } => {
-                let a = prof.time(Stage::Pack, || pack::pack(col, Scheme::D.a_layout()));
-                let mut facc = vec![0f32; m * og];
-                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut facc));
-                return Ok(Acc::F32(facc));
+                prof.time(Stage::Pack, || {
+                    pack::pack_into(col, Scheme::D.a_layout(), &mut scratch.packed)
+                });
+                if scratch.acc_f32.len() != m * og {
+                    scratch.acc_f32.resize(m * og, 0.0);
+                }
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute(&scratch.packed, &mut scratch.acc_f32)
+                });
+                return Ok(AccKind::F32);
             }
             PreparedWeights::Portable { packed, lut } => {
-                let a = prof.time(Stage::Pack, || pack::pack(col, pack::Layout::Dense));
-                prof.time(Stage::LutConv, || portable::gemm(&a, &packed[g], lut, &mut acc));
+                prof.time(Stage::Pack, || {
+                    pack::pack_into(col, pack::Layout::Dense, &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    portable::gemm(&scratch.packed, &packed[g], lut, &mut scratch.acc_i32)
+                });
             }
             PreparedWeights::Int8 { plans } => {
-                let a = prof.time(Stage::Pack, || pack::pack(col, pack::Layout::Int8));
-                prof.time(Stage::LutConv, || plans[g].execute(&a, &mut acc));
+                prof.time(Stage::Pack, || {
+                    pack::pack_into(col, pack::Layout::Int8, &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute(&scratch.packed, &mut scratch.acc_i32)
+                });
             }
             PreparedWeights::BitSerial { planes, w_code_sums } => {
-                let (a, a_sums) = prof.time(Stage::Pack, || {
-                    let a = bitserial::Planes::from_codes(&col.data, m, kk, col.bits);
-                    (a, row_sums(&col.data, m, kk))
+                prof.time(Stage::Pack, || {
+                    bitserial::Planes::from_codes_into(
+                        &col.data,
+                        m,
+                        kk,
+                        col.bits,
+                        &mut scratch.planes,
+                    );
+                    row_sums_into(&col.data, m, kk, &mut scratch.a_sums);
                 });
-                prof.time(Stage::LutConv, || bitserial::gemm(&a, &planes[g], &mut acc));
+                prof.time(Stage::LutConv, || {
+                    bitserial::gemm(&scratch.planes, &planes[g], &mut scratch.acc_i32)
+                });
                 // Unsigned kernel → signed correction (§5.3's "additional
                 // operations ... to accommodate signed inputs").
                 prof.time(Stage::Dequant, || {
-                    self.unsigned_fixup(&mut acc, &a_sums, &w_code_sums[g], m, og, kk)
+                    self.unsigned_fixup(
+                        &mut scratch.acc_i32,
+                        &scratch.a_sums,
+                        &w_code_sums[g],
+                        m,
+                        og,
+                        kk,
+                    )
                 });
             }
             PreparedWeights::Ulp { packed, w_code_sums } => {
-                let (a, a_sums) = prof.time(Stage::Pack, || {
-                    let a = ulppack::UlpPacked::from_codes(&col.data, m, kk, true);
-                    (a, row_sums(&col.data, m, kk))
+                prof.time(Stage::Pack, || {
+                    ulppack::UlpPacked::from_codes_into(&col.data, m, kk, true, &mut scratch.ulp);
+                    row_sums_into(&col.data, m, kk, &mut scratch.a_sums);
                 });
-                prof.time(Stage::LutConv, || ulppack::gemm(&a, &packed[g], &mut acc));
+                prof.time(Stage::LutConv, || {
+                    ulppack::gemm(&scratch.ulp, &packed[g], &mut scratch.acc_i32)
+                });
                 prof.time(Stage::Dequant, || {
-                    self.unsigned_fixup(&mut acc, &a_sums, &w_code_sums[g], m, og, kk)
+                    self.unsigned_fixup(
+                        &mut scratch.acc_i32,
+                        &scratch.a_sums,
+                        &w_code_sums[g],
+                        m,
+                        og,
+                        kk,
+                    )
                 });
             }
         }
-        Ok(Acc::I32(acc))
+        Ok(AccKind::I32)
     }
 
     /// Convert an unsigned-code accumulator Σ cw·ca into the centered
@@ -419,11 +575,6 @@ impl CompiledConv {
     }
 }
 
-enum Acc {
-    I32(Vec<i32>),
-    F32(Vec<f32>),
-}
-
 fn code_row_sums(groups: &[CodeMat]) -> Vec<Vec<i32>> {
     groups
         .iter()
@@ -435,10 +586,13 @@ fn code_row_sums(groups: &[CodeMat]) -> Vec<Vec<i32>> {
         .collect()
 }
 
-fn row_sums(codes: &[u8], rows: usize, k: usize) -> Vec<i32> {
-    (0..rows)
-        .map(|r| codes[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum())
-        .collect()
+/// Per-row code sums into a reused buffer (allocation-free once the
+/// buffer has grown to the largest M seen).
+fn row_sums_into(codes: &[u8], rows: usize, k: usize, out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(
+        (0..rows).map(|r| codes[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum::<i32>()),
+    );
 }
 
 #[cfg(test)]

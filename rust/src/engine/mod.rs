@@ -1,6 +1,5 @@
 //! Inference engine: compiles a model [`Graph`] for a GEMM [`Backend`]
-//! (weight quantization + offline packing + LUT construction happen here,
-//! once) and executes forward passes with per-stage instrumentation.
+//! and executes forward passes with per-stage instrumentation.
 //!
 //! The quantized convolution pipeline matches the paper's Fig. 7 stages:
 //! activation quantize → im2col → activation pack → Lut-Conv → dequant.
@@ -8,36 +7,56 @@
 //! real deployments do — QNNPACK itself ships dedicated depthwise
 //! kernels), so engine-vs-engine ratios reflect the GEMM kernels.
 //!
-//! ## Plan/execute architecture
+//! ## Compile → plan → execute
 //!
-//! Compilation follows a plan/execute split (see
-//! [`crate::kernels::tile`]): everything derivable from the *weights*
-//! alone happens once in [`CompiledConv::prepare`] — quantization,
-//! offline packing, LUT construction, and for every table-driven
-//! backend *and* the INT8 baseline a [`crate::kernels::GemmPlan`] whose
-//! weight panels are repacked panel-contiguously for the cache-blocked,
-//! register-tiled, multi-threaded execution path. At request time only
-//! activation-dependent work runs, and [`CompiledModel::forward_batch`]
-//! fuses a whole batch into the GEMM's M dimension so all requests in a
-//! dynamic batch share one planned GEMM per layer.
+//! Compilation produces everything derivable before the first request
+//! arrives, in three layers:
+//!
+//! 1. **Weights** ([`CompiledConv::prepare`]): quantization, offline
+//!    packing, LUT construction, and for every table-driven backend and
+//!    the INT8 baseline a [`crate::kernels::GemmPlan`] whose weight
+//!    panels are repacked panel-contiguously for the cache-blocked,
+//!    register-tiled, multi-threaded execution path. FC layers
+//!    pre-build their fp32 weight matrix for the batched GEMM.
+//! 2. **Memory** ([`ExecPlan`]): a topological schedule plus
+//!    tensor-liveness analysis assigns every intermediate a slot in a
+//!    size-planned arena — slots are reused the moment their tensor
+//!    dies, so a deep network needs only a handful of buffers.
+//! 3. **Execution state** ([`ExecCtx`]): the arena buffers plus the
+//!    conv-pipeline scratch (activation codes, the batch-fused im2col
+//!    matrix, packed panels, accumulators). A serving worker creates
+//!    one context per model ([`CompiledModel::new_ctx`]) and reuses it
+//!    across batches: after warm-up, [`CompiledModel::forward_batch_with`]
+//!    performs **no heap allocation** in the quantize → im2col → pack →
+//!    GEMM → dequant pipeline (asserted by the `zero_alloc` integration
+//!    test).
+//!
+//! At request time every op is batch-aware and runs in one pass over a
+//! batch slab: quantized convs fuse the batch into the GEMM's M
+//! dimension, FC runs one fp32 GEMM over the whole batch, and
+//! Add/ReLU/Pool/Concat operate on arena [`BatchView`]s.
 //!
 //! **How a new backend opts into tiling:** implement
 //! [`crate::kernels::TileKernel`] next to its packing code (see the
 //! walkthrough in [`crate::kernels`]), build a `GemmPlan` from the
 //! packed weights + kernel in its `prepare` arm, and call
-//! `plan.execute(..)` in `gemm_group`. Worker-thread count is the
+//! `plan.execute(..)` in `gemm_group` (writing into the shared
+//! [`ConvScratch`] accumulators). Worker-thread count is the
 //! process-wide knob (`--threads` on the CLI, `ServerConfig::threads`
 //! when serving, [`crate::kernels::tile::set_default_threads`]
 //! directly); the few remaining row-streaming baselines (bit-serial,
 //! ULPPACK, the portable scalar kernel) simply ignore it.
 
 mod conv;
+mod plan;
 
-pub use conv::{CompiledConv, PreparedWeights};
+pub use conv::{CompiledConv, ConvScratch, PreparedWeights};
+pub use plan::{ExecCtx, ExecPlan};
 
+use crate::kernels::fp32::{self, MatF32};
 use crate::kernels::Backend;
-use crate::nn::graph::{forward_fp32, Graph, Op};
-use crate::nn::Tensor;
+use crate::nn::graph::{forward_fp32, forward_fp32_all, Graph, Op};
+use crate::nn::{BatchView, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::Quantizer;
 
@@ -49,6 +68,10 @@ pub struct CompiledModel {
     /// Compiled conv state per node id (None for non-conv nodes or convs
     /// that stay in f32, e.g. depthwise).
     convs: Vec<Option<CompiledConv>>,
+    /// Static execution plan: schedule, liveness, arena slot map.
+    pub plan: ExecPlan,
+    /// Prepared fp32 weight matrices per FC node (batched GEMM).
+    fc_weights: Vec<Option<MatF32>>,
 }
 
 impl CompiledModel {
@@ -97,7 +120,33 @@ impl CompiledModel {
             };
             convs.push(compiled);
         }
-        Ok(Self { name: graph.name.clone(), backend, graph, convs })
+        // Static memory plan + FC weight matrices (batched fp32 GEMM).
+        let exec_plan = ExecPlan::build(&graph)?;
+        let fc_weights = graph
+            .nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Fc { in_f, out_f, weights, .. } => {
+                    Some(MatF32::from_values(weights, *out_f, *in_f))
+                }
+                _ => None,
+            })
+            .collect();
+        Ok(Self {
+            name: graph.name.clone(),
+            backend,
+            graph,
+            convs,
+            plan: exec_plan,
+            fc_weights,
+        })
+    }
+
+    /// Create an execution context sized for this model's plan. Serving
+    /// workers create one per model and reuse it across batches
+    /// ([`Self::forward_batch_with`]) for allocation-free steady state.
+    pub fn new_ctx(&self) -> ExecCtx {
+        ExecCtx::new(self.plan.n_slots())
     }
 
     /// Forward pass (single image), accumulating stage times into `prof`.
@@ -106,89 +155,175 @@ impl CompiledModel {
         Ok(ys.pop().expect("one output per image"))
     }
 
-    /// Batched forward pass: quantized conv layers fuse the whole batch
-    /// into one planned GEMM per group (batch rows stacked into M);
-    /// the remaining ops run per image. Outputs keep input order, and
-    /// every output is bit-identical to a single-image [`Self::forward`].
+    /// Batched forward pass with a throwaway context — convenience for
+    /// tests and one-shot runs; serving uses [`Self::forward_batch_with`]
+    /// on a reused [`ExecCtx`]. Outputs keep input order, and every
+    /// output is bit-identical to a single-image [`Self::forward`].
     pub fn forward_batch(
         &self,
         xs: &[Tensor],
         prof: &mut StageProfile,
     ) -> crate::Result<Vec<Tensor>> {
-        let bsz = xs.len();
-        if bsz == 0 {
+        let mut ctx = self.new_ctx();
+        self.forward_batch_with(xs, &mut ctx, prof)
+    }
+
+    /// Batched forward pass into a reused [`ExecCtx`], materializing one
+    /// output tensor per image. All intermediates live in the context's
+    /// arena/scratch; only the returned output tensors are allocated.
+    pub fn forward_batch_with(
+        &self,
+        xs: &[Tensor],
+        ctx: &mut ExecCtx,
+        prof: &mut StageProfile,
+    ) -> crate::Result<Vec<Tensor>> {
+        if xs.is_empty() {
             return Ok(Vec::new());
         }
-        let mut outs: Vec<Vec<Tensor>> = Vec::with_capacity(self.graph.nodes.len());
-        for (i, n) in self.graph.nodes.iter().enumerate() {
-            macro_rules! get {
-                ($id:expr, $bi:expr) => {
-                    if $id == Graph::INPUT {
-                        &xs[$bi]
-                    } else {
-                        &outs[$id][$bi]
-                    }
-                };
+        let view = self.run_batch(xs, ctx, prof)?;
+        let shape = &self.plan.shapes[self.graph.output];
+        Ok((0..xs.len()).map(|bi| Tensor::from_vec(shape, view.image(bi).to_vec())).collect())
+    }
+
+    /// The zero-allocation core: execute the compiled plan over `xs` and
+    /// return a [`BatchView`] of the output slab inside `ctx`'s arena.
+    /// In steady state (context warmed at this batch size) this performs
+    /// no heap allocation anywhere in the quantize → im2col → pack →
+    /// GEMM → dequant pipeline.
+    pub fn run_batch<'c>(
+        &self,
+        xs: &[Tensor],
+        ctx: &'c mut ExecCtx,
+        prof: &mut StageProfile,
+    ) -> crate::Result<BatchView<'c>> {
+        let bsz = xs.len();
+        if bsz == 0 {
+            return Err(crate::Error::Config("run_batch requires a non-empty batch".into()));
+        }
+        if ctx.slots.len() != self.plan.n_slots() {
+            return Err(crate::Error::Config(
+                "ExecCtx was created for a different model".into(),
+            ));
+        }
+        let (ic, ih, iw) = self.graph.input_chw;
+        let in_elems = self.plan.input_elems;
+        for x in xs {
+            if x.shape != [1, ic, ih, iw] {
+                return Err(crate::Error::Shape(format!(
+                    "model '{}' expects [1, {ic}, {ih}, {iw}], got {:?}",
+                    self.name, x.shape
+                )));
             }
-            let ys: Vec<Tensor> = match &n.op {
-                Op::Conv { spec, weights, bias, relu } => match &self.convs[i] {
-                    Some(cc) => {
-                        let ins: Vec<&Tensor> =
-                            (0..bsz).map(|bi| get!(n.inputs[0], bi)).collect();
-                        cc.forward_batch(&ins, prof)?
-                    }
-                    None => per_image(bsz, prof, |bi| {
-                        let y = crate::nn::im2col::conv2d_direct(
-                            get!(n.inputs[0], bi),
-                            weights,
-                            bias,
-                            spec,
-                        );
-                        if *relu {
-                            y.map(|v| v.max(0.0))
-                        } else {
-                            y
+        }
+        // Stage the input slab into its arena slot.
+        {
+            let islot = &mut ctx.slots[self.plan.input_slot];
+            if islot.len() != bsz * in_elems {
+                islot.resize(bsz * in_elems, 0.0);
+            }
+            for (bi, x) in xs.iter().enumerate() {
+                islot[bi * in_elems..(bi + 1) * in_elems].copy_from_slice(&x.data);
+            }
+        }
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            let need = bsz * self.plan.elems[i];
+            // Take the output slot out of the arena for the duration of
+            // the op; liveness guarantees it aliases no live input.
+            let mut outbuf = std::mem::take(&mut ctx.slots[self.plan.slot_of[i]]);
+            if outbuf.len() != need {
+                outbuf.resize(need, 0.0);
+            }
+            match &node.op {
+                Op::Conv { spec, weights, bias, relu } => {
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    match &self.convs[i] {
+                        Some(cc) => {
+                            let r = cc.forward_batch_into(
+                                v.data,
+                                bsz,
+                                v.h,
+                                v.w,
+                                &mut ctx.scratch,
+                                &mut outbuf,
+                                prof,
+                            );
+                            if let Err(e) = r {
+                                ctx.slots[self.plan.slot_of[i]] = outbuf;
+                                return Err(e);
+                            }
                         }
-                    }),
-                },
+                        None => prof.time(Stage::Other, || {
+                            // Direct f32 path (depthwise / Fp32 layers).
+                            let (oh, ow) = spec.out_hw(v.h, v.w);
+                            let oelems = spec.out_ch * oh * ow;
+                            for bi in 0..bsz {
+                                crate::nn::im2col::conv2d_direct_into(
+                                    v.image(bi),
+                                    v.c,
+                                    v.h,
+                                    v.w,
+                                    weights,
+                                    bias,
+                                    spec,
+                                    *relu,
+                                    &mut outbuf[bi * oelems..(bi + 1) * oelems],
+                                );
+                            }
+                        }),
+                    }
+                }
                 Op::MaxPool { k, stride, pad } => {
-                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).max_pool(*k, *stride, *pad))
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    prof.time(Stage::Other, || v.max_pool_into(*k, *stride, *pad, &mut outbuf));
                 }
                 Op::GlobalAvgPool => {
-                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).global_avg_pool())
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    prof.time(Stage::Other, || v.global_avg_pool_into(&mut outbuf));
                 }
-                Op::Fc { in_f, out_f, weights, bias } => per_image(bsz, prof, |bi| {
-                    let xin = get!(n.inputs[0], bi);
-                    let mut y = Tensor::zeros(&[1, *out_f]);
-                    for o in 0..*out_f {
-                        let mut acc = bias[o];
-                        for j in 0..*in_f {
-                            acc += weights[o * in_f + j] * xin.data[j];
+                Op::Fc { in_f, out_f, weights: _, bias } => {
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    let wm = self.fc_weights[i].as_ref().expect("fc weights prepared");
+                    prof.time(Stage::Other, || {
+                        // One fp32 GEMM over the whole batch: per-image
+                        // flattened inputs are already contiguous rows.
+                        ctx.scratch.fc.store(v.data, bsz, *in_f);
+                        fp32::gemm(&ctx.scratch.fc, wm, &mut outbuf);
+                        for bi in 0..bsz {
+                            let row = &mut outbuf[bi * *out_f..(bi + 1) * *out_f];
+                            for (o, b) in row.iter_mut().zip(bias.iter()) {
+                                *o += *b;
+                            }
                         }
-                        y.data[o] = acc;
-                    }
-                    y
-                }),
-                Op::Add { relu } => per_image(bsz, prof, |bi| {
-                    let y = get!(n.inputs[0], bi).add(get!(n.inputs[1], bi));
-                    if *relu {
-                        y.map(|v| v.max(0.0))
-                    } else {
-                        y
-                    }
-                }),
-                Op::Relu => {
-                    per_image(bsz, prof, |bi| get!(n.inputs[0], bi).map(|v| v.max(0.0)))
+                    });
                 }
-                Op::Concat => per_image(bsz, prof, |bi| {
-                    let parts: Vec<&Tensor> =
-                        n.inputs.iter().map(|&id| -> &Tensor { get!(id, bi) }).collect();
-                    Tensor::concat_channels(&parts)
-                }),
-            };
-            outs.push(ys);
+                Op::Add { relu } => {
+                    let a = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    let b = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[1], bsz);
+                    prof.time(Stage::Other, || a.add_into(&b, *relu, &mut outbuf));
+                }
+                Op::Relu => {
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    prof.time(Stage::Other, || v.relu_into(&mut outbuf));
+                }
+                Op::Concat => {
+                    let c_total = self.plan.shapes[i][1];
+                    prof.time(Stage::Other, || {
+                        let mut c_off = 0usize;
+                        for &id in &node.inputs {
+                            let p = node_view(&self.plan, &ctx.slots, (ic, ih, iw), id, bsz);
+                            p.copy_into_channels(c_total, c_off, &mut outbuf);
+                            c_off += p.c;
+                        }
+                    });
+                }
+            }
+            ctx.slots[self.plan.slot_of[i]] = outbuf;
         }
-        Ok(outs.swap_remove(self.graph.output))
+        ctx.runs += 1;
+        let out_id = self.graph.output;
+        let (c, h, w) = chw(&self.plan.shapes[out_id]);
+        let slab = &ctx.slots[self.plan.slot_of[out_id]][..bsz * self.plan.elems[out_id]];
+        Ok(BatchView::new(slab, bsz, c, h, w))
     }
 
     /// Classify: forward + argmax over the final vector.
@@ -199,9 +334,30 @@ impl CompiledModel {
     }
 }
 
-/// Run a per-image op over the batch, timing each image as `Other`.
-fn per_image(bsz: usize, prof: &mut StageProfile, f: impl Fn(usize) -> Tensor) -> Vec<Tensor> {
-    (0..bsz).map(|bi| prof.time(Stage::Other, || f(bi))).collect()
+/// Interpret a per-image shape as (C, H, W) for slab views (flat
+/// vectors, e.g. FC outputs, become C-channel 1×1 images).
+fn chw(shape: &[usize]) -> (usize, usize, usize) {
+    match shape.len() {
+        4 => (shape[1], shape[2], shape[3]),
+        _ => (shape.iter().product(), 1, 1),
+    }
+}
+
+/// Borrow node `id`'s output (or the staged graph input) from the arena
+/// as a [`BatchView`].
+fn node_view<'s>(
+    plan: &ExecPlan,
+    slots: &'s [Vec<f32>],
+    input_chw: (usize, usize, usize),
+    id: usize,
+    bsz: usize,
+) -> BatchView<'s> {
+    let ((c, h, w), slot) = if id == Graph::INPUT {
+        (input_chw, plan.input_slot)
+    } else {
+        (chw(&plan.shapes[id]), plan.slot_of[id])
+    };
+    BatchView::new(&slots[slot][..bsz * c * h * w], bsz, c, h, w)
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -216,17 +372,13 @@ fn is_depthwise(spec: &crate::nn::ConvSpec) -> bool {
     spec.groups > 1 && spec.groups == spec.in_ch && spec.in_ch == spec.out_ch
 }
 
-/// Replay the fp32 forward on calibration inputs, recording each conv
-/// node's *input* (min, max) range.
+/// Replay the fp32 reference forward on calibration inputs (capturing
+/// per-node intermediates via [`forward_fp32_all`] — the one reference
+/// evaluator), recording each conv node's *input* (min, max) range.
 fn calibrate(graph: &Graph, calib: &[Tensor]) -> crate::Result<Vec<(f32, f32)>> {
     let mut ranges = vec![(f32::MAX, f32::MIN); graph.nodes.len()];
     for x in calib {
-        // Forward once, capturing intermediate tensors.
-        let mut outs: Vec<Tensor> = Vec::with_capacity(graph.nodes.len());
-        for n in &graph.nodes {
-            let single = graph_eval_node(graph, n, x, &outs)?;
-            outs.push(single);
-        }
+        let outs = forward_fp32_all(graph, x)?;
         for (i, n) in graph.nodes.iter().enumerate() {
             if matches!(n.op, Op::Conv { .. }) {
                 let input = if n.inputs[0] == Graph::INPUT { x } else { &outs[n.inputs[0]] };
@@ -240,61 +392,6 @@ fn calibrate(graph: &Graph, calib: &[Tensor]) -> crate::Result<Vec<(f32, f32)>> 
         }
     }
     Ok(ranges)
-}
-
-fn graph_eval_node(
-    graph: &Graph,
-    n: &crate::nn::graph::Node,
-    x: &Tensor,
-    outs: &[Tensor],
-) -> crate::Result<Tensor> {
-    // Reuse the reference implementation node-by-node.
-    let get = |id: usize| -> &Tensor {
-        if id == Graph::INPUT {
-            x
-        } else {
-            &outs[id]
-        }
-    };
-    let y = match &n.op {
-        Op::Conv { spec, weights, bias, relu } => {
-            let y = crate::nn::im2col::conv2d_direct(get(n.inputs[0]), weights, bias, spec);
-            if *relu {
-                y.map(|v| v.max(0.0))
-            } else {
-                y
-            }
-        }
-        Op::MaxPool { k, stride, pad } => get(n.inputs[0]).max_pool(*k, *stride, *pad),
-        Op::GlobalAvgPool => get(n.inputs[0]).global_avg_pool(),
-        Op::Fc { in_f, out_f, weights, bias } => {
-            let xin = get(n.inputs[0]);
-            let mut y = Tensor::zeros(&[1, *out_f]);
-            for o in 0..*out_f {
-                let mut acc = bias[o];
-                for j in 0..*in_f {
-                    acc += weights[o * in_f + j] * xin.data[j];
-                }
-                y.data[o] = acc;
-            }
-            y
-        }
-        Op::Add { relu } => {
-            let y = get(n.inputs[0]).add(get(n.inputs[1]));
-            if *relu {
-                y.map(|v| v.max(0.0))
-            } else {
-                y
-            }
-        }
-        Op::Relu => get(n.inputs[0]).map(|v| v.max(0.0)),
-        Op::Concat => {
-            let parts: Vec<&Tensor> = n.inputs.iter().map(|&i| get(i)).collect();
-            Tensor::concat_channels(&parts)
-        }
-    };
-    let _ = graph;
-    Ok(y)
 }
 
 /// Convenience: quantization signal-to-noise of a compiled model vs the
@@ -458,5 +555,79 @@ mod tests {
         let x = Tensor::random(&[1, 3, 32, 32], 17, -1.0, 1.0);
         let m = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
         assert_eq!(m.predict(&x).unwrap(), m.predict(&x).unwrap());
+    }
+
+    #[test]
+    fn ctx_reuse_is_bit_identical_across_varying_batch_sizes() {
+        // The ExecCtx-reuse property: repeated forward_batch calls with
+        // varying batch sizes on ONE context are bit-identical to
+        // fresh-ctx runs, across backends with i32, f32 and row-streaming
+        // GEMM paths, on a residual/concat graph.
+        let mut rng = crate::util::rng::Rng::new(21);
+        let g = zoo::tiny_mixed(6, &mut rng);
+        for backend in [
+            Backend::Lut16(Scheme::D),
+            Backend::Int8,
+            Backend::Lut65k,
+            Backend::Lut16F32,
+            Backend::BitSerial,
+        ] {
+            let m = CompiledModel::compile(g.clone(), backend, &[]).unwrap();
+            let mut ctx = m.new_ctx();
+            for (round, &bsz) in [3usize, 1, 4, 2].iter().enumerate() {
+                let xs: Vec<Tensor> = (0..bsz)
+                    .map(|bi| {
+                        Tensor::random(
+                            &[1, 3, 16, 16],
+                            1000 + round as u64 * 10 + bi as u64,
+                            -1.0,
+                            1.0,
+                        )
+                    })
+                    .collect();
+                let mut p1 = StageProfile::new();
+                let reused = m.forward_batch_with(&xs, &mut ctx, &mut p1).unwrap();
+                let mut p2 = StageProfile::new();
+                let fresh = m.forward_batch(&xs, &mut p2).unwrap();
+                for (a, b) in reused.iter().zip(fresh.iter()) {
+                    assert_eq!(
+                        a.data,
+                        b.data,
+                        "{} round {round} bsz {bsz}: ctx reuse changed outputs",
+                        backend.name()
+                    );
+                }
+            }
+            assert_eq!(ctx.runs(), 4);
+            assert!(ctx.footprint_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn ctx_from_another_model_is_rejected() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let g1 = zoo::small_cnn(4, &mut rng);
+        let g2 = zoo::tiny_mixed(4, &mut rng);
+        let m1 = CompiledModel::compile(g1, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let m2 = CompiledModel::compile(g2, Backend::Lut16(Scheme::D), &[]).unwrap();
+        if m1.plan.n_slots() == m2.plan.n_slots() {
+            return; // indistinguishable by design — nothing to assert
+        }
+        let mut ctx = m1.new_ctx();
+        let x = Tensor::random(&[1, 3, 16, 16], 1, -1.0, 1.0);
+        let mut prof = StageProfile::new();
+        assert!(m2.forward_batch_with(&[x], &mut ctx, &mut prof).is_err());
+    }
+
+    #[test]
+    fn batched_fc_matches_scalar_reference_tolerance() {
+        // The batched fp32 FC GEMM may regroup the reduction; it must
+        // stay within float tolerance of the scalar reference loop.
+        let g = small();
+        let x = Tensor::random(&[1, 3, 32, 32], 31, -1.0, 1.0);
+        let want = forward_fp32(&g, &x).unwrap();
+        let m = CompiledModel::compile(g, Backend::Fp32, &[]).unwrap();
+        let got = m.forward(&x, &mut StageProfile::new()).unwrap();
+        crate::util::prop::assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap();
     }
 }

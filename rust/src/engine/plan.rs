@@ -1,0 +1,260 @@
+//! Static execution planning: topological schedule, tensor liveness and
+//! arena slot assignment — everything derivable from graph *structure*
+//! alone, computed once at compile time so request-time execution can
+//! run against pre-sized buffers.
+//!
+//! The planner mirrors what production executors (rten, ONNX Runtime,
+//! TFLite) do: nodes are already in topological order, so the schedule
+//! is the node list; a per-tensor live interval `[def, last_use]` falls
+//! out of one backward pass; and a linear scan assigns every
+//! intermediate a *slot* in a shared arena, reusing a slot as soon as
+//! the tensor occupying it dies. Slot capacities are the max of the
+//! tensors assigned to them (in per-image elements — the batch dimension
+//! scales every slot uniformly at bind time), so one [`ExecCtx`] serves
+//! any batch size and stops allocating once it has seen its largest.
+
+use crate::engine::conv::ConvScratch;
+use crate::nn::Graph;
+
+/// The compile-time execution plan for one model: per-node output
+/// shapes, liveness, and the arena slot map.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    /// Per-node single-image output shape (leading dim 1), as inferred
+    /// by [`Graph::infer_shapes`].
+    pub shapes: Vec<Vec<usize>>,
+    /// Per-node per-image element count (product of `shapes[i]`).
+    pub elems: Vec<usize>,
+    /// Arena slot assigned to each node's output.
+    pub slot_of: Vec<usize>,
+    /// Arena slot staging the graph input slab.
+    pub input_slot: usize,
+    /// Per-image element count of the graph input.
+    pub input_elems: usize,
+    /// Per-slot capacity in per-image elements (max over the tensors
+    /// sharing the slot).
+    pub slot_elems: Vec<usize>,
+    /// Last node index reading each node's output; `usize::MAX` for the
+    /// graph output (alive past the end), `i` itself for dead nodes
+    /// whose output nobody reads.
+    pub last_use: Vec<usize>,
+}
+
+/// Pop the largest free slot (minimizes growth when tensors of mixed
+/// sizes share slots), growing it to `size` if needed; allocate a new
+/// slot when the free list is empty.
+fn grab_slot(size: usize, slot_elems: &mut Vec<usize>, free: &mut Vec<usize>) -> usize {
+    if let Some(pos) = (0..free.len()).max_by_key(|&p| slot_elems[free[p]]) {
+        let s = free.swap_remove(pos);
+        slot_elems[s] = slot_elems[s].max(size);
+        s
+    } else {
+        slot_elems.push(size);
+        slot_elems.len() - 1
+    }
+}
+
+impl ExecPlan {
+    /// Derive the plan for `graph` (shapes must infer cleanly).
+    pub fn build(graph: &Graph) -> crate::Result<ExecPlan> {
+        let shapes = graph.infer_shapes()?;
+        let elems: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+        let n = graph.nodes.len();
+        let (ic, ih, iw) = graph.input_chw;
+        let input_elems = ic * ih * iw;
+
+        // Liveness: last reader of every node's output (and of the graph
+        // input). A node's own index marks "never read"; the graph
+        // output stays alive past the end.
+        let mut last_use: Vec<usize> = (0..n).collect();
+        let mut input_last_use = 0usize; // 0 = read no later than node 0
+        let mut input_read = false;
+        for (i, node) in graph.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                if inp == Graph::INPUT {
+                    input_last_use = input_last_use.max(i);
+                    input_read = true;
+                } else {
+                    last_use[inp] = last_use[inp].max(i);
+                }
+            }
+        }
+        last_use[graph.output] = usize::MAX;
+
+        // Linear-scan slot assignment in schedule order. A slot is
+        // released only *after* the node that performs the last read has
+        // been assigned its own (different) slot, so an op's output can
+        // never alias any of its inputs.
+        let mut slot_elems: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut slot_of = vec![usize::MAX; n];
+        let input_slot = grab_slot(input_elems, &mut slot_elems, &mut free);
+        if !input_read {
+            free.push(input_slot);
+        }
+        for (i, node) in graph.nodes.iter().enumerate() {
+            slot_of[i] = grab_slot(elems[i], &mut slot_elems, &mut free);
+            for (j, &inp) in node.inputs.iter().enumerate() {
+                if node.inputs[..j].contains(&inp) {
+                    continue; // duplicated input: release its slot once
+                }
+                if inp == Graph::INPUT {
+                    if input_read && input_last_use == i {
+                        free.push(input_slot);
+                        input_read = false; // repeated INPUT reads later in
+                                            // the walk cannot re-free
+                    }
+                } else if last_use[inp] == i {
+                    free.push(slot_of[inp]);
+                }
+            }
+            if last_use[i] == i {
+                // Dead output (never read, not the graph output): its
+                // slot is immediately reusable.
+                free.push(slot_of[i]);
+            }
+        }
+
+        Ok(ExecPlan {
+            shapes,
+            elems,
+            slot_of,
+            input_slot,
+            input_elems,
+            slot_elems,
+            last_use,
+        })
+    }
+
+    /// Number of arena slots.
+    pub fn n_slots(&self) -> usize {
+        self.slot_elems.len()
+    }
+
+    /// Planned arena footprint for a batch-of-one, in bytes.
+    pub fn arena_bytes_per_image(&self) -> usize {
+        self.slot_elems.iter().sum::<usize>() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Request-time execution state: the arena (one growable buffer per
+/// planned slot) plus the conv-pipeline scratch. Created once per
+/// worker via [`crate::engine::CompiledModel::new_ctx`] and reused
+/// across batches — after warm-up, `forward_batch_with` performs no
+/// heap allocation in the quantize → im2col → pack → GEMM → dequant
+/// pipeline.
+#[derive(Debug)]
+pub struct ExecCtx {
+    /// Arena slot buffers (lengths bound per batch at execution time).
+    pub(crate) slots: Vec<Vec<f32>>,
+    /// Shared conv/FC pipeline scratch.
+    pub(crate) scratch: ConvScratch,
+    /// Completed forward passes served by this context.
+    pub(crate) runs: u64,
+}
+
+impl ExecCtx {
+    pub(crate) fn new(n_slots: usize) -> ExecCtx {
+        ExecCtx {
+            slots: (0..n_slots).map(|_| Vec::new()).collect(),
+            scratch: ConvScratch::default(),
+            runs: 0,
+        }
+    }
+
+    /// Forward passes served by this context (reuse count + 1).
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Bytes currently held by the arena and scratch buffers — the
+    /// steady-state memory a serving worker keeps resident per model.
+    pub fn footprint_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.capacity() * std::mem::size_of::<f32>()).sum::<usize>()
+            + self.scratch.footprint_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+    use crate::util::rng::Rng;
+
+    /// Two tensors are live simultaneously iff the later-defined one is
+    /// defined no later than the earlier one's last read.
+    fn overlap(def_a: usize, last_a: usize, def_b: usize, last_b: usize) -> bool {
+        def_a <= last_b && def_b <= last_a
+    }
+
+    #[test]
+    fn liveness_overlapping_tensors_never_share_a_slot() {
+        // The residual/concat graph: cat feeds both c2 and the add, so
+        // its interval spans multiple nodes and must exclude reuse.
+        let mut rng = Rng::new(11);
+        let g = zoo::tiny_mixed(4, &mut rng);
+        let plan = ExecPlan::build(&g).unwrap();
+        let n = g.nodes.len();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if plan.slot_of[i] == plan.slot_of[j] {
+                    assert!(
+                        !overlap(i, plan.last_use[i], j, plan.last_use[j]),
+                        "nodes {i} ({}) and {j} ({}) share slot {} while live together",
+                        g.nodes[i].name,
+                        g.nodes[j].name,
+                        plan.slot_of[i]
+                    );
+                }
+            }
+            // The input slab is live until its last read.
+            if plan.slot_of[i] == plan.input_slot {
+                let input_last =
+                    g.nodes.iter().enumerate().rev().find_map(|(k, nd)| {
+                        nd.inputs.contains(&crate::nn::Graph::INPUT).then_some(k)
+                    });
+                if let Some(il) = input_last {
+                    assert!(i > il, "node {i} reuses the input slot before its last read");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuses_slots_on_sequential_graphs() {
+        // A sequential CNN needs far fewer slots than nodes: liveness
+        // makes the arena a rolling double-buffer, not a per-node map.
+        let mut rng = Rng::new(3);
+        let g = zoo::small_cnn(10, &mut rng);
+        let plan = ExecPlan::build(&g).unwrap();
+        assert!(
+            plan.n_slots() < g.nodes.len(),
+            "{} slots for {} nodes — no reuse happened",
+            plan.n_slots(),
+            g.nodes.len()
+        );
+        assert!(plan.arena_bytes_per_image() > 0);
+    }
+
+    #[test]
+    fn slot_capacity_covers_every_assigned_tensor() {
+        let mut rng = Rng::new(7);
+        for g in [zoo::small_cnn(6, &mut rng), zoo::tiny_mixed(6, &mut rng)] {
+            let plan = ExecPlan::build(&g).unwrap();
+            for (i, &s) in plan.slot_of.iter().enumerate() {
+                assert!(plan.slot_elems[s] >= plan.elems[i], "slot {s} too small for node {i}");
+            }
+            assert!(plan.slot_elems[plan.input_slot] >= plan.input_elems);
+            // The graph output keeps its slot: nothing later shares it.
+            let out_slot = plan.slot_of[g.output];
+            for (i, &s) in plan.slot_of.iter().enumerate() {
+                if i != g.output {
+                    assert!(
+                        s != out_slot || plan.last_use[i] < g.output,
+                        "node {i} would overwrite the graph output"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -25,23 +25,42 @@ pub struct Planes {
 }
 
 impl Planes {
+    /// An empty plane set whose buffer can be refilled later via
+    /// [`Planes::from_codes_into`] — the reusable-scratch starting point.
+    pub fn empty() -> Self {
+        Self { rows: 0, k: 0, k_padded: 0, bits: 1, words: 0, data: Vec::new() }
+    }
+
     /// Pack codes (one per byte, row-major rows×k) into bit planes.
     pub fn from_codes(codes: &[u8], rows: usize, k: usize, bits: u32) -> Self {
+        let mut out = Self::empty();
+        Self::from_codes_into(codes, rows, k, bits, &mut out);
+        out
+    }
+
+    /// [`Planes::from_codes`] into a caller-provided plane set, reusing
+    /// its buffer (allocation-free once capacity has stabilized).
+    pub fn from_codes_into(codes: &[u8], rows: usize, k: usize, bits: u32, out: &mut Planes) {
         assert_eq!(codes.len(), rows * k);
         let k_padded = align_up(k.max(1), 64);
         let words = k_padded / 64;
-        let mut data = vec![0u64; rows * bits as usize * words];
+        out.data.clear();
+        out.data.resize(rows * bits as usize * words, 0);
         for r in 0..rows {
             for (i, &c) in codes[r * k..(r + 1) * k].iter().enumerate() {
                 debug_assert!((c as u32) < (1 << bits));
                 for b in 0..bits as usize {
                     if (c >> b) & 1 == 1 {
-                        data[(r * bits as usize + b) * words + i / 64] |= 1u64 << (i % 64);
+                        out.data[(r * bits as usize + b) * words + i / 64] |= 1u64 << (i % 64);
                     }
                 }
             }
         }
-        Self { rows, k, k_padded, bits, words, data }
+        out.rows = rows;
+        out.k = k;
+        out.k_padded = k_padded;
+        out.bits = bits;
+        out.words = words;
     }
 
     #[inline]

@@ -19,14 +19,34 @@ pub struct MatF32 {
 }
 
 impl MatF32 {
+    /// An empty matrix whose buffer can be refilled later via
+    /// [`MatF32::store`] — the reusable-scratch starting point.
+    pub fn empty() -> Self {
+        Self { rows: 0, k: 0, k_padded: 0, data: Vec::new() }
+    }
+
     pub fn from_values(values: &[f32], rows: usize, k: usize) -> Self {
+        let mut m = Self::empty();
+        m.store(values, rows, k);
+        m
+    }
+
+    /// Refill the matrix in place from row-major `values`, reusing the
+    /// existing buffer — the allocation-free steady-state analogue of
+    /// [`MatF32::from_values`] (used by the engine's batched FC GEMM).
+    pub fn store(&mut self, values: &[f32], rows: usize, k: usize) {
         assert_eq!(values.len(), rows * k);
         let k_padded = align_up(k.max(1), K_BLOCK32 * 4);
-        let mut data = vec![0f32; rows * k_padded];
+        self.rows = rows;
+        self.k = k;
+        self.k_padded = k_padded;
+        // K padding must stay zero: the AVX2 kernel streams k_padded.
+        self.data.clear();
+        self.data.resize(rows * k_padded, 0.0);
         for r in 0..rows {
-            data[r * k_padded..r * k_padded + k].copy_from_slice(&values[r * k..(r + 1) * k]);
+            self.data[r * k_padded..r * k_padded + k]
+                .copy_from_slice(&values[r * k..(r + 1) * k]);
         }
-        Self { rows, k, k_padded, data }
     }
 
     #[inline]

@@ -17,16 +17,24 @@
 //! [`crate::kernels::GemmPlan`]; there is no standalone row-streaming
 //! driver anymore.
 
-use super::pack::{pack, unpack_row, Layout, Packed};
+use super::pack::{pack_into, unpack_row, Layout, Packed};
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
 use crate::quant::Lut16;
 
 /// Pack helper for the wide kernels.
 pub fn pack_wide(codes: &CodeMat) -> Packed {
+    let mut out = Packed::empty();
+    pack_wide_into(codes, &mut out);
+    out
+}
+
+/// [`pack_wide`] into a caller-provided buffer (allocation-free in
+/// steady state — see [`super::pack::pack_into`]).
+pub fn pack_wide_into(codes: &CodeMat, out: &mut Packed) {
     match codes.bits {
-        3 => pack(codes, Layout::Dense3),
-        4 => pack(codes, Layout::Dense4),
+        3 => pack_into(codes, Layout::Dense3, out),
+        4 => pack_into(codes, Layout::Dense4, out),
         b => panic!("lut16_wide supports 3/4-bit, got {b}"),
     }
 }

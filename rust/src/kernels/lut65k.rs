@@ -13,7 +13,7 @@
 //! threads of [`crate::kernels::GemmPlan`] — the table stays L2-resident
 //! while a whole MR×NR tile reuses each fragment.
 
-use super::pack::{pack, Layout, Packed};
+use super::pack::{pack, pack_into, Layout, Packed};
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
 use crate::quant::Lut65k;
@@ -22,6 +22,12 @@ use std::sync::Arc;
 /// Pack codes densely (4 crumbs/byte) for the LUT-65k kernel.
 pub fn pack_dense(codes: &CodeMat) -> Packed {
     pack(codes, Layout::Dense)
+}
+
+/// [`pack_dense`] into a caller-provided buffer (allocation-free in
+/// steady state — see [`super::pack::pack_into`]).
+pub fn pack_dense_into(codes: &CodeMat, out: &mut Packed) {
+    pack_into(codes, Layout::Dense, out)
 }
 
 /// The LUT-65k tile kernel: scalar 16-bit-indexed block-product lookups

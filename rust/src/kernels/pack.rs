@@ -142,6 +142,12 @@ pub struct Packed {
 }
 
 impl Packed {
+    /// An empty packed matrix (0 rows) whose buffer can be filled later
+    /// via [`pack_into`] — the reusable-scratch starting point.
+    pub fn empty() -> Packed {
+        Packed { rows: 0, k: 0, k_padded: 0, layout: Layout::Dense, stride: 0, data: Vec::new() }
+    }
+
     #[inline]
     pub fn row(&self, r: usize) -> &[u8] {
         &self.data[r * self.stride..(r + 1) * self.stride]
@@ -158,6 +164,16 @@ impl Packed {
 
 /// Pack a code matrix into `layout`, padding K to a multiple of `K_BLOCK`.
 pub fn pack(codes: &CodeMat, layout: Layout) -> Packed {
+    let mut out = Packed::empty();
+    pack_into(codes, layout, &mut out);
+    out
+}
+
+/// [`pack`] into a caller-provided [`Packed`], reusing its buffer: the
+/// allocation-free steady-state entry point used by the serving engine's
+/// per-request activation packing. Only allocates when the required
+/// capacity grows beyond what `out` already holds.
+pub fn pack_into(codes: &CodeMat, layout: Layout, out: &mut Packed) {
     assert_eq!(
         codes.bits,
         layout.bits(),
@@ -166,13 +182,19 @@ pub fn pack(codes: &CodeMat, layout: Layout) -> Packed {
     let k = codes.cols;
     let k_padded = align_up(k.max(1), K_BLOCK);
     let stride = layout.bytes_for(k_padded);
-    let mut data = vec![0u8; codes.rows * stride];
+    out.rows = codes.rows;
+    out.k = k;
+    out.k_padded = k_padded;
+    out.layout = layout;
+    out.stride = stride;
+    // pack_row ORs bits into place, so the buffer must be zeroed first.
+    out.data.clear();
+    out.data.resize(codes.rows * stride, 0);
     for r in 0..codes.rows {
         let src = codes.row(r);
-        let dst = &mut data[r * stride..(r + 1) * stride];
+        let dst = &mut out.data[r * stride..(r + 1) * stride];
         pack_row(src, dst, layout);
     }
-    Packed { rows: codes.rows, k, k_padded, layout, stride, data }
 }
 
 /// Pack one row of codes into `dst` (already zeroed; padding stays 0).
@@ -426,6 +448,26 @@ mod tests {
             for j in 0..32usize {
                 assert_eq!(dst[32 * i + j], codes[4 * j + i] << 2);
             }
+        }
+    }
+
+    #[test]
+    fn pack_into_reuses_buffer_and_matches_pack() {
+        let mut scratch = Packed::empty();
+        // Grow once with a big matrix, then repack smaller ones into the
+        // same buffer: contents must match a fresh pack and the capacity
+        // must never grow again.
+        pack_into(&CodeMat::random(9, 700, 2, 1), Layout::Dense, &mut scratch);
+        let cap = scratch.data.capacity();
+        for (rows, k, layout) in
+            [(3usize, 100usize, Layout::Dense), (5, 130, Layout::NibbleLo), (2, 64, Layout::Dense)]
+        {
+            let m = CodeMat::random(rows, k, 2, rows as u64 + k as u64);
+            pack_into(&m, layout, &mut scratch);
+            let fresh = pack(&m, layout);
+            assert_eq!(scratch.data, fresh.data, "{layout:?} k={k}");
+            assert_eq!((scratch.rows, scratch.k, scratch.k_padded), (rows, k, fresh.k_padded));
+            assert_eq!(scratch.data.capacity(), cap, "repack must not reallocate");
         }
     }
 

@@ -46,8 +46,19 @@ use super::pack::{unpack_row, Layout, Packed, Scheme};
 use super::K_BLOCK;
 use crate::quant::Lut16;
 use crate::util::pool::ThreadPool;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+thread_local! {
+    /// Scalar-path decode scratch (activation row, staged weight panel),
+    /// reused across regions and executions so the portable fallback
+    /// performs no steady-state heap allocation. One pair per thread:
+    /// the calling thread for single-threaded plans, each pool worker
+    /// otherwise. The buffers only grow (to the largest `kc` seen).
+    static SCALAR_SCRATCH: RefCell<(Vec<u8>, Vec<u8>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Rows of the register tile (activation side).
 pub const MR: usize = 4;
@@ -524,30 +535,40 @@ impl<K: TileKernel> GemmPlan<K> {
             }
             return;
         }
+        // Work-pulling dispatch: `min(threads, tasks)` identical workers
+        // drain an atomic task counter, so dispatch cost is O(workers)
+        // boxed closures per execute (not O(tasks)) and load imbalance
+        // between regions self-corrects.
         let pool = global_pool(threads);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
-        for mb in 0..m_blocks {
-            for nb in 0..n_blocks {
-                jobs.push(Box::new(move || {
-                    self.run_region(
-                        a,
-                        outp,
-                        mb * mc,
-                        ((mb + 1) * mc).min(m),
-                        nb * nc,
-                        ((nb + 1) * nc).min(n),
-                        use_avx2,
-                    );
-                }));
-            }
+        let next = AtomicUsize::new(0);
+        let workers = threads.min(tasks);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let next = &next;
+            jobs.push(Box::new(move || loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= tasks {
+                    break;
+                }
+                let (mb, nb) = (t / n_blocks, t % n_blocks);
+                self.run_region(
+                    a,
+                    outp,
+                    mb * mc,
+                    ((mb + 1) * mc).min(m),
+                    nb * nc,
+                    ((nb + 1) * nc).min(n),
+                    use_avx2,
+                );
+            }));
         }
         pool.scope_run(jobs);
     }
 
-    /// Compute one disjoint output region `[m0, m1) × [n0, n1)`:
-    /// K-block outer loop, NR-panel middle loop, MR-row tile inner loop,
-    /// raw partial sums accumulated into `out`, per-column epilogue
-    /// correction applied once at the end.
+    /// Compute one disjoint output region `[m0, m1) × [n0, n1)`. Routes
+    /// the scalar fallback through the per-thread [`SCALAR_SCRATCH`]
+    /// buffers (the AVX2 path needs no scratch), then delegates to
+    /// [`Self::run_region_with`].
     #[allow(clippy::too_many_arguments)]
     fn run_region(
         &self,
@@ -559,6 +580,42 @@ impl<K: TileKernel> GemmPlan<K> {
         n1: usize,
         use_avx2: bool,
     ) {
+        if use_avx2 {
+            self.run_region_with(a, out, m0, m1, n0, n1, true, &mut [], &mut []);
+            return;
+        }
+        let kc = self.panels.kc;
+        SCALAR_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (a_buf, w_buf) = &mut *guard;
+            if a_buf.len() < kc {
+                a_buf.resize(kc, 0);
+            }
+            if w_buf.len() < NR * kc {
+                w_buf.resize(NR * kc, 0);
+            }
+            self.run_region_with(a, out, m0, m1, n0, n1, false, a_buf, w_buf);
+        });
+    }
+
+    /// K-block outer loop, NR-panel middle loop, MR-row tile inner loop,
+    /// raw partial sums accumulated into `out`, per-column epilogue
+    /// correction applied once at the end. `a_buf`/`w_buf` are the
+    /// scalar-path decode scratch (≥ `kc` / ≥ `NR·kc` bytes; empty and
+    /// unused under AVX2).
+    #[allow(clippy::too_many_arguments)]
+    fn run_region_with(
+        &self,
+        a: &Packed,
+        out: SendMut<K::Acc>,
+        m0: usize,
+        m1: usize,
+        n0: usize,
+        n1: usize,
+        use_avx2: bool,
+        a_buf: &mut [u8],
+        w_buf: &mut [u8],
+    ) {
         let n = self.panels.n;
         let outp = out.0;
         let zero = <K::Acc as Accum>::ZERO;
@@ -569,12 +626,6 @@ impl<K: TileKernel> GemmPlan<K> {
             }
         }
         let kc = self.panels.kc;
-        // Scalar-path scratch (unused — and left empty — under AVX2).
-        let (mut a_buf, mut w_buf) = if use_avx2 {
-            (Vec::new(), Vec::new())
-        } else {
-            (vec![0u8; kc], vec![0u8; NR * kc])
-        };
         let a_chunk = a.layout.bytes_for(K_BLOCK);
         let p0 = n0 / NR;
         let p1 = n1.div_ceil(NR);
@@ -590,7 +641,7 @@ impl<K: TileKernel> GemmPlan<K> {
                     *slot = self.panels.frag(p, b, r);
                 }
                 if !use_avx2 {
-                    self.kernel.prep_panel(&wf, vals, nt, kc, &mut w_buf);
+                    self.kernel.prep_panel(&wf, vals, nt, kc, w_buf);
                 }
                 let mut t0 = m0;
                 while t0 < m1 {
@@ -601,7 +652,7 @@ impl<K: TileKernel> GemmPlan<K> {
                     }
                     let mut sums = [[zero; NR]; MR];
                     self.kernel.tile(
-                        &ar, &wf, vals, mt, nt, use_avx2, kc, &mut a_buf, &w_buf, &mut sums,
+                        &ar, &wf, vals, mt, nt, use_avx2, kc, a_buf, w_buf, &mut sums,
                     );
                     for (i, row) in sums.iter().enumerate().take(mt) {
                         for (j, s) in row.iter().enumerate().take(nt) {

@@ -29,11 +29,27 @@ pub struct UlpPacked {
 }
 
 impl UlpPacked {
+    /// An empty packed matrix whose buffer can be refilled later via
+    /// [`UlpPacked::from_codes_into`] — the reusable-scratch starting
+    /// point.
+    pub fn empty() -> Self {
+        Self { rows: 0, k: 0, k_padded: 0, lanes: 0, data: Vec::new(), reversed: false }
+    }
+
     pub fn from_codes(codes: &[u8], rows: usize, k: usize, reversed: bool) -> Self {
+        let mut out = Self::empty();
+        Self::from_codes_into(codes, rows, k, reversed, &mut out);
+        out
+    }
+
+    /// [`UlpPacked::from_codes`] into a caller-provided matrix, reusing
+    /// its buffer (allocation-free once capacity has stabilized).
+    pub fn from_codes_into(codes: &[u8], rows: usize, k: usize, reversed: bool, out: &mut Self) {
         assert_eq!(codes.len(), rows * k);
         let k_padded = align_up(k.max(1), K_BLOCK_ULP);
         let lanes = k_padded / 2;
-        let mut data = vec![0u16; rows * lanes];
+        out.data.clear();
+        out.data.resize(rows * lanes, 0);
         for r in 0..rows {
             for i in 0..k {
                 debug_assert!(codes[r * k + i] < 4);
@@ -43,10 +59,14 @@ impl UlpPacked {
                 // weight: pair (v0, v1) → v0 | v1<<8
                 // activation: pair (v0, v1) → v1 | v0<<8 (reversed)
                 let shift = if hi != reversed { 8 } else { 0 };
-                data[r * lanes + lane] |= v << shift;
+                out.data[r * lanes + lane] |= v << shift;
             }
         }
-        Self { rows, k, k_padded, lanes, data, reversed }
+        out.rows = rows;
+        out.k = k;
+        out.k_padded = k_padded;
+        out.lanes = lanes;
+        out.reversed = reversed;
     }
 
     #[inline]

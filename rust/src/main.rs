@@ -144,10 +144,20 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
             let iters = args.get_usize("iters", 3).map_err(deepgemm::Error::Config)?;
             let mut prof = StageProfile::new();
             let x = Tensor::random(&[1, c, h, w], 7, -1.0, 1.0);
-            model.forward(&x, &mut StageProfile::new())?; // warmup
+            // Serving-style steady state: one reused ExecCtx, warmup run
+            // grows the planned arena + scratch once.
+            let mut ctx = model.new_ctx();
+            let xs = std::slice::from_ref(&x);
+            model.forward_batch_with(xs, &mut ctx, &mut StageProfile::new())?; // warmup
             for _ in 0..iters {
-                model.forward(&x, &mut prof)?;
+                model.forward_batch_with(xs, &mut ctx, &mut prof)?;
             }
+            println!(
+                "memory plan: {} arena slots, {} B/image planned, {} B resident ctx",
+                model.plan.n_slots(),
+                model.plan.arena_bytes_per_image(),
+                ctx.footprint_bytes()
+            );
             println!("{}", prof.render(&format!("{} / {}", model.name, model.backend.name())));
             Ok(())
         }

@@ -258,6 +258,15 @@ impl Graph {
 /// Reference FP32 forward pass (single image) — the semantic oracle that
 /// the quantized engines are compared against in integration tests.
 pub fn forward_fp32(g: &Graph, x: &Tensor) -> crate::Result<Tensor> {
+    let mut outs = forward_fp32_all(g, x)?;
+    Ok(outs.swap_remove(g.output))
+}
+
+/// [`forward_fp32`] capturing *every* node's output (index = node id) —
+/// the one reference evaluator: engine calibration reads per-node
+/// intermediates from it, tests read just the graph output via
+/// [`forward_fp32`].
+pub fn forward_fp32_all(g: &Graph, x: &Tensor) -> crate::Result<Vec<Tensor>> {
     g.validate()?;
     let mut outs: Vec<Tensor> = Vec::with_capacity(g.nodes.len());
     for n in &g.nodes {
@@ -307,7 +316,7 @@ pub fn forward_fp32(g: &Graph, x: &Tensor) -> crate::Result<Tensor> {
         };
         outs.push(y);
     }
-    Ok(outs.swap_remove(g.output))
+    Ok(outs)
 }
 
 #[cfg(test)]

@@ -114,12 +114,34 @@ pub fn im2col_codes_append(
 pub fn conv2d_direct(x: &Tensor, weights: &[f32], bias: &[f32], spec: &ConvSpec) -> Tensor {
     let (n, c, h, w) = x.nchw();
     assert_eq!(n, 1);
+    let (oh, ow) = spec.out_hw(h, w);
+    let mut out = Tensor::zeros(&[1, spec.out_ch, oh, ow]);
+    conv2d_direct_into(&x.data, c, h, w, weights, bias, spec, false, &mut out.data);
+    out
+}
+
+/// [`conv2d_direct`] over a raw single-image plane into a caller-provided
+/// output (allocation-free; `relu` fuses the activation) — the direct f32
+/// path the compiled executor uses for depthwise and FP32 layers.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_direct_into(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    bias: &[f32],
+    spec: &ConvSpec,
+    relu: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), c * h * w);
     assert_eq!(c, spec.in_ch);
     assert_eq!(weights.len(), spec.weight_len());
     let (oh, ow) = spec.out_hw(h, w);
+    assert_eq!(out.len(), spec.out_ch * oh * ow);
     let cg = spec.in_ch / spec.groups;
     let og = spec.out_ch / spec.groups;
-    let mut out = Tensor::zeros(&[1, spec.out_ch, oh, ow]);
     for g in 0..spec.groups {
         for oc in 0..og {
             let oc_abs = g * og + oc;
@@ -128,12 +150,13 @@ pub fn conv2d_direct(x: &Tensor, weights: &[f32], bias: &[f32], spec: &ConvSpec)
                 for ox in 0..ow {
                     let mut acc = if bias.is_empty() { 0.0 } else { bias[oc_abs] };
                     for ci in 0..cg {
+                        let plane = (g * cg + ci) * h * w;
                         for ky in 0..spec.kh {
                             for kx in 0..spec.kw {
                                 let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
                                 let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
                                 if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
-                                    let xv = x.at4(0, g * cg + ci, iy as usize, ix as usize);
+                                    let xv = x[plane + iy as usize * w + ix as usize];
                                     let wv = weights
                                         [wbase + (ci * spec.kh + ky) * spec.kw + kx];
                                     acc += xv * wv;
@@ -141,12 +164,11 @@ pub fn conv2d_direct(x: &Tensor, weights: &[f32], bias: &[f32], spec: &ConvSpec)
                             }
                         }
                     }
-                    out.data[(oc_abs * oh + oy) * ow + ox] = acc;
+                    out[(oc_abs * oh + oy) * ow + ox] = if relu { acc.max(0.0) } else { acc };
                 }
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@ pub mod tensor;
 pub mod zoo;
 
 pub use graph::{Graph, Node, Op};
-pub use tensor::Tensor;
+pub use tensor::{BatchView, Tensor};
 
 /// A 2-D convolution specification (NCHW).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

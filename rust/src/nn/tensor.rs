@@ -1,6 +1,138 @@
-//! Minimal NCHW f32 tensor.
+//! Minimal NCHW f32 tensor, plus [`BatchView`] — the borrowed,
+//! batch-slab view the compiled graph executor operates on (arena
+//! regions are viewed, never copied into owned tensors, so steady-state
+//! execution performs no allocation).
 
 use crate::util::rng::Rng;
+
+/// Borrowed view of a batch slab: `bsz` images of per-image shape
+/// `[c, h, w]`, stored contiguously image-major (image `b` occupies
+/// `data[b·c·h·w .. (b+1)·c·h·w]`). Flat per-image vectors (e.g. FC
+/// outputs) use `h = w = 1`.
+///
+/// All ops write into caller-provided output slices in the same
+/// image-major layout and are element-for-element identical to their
+/// per-image [`Tensor`] counterparts — batched execution stays
+/// bit-identical to the single-image path.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchView<'a> {
+    /// The underlying slab (`bsz · c · h · w` elements).
+    pub data: &'a [f32],
+    /// Images in the batch.
+    pub bsz: usize,
+    /// Per-image channels.
+    pub c: usize,
+    /// Per-image height.
+    pub h: usize,
+    /// Per-image width.
+    pub w: usize,
+}
+
+impl<'a> BatchView<'a> {
+    /// View `data` as `bsz` images of shape `[c, h, w]`.
+    pub fn new(data: &'a [f32], bsz: usize, c: usize, h: usize, w: usize) -> Self {
+        assert_eq!(data.len(), bsz * c * h * w, "slab size mismatch");
+        Self { data, bsz, c, h, w }
+    }
+
+    /// Elements per image.
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// One image's contiguous data.
+    #[inline]
+    pub fn image(&self, bi: usize) -> &'a [f32] {
+        let n = self.numel();
+        &self.data[bi * n..(bi + 1) * n]
+    }
+
+    #[inline]
+    fn at(&self, bi: usize, ci: usize, y: usize, x: usize) -> f32 {
+        self.data[((bi * self.c + ci) * self.h + y) * self.w + x]
+    }
+
+    /// 2-D max pool over every image; `out` is the `[bsz, c, oh, ow]`
+    /// output slab.
+    pub fn max_pool_into(&self, k: usize, stride: usize, pad: usize, out: &mut [f32]) {
+        let (h, w) = (self.h, self.w);
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        assert_eq!(out.len(), self.bsz * self.c * oh * ow);
+        for bi in 0..self.bsz {
+            for ci in 0..self.c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * stride + ky;
+                                let ix = ox * stride + kx;
+                                if iy < pad || ix < pad {
+                                    continue;
+                                }
+                                let (iy, ix) = (iy - pad, ix - pad);
+                                if iy < h && ix < w {
+                                    m = m.max(self.at(bi, ci, iy, ix));
+                                }
+                            }
+                        }
+                        out[((bi * self.c + ci) * oh + oy) * ow + ox] = m;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Global average pool over every image; `out` is the
+    /// `[bsz, c, 1, 1]` output slab.
+    pub fn global_avg_pool_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.bsz * self.c);
+        let hw = self.h * self.w;
+        let denom = hw as f32;
+        for bi in 0..self.bsz {
+            for ci in 0..self.c {
+                let start = (bi * self.c + ci) * hw;
+                let s: f32 = self.data[start..start + hw].iter().sum();
+                out[bi * self.c + ci] = s / denom;
+            }
+        }
+    }
+
+    /// Elementwise ReLU into `out` (same slab layout).
+    pub fn relu_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len());
+        for (o, &v) in out.iter_mut().zip(self.data.iter()) {
+            *o = v.max(0.0);
+        }
+    }
+
+    /// Elementwise add (+ optional fused ReLU) into `out` — residual
+    /// connections. Shapes must match.
+    pub fn add_into(&self, other: &BatchView<'_>, relu: bool, out: &mut [f32]) {
+        assert_eq!(self.data.len(), other.data.len(), "add shape mismatch");
+        assert_eq!(out.len(), self.data.len());
+        for ((o, &a), &b) in out.iter_mut().zip(self.data.iter()).zip(other.data.iter()) {
+            let v = a + b;
+            *o = if relu { v.max(0.0) } else { v };
+        }
+    }
+
+    /// Copy this view's channels into channel offset `c_off` of a
+    /// `c_total`-channel output slab with the same batch/spatial dims —
+    /// the per-input step of a channel concat (inception blocks).
+    pub fn copy_into_channels(&self, c_total: usize, c_off: usize, out: &mut [f32]) {
+        assert!(c_off + self.c <= c_total);
+        assert_eq!(out.len(), self.bsz * c_total * self.h * self.w);
+        let hw = self.h * self.w;
+        for bi in 0..self.bsz {
+            let src = self.image(bi);
+            let dst = (bi * c_total + c_off) * hw;
+            out[dst..dst + self.c * hw].copy_from_slice(src);
+        }
+    }
+}
 
 /// A dense f32 tensor with explicit shape (row-major / C order).
 #[derive(Clone, Debug, PartialEq)]
@@ -175,5 +307,61 @@ mod tests {
         let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]);
         let b = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, 4.0]);
         assert_eq!(a.add(&b).data, vec![4.0, 6.0]);
+    }
+
+    /// Every batch op must be bit-identical to the per-image Tensor op.
+    #[test]
+    fn batch_view_ops_match_per_image_tensors() {
+        let (bsz, c, h, w) = (3usize, 4usize, 5usize, 6usize);
+        let imgs: Vec<Tensor> =
+            (0..bsz).map(|i| Tensor::random(&[1, c, h, w], 90 + i as u64, -2.0, 2.0)).collect();
+        let other: Vec<Tensor> =
+            (0..bsz).map(|i| Tensor::random(&[1, c, h, w], 70 + i as u64, -2.0, 2.0)).collect();
+        let mut slab = Vec::new();
+        let mut oslab = Vec::new();
+        for (a, b) in imgs.iter().zip(other.iter()) {
+            slab.extend_from_slice(&a.data);
+            oslab.extend_from_slice(&b.data);
+        }
+        let v = BatchView::new(&slab, bsz, c, h, w);
+        let ov = BatchView::new(&oslab, bsz, c, h, w);
+
+        // max pool (with padding → exercises the skip branches);
+        // oh = (5+2-3)/2+1 = 3, ow = (6+2-3)/2+1 = 3.
+        let mut got = vec![0f32; bsz * c * 3 * 3];
+        v.max_pool_into(3, 2, 1, &mut got);
+        for (bi, img) in imgs.iter().enumerate() {
+            let want = img.max_pool(3, 2, 1);
+            assert_eq!(&got[bi * want.len()..(bi + 1) * want.len()], &want.data[..]);
+        }
+        // gap
+        let mut got = vec![0f32; bsz * c];
+        v.global_avg_pool_into(&mut got);
+        for (bi, img) in imgs.iter().enumerate() {
+            assert_eq!(&got[bi * c..(bi + 1) * c], &img.global_avg_pool().data[..]);
+        }
+        // relu
+        let mut got = vec![0f32; slab.len()];
+        v.relu_into(&mut got);
+        for (bi, img) in imgs.iter().enumerate() {
+            let want = img.map(|x| x.max(0.0));
+            assert_eq!(&got[bi * want.len()..(bi + 1) * want.len()], &want.data[..]);
+        }
+        // add (+relu)
+        let mut got = vec![0f32; slab.len()];
+        v.add_into(&ov, true, &mut got);
+        for (bi, (a, b)) in imgs.iter().zip(other.iter()).enumerate() {
+            let want = a.add(b).map(|x| x.max(0.0));
+            assert_eq!(&got[bi * want.len()..(bi + 1) * want.len()], &want.data[..]);
+        }
+        // concat via copy_into_channels
+        let c_total = 2 * c;
+        let mut got = vec![0f32; bsz * c_total * h * w];
+        v.copy_into_channels(c_total, 0, &mut got);
+        ov.copy_into_channels(c_total, c, &mut got);
+        for (bi, (a, b)) in imgs.iter().zip(other.iter()).enumerate() {
+            let want = Tensor::concat_channels(&[a, b]);
+            assert_eq!(&got[bi * want.len()..(bi + 1) * want.len()], &want.data[..]);
+        }
     }
 }

@@ -70,6 +70,25 @@ pub fn small_cnn(num_classes: usize, rng: &mut Rng) -> Graph {
     g
 }
 
+/// Tiny residual + concat graph (CIFAR-scale): two branches concat into
+/// a channel-doubled trunk which is then residually added. Exercises the
+/// arena planner's multi-consumer liveness (the concat output feeds both
+/// the trunk conv *and* the residual add) in tests — not part of the
+/// paper's model zoo.
+pub fn tiny_mixed(num_classes: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("tiny_mixed", (3, 16, 16));
+    let c1 = g.conv("c1", ConvSpec::new(3, 8, 3, 1, 1), true, Graph::INPUT, rng);
+    let br_a = g.conv("br_a", ConvSpec::new(8, 8, 3, 1, 1), true, c1, rng);
+    let br_b = g.conv("br_b", ConvSpec::new(8, 8, 1, 1, 0), true, c1, rng);
+    let cat = g.push("cat", Op::Concat, vec![br_a, br_b]);
+    let c2 = g.conv("c2", ConvSpec::new(16, 16, 3, 1, 1), false, cat, rng);
+    let res = g.push("res", Op::Add { relu: true }, vec![cat, c2]);
+    let pool = g.push("pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, vec![res]);
+    let gap = g.push("gap", Op::GlobalAvgPool, vec![pool]);
+    fc(&mut g, "fc", 16, num_classes, gap, rng);
+    g
+}
+
 fn fc(g: &mut Graph, name: &str, in_f: usize, out_f: usize, input: usize, rng: &mut Rng) -> usize {
     let mut w = vec![0f32; in_f * out_f];
     rng.fill_normal(&mut w, (1.0 / in_f as f32).sqrt());

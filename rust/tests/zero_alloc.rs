@@ -1,0 +1,139 @@
+//! Steady-state allocation accounting for the compiled executor: after
+//! warm-up, `CompiledModel::run_batch` on a reused `ExecCtx` must
+//! perform ZERO heap allocations in the quantize → im2col → pack →
+//! GEMM → dequant pipeline.
+//!
+//! The hook is a counting `#[global_allocator]` with a thread-local
+//! toggle: only allocations made by this test's thread while the gate
+//! is open are counted (single-threaded plans execute inline on the
+//! calling thread, so the whole pipeline is visible). Multi-threaded
+//! dispatch additionally boxes O(worker) task closures per layer —
+//! bounded, but not zero — which is why the assertion pins one worker.
+
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::{tile, Backend};
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::StageProfile;
+use deepgemm::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn tick() {
+        COUNTING.with(|on| {
+            if on.get() {
+                ALLOCS.with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+// SAFETY: pure pass-through to `System`; the thread-locals are
+// const-initialized `Cell`s of plain data (no Drop, no lazy allocation),
+// so the counter itself never re-enters the allocator.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::tick();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::tick();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::tick();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Count this thread's allocations during `f`.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.with(|a| a.set(0));
+    COUNTING.with(|on| on.set(true));
+    f();
+    COUNTING.with(|on| on.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+#[test]
+fn steady_state_forward_is_allocation_free() {
+    // Single worker → the whole pipeline (including the GEMM) runs on
+    // this thread and every allocation is visible to the counter.
+    tile::set_default_threads(1);
+    let mut rng = Rng::new(42);
+    let graph = zoo::tiny_mixed(5, &mut rng);
+    let xs: Vec<Tensor> =
+        (0..3).map(|i| Tensor::random(&[1, 3, 16, 16], 7 + i, -1.0, 1.0)).collect();
+    for backend in [
+        Backend::Lut16(Scheme::D),
+        Backend::Lut16(Scheme::A),
+        Backend::Int8,
+        Backend::Lut65k,
+        Backend::LutWide(4),
+        Backend::Lut16F32,
+        Backend::Portable,
+        Backend::BitSerial,
+        Backend::UlpPack,
+    ] {
+        let model = CompiledModel::compile(graph.clone(), backend, &[]).unwrap();
+        let mut ctx = model.new_ctx();
+        let mut prof = StageProfile::new();
+        // Warm up at the measured batch size: arena slots, conv scratch
+        // and the kernels' thread-local decode buffers all reach their
+        // steady-state capacities here.
+        for _ in 0..3 {
+            model.run_batch(&xs, &mut ctx, &mut prof).unwrap();
+        }
+        let allocs = count_allocs(|| {
+            model.run_batch(&xs, &mut ctx, &mut prof).unwrap();
+        });
+        assert_eq!(
+            allocs,
+            0,
+            "{}: steady-state run_batch allocated {allocs}×",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn warmup_allocates_then_stops_across_batch_sizes() {
+    // Growing to a larger batch may allocate once; returning to any
+    // previously-seen size must not.
+    tile::set_default_threads(1);
+    let mut rng = Rng::new(43);
+    let graph = zoo::small_cnn(4, &mut rng);
+    let model = CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[]).unwrap();
+    let mut ctx = model.new_ctx();
+    let batch = |n: usize| -> Vec<Tensor> {
+        (0..n).map(|i| Tensor::random(&[1, 3, 32, 32], 50 + i as u64, -1.0, 1.0)).collect()
+    };
+    let mut prof = StageProfile::new();
+    for warm in [1usize, 2, 4] {
+        model.run_batch(&batch(warm), &mut ctx, &mut prof).unwrap();
+    }
+    for again in [4usize, 1, 2, 4] {
+        let xs = batch(again);
+        let allocs = count_allocs(|| {
+            model.run_batch(&xs, &mut ctx, &mut prof).unwrap();
+        });
+        assert_eq!(allocs, 0, "batch {again} re-allocated after warmup");
+    }
+}
