@@ -5,8 +5,15 @@
 //! Paper reference geomeans: 1.74× / 1.64× / 1.67× / 1.57× (avg 1.66×).
 //! Expected shape on this testbed: LUT-16 > 1× everywhere except very
 //! small K, gap growing with K (the kernel is vectorized along K).
+//!
+//! With `--autotune quick|full` (or `AUTOTUNE=quick`), a third lut16
+//! column measures the *autotuned* cache-block shape next to the
+//! default one; the chosen MC/NC/KC per layer is printed as a note and
+//! the JSON artifacts get an `_tuned` suffix. The tuned shape must beat
+//! or match the default (it is always in the candidate grid), modulo
+//! measurement noise — see docs/TUNING.md.
 
-use deepgemm::bench::{support, threads_axis, BenchOpts, Table};
+use deepgemm::bench::{autotune_mode, support, threads_axis, BenchOpts, Table};
 use deepgemm::kernels::pack::Scheme;
 use deepgemm::kernels::{tile, Backend};
 use deepgemm::util::geomean;
@@ -28,6 +35,10 @@ fn main() {
         eprintln!("[tab4] no thread axis here; measuring at the max, --threads {nt}");
     }
     tile::set_default_threads(nt);
+    let mode = autotune_mode();
+    if mode.is_on() {
+        eprintln!("[tab4] autotune {}: adding a tuned lut16 column", mode.name());
+    }
     let models = [
         ("mobilenet_v1", 1.74),
         ("resnet18", 1.64),
@@ -41,44 +52,76 @@ fn main() {
     let mut all_geo = Vec::new();
     for (model, paper) in models {
         let layers = support::model_gemms(model).expect("model inventory");
+        let mut cols = vec!["M", "N", "K", "int8 ms", "lut16 ms", "speedup"];
+        if mode.is_on() {
+            cols.push("tuned ms");
+            cols.push("tuned spdup");
+        }
         let mut fig5 = Table::new(
             format!("Fig 5 — {model}: per-layer latency & speedup"),
-            &["M", "N", "K", "int8 ms", "lut16 ms", "speedup"],
+            &cols,
         );
         let mut speedups = Vec::new();
+        let mut tuned_vs_default = Vec::new();
         for (name, size) in &layers {
             let t_int8 = support::time_backend(Backend::Int8, *size, &opts);
             let t_lut = support::time_backend(Backend::Lut16(Scheme::D), *size, &opts);
             let sp = t_int8 / t_lut;
             speedups.push(sp);
-            fig5.row(
-                format!("{name} ({},{},{})", size.m, size.n, size.k),
-                vec![
-                    size.m as f64,
-                    size.n as f64,
-                    size.k as f64,
-                    t_int8 * 1e3,
-                    t_lut * 1e3,
-                    sp,
-                ],
-            );
+            let mut values = vec![
+                size.m as f64,
+                size.n as f64,
+                size.k as f64,
+                t_int8 * 1e3,
+                t_lut * 1e3,
+                sp,
+            ];
+            if mode.is_on() {
+                let (t_tuned, outcome) =
+                    support::time_backend_tuned(Backend::Lut16(Scheme::D), *size, &opts, mode);
+                values.push(t_tuned * 1e3);
+                values.push(t_int8 / t_tuned);
+                tuned_vs_default.push(t_lut / t_tuned);
+                if let Some(o) = outcome {
+                    fig5.note(format!("{name}: {}", o.describe()));
+                }
+            }
+            fig5.row(format!("{name} ({},{},{})", size.m, size.n, size.k), values);
         }
         let geo = geomean(&speedups);
         all_geo.push(geo);
         fig5.note(format!("geomean speedup = {geo:.3} (paper: {paper})"));
+        if mode.is_on() {
+            fig5.note(format!(
+                "geomean tuned-vs-default lut16 = {:.3} (>= 1 means the autotuned shape wins)",
+                geomean(&tuned_vs_default)
+            ));
+        }
         print!("{}", fig5.render());
-        // Bare artifact names stay reserved for the single-thread
-        // paper-setting numbers (same convention as fig7).
-        let file =
+        // Bare artifact names stay reserved for the single-thread,
+        // default-shape paper-setting numbers (same convention as fig7).
+        let mut file =
             if nt == 1 { format!("fig5_{model}") } else { format!("fig5_{model}_t{nt}") };
+        if mode.is_on() {
+            file.push_str("_tuned");
+        }
         fig5.write_json(&file).expect("write json");
         summary.row(model, vec![geo, paper]);
     }
     summary.row("average", vec![geomean(&all_geo), 1.66]);
     summary.note("backend lut16-d (scheme d) vs QNNPACK-style int8 (unpack+pmaddwd)");
     summary.note(format!("both tiled, at {nt} worker thread(s) (paper setting: 1)"));
+    if mode.is_on() {
+        summary.note(format!(
+            "autotune {}: chosen shapes in the fig5 notes above",
+            mode.name()
+        ));
+    }
     print!("{}", summary.render());
-    let file =
+    let mut file =
         if nt == 1 { "tab4_geomeans".to_string() } else { format!("tab4_geomeans_t{nt}") };
+    if mode.is_on() {
+        file.push_str("_tuned");
+    }
     summary.write_json(&file).expect("write json");
 }

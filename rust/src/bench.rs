@@ -42,6 +42,29 @@ impl BenchOpts {
     }
 }
 
+/// Parse an `--autotune` mode from the bench binary's argv
+/// (`--autotune quick` / `--autotune=full`); falls back to the
+/// process-wide default (the `AUTOTUNE` env var, then `off`). Malformed
+/// values warn and fall back rather than abort a long bench run.
+pub fn autotune_mode() -> crate::kernels::AutotuneMode {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut spec: Option<String> = None;
+    for (i, arg) in argv.iter().enumerate() {
+        if let Some(v) = arg.strip_prefix("--autotune=") {
+            spec = Some(v.to_string());
+        } else if arg == "--autotune" {
+            spec = argv.get(i + 1).cloned();
+        }
+    }
+    match spec {
+        Some(s) => crate::kernels::AutotuneMode::parse(&s).unwrap_or_else(|e| {
+            eprintln!("[bench] {e}; autotune stays {}", crate::kernels::tune::default_mode().name());
+            crate::kernels::tune::default_mode()
+        }),
+        None => crate::kernels::tune::default_mode(),
+    }
+}
+
 /// Parse a `--threads` axis from the bench binary's argv: `--threads 4`
 /// or `--threads 1,2,4` (also `--threads=4`). Bench binaries are plain
 /// `main`s (`harness = false`), so flags arrive directly — with
@@ -254,8 +277,9 @@ mod tests {
 pub mod support {
     use crate::kernels::pack::{self, Scheme};
     use crate::kernels::{
-        bitserial, fp32, int8, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan,
-        GemmSize, Int8Tile, Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts,
+        bitserial, fp32, int8, lut16_wide, lut65k, portable, tune, ulppack, AutotuneMode,
+        Backend, CodeMat, GemmSize, Int8Tile, Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile,
+        PlanOpts, TuneOutcome,
     };
     use crate::quant::{F32Codebook, IntCodebook, Lut16, Lut16F32, Lut65k};
     use crate::util::rng::Rng;
@@ -271,6 +295,9 @@ pub mod support {
     pub struct PreparedGemm {
         pub size: GemmSize,
         pub backend: Backend,
+        /// The autotune outcome when the plan was built through the
+        /// tuner (None for row-streaming backends or autotune off).
+        pub tuned: Option<TuneOutcome>,
         run_fn: Box<dyn FnMut()>,
     }
 
@@ -281,10 +308,25 @@ pub mod support {
         }
     }
 
-    /// Build a prepared problem with random codes/values.
+    /// Build a prepared problem with random codes/values (default
+    /// cache-block shapes — see [`prepare_opts`] to autotune them).
     pub fn prepare(backend: Backend, size: GemmSize, seed: u64) -> PreparedGemm {
+        prepare_opts(backend, size, seed, AutotuneMode::Off)
+    }
+
+    /// [`prepare`] with an autotune mode: tiled-plan backends build
+    /// their plan through [`tune::tune_plan`] against the *real* packed
+    /// activation operand of the problem, so the bench reports the shape
+    /// a serving compile would pick for this layer.
+    pub fn prepare_opts(
+        backend: Backend,
+        size: GemmSize,
+        seed: u64,
+        mode: AutotuneMode,
+    ) -> PreparedGemm {
         let GemmSize { m, n, k } = size;
         let mut out_i = vec![0i32; m * n];
+        let mut tuned: Option<TuneOutcome> = None;
         let run_fn: Box<dyn FnMut()> = match backend {
             Backend::Fp32 => {
                 let mut rng = Rng::new(seed);
@@ -305,9 +347,17 @@ pub mod support {
                 let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
                 let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
                 let (wp, row_sums) = int8::pack_weights_i8(&wvals, n, k);
-                let plan = GemmPlan::new(&wp, Int8Tile::new(128, row_sums), PlanOpts::default());
                 let am = CodeMat::from_data(m, k, 8, acodes);
                 let ap = pack::pack(&am, pack::Layout::Int8);
+                let (plan, out) = tune::tune_plan(
+                    &wp,
+                    Int8Tile::new(128, row_sums),
+                    PlanOpts::default(),
+                    mode,
+                    m,
+                    |_| ap.clone(),
+                );
+                tuned = mode.is_on().then_some(out);
                 Box::new(move || {
                     plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
@@ -321,7 +371,15 @@ pub mod support {
                 let lut = Lut16::build(&cb, &acb);
                 let ap = pack::pack_activations(&a, scheme);
                 let wp = pack::pack_weights(&w, scheme);
-                let plan = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut), PlanOpts::default());
+                let (plan, out) = tune::tune_plan(
+                    &wp,
+                    Lut16Tile::new(scheme, lut),
+                    PlanOpts::default(),
+                    mode,
+                    m,
+                    |_| ap.clone(),
+                );
+                tuned = mode.is_on().then_some(out);
                 Box::new(move || {
                     plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
@@ -335,7 +393,15 @@ pub mod support {
                 let lut = Lut16::build(&cb, &acb);
                 let ap = lut16_wide::pack_wide(&a);
                 let wp = lut16_wide::pack_wide(&w);
-                let plan = GemmPlan::new(&wp, LutWideTile::new(lut), PlanOpts::default());
+                let (plan, out) = tune::tune_plan(
+                    &wp,
+                    LutWideTile::new(lut),
+                    PlanOpts::default(),
+                    mode,
+                    m,
+                    |_| ap.clone(),
+                );
+                tuned = mode.is_on().then_some(out);
                 Box::new(move || {
                     plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
@@ -349,7 +415,15 @@ pub mod support {
                 let lut = Arc::new(Lut65k::build(&cb, &acb));
                 let ap = lut65k::pack_dense(&a);
                 let wp = lut65k::pack_dense(&w);
-                let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), PlanOpts::default());
+                let (plan, out) = tune::tune_plan(
+                    &wp,
+                    Lut65kTile::new(lut),
+                    PlanOpts::default(),
+                    mode,
+                    m,
+                    |_| ap.clone(),
+                );
+                tuned = mode.is_on().then_some(out);
                 Box::new(move || {
                     plan.execute(&ap, &mut out_i);
                     std::hint::black_box(&out_i);
@@ -363,7 +437,15 @@ pub mod support {
                 let lut = Lut16F32::build(&wcb, &acb);
                 let ap = pack::pack(&a, Scheme::D.a_layout());
                 let wp = pack::pack(&w, Scheme::D.w_layout());
-                let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), PlanOpts::default());
+                let (plan, out) = tune::tune_plan(
+                    &wp,
+                    Lut16F32Tile::new(lut),
+                    PlanOpts::default(),
+                    mode,
+                    m,
+                    |_| ap.clone(),
+                );
+                tuned = mode.is_on().then_some(out);
                 let mut out = vec![0f32; m * n];
                 Box::new(move || {
                     plan.execute(&ap, &mut out);
@@ -404,7 +486,7 @@ pub mod support {
                 })
             }
         };
-        PreparedGemm { size, backend, run_fn }
+        PreparedGemm { size, backend, tuned, run_fn }
     }
 
     /// Time one backend at one size with the given opts; returns median
@@ -412,6 +494,25 @@ pub mod support {
     pub fn time_backend(backend: Backend, size: GemmSize, opts: &super::BenchOpts) -> f64 {
         let mut p = prepare(backend, size, 0xBEEF ^ size.k as u64);
         super::bench(format!("{}-{:?}", backend.name(), size), opts, || p.run()).secs()
+    }
+
+    /// [`time_backend`] with an autotuned plan: returns the median
+    /// seconds per GEMM call plus the tuner's outcome (chosen shape,
+    /// provenance) for plan-based backends.
+    pub fn time_backend_tuned(
+        backend: Backend,
+        size: GemmSize,
+        opts: &super::BenchOpts,
+        mode: AutotuneMode,
+    ) -> (f64, Option<TuneOutcome>) {
+        let mut p = prepare_opts(backend, size, 0xBEEF ^ size.k as u64, mode);
+        let secs = super::bench(
+            format!("{}-tuned-{:?}", backend.name(), size),
+            opts,
+            || p.run(),
+        )
+        .secs();
+        (secs, p.tuned)
     }
 
     /// Non-depthwise conv layers of a model as GEMM sizes (deduplicated,

@@ -101,6 +101,19 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
         model.plan.n_slots(),
         model.plan.arena_bytes_per_image()
     );
+    if model.tuning.is_tuned() {
+        eprintln!(
+            "batcher-{}: autotune = {} plans, {} measured, {} cache hits, {:.1} ms tuning",
+            model.name,
+            model.tuning.plans(),
+            model.tuning.measured(),
+            model.tuning.cache_hits(),
+            model.tuning.tune_micros() as f64 / 1e3
+        );
+        for line in model.tuning.lines() {
+            eprintln!("batcher-{}:   {line}", model.name);
+        }
+    }
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {

@@ -1,10 +1,31 @@
 //! Serving metrics: counters + latency/batch-size histograms, plus the
 //! static-memory-plan gauges (planned arena bytes per model, execution-
-//! context reuse) that make the zero-allocation steady state observable.
+//! context reuse) that make the zero-allocation steady state observable,
+//! and the per-model autotune gauges (plans tuned / cache hits / tuning
+//! time / chosen block shapes) that make compile-time shape decisions
+//! observable at runtime.
 
 use crate::util::stats::Histogram;
 use std::collections::HashMap;
 use std::sync::Mutex;
+
+/// Per-model autotune summary reported at registration time: how many
+/// GEMM plans went through the tuner, how many were warm cache hits
+/// (zero measurement), the wall-clock spent measuring, and one rendered
+/// line per plan naming the chosen MC/NC/KC shape.
+#[derive(Clone, Debug, Default)]
+pub struct TuneStats {
+    /// Plans built (layer × group).
+    pub plans: u64,
+    /// Plans that ran candidate measurements.
+    pub measured: u64,
+    /// Plans served straight from the tuning cache.
+    pub cache_hits: u64,
+    /// Total microseconds spent measuring candidates.
+    pub tune_micros: u64,
+    /// One line per plan: layer, GEMM shape, chosen blocks, provenance.
+    pub shapes: Vec<String>,
+}
 
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Counters {
@@ -26,6 +47,9 @@ struct Inner {
     /// Planned per-image arena bytes per model (set once per worker at
     /// startup, from the compile-time `ExecPlan`).
     arena_planned: HashMap<String, u64>,
+    /// Autotune summary per model (set once at registration, from the
+    /// compile-time `TuneReport`).
+    tuning: HashMap<String, TuneStats>,
 }
 
 /// Thread-safe metrics sink shared by router, batchers and server.
@@ -48,8 +72,20 @@ impl Metrics {
                 queue_time: Histogram::exponential(1e-6, 1.6, 40),
                 batch_size: Histogram::new((1..=64).map(|x| x as f64).collect()),
                 arena_planned: HashMap::new(),
+                tuning: HashMap::new(),
             }),
         }
+    }
+
+    /// Record a model's compile-time autotune summary — called once at
+    /// registration.
+    pub fn set_tuning(&self, model: &str, stats: TuneStats) {
+        self.inner.lock().unwrap().tuning.insert(model.to_string(), stats);
+    }
+
+    /// The autotune summary recorded for `model`, if any.
+    pub fn tuning_for(&self, model: &str) -> Option<TuneStats> {
+        self.inner.lock().unwrap().tuning.get(model).cloned()
     }
 
     /// Record a model's compile-time arena plan (per-image bytes) —
@@ -117,12 +153,32 @@ impl Metrics {
                 .collect::<Vec<_>>()
                 .join(" ")
         };
+        let mut tuning: Vec<(&String, &TuneStats)> = g.tuning.iter().collect();
+        tuning.sort_by(|a, b| a.0.cmp(b.0));
+        let tune_str = if tuning.is_empty() {
+            "-".to_string()
+        } else {
+            tuning
+                .iter()
+                .map(|(m, t)| {
+                    format!(
+                        "{m}: plans={} measured={} hits={} time={:.1}ms",
+                        t.plans,
+                        t.measured,
+                        t.cache_hits,
+                        t.tune_micros as f64 / 1e3
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("; ")
+        };
         format!(
             "requests={} completed={} rejected={} errors={} batches={}\n\
              latency p50={:.2}ms p95={:.2}ms mean={:.2}ms\n\
              queue   p50={:.3}ms p95={:.3}ms\n\
              batch   mean={:.2}\n\
-             arena   planned {arena_str}  ctx_reuses={}",
+             arena   planned {arena_str}  ctx_reuses={}\n\
+             autotune {tune_str}",
             c.requests,
             c.completed,
             c.rejected,
@@ -174,6 +230,28 @@ mod tests {
         let r = m.render();
         assert!(r.contains("small_cnn=12345B/img"), "{r}");
         assert!(r.contains("ctx_reuses=2"), "{r}");
+    }
+
+    #[test]
+    fn tuning_gauges_record_and_render() {
+        let m = Metrics::new();
+        assert!(m.tuning_for("small_cnn").is_none());
+        m.set_tuning(
+            "small_cnn",
+            TuneStats {
+                plans: 4,
+                measured: 1,
+                cache_hits: 3,
+                tune_micros: 2500,
+                shapes: vec!["c1: lut16-d M1024 N16 K27 ...".into()],
+            },
+        );
+        let t = m.tuning_for("small_cnn").unwrap();
+        assert_eq!(t.plans, 4);
+        assert_eq!(t.cache_hits, 3);
+        assert_eq!(t.shapes.len(), 1);
+        let r = m.render();
+        assert!(r.contains("autotune small_cnn: plans=4 measured=1 hits=3"), "{r}");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! backpressure (bounded queues → reject-on-full).
 
 use crate::coordinator::batcher::{BatchWorker, BatcherConfig, InferResponse, Job};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, TuneStats};
 use crate::engine::CompiledModel;
 use crate::nn::Tensor;
 use std::collections::HashMap;
@@ -32,10 +32,23 @@ impl Router {
         }
     }
 
-    /// Register a compiled model under its graph name.
+    /// Register a compiled model under its graph name. The model's
+    /// compile-time autotune report is published to the metrics sink so
+    /// `{"cmd":"stats"}` can surface chosen block shapes + tuning time.
     pub fn register(&mut self, model: CompiledModel, cfg: BatcherConfig) {
         let name = model.name.clone();
         self.input_shapes.insert(name.clone(), model.graph.input_chw);
+        let report = &model.tuning;
+        self.metrics.set_tuning(
+            &name,
+            TuneStats {
+                plans: report.plans() as u64,
+                measured: report.measured() as u64,
+                cache_hits: report.cache_hits() as u64,
+                tune_micros: report.tune_micros(),
+                shapes: report.lines(),
+            },
+        );
         let worker = BatchWorker::spawn(model, cfg, self.metrics.clone());
         self.workers.insert(name, worker);
     }

@@ -7,12 +7,17 @@
 //!   → {"cmd": "metrics"}        ← {"ok": true, "metrics": "..."}
 //!   → {"cmd": "models"}         ← {"ok": true, "models": [...]}
 //!   → {"cmd": "stats"}          ← {"ok": true, "models": [{"name",
-//!                                  "arena_planned_bytes_per_image"}], "ctx_reuses": N}
-//!                                  (static memory plan + ctx reuse; the warm arena
-//!                                  scales with the served batch size)
+//!                                  "arena_planned_bytes_per_image",
+//!                                  "autotune": {"plans", "measured", "cache_hits",
+//!                                               "tune_ms", "shapes": [...]}}],
+//!                                  "ctx_reuses": N, "tune_cache_entries": M}
+//!                                  (static memory plan + ctx reuse + compile-time
+//!                                  autotune decisions; see docs/TUNING.md for how
+//!                                  to read the shape lines)
 //!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
 
 use crate::coordinator::router::Router;
+use crate::kernels::tune::{self, AutotuneMode};
 use crate::nn::Tensor;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -27,11 +32,33 @@ pub struct ServerConfig {
     /// cores) — the same process-wide knob as the CLI's `--threads`,
     /// so serving and benching share one setting.
     pub threads: usize,
+    /// Cache-block autotune mode for models compiled after this server
+    /// starts — the same process-wide knob as the CLI's `--autotune`
+    /// (`None` leaves a previously configured mode alone). Models
+    /// compiled *before* [`spawn`] keep the mode that was active then.
+    /// Tuning keys include the thread count resolved at compile time,
+    /// so set `threads` (or the process-wide default) before compiling
+    /// — compiling first and spawning with a different `threads` serves
+    /// shapes tuned for the old count.
+    pub autotune: Option<AutotuneMode>,
+    /// Path to a persisted tuning-cache file, **load-only**: merged
+    /// into the process-wide cache at [`spawn`] when it exists, so
+    /// embedders that compile models after starting the server skip
+    /// re-tuning on a warm restart. Nothing on this path writes the
+    /// file — call [`crate::kernels::tune::save_cache`] after a tuned
+    /// compile to persist new decisions (the CLI's `--tune-cache` does
+    /// both around its own compile).
+    pub tune_cache: Option<String>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7070".into(), threads: 0 }
+        Self {
+            addr: "127.0.0.1:7070".into(),
+            threads: 0,
+            autotune: None,
+            tune_cache: None,
+        }
     }
 }
 
@@ -52,9 +79,22 @@ pub fn spawn(
 ) -> crate::Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
     // 0 means "leave the process-wide knob alone" — a second server (or
     // embedding host) with a default config must not reset a previously
-    // configured thread count.
+    // configured thread count. Same contract for the autotune mode
+    // (None = leave alone).
     if cfg.threads != 0 {
         crate::kernels::tile::set_default_threads(cfg.threads);
+    }
+    if let Some(mode) = cfg.autotune {
+        tune::set_default_mode(mode);
+    }
+    if let Some(path) = &cfg.tune_cache {
+        let p = std::path::Path::new(path);
+        if p.exists() {
+            match tune::load_cache(p) {
+                Ok(n) => eprintln!("deepgemm server: loaded {n} tuning-cache entries from {path}"),
+                Err(e) => eprintln!("deepgemm server: ignoring tuning cache: {e}"),
+            }
+        }
     }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
@@ -137,9 +177,25 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                             .arena_planned()
                             .into_iter()
                             .map(|(name, bytes)| {
+                                let tune_obj = match router.metrics.tuning_for(&name) {
+                                    Some(t) => Json::obj(vec![
+                                        ("plans", Json::num(t.plans as f64)),
+                                        ("measured", Json::num(t.measured as f64)),
+                                        ("cache_hits", Json::num(t.cache_hits as f64)),
+                                        ("tune_ms", Json::num(t.tune_micros as f64 / 1e3)),
+                                        (
+                                            "shapes",
+                                            Json::Arr(
+                                                t.shapes.into_iter().map(Json::str).collect(),
+                                            ),
+                                        ),
+                                    ]),
+                                    None => Json::Null,
+                                };
                                 Json::obj(vec![
                                     ("name", Json::str(name)),
                                     ("arena_planned_bytes_per_image", Json::num(bytes as f64)),
+                                    ("autotune", tune_obj),
                                 ])
                             })
                             .collect(),
@@ -149,6 +205,7 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                     "ctx_reuses",
                     Json::num(router.metrics.counters().ctx_reuses as f64),
                 ),
+                ("tune_cache_entries", Json::num(tune::cache_len() as f64)),
             ]),
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
@@ -289,6 +346,14 @@ mod tests {
             models[0].get("arena_planned_bytes_per_image").unwrap().as_f64().unwrap() > 0.0
         );
         assert!(st.get("ctx_reuses").is_some());
+        // Autotune gauges: present per model (plans counted even when
+        // tuning is off → provenance "default"), plus the global cache
+        // size.
+        let tune = models[0].get("autotune").expect("autotune stats present");
+        assert!(tune.get("plans").unwrap().as_f64().unwrap() > 0.0, "{tune:?}");
+        assert!(tune.get("cache_hits").is_some());
+        assert!(tune.get("shapes").unwrap().as_arr().is_some());
+        assert!(st.get("tune_cache_entries").is_some());
     }
 
     #[test]

@@ -7,8 +7,8 @@
 use crate::kernels::fp32::MatF32;
 use crate::kernels::pack::{self, Packed, Scheme};
 use crate::kernels::{
-    bitserial, int8, lut16_wide, lut65k, portable, ulppack, Backend, CodeMat, GemmPlan, Int8Tile,
-    Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts,
+    bitserial, int8, lut16_wide, lut65k, portable, tune, ulppack, Backend, CodeMat, GemmPlan,
+    Int8Tile, Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts, TuneOutcome, TuneSpec,
 };
 use crate::nn::im2col::im2col_codes_append;
 use crate::nn::{ConvSpec, Tensor};
@@ -132,11 +132,16 @@ pub struct CompiledConv {
     w_zp: i32,
     a_zp: i32,
     pub weights: PreparedWeights,
+    /// Autotune outcome per built [`GemmPlan`] (one per group; empty
+    /// for backends without tiled plans).
+    pub tuning: Vec<TuneOutcome>,
 }
 
 impl CompiledConv {
     /// Quantize + pack the layer weights for `backend`; `lo`/`hi` is the
-    /// calibrated input activation range.
+    /// calibrated input activation range. Plans keep the default
+    /// [`crate::kernels::TileShape`] — use [`Self::prepare_tuned`] to
+    /// autotune the cache-block shapes.
     pub fn prepare(
         spec: &ConvSpec,
         weights: &[f32],
@@ -145,6 +150,28 @@ impl CompiledConv {
         backend: Backend,
         lo: f32,
         hi: f32,
+    ) -> crate::Result<Self> {
+        Self::prepare_tuned(spec, weights, bias, relu, backend, lo, hi, TuneSpec::off())
+    }
+
+    /// [`Self::prepare`] with cache-block autotuning: every tiled
+    /// backend's `GemmPlan` is built through
+    /// [`crate::kernels::tune::tune_plan`] with `tspec.m` as the
+    /// expected per-image GEMM rows, so block shapes are measured (or
+    /// fetched from the process-wide tuning cache) instead of
+    /// defaulted. Synthetic activation codes of the layer's real K are
+    /// used as the measurement operand; groups share one cache entry
+    /// (identical key), so a grouped conv tunes once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare_tuned(
+        spec: &ConvSpec,
+        weights: &[f32],
+        bias: &[f32],
+        relu: bool,
+        backend: Backend,
+        lo: f32,
+        hi: f32,
+        tspec: TuneSpec,
     ) -> crate::Result<Self> {
         let act_q = super::act_quantizer(backend, lo, hi);
         let groups = spec.groups;
@@ -174,6 +201,9 @@ impl CompiledConv {
         // (8-bit int8 uses centered values directly).
         let cbs = || (w_q.params.codebook(), act_q.params.codebook());
 
+        // Autotune outcomes per built plan (one per group).
+        let mut tuning: Vec<TuneOutcome> = Vec::new();
+
         let prepared = match backend {
             Backend::Lut16(scheme) => {
                 let (w_cb, a_cb) = cbs();
@@ -181,12 +211,23 @@ impl CompiledConv {
                 PreparedWeights::Lut16 {
                     plans: group_codes
                         .iter()
-                        .map(|c| {
-                            GemmPlan::new(
+                        .enumerate()
+                        .map(|(gi, c)| {
+                            let (plan, out) = tune::tune_plan(
                                 &pack::pack_weights(c, scheme),
                                 Lut16Tile::new(scheme, lut.clone()),
                                 PlanOpts::default(),
-                            )
+                                tspec.mode,
+                                tspec.m,
+                                |ms| {
+                                    pack::pack_activations(
+                                        &CodeMat::random(ms, kk, 2, 0xACE0 + gi as u64),
+                                        scheme,
+                                    )
+                                },
+                            );
+                            tuning.push(out);
+                            plan
                         })
                         .collect(),
                 }
@@ -197,12 +238,25 @@ impl CompiledConv {
                 PreparedWeights::LutWide {
                     plans: group_codes
                         .iter()
-                        .map(|c| {
-                            GemmPlan::new(
+                        .enumerate()
+                        .map(|(gi, c)| {
+                            let (plan, out) = tune::tune_plan(
                                 &lut16_wide::pack_wide(c),
                                 LutWideTile::new(lut.clone()),
                                 PlanOpts::default(),
-                            )
+                                tspec.mode,
+                                tspec.m,
+                                |ms| {
+                                    lut16_wide::pack_wide(&CodeMat::random(
+                                        ms,
+                                        kk,
+                                        bits,
+                                        0xACE1 + gi as u64,
+                                    ))
+                                },
+                            );
+                            tuning.push(out);
+                            plan
                         })
                         .collect(),
                 }
@@ -213,12 +267,25 @@ impl CompiledConv {
                 PreparedWeights::Lut65k {
                     plans: group_codes
                         .iter()
-                        .map(|c| {
-                            GemmPlan::new(
+                        .enumerate()
+                        .map(|(gi, c)| {
+                            let (plan, out) = tune::tune_plan(
                                 &lut65k::pack_dense(c),
                                 Lut65kTile::new(lut.clone()),
                                 PlanOpts::default(),
-                            )
+                                tspec.mode,
+                                tspec.m,
+                                |ms| {
+                                    lut65k::pack_dense(&CodeMat::random(
+                                        ms,
+                                        kk,
+                                        2,
+                                        0xACE2 + gi as u64,
+                                    ))
+                                },
+                            );
+                            tuning.push(out);
+                            plan
                         })
                         .collect(),
                 }
@@ -231,12 +298,23 @@ impl CompiledConv {
                 PreparedWeights::Lut16F32 {
                     plans: group_codes
                         .iter()
-                        .map(|c| {
-                            GemmPlan::new(
+                        .enumerate()
+                        .map(|(gi, c)| {
+                            let (plan, out) = tune::tune_plan(
                                 &pack::pack(c, Scheme::D.w_layout()),
                                 Lut16F32Tile::new(lut.clone()),
                                 PlanOpts::default(),
-                            )
+                                tspec.mode,
+                                tspec.m,
+                                |ms| {
+                                    pack::pack(
+                                        &CodeMat::random(ms, kk, 2, 0xACE3 + gi as u64),
+                                        Scheme::D.a_layout(),
+                                    )
+                                },
+                            );
+                            tuning.push(out);
+                            plan
                         })
                         .collect(),
                 }
@@ -256,15 +334,26 @@ impl CompiledConv {
                 // activation zero-point fold is baked into the kernel.
                 let plans = group_codes
                     .iter()
-                    .map(|c| {
+                    .enumerate()
+                    .map(|(gi, c)| {
                         let vals: Vec<i8> =
                             c.data.iter().map(|&code| (code as i32 - w_zp) as i8).collect();
                         let (packed, row_sums) = int8::pack_weights_i8(&vals, og, kk);
-                        GemmPlan::new(
+                        let (plan, out) = tune::tune_plan(
                             &packed,
                             Int8Tile::new(a_zp, row_sums),
                             PlanOpts::default(),
-                        )
+                            tspec.mode,
+                            tspec.m,
+                            |ms| {
+                                pack::pack(
+                                    &CodeMat::random(ms, kk, 8, 0xACE4 + gi as u64),
+                                    pack::Layout::Int8,
+                                )
+                            },
+                        );
+                        tuning.push(out);
+                        plan
                     })
                     .collect();
                 PreparedWeights::Int8 { plans }
@@ -300,6 +389,7 @@ impl CompiledConv {
             w_zp,
             a_zp,
             weights: prepared,
+            tuning,
         })
     }
 

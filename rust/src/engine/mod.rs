@@ -17,7 +17,12 @@
 //!    the INT8 baseline a [`crate::kernels::GemmPlan`] whose weight
 //!    panels are repacked panel-contiguously for the cache-blocked,
 //!    register-tiled, multi-threaded execution path. FC layers
-//!    pre-build their fp32 weight matrix for the batched GEMM.
+//!    pre-build their fp32 weight matrix for the batched GEMM. With
+//!    autotuning on ([`crate::kernels::tune`]; `--autotune`, `AUTOTUNE`
+//!    env, `ServerConfig::autotune`), each plan's MC/NC/KC block shape
+//!    is measured against the layer's real GEMM shape and cached —
+//!    decisions land in [`CompiledModel::tuning`] (a [`TuneReport`])
+//!    and surface through metrics and `{"cmd":"stats"}`.
 //! 2. **Memory** ([`ExecPlan`]): a topological schedule plus
 //!    tensor-liveness analysis assigns every intermediate a slot in a
 //!    size-planned arena — slots are reused the moment their tensor
@@ -51,9 +56,10 @@ mod conv;
 mod plan;
 
 pub use conv::{CompiledConv, ConvScratch, PreparedWeights};
-pub use plan::{ExecCtx, ExecPlan};
+pub use plan::{ExecCtx, ExecPlan, TuneReport};
 
 use crate::kernels::fp32::{self, MatF32};
+use crate::kernels::tune::{self, AutotuneMode, TuneSpec};
 use crate::kernels::Backend;
 use crate::nn::graph::{forward_fp32, forward_fp32_all, Graph, Op};
 use crate::nn::{BatchView, Tensor};
@@ -72,6 +78,9 @@ pub struct CompiledModel {
     pub plan: ExecPlan,
     /// Prepared fp32 weight matrices per FC node (batched GEMM).
     fc_weights: Vec<Option<MatF32>>,
+    /// Compile-time autotune outcomes (one entry per built `GemmPlan`;
+    /// entries report "default" provenance when tuning was off).
+    pub tuning: TuneReport,
 }
 
 impl CompiledModel {
@@ -85,11 +94,29 @@ impl CompiledModel {
     /// Mixed-precision compile (HAWQ-style, paper §1): `assign` may
     /// override the backend per conv node (by node id + spec); `None`
     /// keeps the default. `Some(Backend::Fp32)` keeps a layer in float.
+    /// Cache-block shapes follow the process-wide autotune knob
+    /// ([`crate::kernels::tune::default_mode`]: `--autotune` /
+    /// `ServerConfig::autotune` / the `AUTOTUNE` env var).
     pub fn compile_with(
         graph: Graph,
         backend: Backend,
         calib: &[Tensor],
         assign: &dyn Fn(usize, &crate::nn::ConvSpec) -> Option<Backend>,
+    ) -> crate::Result<Self> {
+        Self::compile_tuned(graph, backend, calib, assign, tune::default_mode())
+    }
+
+    /// [`Self::compile_with`] with an explicit autotune mode: every
+    /// tiled conv plan's MC/NC/KC block shape is measured against the
+    /// layer's real GEMM shape (per-image M from the inferred output
+    /// size) or fetched from the process-wide tuning cache. The
+    /// decisions taken are recorded in [`CompiledModel::tuning`].
+    pub fn compile_tuned(
+        graph: Graph,
+        backend: Backend,
+        calib: &[Tensor],
+        assign: &dyn Fn(usize, &crate::nn::ConvSpec) -> Option<Backend>,
+        autotune: AutotuneMode,
     ) -> crate::Result<Self> {
         graph.validate()?;
         let owned_calib;
@@ -102,6 +129,10 @@ impl CompiledModel {
         };
         // Record per-conv input ranges by replaying the fp32 forward.
         let ranges = calibrate(&graph, calib)?;
+        // Static memory plan first: its inferred shapes give every conv
+        // its per-image GEMM M (= oh·ow) for autotuning.
+        let exec_plan = ExecPlan::build(&graph)?;
+        let mut tuning = TuneReport::default();
         let mut convs = Vec::with_capacity(graph.nodes.len());
         for (i, node) in graph.nodes.iter().enumerate() {
             let compiled = match &node.op {
@@ -111,17 +142,31 @@ impl CompiledModel {
                         None // direct f32 path
                     } else {
                         let (lo, hi) = ranges[i];
-                        Some(CompiledConv::prepare(
-                            spec, weights, bias, *relu, chosen, lo, hi,
-                        )?)
+                        let m1 = match exec_plan.shapes[i].as_slice() {
+                            [_, _, oh, ow] => oh * ow,
+                            _ => 0,
+                        };
+                        let cc = CompiledConv::prepare_tuned(
+                            spec,
+                            weights,
+                            bias,
+                            *relu,
+                            chosen,
+                            lo,
+                            hi,
+                            TuneSpec::new(autotune, m1),
+                        )?;
+                        for out in &cc.tuning {
+                            tuning.layers.push((node.name.clone(), out.clone()));
+                        }
+                        Some(cc)
                     }
                 }
                 _ => None,
             };
             convs.push(compiled);
         }
-        // Static memory plan + FC weight matrices (batched fp32 GEMM).
-        let exec_plan = ExecPlan::build(&graph)?;
+        // FC weight matrices (batched fp32 GEMM).
         let fc_weights = graph
             .nodes
             .iter()
@@ -139,6 +184,7 @@ impl CompiledModel {
             convs,
             plan: exec_plan,
             fc_weights,
+            tuning,
         })
     }
 
@@ -601,6 +647,55 @@ mod tests {
             assert_eq!(ctx.runs(), 4);
             assert!(ctx.footprint_bytes() > 0);
         }
+    }
+
+    #[test]
+    fn autotuned_compile_matches_default_and_recompile_hits_cache() {
+        // Distinct class count → distinct graph from other tests, but
+        // conv shapes are shared within this test, so the second compile
+        // must be all cache hits (zero tuning runs — the warm-restart
+        // guarantee) and outputs must stay bit-identical to an untuned
+        // compile for an integer backend.
+        let mut rng = crate::util::rng::Rng::new(0xA7);
+        let g = zoo::small_cnn(7, &mut rng);
+        let x = Tensor::random(&[1, 3, 32, 32], 0xA8, -1.0, 1.0);
+        let assign = |_: usize, _: &crate::nn::ConvSpec| -> Option<Backend> { None };
+        let m0 = CompiledModel::compile(g.clone(), Backend::Lut16(Scheme::D), &[x.clone()])
+            .unwrap();
+        let m1 = CompiledModel::compile_tuned(
+            g.clone(),
+            Backend::Lut16(Scheme::D),
+            &[x.clone()],
+            &assign,
+            crate::kernels::AutotuneMode::Quick,
+        )
+        .unwrap();
+        assert!(m1.tuning.is_tuned());
+        assert!(m1.tuning.plans() > 0);
+        assert_eq!(m1.tuning.measured() + m1.tuning.cache_hits(), m1.tuning.plans());
+        assert_eq!(m1.tuning.lines().len(), m1.tuning.plans());
+        let m2 = CompiledModel::compile_tuned(
+            g,
+            Backend::Lut16(Scheme::D),
+            &[x.clone()],
+            &assign,
+            crate::kernels::AutotuneMode::Quick,
+        )
+        .unwrap();
+        assert_eq!(
+            m2.tuning.cache_hits(),
+            m2.tuning.plans(),
+            "second compile with a warm cache must perform zero tuning runs"
+        );
+        assert_eq!(m2.tuning.measured(), 0);
+        assert_eq!(m2.tuning.tune_micros(), 0);
+        // Same quantizers + i32 accumulators → block shape cannot change
+        // the math: all three compiles agree bit-for-bit.
+        let y0 = m0.forward(&x, &mut StageProfile::new()).unwrap();
+        let y1 = m1.forward(&x, &mut StageProfile::new()).unwrap();
+        let y2 = m2.forward(&x, &mut StageProfile::new()).unwrap();
+        assert_eq!(y0.data, y1.data, "tuned plan changed integer outputs");
+        assert_eq!(y1.data, y2.data, "cached plan changed integer outputs");
     }
 
     #[test]

@@ -14,7 +14,54 @@
 //! any batch size and stops allocating once it has seen its largest.
 
 use crate::engine::conv::ConvScratch;
+use crate::kernels::tune::TuneOutcome;
 use crate::nn::Graph;
+
+/// Aggregated compile-time autotune outcomes for one model: one entry
+/// per built [`crate::kernels::GemmPlan`] (layer × group), in schedule
+/// order. Carried on `CompiledModel` so serving workers, metrics and
+/// the `{"cmd":"stats"}` endpoint can report which block shapes every
+/// layer runs with and what tuning cost at startup.
+#[derive(Clone, Debug, Default)]
+pub struct TuneReport {
+    /// (layer name, outcome) per tuned plan.
+    pub layers: Vec<(String, TuneOutcome)>,
+}
+
+impl TuneReport {
+    /// Whether any plan went through the tuner (mode was on).
+    pub fn is_tuned(&self) -> bool {
+        self.layers.iter().any(|(_, o)| o.mode.is_on())
+    }
+
+    /// Plans built (tuned or not).
+    pub fn plans(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Plans whose shape came from the tuning cache without any
+    /// measurement — on a warm cache this equals [`Self::plans`] and
+    /// zero tuning runs were performed.
+    pub fn cache_hits(&self) -> usize {
+        self.layers.iter().filter(|(_, o)| o.from_cache).count()
+    }
+
+    /// Plans that actually ran candidate measurements.
+    pub fn measured(&self) -> usize {
+        self.layers.iter().filter(|(_, o)| !o.from_cache && o.candidates > 0).count()
+    }
+
+    /// Total wall-clock microseconds spent measuring candidates.
+    pub fn tune_micros(&self) -> u64 {
+        self.layers.iter().map(|(_, o)| o.tune_micros).sum()
+    }
+
+    /// One human-readable line per plan (layer name + chosen shape +
+    /// provenance), for logs and the stats endpoint.
+    pub fn lines(&self) -> Vec<String> {
+        self.layers.iter().map(|(name, o)| format!("{name}: {}", o.describe())).collect()
+    }
+}
 
 /// The compile-time execution plan for one model: per-node output
 /// shapes, liveness, and the arena slot map.

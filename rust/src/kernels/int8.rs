@@ -57,6 +57,10 @@ impl Int8Tile {
 impl TileKernel for Int8Tile {
     type Acc = i32;
 
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
     fn a_layout(&self) -> Layout {
         Layout::Int8
     }

@@ -12,6 +12,13 @@
 //! accumulators; tiling regroups the reduction per K block, so results
 //! can differ from a straight-line sum by normal f32 rounding (the
 //! tests compare against the f64 oracle with a tolerance).
+//!
+//! Full 4-column weight panels take the 1×4 register-tiled path
+//! (`tile_f32_1x4`): each 32-byte activation load is fused against all
+//! four columns with four independent accumulator chains, giving the
+//! f32 backend the same tunable vector structure as the integer
+//! kernels instead of the per-pair loop (which remains as the
+//! remainder-panel path).
 
 use super::pack::{unpack_row, Layout};
 use super::tile::{TileKernel, MR, NR};
@@ -35,6 +42,10 @@ impl Lut16F32Tile {
 
 impl TileKernel for Lut16F32Tile {
     type Acc = f32;
+
+    fn name(&self) -> &'static str {
+        "lut16-f32"
+    }
 
     fn a_layout(&self) -> Layout {
         Layout::NibbleLo
@@ -74,8 +85,16 @@ impl TileKernel for Lut16F32Tile {
         #[cfg(target_arch = "x86_64")]
         if use_avx2 {
             // SAFETY: AVX2 availability checked by the caller; fragments
-            // cover exactly `vals` values in the nibble layouts.
-            unsafe { avx2::tile_f32(ar, wf, &self.lut, vals, mt, nt, sums) };
+            // cover exactly `vals` values in the nibble layouts (entries
+            // of `wf` beyond `nt` duplicate valid fragments, so the
+            // unconditional 4-column kernel stays in bounds).
+            unsafe {
+                if nt == NR {
+                    avx2::tile_f32_1x4(ar, wf, &self.lut, vals, mt, sums);
+                } else {
+                    avx2::tile_f32(ar, wf, &self.lut, vals, mt, nt, sums);
+                }
+            }
             return;
         }
         // Portable scalar fallback over the codes staged by `prep_panel`.
@@ -124,8 +143,58 @@ mod avx2 {
         _mm256_blendv_ps(lo, hi, sel)
     }
 
+    /// 1×4 register-tiled f32 kernel over one K block: each 32-byte
+    /// activation load is fused against all four weight columns, so
+    /// activation traffic drops 4× versus the per-pair loop below. Four
+    /// independent accumulator chains hide the `vaddps` latency. The
+    /// per-column add order matches [`tile_f32`] exactly, so the two
+    /// paths produce bit-identical sums.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn tile_f32_1x4(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        lut: &Lut16F32,
+        vals: usize,
+        mt: usize,
+        sums: &mut [[f32; 4]; 4],
+    ) {
+        let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
+        let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
+        let mf = _mm256_set1_epi8(0x0F);
+        let bytes = vals / 2;
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            let mut off = 0usize;
+            while off < bytes {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                for (j, wrow) in wf.iter().enumerate() {
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                    let fused = _mm256_or_si256(vw, va);
+                    let ilo = _mm256_and_si256(fused, mf);
+                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                    for idxv in [ilo, ihi] {
+                        let q0 = _mm256_castsi256_si128(idxv);
+                        let q1 = _mm256_extracti128_si256(idxv, 1);
+                        let e0 = _mm256_cvtepu8_epi32(q0);
+                        let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
+                        let e2 = _mm256_cvtepu8_epi32(q1);
+                        let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
+                        for e in [e0, e1, e2, e3] {
+                            acc[j] = _mm256_add_ps(acc[j], lookup8(lut_lo, lut_hi, e));
+                        }
+                    }
+                }
+                off += 32;
+            }
+            for (j, a) in acc.iter().enumerate() {
+                sums[i][j] = hsum_ps(*a);
+            }
+        }
+    }
+
     /// f32 tile kernel over one K block: the two table registers are
-    /// loaded once per tile and reused across all mt×nt fragment pairs.
+    /// loaded once per tile and reused across all mt×nt fragment pairs
+    /// (the remainder-panel path; full panels take [`tile_f32_1x4`]).
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn tile_f32(
         ar: &[&[u8]; 4],
@@ -199,6 +268,17 @@ mod tests {
         let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
         for &(m, n, k) in &[(1usize, 1usize, 1usize), (2, 3, 100), (3, 2, 128), (2, 2, 500)] {
             check(&wcb, &acb, m, n, k, k as u64 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn full_panels_take_the_1x4_path_and_match() {
+        // n = 8 → two full 4-column panels: the 1×4 kernel runs on AVX2
+        // hosts and must match the oracle like the per-pair path does.
+        let wcb = F32Codebook::new(2, vec![-1.2, -0.3, 0.4, 1.3]);
+        let acb = F32Codebook::new(2, vec![0.0, 0.5, 1.0, 1.9]);
+        for &(m, n, k) in &[(1usize, 8usize, 128usize), (5, 8, 260), (3, 12, 500)] {
+            check(&wcb, &acb, m, n, k, k as u64 * 7 + n as u64);
         }
     }
 

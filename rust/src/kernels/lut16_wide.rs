@@ -75,6 +75,14 @@ impl LutWideTile {
 impl TileKernel for LutWideTile {
     type Acc = i32;
 
+    fn name(&self) -> &'static str {
+        if self.lut.bits == 3 {
+            "lut3b"
+        } else {
+            "lut4b"
+        }
+    }
+
     fn a_layout(&self) -> Layout {
         self.layout()
     }

@@ -49,6 +49,10 @@ impl Lut65kTile {
 impl TileKernel for Lut65kTile {
     type Acc = i32;
 
+    fn name(&self) -> &'static str {
+        "lut65k"
+    }
+
     fn a_layout(&self) -> Layout {
         Layout::Dense
     }

@@ -31,7 +31,11 @@
 //!    non-uniform quantization ([`crate::quant::Lut16F32`]). Offline.
 //! 3. **Plan** ([`tile`]): [`GemmPlan::new`] repacks the packed weight
 //!    rows panel-contiguously ([`tile::WeightPanels`]) and fixes the
-//!    MC/NC/KC cache-block shape. Offline, once per weight matrix.
+//!    MC/NC/KC cache-block shape. Offline, once per weight matrix. The
+//!    shape itself can be *measured* instead of defaulted: the
+//!    autotuner ([`tune`]) benchmarks a per-backend candidate grid
+//!    against the real packed operands and caches the winner per
+//!    (kernel, M, N, K, threads, ISA) — see `docs/TUNING.md`.
 //! 4. **Execute** ([`GemmPlan::execute`]): the blocked, multi-threaded
 //!    driver walks K blocks × weight panels × MR×NR register tiles and
 //!    calls the backend's [`TileKernel`] for the per-tile arithmetic.
@@ -85,6 +89,8 @@
 //!   paper Fig. 8)
 //! - [`tile`] — the plan/execute layer: [`GemmPlan`], [`TileKernel`] and
 //!   the cache-blocked, register-tiled, multi-threaded driver
+//! - [`tune`] — compile-time cache-block autotuning with a persisted
+//!   process-wide tuning cache
 
 pub mod bitserial;
 pub mod fp32;
@@ -97,6 +103,8 @@ pub mod pack;
 pub mod portable;
 #[warn(missing_docs)]
 pub mod tile;
+#[warn(missing_docs)]
+pub mod tune;
 pub mod ulppack;
 
 pub use int8::Int8Tile;
@@ -104,6 +112,7 @@ pub use lut16_f32::Lut16F32Tile;
 pub use lut16_wide::LutWideTile;
 pub use lut65k::Lut65kTile;
 pub use tile::{Accum, GemmPlan, Lut16Tile, PlanOpts, TileKernel, TileShape};
+pub use tune::{AutotuneMode, TuneOutcome, TuneSpec};
 
 use crate::quant::IntCodebook;
 

@@ -40,6 +40,12 @@
 //! — the CLI's `--threads` flag, the server config and the benches all
 //! share it — which itself defaults to the machine's available
 //! parallelism.
+//!
+//! Block-shape selection: [`TileShape::default`] is an L1/L2 heuristic;
+//! the autotuner in [`crate::kernels::tune`] measures a per-backend
+//! candidate grid against the plan's real packed operands at compile
+//! time and caches the winner (process-wide, optionally persisted to
+//! disk), keyed by (kernel, M, N, K, threads, ISA).
 
 use super::lut16;
 use super::pack::{unpack_row, Layout, Packed, Scheme};
@@ -68,6 +74,53 @@ pub const NR: usize = 4;
 /// Cache-block sizes, in *values* (codes) for `kc` and rows/columns for
 /// `mc`/`nc`. Normalised on plan construction: `kc` to a multiple of
 /// [`K_BLOCK`], `mc`/`nc` to multiples of the register tile.
+///
+/// # Blocking invariants
+///
+/// The blocked driver relies on (and [`TileShape::normalized`]
+/// guarantees) three invariants:
+///
+/// - `mc` is a non-zero multiple of [`MR`] and `nc` of [`NR`], so every
+///   cache block decomposes into whole register tiles (plus one
+///   remainder tile handled by the `mt`/`nt` arguments of
+///   [`TileKernel::tile`]);
+/// - `kc` is a non-zero multiple of [`K_BLOCK`], so every K-block
+///   fragment is a whole number of packed SIMD chunks and
+///   [`WeightPanels`] can permute chunks without looking inside them;
+/// - all three are at least one tile/chunk — degenerate user-supplied
+///   values (0, or below `MR`/`NR`/`K_BLOCK`) clamp **up** to the
+///   minimum instead of truncating to zero, which would silently
+///   produce empty block loops and all-zero output.
+///
+/// The defaults are L1/L2 heuristics; per-plan measured shapes come
+/// from the autotuner ([`crate::kernels::tune`]), which benchmarks a
+/// per-backend candidate grid at compile time and caches the winner by
+/// (kernel, M, N, K, threads, ISA):
+///
+/// ```
+/// use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+/// use deepgemm::kernels::tune::{tune_plan, AutotuneMode};
+/// use deepgemm::kernels::{CodeMat, Lut16Tile, PlanOpts, K_BLOCK};
+/// use deepgemm::kernels::tile::{MR, NR};
+/// use deepgemm::quant::{IntCodebook, Lut16};
+///
+/// let (w_cb, a_cb) = (IntCodebook::signed(2), IntCodebook::unsigned(2));
+/// let w = CodeMat::random(6, 200, 2, 3);
+/// let lut = Lut16::build(&w_cb, &a_cb);
+/// let (plan, outcome) = tune_plan(
+///     &pack_weights(&w, Scheme::D),
+///     Lut16Tile::new(Scheme::D, lut),
+///     PlanOpts::default(),
+///     AutotuneMode::Quick,
+///     12,
+///     |m| pack_activations(&CodeMat::random(m, 200, 2, 4), Scheme::D),
+/// );
+/// // The winning shape upholds the blocking invariants.
+/// assert_eq!(plan.shape.mc % MR, 0);
+/// assert_eq!(plan.shape.nc % NR, 0);
+/// assert_eq!(plan.shape.kc % K_BLOCK, 0);
+/// assert_eq!(plan.shape, outcome.shape);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileShape {
     /// Rows of the activation block (multiple of [`MR`]).
@@ -89,7 +142,13 @@ impl Default for TileShape {
 }
 
 impl TileShape {
-    fn normalized(self) -> TileShape {
+    /// Enforce the blocking invariants (see the type docs): `mc`/`nc`/
+    /// `kc` round *down* to multiples of [`MR`]/[`NR`]/[`K_BLOCK`], and
+    /// degenerate values — 0, or anything below one register tile /
+    /// packed chunk — clamp *up* to the minimum legal block instead of
+    /// producing an empty block loop. [`GemmPlan::new`] applies this
+    /// automatically; it is idempotent.
+    pub fn normalized(self) -> TileShape {
         TileShape {
             mc: (self.mc / MR).max(1) * MR,
             nc: (self.nc / NR).max(1) * NR,
@@ -132,7 +191,7 @@ pub fn default_threads() -> usize {
     resolve_threads(0)
 }
 
-fn resolve_threads(plan_threads: usize) -> usize {
+pub(crate) fn resolve_threads(plan_threads: usize) -> usize {
     let t = if plan_threads == 0 {
         DEFAULT_THREADS.load(Ordering::Relaxed)
     } else {
@@ -218,6 +277,12 @@ impl Accum for f32 {
 pub trait TileKernel: Send + Sync {
     /// Accumulator scalar written to the output buffer.
     type Acc: Accum;
+
+    /// Stable backend identifier: the autotune cache key's kernel
+    /// component ([`crate::kernels::tune::TuneKey`]) and the label
+    /// stats/logs report shapes under. One value per kernel family ×
+    /// packing variant — tuned shapes are only comparable within one.
+    fn name(&self) -> &'static str;
 
     /// Activation layout [`GemmPlan::execute`] expects.
     fn a_layout(&self) -> Layout;
@@ -713,6 +778,15 @@ impl Lut16Tile {
 impl TileKernel for Lut16Tile {
     type Acc = i32;
 
+    fn name(&self) -> &'static str {
+        match self.scheme {
+            Scheme::A => "lut16-a",
+            Scheme::B => "lut16-b",
+            Scheme::C => "lut16-c",
+            Scheme::D => "lut16-d",
+        }
+    }
+
     fn a_layout(&self) -> Layout {
         self.scheme.a_layout()
     }
@@ -1098,6 +1172,34 @@ mod tests {
             assert_eq!(plan.k(), 700);
             assert_eq!(plan.packed_bytes(), wp.data.len());
         }
+    }
+
+    #[test]
+    fn normalized_clamps_degenerate_shapes() {
+        // 0 and sub-tile values clamp UP to one register tile / K chunk
+        // (an empty block loop would silently produce all-zero output);
+        // everything else rounds down to the tile/chunk grid.
+        let min = TileShape { mc: MR, nc: NR, kc: K_BLOCK };
+        assert_eq!(TileShape { mc: 0, nc: 0, kc: 0 }.normalized(), min);
+        assert_eq!(TileShape { mc: MR - 1, nc: NR - 1, kc: K_BLOCK - 1 }.normalized(), min);
+        assert_eq!(
+            TileShape { mc: 33, nc: 65, kc: 1300 }.normalized(),
+            TileShape { mc: 32, nc: 64, kc: 1280 }
+        );
+        // Idempotent.
+        let s = TileShape { mc: 7, nc: 9, kc: 200 }.normalized();
+        assert_eq!(s.normalized(), s);
+        // A degenerate user-supplied shape still computes correctly.
+        check_plan(
+            Scheme::D,
+            true,
+            5,
+            6,
+            200,
+            2,
+            TileShape { mc: 0, nc: 1, kc: 3 },
+            123,
+        );
     }
 
     #[test]

@@ -1,0 +1,790 @@
+//! Cache-block autotuning for [`GemmPlan`]s: measure a small candidate
+//! grid of [`TileShape`]s against the plan's real packed operands and
+//! keep the winner, with results persisted in a process-wide tuning
+//! cache so every (backend, shape, threads, ISA) combination is tuned
+//! at most once per process — and, via the cache file handled by
+//! [`crate::runtime::manifest::TuningCacheDoc`], at most once per
+//! machine.
+//!
+//! The default `TileShape` is a one-size-fits-all L1/L2 heuristic;
+//! T-MAC (arXiv 2407.00088) and FullPack (arXiv 2211.06982) both show
+//! that sub-byte LUT/packing kernels only reach peak when block shapes
+//! are tuned per layer shape and per ISA. The compile-time plan/execute
+//! split makes that cheap: tuning runs once in
+//! `CompiledConv::prepare`-time code, never on the request path.
+//!
+//! Flow:
+//!
+//! 1. [`tune_plan`] is handed packed weights, a [`TileKernel`], base
+//!    [`PlanOpts`] and the per-image GEMM M. With
+//!    [`AutotuneMode::Off`] it builds the default plan and returns.
+//! 2. Otherwise it forms a [`TuneKey`] — `(kernel, M, N, K, threads,
+//!    ISA)` — and consults the process-wide cache. A hit skips all
+//!    measurement (a warm server restart performs **zero** tuning
+//!    runs).
+//! 3. On a miss it builds one candidate plan per [`candidates`] entry
+//!    (the default shape is always candidate 0), executes each against
+//!    a caller-supplied packed activation operand, and caches the
+//!    fastest.
+//!
+//! The knob is process-wide like the GEMM thread count: the CLI's
+//! `--autotune`, `ServerConfig::autotune` and the bench binaries all
+//! feed [`set_default_mode`]; the `AUTOTUNE` environment variable
+//! (`off`/`quick`/`full`) seeds the default so CI can exercise the
+//! tuning path without touching call sites. See `docs/TUNING.md` for
+//! the operational guide.
+
+use super::pack::Packed;
+use super::tile::{self, Accum, GemmPlan, PlanOpts, TileKernel, TileShape};
+use super::K_BLOCK;
+use crate::runtime::manifest::{TuneRecord, TuningCacheDoc};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// How much measurement effort [`tune_plan`] spends on a cache miss.
+///
+/// ```
+/// use deepgemm::kernels::pack::{pack_activations, pack_weights, Scheme};
+/// use deepgemm::kernels::tune::{self, AutotuneMode};
+/// use deepgemm::kernels::{CodeMat, Lut16Tile, PlanOpts};
+/// use deepgemm::quant::{IntCodebook, Lut16};
+///
+/// let (w_cb, a_cb) = (IntCodebook::signed(2), IntCodebook::unsigned(2));
+/// let w = CodeMat::random(8, 256, 2, 1);
+/// let lut = Lut16::build(&w_cb, &a_cb);
+/// let (plan, outcome) = tune::tune_plan(
+///     &pack_weights(&w, Scheme::D),
+///     Lut16Tile::new(Scheme::D, lut),
+///     PlanOpts::default(),
+///     AutotuneMode::Quick,
+///     16,
+///     |m| pack_activations(&CodeMat::random(m, 256, 2, 2), Scheme::D),
+/// );
+/// assert_eq!(plan.shape, outcome.shape);
+/// assert!(outcome.candidates > 0 || outcome.from_cache);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutotuneMode {
+    /// No measurement: every plan keeps its requested (usually default)
+    /// shape.
+    Off,
+    /// A handful of candidates per backend, two timed repetitions each,
+    /// activation sample capped at 160 rows. Adds milliseconds per
+    /// distinct layer shape to compile time.
+    Quick,
+    /// The full candidate grid, four timed repetitions, sample capped
+    /// at 512 rows. For offline shape studies, not serving startup.
+    Full,
+}
+
+impl AutotuneMode {
+    /// Parse `off` / `quick` / `full` (the CLI/env spellings).
+    pub fn parse(s: &str) -> Result<AutotuneMode, String> {
+        match s {
+            "off" | "0" | "none" => Ok(AutotuneMode::Off),
+            "quick" | "1" => Ok(AutotuneMode::Quick),
+            "full" | "2" => Ok(AutotuneMode::Full),
+            other => Err(format!("unknown autotune mode '{other}' (valid: off, quick, full)")),
+        }
+    }
+
+    /// Canonical name (round-trips through [`AutotuneMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutotuneMode::Off => "off",
+            AutotuneMode::Quick => "quick",
+            AutotuneMode::Full => "full",
+        }
+    }
+
+    /// Whether this mode performs any tuning at all.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, AutotuneMode::Off)
+    }
+
+    fn reps(&self) -> usize {
+        match self {
+            AutotuneMode::Off => 0,
+            AutotuneMode::Quick => 2,
+            AutotuneMode::Full => 4,
+        }
+    }
+
+    fn sample_rows(&self, m: usize) -> usize {
+        match self {
+            AutotuneMode::Off => m,
+            AutotuneMode::Quick => m.min(160).max(1),
+            AutotuneMode::Full => m.min(512).max(1),
+        }
+    }
+}
+
+/// Process-wide default autotune mode: 0 = Off, 1 = Quick, 2 = Full,
+/// `u8::MAX` = unset (fall back to the `AUTOTUNE` env var).
+static DEFAULT_MODE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_mode() -> AutotuneMode {
+    static ENV: OnceLock<AutotuneMode> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("AUTOTUNE")
+            .ok()
+            .and_then(|v| AutotuneMode::parse(v.trim()).ok())
+            .unwrap_or(AutotuneMode::Off)
+    })
+}
+
+/// Set the process-wide autotune default used by compile paths that do
+/// not take an explicit mode (the CLI's `--autotune`,
+/// `ServerConfig::autotune` and the benches all feed this).
+pub fn set_default_mode(mode: AutotuneMode) {
+    DEFAULT_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// The resolved process-wide autotune default ([`set_default_mode`] if
+/// called, else the `AUTOTUNE` env var, else [`AutotuneMode::Off`]).
+pub fn default_mode() -> AutotuneMode {
+    match DEFAULT_MODE.load(Ordering::Relaxed) {
+        0 => AutotuneMode::Off,
+        1 => AutotuneMode::Quick,
+        2 => AutotuneMode::Full,
+        _ => env_mode(),
+    }
+}
+
+/// What one tuned plan is keyed by: everything that changes which block
+/// shape wins. Two plans with equal keys are interchangeable for tuning
+/// purposes, so groups of a grouped conv (same N×K, same M) share one
+/// measurement.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    /// The backend micro-kernel id ([`TileKernel::name`]).
+    pub kernel: String,
+    /// GEMM rows the plan was tuned for (per-image M at compile time).
+    pub m: usize,
+    /// Output columns (weight rows).
+    pub n: usize,
+    /// Reduction length (unpadded).
+    pub k: usize,
+    /// Resolved worker-thread count at tuning time.
+    pub threads: usize,
+    /// Instruction set the measurement ran on (`avx2` or `scalar`).
+    pub isa: String,
+}
+
+/// A cached tuning decision.
+#[derive(Clone, Copy, Debug)]
+pub struct CachedShape {
+    /// The winning block shape.
+    pub shape: TileShape,
+    /// Its measured best time (microseconds per GEMM on the tuning
+    /// sample; 0.0 for entries loaded from a cache file that predates
+    /// the measurement, never for freshly tuned ones).
+    pub micros: f64,
+}
+
+fn cache() -> &'static Mutex<HashMap<TuneKey, CachedShape>> {
+    static CACHE: OnceLock<Mutex<HashMap<TuneKey, CachedShape>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Number of entries in the process-wide tuning cache.
+pub fn cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// Drop every cached tuning decision (testing / forced re-tune).
+pub fn cache_clear() {
+    cache().lock().unwrap().clear();
+}
+
+/// Look up a cached decision.
+pub fn cache_lookup(key: &TuneKey) -> Option<CachedShape> {
+    cache().lock().unwrap().get(key).copied()
+}
+
+/// Insert (or overwrite) a cached decision.
+pub fn cache_insert(key: TuneKey, choice: CachedShape) {
+    cache().lock().unwrap().insert(key, choice);
+}
+
+/// Snapshot of the whole cache, sorted by key for stable output.
+pub fn cache_entries() -> Vec<(TuneKey, CachedShape)> {
+    let mut v: Vec<(TuneKey, CachedShape)> =
+        cache().lock().unwrap().iter().map(|(k, c)| (k.clone(), *c)).collect();
+    v.sort_by(|a, b| {
+        (&a.0.kernel, a.0.m, a.0.n, a.0.k, a.0.threads, &a.0.isa).cmp(&(
+            &b.0.kernel, b.0.m, b.0.n, b.0.k, b.0.threads, &b.0.isa,
+        ))
+    });
+    v
+}
+
+/// Serialize the process-wide cache to `path` (the JSON document format
+/// of [`TuningCacheDoc`]); returns the number of entries written.
+pub fn save_cache(path: &Path) -> crate::Result<usize> {
+    let records: Vec<TuneRecord> = cache_entries()
+        .into_iter()
+        .map(|(k, c)| TuneRecord {
+            kernel: k.kernel,
+            m: k.m,
+            n: k.n,
+            k: k.k,
+            threads: k.threads,
+            isa: k.isa,
+            mc: c.shape.mc,
+            nc: c.shape.nc,
+            kc: c.shape.kc,
+            micros: c.micros,
+        })
+        .collect();
+    let n = records.len();
+    TuningCacheDoc { records }.save(path)?;
+    Ok(n)
+}
+
+/// Merge the entries of a cache file written by [`save_cache`] into the
+/// process-wide cache (file entries win over in-memory ones); returns
+/// the number of entries loaded.
+pub fn load_cache(path: &Path) -> crate::Result<usize> {
+    let doc = TuningCacheDoc::load(path)?;
+    let n = doc.records.len();
+    let mut guard = cache().lock().unwrap();
+    for r in doc.records {
+        guard.insert(
+            TuneKey {
+                kernel: r.kernel,
+                m: r.m,
+                n: r.n,
+                k: r.k,
+                threads: r.threads,
+                isa: r.isa,
+            },
+            CachedShape {
+                shape: TileShape { mc: r.mc, nc: r.nc, kc: r.kc }.normalized(),
+                micros: r.micros,
+            },
+        );
+    }
+    Ok(n)
+}
+
+/// What [`tune_plan`] should tune for: the mode plus the GEMM M the
+/// plan will serve (per-image rows at compile time — the batcher's
+/// batch fusion scales M uniformly, which does not change the relative
+/// ranking of block shapes nearly as much as N/K/ISA do).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneSpec {
+    /// Measurement effort.
+    pub mode: AutotuneMode,
+    /// Expected GEMM rows (0 disables tuning for this plan).
+    pub m: usize,
+}
+
+impl TuneSpec {
+    /// No tuning: plans keep their requested shape.
+    pub fn off() -> TuneSpec {
+        TuneSpec { mode: AutotuneMode::Off, m: 0 }
+    }
+
+    /// Tune with `mode` for a GEMM of `m` rows.
+    pub fn new(mode: AutotuneMode, m: usize) -> TuneSpec {
+        TuneSpec { mode, m }
+    }
+}
+
+/// The result of one [`tune_plan`] call — everything metrics, logs and
+/// the `{"cmd":"stats"}` endpoint report about a plan's block shape.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// The cache key the decision is stored under.
+    pub key: TuneKey,
+    /// The chosen (normalized) block shape.
+    pub shape: TileShape,
+    /// The mode the call ran with.
+    pub mode: AutotuneMode,
+    /// Whether the shape came from the cache (no measurement ran).
+    pub from_cache: bool,
+    /// Candidates measured (0 when cached or off).
+    pub candidates: usize,
+    /// Wall-clock microseconds spent measuring (0 when cached or off).
+    pub tune_micros: u64,
+    /// Best candidate's measured microseconds per GEMM (0 when not
+    /// measured).
+    pub best_micros: f64,
+    /// The default shape's measured microseconds per GEMM (candidate 0;
+    /// 0 when not measured).
+    pub default_micros: f64,
+}
+
+impl TuneOutcome {
+    /// One-line human-readable summary for logs and stats.
+    pub fn describe(&self) -> String {
+        let TileShape { mc, nc, kc } = self.shape;
+        let src = if !self.mode.is_on() {
+            "default".to_string()
+        } else if self.from_cache {
+            "cached".to_string()
+        } else {
+            format!(
+                "tuned {:.1}ms over {} candidates, {:.2}x vs default",
+                self.tune_micros as f64 / 1e3,
+                self.candidates,
+                self.default_micros / self.best_micros.max(1e-9)
+            )
+        };
+        format!(
+            "{} M{} N{} K{} t{} {}: mc/nc/kc = {mc}/{nc}/{kc} ({src})",
+            self.key.kernel, self.key.m, self.key.n, self.key.k, self.key.threads, self.key.isa
+        )
+    }
+}
+
+/// The candidate [`TileShape`] grid for one backend at one effort
+/// level, clamped to the problem (`kc` never exceeds the padded K, so
+/// grids collapse naturally on small layers) and deduplicated after
+/// normalization. The default shape is always candidate 0.
+///
+/// Per-backend leanings follow the kernels' working sets: `lut65k`
+/// keeps a 64 KB table in L2, so bigger NC amortizes table traffic over
+/// more columns; `int8` streams byte-per-value operands (4× the bytes
+/// of the 2-bit layouts), so bigger KC keeps its panel reuse up;
+/// `lut16-f32` expands every byte to dword lanes and prefers wider NC.
+pub fn candidates(kernel: &str, mode: AutotuneMode, k_padded: usize) -> Vec<TileShape> {
+    let mut shapes: Vec<TileShape> = vec![TileShape::default()];
+    let mut push = |mc: usize, nc: usize, kc: usize| {
+        shapes.push(TileShape { mc, nc, kc });
+    };
+    match mode {
+        AutotuneMode::Off => return vec![TileShape::default()],
+        AutotuneMode::Quick => {
+            push(32, 128, 1024);
+            push(64, 64, 512);
+            push(16, 64, 2048);
+            match kernel {
+                "lut65k" => {
+                    push(32, 256, 512);
+                    push(64, 128, 1024);
+                }
+                "int8" => {
+                    push(32, 64, 4096);
+                    push(64, 32, 2048);
+                }
+                "lut16-f32" => push(16, 128, 1024),
+                _ => {}
+            }
+        }
+        AutotuneMode::Full => {
+            for mc in [16usize, 32, 64] {
+                for nc in [32usize, 64, 128, 256] {
+                    for kc in [512usize, 1024, 2048, 4096] {
+                        push(mc, nc, kc);
+                    }
+                }
+            }
+        }
+    }
+    // Clamp kc to the padded K (a bigger block is the same single-block
+    // loop), normalize, dedup preserving order.
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for s in shapes {
+        let s = TileShape { kc: s.kc.min(k_padded.max(K_BLOCK)), ..s }.normalized();
+        if seen.insert((s.mc, s.nc, s.kc)) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Execute `plan` against `a` once for warmup, then `reps` times timed;
+/// returns the best observed microseconds per call.
+fn measure<K: TileKernel>(plan: &GemmPlan<K>, a: &Packed, out: &mut [K::Acc], reps: usize) -> f64 {
+    plan.execute(a, out);
+    let mut best = f64::MAX;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        plan.execute(a, out);
+        best = best.min(t.elapsed().as_secs_f64() * 1e6);
+    }
+    std::hint::black_box(&out[..]);
+    best
+}
+
+fn isa_name(force_scalar: bool) -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && !force_scalar {
+            return "avx2";
+        }
+    }
+    let _ = force_scalar;
+    "scalar"
+}
+
+/// Build a [`GemmPlan`] with an autotuned cache-block shape.
+///
+/// `w` and `kernel` are exactly what [`GemmPlan::new`] takes; `m` is
+/// the GEMM row count the plan is expected to serve (per-image M);
+/// `mk_a` supplies a packed activation operand in `kernel.a_layout()`
+/// with at least the requested number of rows — it is only called on a
+/// cache miss, so cached/off paths pay nothing for it. Callers with a
+/// real activation operand at hand (the benches) can return it
+/// directly; the engine synthesizes random codes of the layer's K.
+///
+/// Returns the plan (built with the winning shape) plus a
+/// [`TuneOutcome`] describing where the shape came from.
+pub fn tune_plan<K, F>(
+    w: &Packed,
+    kernel: K,
+    base: PlanOpts,
+    mode: AutotuneMode,
+    m: usize,
+    mk_a: F,
+) -> (GemmPlan<K>, TuneOutcome)
+where
+    K: TileKernel + Clone,
+    F: FnOnce(usize) -> Packed,
+{
+    let threads = tile::resolve_threads(base.threads);
+    let isa = isa_name(base.force_scalar);
+    let key = TuneKey {
+        kernel: kernel.name().to_string(),
+        m,
+        n: w.rows,
+        k: w.k,
+        threads,
+        isa: isa.to_string(),
+    };
+    if !mode.is_on() || m == 0 {
+        let plan = GemmPlan::new(w, kernel, base);
+        let shape = plan.shape;
+        return (
+            plan,
+            TuneOutcome {
+                key,
+                shape,
+                mode,
+                from_cache: false,
+                candidates: 0,
+                tune_micros: 0,
+                best_micros: 0.0,
+                default_micros: 0.0,
+            },
+        );
+    }
+    if let Some(hit) = cache_lookup(&key) {
+        let plan = GemmPlan::new(w, kernel, PlanOpts { shape: hit.shape, ..base });
+        let shape = plan.shape;
+        return (
+            plan,
+            TuneOutcome {
+                key,
+                shape,
+                mode,
+                from_cache: true,
+                candidates: 0,
+                tune_micros: 0,
+                best_micros: hit.micros,
+                default_micros: 0.0,
+            },
+        );
+    }
+    let t0 = Instant::now();
+    let a = mk_a(mode.sample_rows(m));
+    debug_assert_eq!(a.layout, kernel.a_layout(), "tuning operand packed for wrong kernel");
+    debug_assert_eq!(a.k, w.k, "tuning operand K mismatch");
+    let cands = candidates(kernel.name(), mode, w.k_padded);
+    let reps = mode.reps();
+    let mut out = vec![<K::Acc as Accum>::ZERO; a.rows * w.rows];
+    let mut best: Option<(GemmPlan<K>, f64)> = None;
+    let mut default_micros = 0.0;
+    for (ci, shape) in cands.iter().enumerate() {
+        let plan = GemmPlan::new(w, kernel.clone(), PlanOpts { shape: *shape, ..base });
+        let us = measure(&plan, &a, &mut out, reps);
+        if ci == 0 {
+            default_micros = us;
+        }
+        if best.as_ref().map_or(true, |(_, b)| us < *b) {
+            best = Some((plan, us));
+        }
+    }
+    let (plan, best_micros) = best.expect("candidate grid is never empty");
+    cache_insert(key.clone(), CachedShape { shape: plan.shape, micros: best_micros });
+    let shape = plan.shape;
+    (
+        plan,
+        TuneOutcome {
+            key,
+            shape,
+            mode,
+            from_cache: false,
+            candidates: cands.len(),
+            tune_micros: t0.elapsed().as_micros() as u64,
+            best_micros,
+            default_micros,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::int8::{self, Int8Tile};
+    use crate::kernels::lut16_f32::Lut16F32Tile;
+    use crate::kernels::lut16_wide::{self, LutWideTile};
+    use crate::kernels::lut65k::{self, Lut65kTile};
+    use crate::kernels::pack::{self, Layout, Scheme};
+    use crate::kernels::tile::Lut16Tile;
+    use crate::kernels::CodeMat;
+    use crate::quant::{F32Codebook, IntCodebook, Lut16, Lut16F32, Lut65k};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn mode_parse_roundtrip_and_errors() {
+        for m in [AutotuneMode::Off, AutotuneMode::Quick, AutotuneMode::Full] {
+            assert_eq!(AutotuneMode::parse(m.name()), Ok(m));
+        }
+        assert!(AutotuneMode::parse("fast").is_err());
+        assert!(!AutotuneMode::Off.is_on());
+        assert!(AutotuneMode::Quick.is_on());
+    }
+
+    #[test]
+    fn candidate_grids_start_with_default_and_clamp_kc() {
+        for kernel in ["lut16-d", "lut65k", "int8", "lut16-f32", "lut3b"] {
+            for mode in [AutotuneMode::Quick, AutotuneMode::Full] {
+                let c = candidates(kernel, mode, 256);
+                assert_eq!(c[0], TileShape { mc: 32, nc: 64, kc: 256 }, "{kernel} {mode:?}");
+                assert!(c.len() > 1, "{kernel} {mode:?} grid too small");
+                for s in &c {
+                    assert!(s.kc <= 256, "kc {0} exceeds padded K", s.kc);
+                    assert_eq!(s.kc % K_BLOCK, 0);
+                    assert_eq!(s.mc % crate::kernels::tile::MR, 0);
+                    assert_eq!(s.nc % crate::kernels::tile::NR, 0);
+                }
+                // Deduplicated.
+                let mut seen = std::collections::HashSet::new();
+                assert!(c.iter().all(|s| seen.insert((s.mc, s.nc, s.kc))));
+            }
+        }
+        assert_eq!(candidates("lut16-d", AutotuneMode::Off, 1024).len(), 1);
+    }
+
+    #[test]
+    fn tuned_plan_hits_cache_on_second_call() {
+        // Unique K so parallel tests cannot collide on the key.
+        let (m, n, k) = (6usize, 5usize, 391usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 7);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        let mk = |ms: usize| pack::pack_activations(&CodeMat::random(ms, k, 2, 8), Scheme::D);
+        let (_, first) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut.clone()),
+            PlanOpts::default(),
+            AutotuneMode::Quick,
+            m,
+            mk,
+        );
+        assert!(!first.from_cache);
+        assert!(first.candidates > 1);
+        assert!(first.tune_micros > 0);
+        let (plan2, second) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            AutotuneMode::Quick,
+            m,
+            |_| panic!("cache hit must not build a tuning operand"),
+        );
+        assert!(second.from_cache, "second call must hit the cache");
+        assert_eq!(second.shape, first.shape);
+        assert_eq!(plan2.shape, first.shape);
+        assert!(second.describe().contains("cached"));
+    }
+
+    #[test]
+    fn off_mode_keeps_requested_shape_and_skips_activations() {
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(3, 137, 2, 9);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        let (plan, out) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            AutotuneMode::Off,
+            4,
+            |_| panic!("off mode must not build a tuning operand"),
+        );
+        assert_eq!(plan.shape, TileShape::default().normalized());
+        assert!(!out.from_cache);
+        assert_eq!(out.candidates, 0);
+        assert!(out.describe().contains("default"));
+    }
+
+    #[test]
+    fn cache_file_roundtrip_restores_decisions() {
+        let key = TuneKey {
+            kernel: "lut16-d".into(),
+            m: 77,
+            n: 13,
+            k: 999,
+            threads: 3,
+            isa: "avx2".into(),
+        };
+        let choice =
+            CachedShape { shape: TileShape { mc: 64, nc: 128, kc: 512 }, micros: 42.5 };
+        cache_insert(key.clone(), choice);
+        let dir = std::env::temp_dir().join("dg_tune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune_cache.json");
+        let saved = save_cache(&path).unwrap();
+        assert!(saved >= 1);
+        // Remove just our entry, reload, and expect it back.
+        cache().lock().unwrap().remove(&key);
+        assert!(cache_lookup(&key).is_none());
+        let loaded = load_cache(&path).unwrap();
+        assert_eq!(loaded, saved);
+        let back = cache_lookup(&key).expect("entry restored from file");
+        assert_eq!(back.shape, choice.shape);
+        assert!((back.micros - choice.micros).abs() < 1e-9);
+    }
+
+    /// Satellite property test: for every tiled backend, an autotuned
+    /// plan's output is bit-identical (i32) / ulp-equal (f32) to the
+    /// default-shape plan across odd shapes × 1/2/4 threads.
+    #[test]
+    fn autotuned_plans_match_default_shape_plans() {
+        prop::check(
+            0x7E57,
+            4,
+            |r: &mut Rng| {
+                (
+                    r.range(1, 9),
+                    r.range(1, 9),
+                    r.range(1, 300),
+                    [1usize, 2, 4][r.range(0, 3)],
+                    r.next_u64(),
+                )
+            },
+            |&(m, n, k, threads, seed)| {
+                let opts = PlanOpts { threads, ..Default::default() };
+                let mode = AutotuneMode::Quick;
+                // lut16 scheme d
+                {
+                    let cb = IntCodebook::signed(2);
+                    let lut = Lut16::build(&cb, &cb);
+                    let a = CodeMat::random(m, k, 2, seed);
+                    let w = CodeMat::random(n, k, 2, seed ^ 1);
+                    let ap = pack::pack_activations(&a, Scheme::D);
+                    let wp = pack::pack_weights(&w, Scheme::D);
+                    let dflt = GemmPlan::new(&wp, Lut16Tile::new(Scheme::D, lut.clone()), opts);
+                    let (tuned, _) = tune_plan(
+                        &wp,
+                        Lut16Tile::new(Scheme::D, lut),
+                        opts,
+                        mode,
+                        m,
+                        |_| ap.clone(),
+                    );
+                    let mut want = vec![0i32; m * n];
+                    let mut got = vec![0i32; m * n];
+                    dflt.execute(&ap, &mut want);
+                    tuned.execute(&ap, &mut got);
+                    if got != want {
+                        return Err(format!("lut16-d diverges m={m} n={n} k={k} t={threads}"));
+                    }
+                }
+                // lut65k
+                {
+                    let cb = IntCodebook::signed(2);
+                    let lut = Arc::new(Lut65k::build(&cb, &cb));
+                    let a = CodeMat::random(m, k, 2, seed ^ 2);
+                    let w = CodeMat::random(n, k, 2, seed ^ 3);
+                    let ap = lut65k::pack_dense(&a);
+                    let wp = lut65k::pack_dense(&w);
+                    let dflt = GemmPlan::new(&wp, Lut65kTile::new(lut.clone()), opts);
+                    let (tuned, _) =
+                        tune_plan(&wp, Lut65kTile::new(lut), opts, mode, m, |_| ap.clone());
+                    let mut want = vec![0i32; m * n];
+                    let mut got = vec![0i32; m * n];
+                    dflt.execute(&ap, &mut want);
+                    tuned.execute(&ap, &mut got);
+                    if got != want {
+                        return Err(format!("lut65k diverges m={m} n={n} k={k} t={threads}"));
+                    }
+                }
+                // wide 4-bit
+                {
+                    let w_cb = IntCodebook::signed(4);
+                    let a_cb = IntCodebook::unsigned(4);
+                    let lut = Lut16::build(&w_cb, &a_cb);
+                    let a = CodeMat::random(m, k, 4, seed ^ 4);
+                    let w = CodeMat::random(n, k, 4, seed ^ 5);
+                    let ap = lut16_wide::pack_wide(&a);
+                    let wp = lut16_wide::pack_wide(&w);
+                    let dflt = GemmPlan::new(&wp, LutWideTile::new(lut.clone()), opts);
+                    let (tuned, _) =
+                        tune_plan(&wp, LutWideTile::new(lut), opts, mode, m, |_| ap.clone());
+                    let mut want = vec![0i32; m * n];
+                    let mut got = vec![0i32; m * n];
+                    dflt.execute(&ap, &mut want);
+                    tuned.execute(&ap, &mut got);
+                    if got != want {
+                        return Err(format!("lut4b diverges m={m} n={n} k={k} t={threads}"));
+                    }
+                }
+                // int8
+                {
+                    let mut rng = Rng::new(seed ^ 6);
+                    let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                    let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+                    let (wp, sums) = int8::pack_weights_i8(&wvals, n, k);
+                    let am = CodeMat::from_data(m, k, 8, acodes);
+                    let ap = pack::pack(&am, Layout::Int8);
+                    let dflt = GemmPlan::new(&wp, Int8Tile::new(128, sums.clone()), opts);
+                    let (tuned, _) =
+                        tune_plan(&wp, Int8Tile::new(128, sums), opts, mode, m, |_| ap.clone());
+                    let mut want = vec![0i32; m * n];
+                    let mut got = vec![0i32; m * n];
+                    dflt.execute(&ap, &mut want);
+                    tuned.execute(&ap, &mut got);
+                    if got != want {
+                        return Err(format!("int8 diverges m={m} n={n} k={k} t={threads}"));
+                    }
+                }
+                // lut16-f32 (ulp-equal: same per-block regrouping, so the
+                // tuned plan may differ only by K-block boundaries).
+                {
+                    let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
+                    let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
+                    let lut = Lut16F32::build(&wcb, &acb);
+                    let a = CodeMat::random(m, k, 2, seed ^ 7);
+                    let w = CodeMat::random(n, k, 2, seed ^ 8);
+                    let ap = pack::pack(&a, Layout::NibbleLo);
+                    let wp = pack::pack(&w, Layout::NibbleHi);
+                    let dflt = GemmPlan::new(&wp, Lut16F32Tile::new(lut.clone()), opts);
+                    let (tuned, _) =
+                        tune_plan(&wp, Lut16F32Tile::new(lut), opts, mode, m, |_| ap.clone());
+                    let mut want = vec![0f32; m * n];
+                    let mut got = vec![0f32; m * n];
+                    dflt.execute(&ap, &mut want);
+                    tuned.execute(&ap, &mut got);
+                    if let Err(e) = prop::assert_close(&got, &want, 1e-4, 1e-5) {
+                        return Err(format!(
+                            "lut16-f32 diverges m={m} n={n} k={k} t={threads}: {e}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -3,7 +3,7 @@
 
 use deepgemm::coordinator::{serve, BatcherConfig, Router, ServerConfig};
 use deepgemm::engine::CompiledModel;
-use deepgemm::kernels::Backend;
+use deepgemm::kernels::{tune, Backend};
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::profiling::StageProfile;
 #[cfg(feature = "pjrt")]
@@ -24,6 +24,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
         OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
         cli::threads_opt(),
+        cli::autotune_opt(),
+        cli::tune_cache_opt(),
         OptSpec { name: "verbose", help: "chatty output", takes_value: false, default: None },
     ]
 }
@@ -70,19 +72,53 @@ fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
     let seed = args.get_usize("seed", 0).map_err(deepgemm::Error::Config)? as u64;
     let backend = parse_backend(args)?;
     let graph = zoo::build(model, classes, seed)?;
+    // Warm the autotune cache from disk so a restarted server performs
+    // zero tuning runs for shapes it has already measured.
+    let cache_path = args.get("tune-cache").map(std::path::PathBuf::from);
+    if let Some(p) = &cache_path {
+        if p.exists() {
+            match tune::load_cache(p) {
+                Ok(n) => eprintln!("loaded {n} tuning-cache entries from {}", p.display()),
+                Err(e) => eprintln!("warning: ignoring tuning cache: {e}"),
+            }
+        }
+    }
     eprintln!(
-        "compiling {model} ({} convs, {:.1}M params) for backend {}...",
+        "compiling {model} ({} convs, {:.1}M params) for backend {} (autotune {})...",
         graph.conv_count(),
         graph.conv_params() as f64 / 1e6,
-        backend.name()
+        backend.name(),
+        tune::default_mode().name()
     );
-    CompiledModel::compile(graph, backend, &[])
+    let compiled = CompiledModel::compile(graph, backend, &[])?;
+    if compiled.tuning.is_tuned() {
+        eprintln!(
+            "autotune: {} plans, {} measured, {} cache hits, {:.1} ms",
+            compiled.tuning.plans(),
+            compiled.tuning.measured(),
+            compiled.tuning.cache_hits(),
+            compiled.tuning.tune_micros() as f64 / 1e3
+        );
+        if let Some(p) = &cache_path {
+            match tune::save_cache(p) {
+                Ok(n) => eprintln!("saved {n} tuning-cache entries to {}", p.display()),
+                Err(e) => eprintln!("warning: could not save tuning cache: {e}"),
+            }
+        }
+    }
+    Ok(compiled)
 }
 
 fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
     // One process-wide GEMM-threads knob, shared by every command.
     let threads = args.get_usize("threads", 0).map_err(deepgemm::Error::Config)?;
     deepgemm::kernels::tile::set_default_threads(threads);
+    // Same contract for the autotune mode; absent flag defers to the
+    // AUTOTUNE env var (resolved in kernels::tune::default_mode).
+    if let Some(mode) = args.get("autotune") {
+        let mode = tune::AutotuneMode::parse(mode).map_err(deepgemm::Error::Config)?;
+        tune::set_default_mode(mode);
+    }
     match cmd {
         "help" => {
             println!("{}", usage("deepgemm", "ultra low-precision LUT inference", &COMMANDS, &specs()));
@@ -115,9 +151,16 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
                 queue_cap: 128,
             };
             router.register(model, cfg);
+            // The autotune knob + cache were already applied around
+            // compile_model; the config carries them for observability.
             serve(
                 Arc::new(router),
-                &ServerConfig { addr: args.get_or("addr", "127.0.0.1:7070").into(), threads },
+                &ServerConfig {
+                    addr: args.get_or("addr", "127.0.0.1:7070").into(),
+                    threads,
+                    autotune: None,
+                    tune_cache: None,
+                },
             )
         }
         "infer" => {
@@ -158,6 +201,11 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
                 model.plan.arena_bytes_per_image(),
                 ctx.footprint_bytes()
             );
+            if model.tuning.is_tuned() {
+                for line in model.tuning.lines() {
+                    println!("autotune: {line}");
+                }
+            }
             println!("{}", prof.render(&format!("{} / {}", model.name, model.backend.name())));
             Ok(())
         }

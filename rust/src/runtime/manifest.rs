@@ -1,5 +1,8 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` (which
-//! writes it) and the rust runtime (which consumes it).
+//! writes it) and the rust runtime (which consumes it) — plus the
+//! [`TuningCacheDoc`] file format the GEMM autotuner
+//! ([`crate::kernels::tune`]) persists its block-shape decisions in, so
+//! a server restart skips re-tuning.
 
 use crate::util::json::Json;
 use std::path::Path;
@@ -109,6 +112,140 @@ impl Manifest {
     }
 }
 
+/// One persisted autotune decision: the cache key — backend kernel id,
+/// GEMM shape, thread count, ISA — plus the winning MC/NC/KC block
+/// shape and its measured time. The document is versioned so future
+/// key changes can invalidate stale files instead of mis-applying them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneRecord {
+    /// Backend micro-kernel id (`TileKernel::name`).
+    pub kernel: String,
+    /// GEMM rows tuned for.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Reduction length (unpadded).
+    pub k: usize,
+    /// Worker threads at tuning time.
+    pub threads: usize,
+    /// Instruction set measured on (`avx2` / `scalar`).
+    pub isa: String,
+    /// Winning activation-block rows.
+    pub mc: usize,
+    /// Winning weight-panel-group columns.
+    pub nc: usize,
+    /// Winning K-block values.
+    pub kc: usize,
+    /// Best measured microseconds per GEMM on the tuning sample.
+    pub micros: f64,
+}
+
+/// Version tag written into tuning-cache files; bump when the cache key
+/// or shape semantics change.
+pub const TUNING_CACHE_VERSION: usize = 1;
+
+/// The tuning-cache document: what `kernels::tune::save_cache` writes
+/// and `load_cache` reads. JSON, one object per record:
+///
+/// ```json
+/// {"version": 1, "records": [
+///   {"kernel": "lut16-d", "m": 784, "n": 128, "k": 1152,
+///    "threads": 4, "isa": "avx2",
+///    "mc": 32, "nc": 128, "kc": 1024, "micros": 812.4}]}
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct TuningCacheDoc {
+    /// The persisted decisions.
+    pub records: Vec<TuneRecord>,
+}
+
+impl TuningCacheDoc {
+    /// Parse a tuning-cache document; a version mismatch is an error
+    /// (stale shapes are worse than re-tuning).
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let doc = Json::parse(text).map_err(crate::Error::Msg)?;
+        let version = doc.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != TUNING_CACHE_VERSION {
+            return Err(crate::Error::Config(format!(
+                "tuning cache version {version} != {TUNING_CACHE_VERSION}; delete the file to re-tune"
+            )));
+        }
+        let recs = doc
+            .get("records")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| crate::Error::Config("tuning cache: no 'records' array".into()))?;
+        let mut records = Vec::with_capacity(recs.len());
+        for r in recs {
+            let field = |name: &str| -> crate::Result<usize> {
+                r.get(name).and_then(|v| v.as_usize()).ok_or_else(|| {
+                    crate::Error::Config(format!("tuning cache: record missing '{name}'"))
+                })
+            };
+            let text_field = |name: &str| -> crate::Result<String> {
+                r.get(name).and_then(|v| v.as_str()).map(|s| s.to_string()).ok_or_else(|| {
+                    crate::Error::Config(format!("tuning cache: record missing '{name}'"))
+                })
+            };
+            records.push(TuneRecord {
+                kernel: text_field("kernel")?,
+                m: field("m")?,
+                n: field("n")?,
+                k: field("k")?,
+                threads: field("threads")?,
+                isa: text_field("isa")?,
+                mc: field("mc")?,
+                nc: field("nc")?,
+                kc: field("kc")?,
+                micros: r.get("micros").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            });
+        }
+        Ok(TuningCacheDoc { records })
+    }
+
+    /// Serialize to the JSON document format (see the type docs).
+    pub fn dump(&self) -> String {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("kernel", Json::str(r.kernel.clone())),
+                    ("m", Json::num(r.m as f64)),
+                    ("n", Json::num(r.n as f64)),
+                    ("k", Json::num(r.k as f64)),
+                    ("threads", Json::num(r.threads as f64)),
+                    ("isa", Json::str(r.isa.clone())),
+                    ("mc", Json::num(r.mc as f64)),
+                    ("nc", Json::num(r.nc as f64)),
+                    ("kc", Json::num(r.kc as f64)),
+                    ("micros", Json::num(r.micros)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(TUNING_CACHE_VERSION as f64)),
+            ("records", Json::Arr(records)),
+        ])
+        .dump()
+    }
+
+    /// Read and parse a tuning-cache file.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            crate::Error::Runtime(format!("cannot read tuning cache {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Write the document to a file (atomic enough for a cache: a
+    /// partial write fails version/parse checks and is re-tuned).
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.dump()).map_err(|e| {
+            crate::Error::Runtime(format!("cannot write tuning cache {}: {e}", path.display()))
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +286,34 @@ mod tests {
     fn load_missing_file_mentions_make() {
         let err = Manifest::load(Path::new("/nonexistent/manifest.json")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn tuning_cache_roundtrip() {
+        let doc = TuningCacheDoc {
+            records: vec![TuneRecord {
+                kernel: "lut16-d".into(),
+                m: 784,
+                n: 128,
+                k: 1152,
+                threads: 4,
+                isa: "avx2".into(),
+                mc: 32,
+                nc: 128,
+                kc: 1024,
+                micros: 812.4,
+            }],
+        };
+        let back = TuningCacheDoc::parse(&doc.dump()).unwrap();
+        assert_eq!(back.records, doc.records);
+    }
+
+    #[test]
+    fn tuning_cache_rejects_bad_version_and_shape() {
+        assert!(TuningCacheDoc::parse(r#"{"version": 99, "records": []}"#).is_err());
+        assert!(TuningCacheDoc::parse(r#"{"version": 1}"#).is_err());
+        assert!(TuningCacheDoc::parse(r#"{"version": 1, "records": [{"kernel": "x"}]}"#)
+            .is_err());
+        assert!(TuningCacheDoc::parse(r#"{"version": 1, "records": []}"#).is_ok());
     }
 }

@@ -110,6 +110,33 @@ pub fn threads_opt() -> OptSpec {
     }
 }
 
+/// The shared `--autotune` option spec: cache-block autotune mode for
+/// tiled GEMM plans, applied at model compile time. No baked-in default
+/// — when the flag is absent the process falls back to the `AUTOTUNE`
+/// env var and then to `off` (resolution lives in
+/// `crate::kernels::tune::default_mode`).
+pub fn autotune_opt() -> OptSpec {
+    OptSpec {
+        name: "autotune",
+        help: "autotune GEMM cache-block shapes at compile time: off|quick|full \
+               (default: $AUTOTUNE or off)",
+        takes_value: true,
+        default: None,
+    }
+}
+
+/// The shared `--tune-cache` option spec: a JSON file persisting the
+/// autotune decisions across process restarts (loaded before compiling
+/// when it exists, written after a tuned compile).
+pub fn tune_cache_opt() -> OptSpec {
+    OptSpec {
+        name: "tune-cache",
+        help: "tuning-cache file: load before compile if present, save after a tuned compile",
+        takes_value: true,
+        default: None,
+    }
+}
+
 /// Render usage text from specs.
 pub fn usage(program: &str, about: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
     let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n\nCOMMANDS:\n");
@@ -183,6 +210,22 @@ mod tests {
         assert_eq!(a.get_usize("threads", 0).unwrap(), 4);
         let auto = Args::parse(&sv(&["bench"]), &specs).unwrap();
         assert_eq!(auto.get_usize("threads", 1).unwrap(), 0, "default is 0 = auto");
+    }
+
+    #[test]
+    fn autotune_opts_parse() {
+        let specs = vec![autotune_opt(), tune_cache_opt()];
+        let a = Args::parse(
+            &sv(&["serve", "--autotune", "quick", "--tune-cache", "cache.json"]),
+            &specs,
+        )
+        .unwrap();
+        assert_eq!(a.get("autotune"), Some("quick"));
+        assert_eq!(a.get("tune-cache"), Some("cache.json"));
+        // No baked-in default: absence means "defer to $AUTOTUNE".
+        let absent = Args::parse(&sv(&["serve"]), &specs).unwrap();
+        assert_eq!(absent.get("autotune"), None);
+        assert_eq!(absent.get("tune-cache"), None);
     }
 
     #[test]
