@@ -22,15 +22,17 @@ fn main() {
     let mut rng = Rng::new(0);
     let graph = zoo::small_cnn(10, &mut rng);
     let model = CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[]).expect("compile");
+    // One config carries the batching knobs: registration consumes
+    // `config.batcher`, the accept loop the rest.
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batcher: BatcherConfig { max_batch: 8, ..Default::default() },
+        ..Default::default()
+    };
     let mut router = Router::new();
-    router.register(model, BatcherConfig { max_batch: 8, ..Default::default() });
+    router.register(model, config.batcher);
     let router = Arc::new(router);
-    let (addr, _handle) =
-        server::spawn(
-            router.clone(),
-            &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
-        )
-        .expect("bind");
+    let (addr, _handle) = server::spawn(router.clone(), &config).expect("bind");
     println!("server on {addr}; {n_clients} clients × {per_client} requests");
 
     let t0 = Instant::now();

@@ -15,8 +15,18 @@
 //! execute tiled `GemmPlan`s at the given worker count — the speedup
 //! column is an apples-to-apples tiled-vs-tiled comparison at every
 //! point on the axis, exactly as the paper's single-core numbers are.
+//!
+//! `--autotune quick|full` adds the batched tuned-vs-mistuned columns:
+//! a fused batch of 8 images (M = 8·oh·ow per layer) is served once by
+//! a model whose block shapes were tuned only at the per-image M (the
+//! pre-bucketing serving bug: every batched GEMM runs a shape measured
+//! for the wrong M) and once by a batch-aware model tuned over the
+//! M-bucket grid {1,2,4,8}·per-image-M — `b8 speedup` ≥ 1.0 means the
+//! bucket-matched shapes win on the serving hot path. Tuned runs write
+//! `_tuned`-suffixed artifacts so the paper-setting files are never
+//! clobbered.
 
-use deepgemm::bench::{threads_axis, Table};
+use deepgemm::bench::{autotune_mode, threads_axis, Table};
 use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::pack::Scheme;
 use deepgemm::kernels::{tile, Backend};
@@ -25,13 +35,16 @@ use deepgemm::profiling::StageProfile;
 use deepgemm::util::geomean;
 use std::time::Instant;
 
-fn run_model(model: &CompiledModel, x: &Tensor, iters: usize) -> f64 {
+/// Fused batch size for the tuned-vs-mistuned comparison (matches the
+/// default M-bucket grid's top bucket).
+const BATCH: usize = 8;
+
+fn run_model(model: &CompiledModel, xs: &[Tensor], iters: usize) -> f64 {
     let mut prof = StageProfile::new();
     // Reuse one ExecCtx across iterations (the serving steady state):
     // the warmup run grows the planned arena + scratch, the timed runs
     // perform no allocation in the conv pipeline.
     let mut ctx = model.new_ctx();
-    let xs = std::slice::from_ref(x);
     model.forward_batch_with(xs, &mut ctx, &mut prof).expect("warmup");
     let mut best = f64::INFINITY;
     for _ in 0..iters {
@@ -44,6 +57,7 @@ fn run_model(model: &CompiledModel, x: &Tensor, iters: usize) -> f64 {
 
 fn main() {
     let quick = std::env::var("DEEPGEMM_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mode = autotune_mode();
     let models: Vec<(&str, f64)> = if quick {
         vec![("resnet18", 1.62), ("googlenet", 1.50)]
     } else {
@@ -60,30 +74,81 @@ fn main() {
     let threads = threads_axis(&[1]);
     let mut t = Table::new(
         "Tab 5 / Fig 6 — end-to-end speedup over INT8",
-        &["threads", "int8 ms", "lut16-d ms", "speedup", "paper"],
+        &[
+            "threads",
+            "int8 ms",
+            "lut16-d ms",
+            "speedup",
+            "b8 mistuned ms",
+            "b8 tuned ms",
+            "b8 speedup",
+            "paper",
+        ],
     );
     let mut sps = Vec::new();
+    let mut bsps = Vec::new();
     for (name, paper) in &models {
         eprintln!("[e2e] building {name}...");
         let graph = zoo::build(name, 1000, 0).expect("build");
         let (c, h, w) = graph.input_chw;
         let x = Tensor::random(&[1, c, h, w], 42, -1.0, 1.0);
         let calib = [x.clone()];
+        let xs = std::slice::from_ref(&x);
+        let xs_b: Vec<Tensor> =
+            (0..BATCH).map(|b| Tensor::random(&[1, c, h, w], 43 + b as u64, -1.0, 1.0)).collect();
         eprintln!("[e2e] compiling {name} for int8...");
         let m_int8 = CompiledModel::compile(graph.clone(), Backend::Int8, &calib).expect("int8");
         eprintln!("[e2e] compiling {name} for lut16-d...");
         let m_lut =
-            CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &calib).expect("lut");
+            CompiledModel::compile(graph.clone(), Backend::Lut16(Scheme::D), &calib).expect("lut");
         for &nt in &threads {
             tile::set_default_threads(nt);
-            let t_int8 = run_model(&m_int8, &x, iters);
-            let t_lut = run_model(&m_lut, &x, iters);
+            let t_int8 = run_model(&m_int8, xs, iters);
+            let t_lut = run_model(&m_lut, xs, iters);
             let sp = t_int8 / t_lut;
+            // Batched tuned-vs-mistuned (only meaningful with tuning on).
+            // Compiled inside the thread loop: tuning keys include the
+            // resolved worker count.
+            let (tb_mist, tb_tuned, sp_b) = if mode.is_on() {
+                let assign =
+                    |_: usize, _: &deepgemm::nn::ConvSpec| -> Option<Backend> { None };
+                eprintln!(
+                    "[e2e] tuning {name} t={nt} (per-image M only — mistuned for b{BATCH})..."
+                );
+                let m_mist = CompiledModel::compile_tuned_batched(
+                    graph.clone(),
+                    Backend::Lut16(Scheme::D),
+                    &calib,
+                    &assign,
+                    mode,
+                    1,
+                )
+                .expect("mistuned compile");
+                eprintln!("[e2e] tuning {name} t={nt} (M buckets up to b{BATCH})...");
+                let m_tuned = CompiledModel::compile_tuned_batched(
+                    graph.clone(),
+                    Backend::Lut16(Scheme::D),
+                    &calib,
+                    &assign,
+                    mode,
+                    BATCH,
+                )
+                .expect("bucketed compile");
+                let tm = run_model(&m_mist, &xs_b, iters);
+                let tt = run_model(&m_tuned, &xs_b, iters);
+                (tm * 1e3, tt * 1e3, tm / tt)
+            } else {
+                (f64::NAN, f64::NAN, f64::NAN)
+            };
             if nt == *threads.iter().max().unwrap() {
                 sps.push(sp);
+                if sp_b.is_finite() {
+                    bsps.push(sp_b);
+                }
             }
             eprintln!(
-                "[e2e] {name} t={nt}: int8 {:.1} ms, lut {:.1} ms, speedup {sp:.3}",
+                "[e2e] {name} t={nt}: int8 {:.1} ms, lut {:.1} ms, speedup {sp:.3}, \
+                 b{BATCH} mistuned {tb_mist:.1} ms vs tuned {tb_tuned:.1} ms ({sp_b:.3}x)",
                 t_int8 * 1e3,
                 t_lut * 1e3
             );
@@ -91,12 +156,28 @@ fn main() {
             // default run's labels comparable with older artifacts.
             let label =
                 if nt == 1 { (*name).to_string() } else { format!("{name}@t{nt}") };
-            t.row(label, vec![nt as f64, t_int8 * 1e3, t_lut * 1e3, sp, *paper]);
+            t.row(
+                label,
+                vec![nt as f64, t_int8 * 1e3, t_lut * 1e3, sp, tb_mist, tb_tuned, sp_b, *paper],
+            );
         }
     }
-    t.row("average", vec![f64::NAN, f64::NAN, f64::NAN, geomean(&sps), 1.58]);
+    let b_avg = if bsps.is_empty() { f64::NAN } else { geomean(&bsps) };
+    t.row(
+        "average",
+        vec![f64::NAN, f64::NAN, f64::NAN, geomean(&sps), f64::NAN, f64::NAN, b_avg, 1.58],
+    );
     t.note("depthwise convs run the same direct path in both engines; non-conv ops identical");
     t.note("both engines execute tiled GemmPlans at the row's thread count (tiled-vs-tiled)");
+    t.note(
+        "b8 columns (autotune on): one fused batch of 8 served on per-image-M shapes \
+         (mistuned) vs M-bucket shapes (tuned)",
+    );
     print!("{}", t.render());
-    t.write_json("tab5_fig6_end_to_end").expect("write json");
+    let artifact = if mode.is_on() {
+        "tab5_fig6_end_to_end_tuned"
+    } else {
+        "tab5_fig6_end_to_end"
+    };
+    t.write_json(artifact).expect("write json");
 }

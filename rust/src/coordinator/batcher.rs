@@ -10,9 +10,17 @@
 //! into the GEMM's M, so all requests in the batch share a single
 //! planned (tiled, multi-threaded) GEMM per layer instead of replaying
 //! the model per request.
+//!
+//! With [`BatcherConfig::adaptive`] set, `max_batch` is not taken on
+//! faith: the worker reads the model's per-M-bucket autotune
+//! measurements ([`crate::engine::TuneReport::pick_max_batch`]) and
+//! serves the batch size with the best measured rows/sec subject to
+//! [`BatcherConfig::latency_bound`] — the fusion cap then matches the
+//! buckets the GEMM plans were actually tuned at.
 
 use crate::coordinator::metrics::Metrics;
 use crate::engine::CompiledModel;
+use crate::kernels::tune;
 use crate::nn::Tensor;
 use crate::profiling::StageProfile;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -22,15 +30,37 @@ use std::time::{Duration, Instant};
 /// Batching configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Largest batch fused into one forward. With [`Self::adaptive`]
+    /// set this is the *cap*: the effective value is picked from the
+    /// model's measured per-bucket plan times at worker startup.
     pub max_batch: usize,
     pub max_wait: Duration,
     /// Queue capacity (requests) before rejection.
     pub queue_cap: usize,
+    /// Pick the effective `max_batch` from the model's measured
+    /// per-M-bucket autotune times (best estimated images/µs within
+    /// [`Self::latency_bound`]) instead of trusting the configured cap
+    /// blindly. Falls back to `max_batch` when the model carries no
+    /// usable measurements (tuning off, or tuned shapes discarded as
+    /// stale).
+    pub adaptive: bool,
+    /// Latency bound for the adaptive pick: estimated fused GEMM time
+    /// per batch. Zero disables the bound.
+    pub latency_bound: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(2), queue_cap: 128 }
+        Self {
+            // Matches the default autotune M-bucket grid
+            // (`tune::DEFAULT_MAX_BATCH`), so default-compiled models
+            // serve batches on shapes tuned for them.
+            max_batch: tune::DEFAULT_MAX_BATCH,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 128,
+            adaptive: false,
+            latency_bound: Duration::from_millis(50),
+        }
     }
 }
 
@@ -57,8 +87,13 @@ pub struct BatchWorker {
 }
 
 impl BatchWorker {
-    /// Spawn the worker thread owning `model`.
+    /// Spawn the worker thread owning `model`. With
+    /// [`BatcherConfig::adaptive`] the effective `max_batch` is
+    /// resolved here from the model's measured per-bucket plan times
+    /// and published to the metrics sink.
     pub fn spawn(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Self {
+        let cfg = resolve_adaptive(&model, cfg);
+        metrics.set_batcher(&model.name, cfg.max_batch as u64, cfg.adaptive);
         let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_cap);
         let handle = std::thread::Builder::new()
             .name(format!("batcher-{}", model.name))
@@ -87,6 +122,40 @@ impl Drop for BatchWorker {
     }
 }
 
+/// Resolve the effective `max_batch`: with [`BatcherConfig::adaptive`],
+/// ask the model's [`crate::engine::TuneReport`] for the batch size
+/// with the best measured throughput under the latency bound; keep the
+/// configured cap when no usable measurements exist (tuning off, a
+/// legacy cache without timings, or tuned shapes discarded as stale —
+/// stale measurements describe shapes the plans no longer run).
+fn resolve_adaptive(model: &CompiledModel, mut cfg: BatcherConfig) -> BatcherConfig {
+    if !cfg.adaptive {
+        return cfg;
+    }
+    let bound_us = cfg.latency_bound.as_secs_f64() * 1e6;
+    let pick = if model.tuning.stale_threads {
+        None
+    } else {
+        model.tuning.pick_max_batch(cfg.max_batch, bound_us)
+    };
+    match pick {
+        Some((b, est)) => {
+            eprintln!(
+                "batcher-{}: adaptive max_batch = {b} (est {:.0} µs GEMM/batch, cap {}, \
+                 bound {:.0} µs)",
+                model.name, est, cfg.max_batch, bound_us
+            );
+            cfg.max_batch = b;
+        }
+        None => eprintln!(
+            "batcher-{}: adaptive batching requested but no usable per-bucket measurements \
+             (autotune off or stale); keeping max_batch = {}",
+            model.name, cfg.max_batch
+        ),
+    }
+    cfg
+}
+
 fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, rx: Receiver<Job>) {
     // One execution context per worker, reused across batches: the
     // compiled plan's arena + conv scratch grow to the largest batch
@@ -103,12 +172,19 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
     );
     if model.tuning.is_tuned() {
         eprintln!(
-            "batcher-{}: autotune = {} plans, {} measured, {} cache hits, {:.1} ms tuning",
+            "batcher-{}: autotune = {} shape decisions, {} measured, {} cache hits, \
+             {} truncated samples, {:.1} ms tuning{}",
             model.name,
             model.tuning.plans(),
             model.tuning.measured(),
             model.tuning.cache_hits(),
-            model.tuning.tune_micros() as f64 / 1e3
+            model.tuning.truncated(),
+            model.tuning.tune_micros() as f64 / 1e3,
+            if model.tuning.stale_threads {
+                " (STALE thread count — serving default shapes)"
+            } else {
+                ""
+            }
         );
         for line in model.tuning.lines() {
             eprintln!("batcher-{}:   {line}", model.name);
@@ -201,6 +277,7 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
             queue_cap: cap,
+            ..Default::default()
         };
         (BatchWorker::spawn(model, cfg, metrics.clone()), metrics)
     }
@@ -253,6 +330,60 @@ mod tests {
         let planned = m.arena_planned();
         assert_eq!(planned.len(), 1);
         assert!(planned[0].1 > 0, "planned arena bytes must be reported at startup");
+    }
+
+    #[test]
+    fn adaptive_without_measurements_falls_back_to_cap() {
+        // An untuned model carries no per-bucket times: the adaptive
+        // pick must keep the configured cap and still serve.
+        let mut rng = Rng::new(6);
+        let g = zoo::small_cnn(4, &mut rng);
+        let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let tuned = model.tuning.is_tuned(); // AUTOTUNE=quick CI tunes here
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatcherConfig { max_batch: 4, adaptive: true, ..Default::default() };
+        let w = BatchWorker::spawn(model, cfg, metrics.clone());
+        let rx = submit(&w);
+        rx.recv().unwrap().unwrap();
+        let (eff, adaptive) = metrics.batcher_for("small_cnn").expect("batcher gauge set");
+        assert!(adaptive);
+        if tuned {
+            assert!((1..=4).contains(&(eff as usize)), "picked {eff}");
+        } else {
+            assert_eq!(eff, 4, "untuned model must keep the configured cap");
+        }
+    }
+
+    #[test]
+    fn adaptive_picks_a_measured_bucket() {
+        // A batch-aware tuned model has measured times for buckets
+        // {1,2,4,8}: the adaptive pick must choose one of them.
+        let mut rng = Rng::new(7);
+        let g = zoo::small_cnn(6, &mut rng);
+        let assign =
+            |_: usize, _: &crate::nn::ConvSpec| -> Option<Backend> { None };
+        let model = CompiledModel::compile_tuned_batched(
+            g,
+            Backend::Lut16(Scheme::D),
+            &[],
+            &assign,
+            crate::kernels::AutotuneMode::Quick,
+            8,
+        )
+        .unwrap();
+        let buckets = model.tuning.measured_batch_sizes();
+        assert_eq!(buckets, vec![1, 2, 4, 8]);
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            adaptive: true,
+            latency_bound: Duration::from_secs(10),
+            ..Default::default()
+        };
+        let _w = BatchWorker::spawn(model, cfg, metrics.clone());
+        let (eff, adaptive) = metrics.batcher_for("small_cnn").expect("batcher gauge set");
+        assert!(adaptive);
+        assert!(buckets.contains(&(eff as usize)), "picked {eff} not a measured bucket");
     }
 
     #[test]

@@ -10,20 +10,29 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// Per-model autotune summary reported at registration time: how many
-/// GEMM plans went through the tuner, how many were warm cache hits
-/// (zero measurement), the wall-clock spent measuring, and one rendered
-/// line per plan naming the chosen MC/NC/KC shape.
+/// shape decisions (plans × M buckets) went through the tuner, how many
+/// were warm cache hits (zero measurement), the wall-clock spent
+/// measuring, and one rendered line per decision naming the chosen
+/// MC/NC/KC shape.
 #[derive(Clone, Debug, Default)]
 pub struct TuneStats {
-    /// Plans built (layer × group).
+    /// Shape decisions recorded (layer × group × M bucket).
     pub plans: u64,
-    /// Plans that ran candidate measurements.
+    /// Decisions that ran candidate measurements.
     pub measured: u64,
-    /// Plans served straight from the tuning cache.
+    /// Decisions served straight from the tuning cache.
     pub cache_hits: u64,
+    /// Decisions whose measurement sample was truncated below the
+    /// bucket's M by the per-mode row cap.
+    pub truncated: u64,
     /// Total microseconds spent measuring candidates.
     pub tune_micros: u64,
-    /// One line per plan: layer, GEMM shape, chosen blocks, provenance.
+    /// Whether the tuned shapes were discarded at registration because
+    /// they were measured under a different worker-thread count than
+    /// the serving pool resolves to (the model serves default shapes).
+    pub stale_threads: bool,
+    /// One line per decision: layer, GEMM shape + bucket, chosen
+    /// blocks, provenance.
     pub shapes: Vec<String>,
 }
 
@@ -50,6 +59,9 @@ struct Inner {
     /// Autotune summary per model (set once at registration, from the
     /// compile-time `TuneReport`).
     tuning: HashMap<String, TuneStats>,
+    /// Effective batcher settings per model: (resolved max_batch,
+    /// adaptive flag), set once per batch worker at spawn.
+    batcher: HashMap<String, (u64, bool)>,
 }
 
 /// Thread-safe metrics sink shared by router, batchers and server.
@@ -73,8 +85,21 @@ impl Metrics {
                 batch_size: Histogram::new((1..=64).map(|x| x as f64).collect()),
                 arena_planned: HashMap::new(),
                 tuning: HashMap::new(),
+                batcher: HashMap::new(),
             }),
         }
+    }
+
+    /// Record a model's effective batcher settings — called once per
+    /// batch worker at spawn (after any adaptive `max_batch` pick).
+    pub fn set_batcher(&self, model: &str, max_batch: u64, adaptive: bool) {
+        self.inner.lock().unwrap().batcher.insert(model.to_string(), (max_batch, adaptive));
+    }
+
+    /// The effective (max_batch, adaptive) recorded for `model`, if
+    /// its worker has spawned.
+    pub fn batcher_for(&self, model: &str) -> Option<(u64, bool)> {
+        self.inner.lock().unwrap().batcher.get(model).copied()
     }
 
     /// Record a model's compile-time autotune summary — called once at
@@ -244,8 +269,12 @@ mod tests {
                 cache_hits: 3,
                 tune_micros: 2500,
                 shapes: vec!["c1: lut16-d M1024 N16 K27 ...".into()],
+                ..Default::default()
             },
         );
+        m.set_batcher("small_cnn", 4, true);
+        assert_eq!(m.batcher_for("small_cnn"), Some((4, true)));
+        assert!(m.batcher_for("missing").is_none());
         let t = m.tuning_for("small_cnn").unwrap();
         assert_eq!(t.plans, 4);
         assert_eq!(t.cache_hits, 3);

@@ -35,7 +35,28 @@ impl Router {
     /// Register a compiled model under its graph name. The model's
     /// compile-time autotune report is published to the metrics sink so
     /// `{"cmd":"stats"}` can surface chosen block shapes + tuning time.
-    pub fn register(&mut self, model: CompiledModel, cfg: BatcherConfig) {
+    ///
+    /// Guards against the compile-before-configure footgun: tuning keys
+    /// include the worker-thread count resolved at compile time, so a
+    /// model compiled before the serving thread count was set carries
+    /// shapes measured for the wrong pool. When the report's tuned
+    /// thread count differs from the pool's resolved default, the tuned
+    /// shapes are discarded (the model serves the default heuristic
+    /// shapes instead of silently mistuned ones) and a warning is
+    /// logged; metrics/`{"cmd":"stats"}` report `stale_threads`.
+    pub fn register(&mut self, mut model: CompiledModel, cfg: BatcherConfig) {
+        let pool_threads = crate::kernels::tile::default_threads();
+        if let Some(tuned_t) = model.tuning.tuned_threads() {
+            if tuned_t != pool_threads {
+                eprintln!(
+                    "router: model '{}' was autotuned for {tuned_t} GEMM worker threads but \
+                     the pool resolves to {pool_threads}; discarding tuned block shapes and \
+                     serving defaults (set the thread count before compiling, or retune)",
+                    model.name
+                );
+                model.reset_tuned_shapes();
+            }
+        }
         let name = model.name.clone();
         self.input_shapes.insert(name.clone(), model.graph.input_chw);
         let report = &model.tuning;
@@ -45,7 +66,9 @@ impl Router {
                 plans: report.plans() as u64,
                 measured: report.measured() as u64,
                 cache_hits: report.cache_hits() as u64,
+                truncated: report.truncated() as u64,
                 tune_micros: report.tune_micros(),
+                stale_threads: report.stale_threads,
                 shapes: report.lines(),
             },
         );
@@ -128,6 +151,38 @@ mod tests {
         let bad = Tensor::random(&[1, 3, 16, 16], 3, -1.0, 1.0);
         let err = r.infer("small_cnn", bad).unwrap_err();
         assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn stale_thread_tuning_falls_back_to_default_shapes() {
+        // Tuning keys carry the compile-time thread count; a model whose
+        // shapes were measured under a different count must not serve
+        // them. Doctor the report's keys to fake the mismatch (changing
+        // the process-wide knob would race parallel tests).
+        let mut rng = Rng::new(9);
+        let g = zoo::small_cnn(7, &mut rng);
+        let assign = |_: usize, _: &crate::nn::ConvSpec| -> Option<Backend> { None };
+        let mut model = CompiledModel::compile_tuned_batched(
+            g,
+            Backend::Lut16(Scheme::D),
+            &[],
+            &assign,
+            crate::kernels::AutotuneMode::Quick,
+            4,
+        )
+        .unwrap();
+        assert!(model.tuning.is_tuned());
+        for (_, o) in &mut model.tuning.layers {
+            o.key.threads += 1;
+        }
+        let mut r = Router::new();
+        r.register(model, BatcherConfig::default());
+        let t = r.metrics.tuning_for("small_cnn").expect("tuning stats published");
+        assert!(t.stale_threads, "mismatched thread count must be flagged");
+        // The fallback still serves correct results (default shapes).
+        let x = Tensor::random(&[1, 3, 32, 32], 5, -1.0, 1.0);
+        let resp = r.infer("small_cnn", x).unwrap();
+        assert_eq!(resp.output.len(), 7);
     }
 
     #[test]

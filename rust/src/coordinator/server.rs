@@ -9,10 +9,13 @@
 //!   → {"cmd": "stats"}          ← {"ok": true, "models": [{"name",
 //!                                  "arena_planned_bytes_per_image",
 //!                                  "autotune": {"plans", "measured", "cache_hits",
-//!                                               "tune_ms", "shapes": [...]}}],
+//!                                               "truncated", "stale_threads",
+//!                                               "tune_ms", "shapes": [...]},
+//!                                  "batcher": {"max_batch", "adaptive"}}],
 //!                                  "ctx_reuses": N, "tune_cache_entries": M}
 //!                                  (static memory plan + ctx reuse + compile-time
-//!                                  autotune decisions; see docs/TUNING.md for how
+//!                                  per-M-bucket autotune decisions + effective
+//!                                  batcher settings; see docs/TUNING.md for how
 //!                                  to read the shape lines)
 //!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
 
@@ -37,9 +40,15 @@ pub struct ServerConfig {
     /// (`None` leaves a previously configured mode alone). Models
     /// compiled *before* [`spawn`] keep the mode that was active then.
     /// Tuning keys include the thread count resolved at compile time,
-    /// so set `threads` (or the process-wide default) before compiling
-    /// — compiling first and spawning with a different `threads` serves
-    /// shapes tuned for the old count.
+    /// so set `threads` (or the process-wide default) before compiling.
+    /// Getting the order wrong is no longer fully silent: compiling
+    /// before the thread count is set is caught at `Router::register`
+    /// (warns, falls back to default block shapes, flags
+    /// `stale_threads` in metrics/stats), and [`spawn`] warns when its
+    /// `threads` changes the knob after models were already registered
+    /// (their workers own the plans, so shapes cannot be reset at that
+    /// point) — but the tuning effort is wasted either way, so order
+    /// the calls correctly anyway.
     pub autotune: Option<AutotuneMode>,
     /// Path to a persisted tuning-cache file, **load-only**: merged
     /// into the process-wide cache at [`spawn`] when it exists, so
@@ -49,6 +58,18 @@ pub struct ServerConfig {
     /// compile to persist new decisions (the CLI's `--tune-cache` does
     /// both around its own compile).
     pub tune_cache: Option<String>,
+    /// Batching knobs for the models this deployment registers
+    /// (`max_batch` / `max_wait` / `queue_cap` / adaptive mode): the
+    /// deployment's single source of batching truth. Registration —
+    /// not the accept loop — consumes it: the CLI `serve` command
+    /// builds this from `--batch`/`--wait-ms`/`--queue-cap`/
+    /// `--adaptive-batch` and passes `config.batcher` to
+    /// `Router::register` (as does `examples/serve.rs`); embedders
+    /// must do the same, since [`spawn`] cannot apply it to models
+    /// registered elsewhere. Keep it in sync with the compile:
+    /// `CompiledModel::compile_tuned_batched` at this `max_batch`
+    /// makes the served batch sizes line up with the tuned M buckets.
+    pub batcher: crate::coordinator::BatcherConfig,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +79,7 @@ impl Default for ServerConfig {
             threads: 0,
             autotune: None,
             tune_cache: None,
+            batcher: crate::coordinator::BatcherConfig::default(),
         }
     }
 }
@@ -82,7 +104,23 @@ pub fn spawn(
     // configured thread count. Same contract for the autotune mode
     // (None = leave alone).
     if cfg.threads != 0 {
+        let prev = crate::kernels::tile::default_threads();
         crate::kernels::tile::set_default_threads(cfg.threads);
+        let now = crate::kernels::tile::default_threads();
+        // Models registered before this point were compiled — and, if
+        // autotuned, had their shapes measured and cache-keyed — under
+        // the old thread count. Their workers already own the plans, so
+        // the shapes cannot be reset here (Router::register's fallback
+        // only covers compile-before-register mismatches); warn loudly
+        // instead of serving the change silently.
+        if prev != now && !router.models().is_empty() {
+            eprintln!(
+                "deepgemm server: GEMM worker threads changed {prev} -> {now} after {} \
+                 registered model(s); any autotuned block shapes were measured at the old \
+                 count and may be stale — set threads before compiling and registering",
+                router.models().len()
+            );
+        }
     }
     if let Some(mode) = cfg.autotune {
         tune::set_default_mode(mode);
@@ -93,6 +131,29 @@ pub fn spawn(
             match tune::load_cache(p) {
                 Ok(n) => eprintln!("deepgemm server: loaded {n} tuning-cache entries from {path}"),
                 Err(e) => eprintln!("deepgemm server: ignoring tuning cache: {e}"),
+            }
+        }
+    }
+    // The accept loop cannot retro-apply batching knobs — workers were
+    // configured at Router::register — but it can catch the silent
+    // drift where an embedder sets ServerConfig::batcher and forgets to
+    // pass it to register: warn when a registered worker's effective
+    // settings disagree with the config's. (An adaptive worker may
+    // legitimately run any max_batch up to the configured cap.)
+    let want = &cfg.batcher;
+    for name in router.models() {
+        if let Some((mb, adaptive)) = router.metrics.batcher_for(name) {
+            let mismatch = adaptive != want.adaptive
+                || (!adaptive && mb as usize != want.max_batch)
+                || (adaptive && mb as usize > want.max_batch);
+            if mismatch {
+                eprintln!(
+                    "deepgemm server: model '{name}' was registered with max_batch {mb} \
+                     (adaptive: {adaptive}) but ServerConfig::batcher asks for max_batch {} \
+                     (adaptive: {}); pass config.batcher to Router::register so one config \
+                     drives both",
+                    want.max_batch, want.adaptive
+                );
             }
         }
     }
@@ -182,6 +243,8 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                                         ("plans", Json::num(t.plans as f64)),
                                         ("measured", Json::num(t.measured as f64)),
                                         ("cache_hits", Json::num(t.cache_hits as f64)),
+                                        ("truncated", Json::num(t.truncated as f64)),
+                                        ("stale_threads", Json::Bool(t.stale_threads)),
                                         ("tune_ms", Json::num(t.tune_micros as f64 / 1e3)),
                                         (
                                             "shapes",
@@ -192,10 +255,18 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                                     ]),
                                     None => Json::Null,
                                 };
+                                let batcher_obj = match router.metrics.batcher_for(&name) {
+                                    Some((max_batch, adaptive)) => Json::obj(vec![
+                                        ("max_batch", Json::num(max_batch as f64)),
+                                        ("adaptive", Json::Bool(adaptive)),
+                                    ]),
+                                    None => Json::Null,
+                                };
                                 Json::obj(vec![
                                     ("name", Json::str(name)),
                                     ("arena_planned_bytes_per_image", Json::num(bytes as f64)),
                                     ("autotune", tune_obj),
+                                    ("batcher", batcher_obj),
                                 ])
                             })
                             .collect(),
@@ -352,8 +423,14 @@ mod tests {
         let tune = models[0].get("autotune").expect("autotune stats present");
         assert!(tune.get("plans").unwrap().as_f64().unwrap() > 0.0, "{tune:?}");
         assert!(tune.get("cache_hits").is_some());
+        assert!(tune.get("truncated").is_some());
+        assert_eq!(tune.get("stale_threads").unwrap().as_bool(), Some(false));
         assert!(tune.get("shapes").unwrap().as_arr().is_some());
         assert!(st.get("tune_cache_entries").is_some());
+        // Effective batcher settings per model (set at worker spawn).
+        let batcher = models[0].get("batcher").expect("batcher stats present");
+        assert!(batcher.get("max_batch").unwrap().as_f64().unwrap() >= 1.0, "{batcher:?}");
+        assert_eq!(batcher.get("adaptive").unwrap().as_bool(), Some(false));
     }
 
     #[test]

@@ -132,8 +132,9 @@ pub struct CompiledConv {
     w_zp: i32,
     a_zp: i32,
     pub weights: PreparedWeights,
-    /// Autotune outcome per built [`GemmPlan`] (one per group; empty
-    /// for backends without tiled plans).
+    /// Autotune outcomes per built [`GemmPlan`]: one per (group, M
+    /// bucket) in bucket order — a bucketed tune yields one outcome per
+    /// bucket per plan (empty for backends without tiled plans).
     pub tuning: Vec<TuneOutcome>,
 }
 
@@ -156,11 +157,14 @@ impl CompiledConv {
 
     /// [`Self::prepare`] with cache-block autotuning: every tiled
     /// backend's `GemmPlan` is built through
-    /// [`crate::kernels::tune::tune_plan`] with `tspec.m` as the
-    /// expected per-image GEMM rows, so block shapes are measured (or
-    /// fetched from the process-wide tuning cache) instead of
-    /// defaulted. Synthetic activation codes of the layer's real K are
-    /// used as the measurement operand; groups share one cache entry
+    /// [`crate::kernels::tune::tune_plan_bucketed`] with `tspec.m` as
+    /// the expected per-image GEMM rows and `tspec.max_batch` as the
+    /// serving batcher's fusion cap, so block shapes are measured (or
+    /// fetched from the process-wide tuning cache) at every M *bucket*
+    /// the batch→M fusion can produce instead of defaulted — one
+    /// [`TuneOutcome`] per bucket lands in [`CompiledConv::tuning`].
+    /// Synthetic activation codes of the layer's real K are used as the
+    /// measurement operand; groups share one cache entry per bucket
     /// (identical key), so a grouped conv tunes once.
     #[allow(clippy::too_many_arguments)]
     pub fn prepare_tuned(
@@ -213,12 +217,11 @@ impl CompiledConv {
                         .iter()
                         .enumerate()
                         .map(|(gi, c)| {
-                            let (plan, out) = tune::tune_plan(
+                            let (plan, outs) = tune::tune_plan_bucketed(
                                 &pack::pack_weights(c, scheme),
                                 Lut16Tile::new(scheme, lut.clone()),
                                 PlanOpts::default(),
-                                tspec.mode,
-                                tspec.m,
+                                tspec,
                                 |ms| {
                                     pack::pack_activations(
                                         &CodeMat::random(ms, kk, 2, 0xACE0 + gi as u64),
@@ -226,7 +229,7 @@ impl CompiledConv {
                                     )
                                 },
                             );
-                            tuning.push(out);
+                            tuning.extend(outs);
                             plan
                         })
                         .collect(),
@@ -240,12 +243,11 @@ impl CompiledConv {
                         .iter()
                         .enumerate()
                         .map(|(gi, c)| {
-                            let (plan, out) = tune::tune_plan(
+                            let (plan, outs) = tune::tune_plan_bucketed(
                                 &lut16_wide::pack_wide(c),
                                 LutWideTile::new(lut.clone()),
                                 PlanOpts::default(),
-                                tspec.mode,
-                                tspec.m,
+                                tspec,
                                 |ms| {
                                     lut16_wide::pack_wide(&CodeMat::random(
                                         ms,
@@ -255,7 +257,7 @@ impl CompiledConv {
                                     ))
                                 },
                             );
-                            tuning.push(out);
+                            tuning.extend(outs);
                             plan
                         })
                         .collect(),
@@ -269,12 +271,11 @@ impl CompiledConv {
                         .iter()
                         .enumerate()
                         .map(|(gi, c)| {
-                            let (plan, out) = tune::tune_plan(
+                            let (plan, outs) = tune::tune_plan_bucketed(
                                 &lut65k::pack_dense(c),
                                 Lut65kTile::new(lut.clone()),
                                 PlanOpts::default(),
-                                tspec.mode,
-                                tspec.m,
+                                tspec,
                                 |ms| {
                                     lut65k::pack_dense(&CodeMat::random(
                                         ms,
@@ -284,7 +285,7 @@ impl CompiledConv {
                                     ))
                                 },
                             );
-                            tuning.push(out);
+                            tuning.extend(outs);
                             plan
                         })
                         .collect(),
@@ -300,12 +301,11 @@ impl CompiledConv {
                         .iter()
                         .enumerate()
                         .map(|(gi, c)| {
-                            let (plan, out) = tune::tune_plan(
+                            let (plan, outs) = tune::tune_plan_bucketed(
                                 &pack::pack(c, Scheme::D.w_layout()),
                                 Lut16F32Tile::new(lut.clone()),
                                 PlanOpts::default(),
-                                tspec.mode,
-                                tspec.m,
+                                tspec,
                                 |ms| {
                                     pack::pack(
                                         &CodeMat::random(ms, kk, 2, 0xACE3 + gi as u64),
@@ -313,7 +313,7 @@ impl CompiledConv {
                                     )
                                 },
                             );
-                            tuning.push(out);
+                            tuning.extend(outs);
                             plan
                         })
                         .collect(),
@@ -339,12 +339,11 @@ impl CompiledConv {
                         let vals: Vec<i8> =
                             c.data.iter().map(|&code| (code as i32 - w_zp) as i8).collect();
                         let (packed, row_sums) = int8::pack_weights_i8(&vals, og, kk);
-                        let (plan, out) = tune::tune_plan(
+                        let (plan, outs) = tune::tune_plan_bucketed(
                             &packed,
                             Int8Tile::new(a_zp, row_sums),
                             PlanOpts::default(),
-                            tspec.mode,
-                            tspec.m,
+                            tspec,
                             |ms| {
                                 pack::pack(
                                     &CodeMat::random(ms, kk, 8, 0xACE4 + gi as u64),
@@ -352,7 +351,7 @@ impl CompiledConv {
                                 )
                             },
                         );
-                        tuning.push(out);
+                        tuning.extend(outs);
                         plan
                     })
                     .collect();

@@ -20,9 +20,13 @@
 //!    pre-build their fp32 weight matrix for the batched GEMM. With
 //!    autotuning on ([`crate::kernels::tune`]; `--autotune`, `AUTOTUNE`
 //!    env, `ServerConfig::autotune`), each plan's MC/NC/KC block shape
-//!    is measured against the layer's real GEMM shape and cached —
+//!    is measured against the layer's real GEMM shape — at every
+//!    batch-fused M *bucket* the serving batcher can produce
+//!    ([`CompiledModel::compile_tuned_batched`]) — and cached;
 //!    decisions land in [`CompiledModel::tuning`] (a [`TuneReport`])
-//!    and surface through metrics and `{"cmd":"stats"}`.
+//!    and surface through metrics and `{"cmd":"stats"}`, and the
+//!    adaptive batcher turns the measured per-bucket times into its
+//!    `max_batch` choice.
 //! 2. **Memory** ([`ExecPlan`]): a topological schedule plus
 //!    tensor-liveness analysis assigns every intermediate a slot in a
 //!    size-planned arena — slots are reused the moment their tensor
@@ -111,12 +115,38 @@ impl CompiledModel {
     /// layer's real GEMM shape (per-image M from the inferred output
     /// size) or fetched from the process-wide tuning cache. The
     /// decisions taken are recorded in [`CompiledModel::tuning`].
+    ///
+    /// Shapes are tuned over the default serving M-bucket grid
+    /// (per-image M × batch multipliers up to
+    /// [`crate::kernels::tune::DEFAULT_MAX_BATCH`]); use
+    /// [`Self::compile_tuned_batched`] to match a non-default
+    /// `BatcherConfig::max_batch`.
     pub fn compile_tuned(
         graph: Graph,
         backend: Backend,
         calib: &[Tensor],
         assign: &dyn Fn(usize, &crate::nn::ConvSpec) -> Option<Backend>,
         autotune: AutotuneMode,
+    ) -> crate::Result<Self> {
+        let max_batch = tune::DEFAULT_MAX_BATCH;
+        Self::compile_tuned_batched(graph, backend, calib, assign, autotune, max_batch)
+    }
+
+    /// [`Self::compile_tuned`] with an explicit batch-fusion cap: block
+    /// shapes are tuned at every M bucket (per-image M ×
+    /// [`crate::kernels::tune::bucket_multipliers`]`(max_batch)`) the
+    /// serving batcher can fuse, and each plan's `execute` selects the
+    /// bucket matching the M it is actually called with. Pass the
+    /// `BatcherConfig::max_batch` the model will serve under so tuned
+    /// buckets line up with real fused batches (`max_batch = 1`
+    /// reproduces per-image-only tuning).
+    pub fn compile_tuned_batched(
+        graph: Graph,
+        backend: Backend,
+        calib: &[Tensor],
+        assign: &dyn Fn(usize, &crate::nn::ConvSpec) -> Option<Backend>,
+        autotune: AutotuneMode,
+        max_batch: usize,
     ) -> crate::Result<Self> {
         graph.validate()?;
         let owned_calib;
@@ -154,7 +184,7 @@ impl CompiledModel {
                             chosen,
                             lo,
                             hi,
-                            TuneSpec::new(autotune, m1),
+                            TuneSpec::batched(autotune, m1, max_batch),
                         )?;
                         for out in &cc.tuning {
                             tuning.layers.push((node.name.clone(), out.clone()));
@@ -193,6 +223,51 @@ impl CompiledModel {
     /// ([`Self::forward_batch_with`]) for allocation-free steady state.
     pub fn new_ctx(&self) -> ExecCtx {
         ExecCtx::new(self.plan.n_slots())
+    }
+
+    /// Drop every autotuned per-bucket block shape and revert all tiled
+    /// plans to the default heuristic [`crate::kernels::TileShape`].
+    /// Used when the tuned decisions are discovered to be stale — e.g.
+    /// the model was compiled (and its shapes measured) under a
+    /// different GEMM worker-thread count than the pool resolves to at
+    /// serving time ([`crate::coordinator::Router::register`] performs
+    /// this check). Marks [`CompiledModel::tuning`] as
+    /// `stale_threads` so metrics and `{"cmd":"stats"}` report the
+    /// fallback.
+    pub fn reset_tuned_shapes(&mut self) {
+        for cc in self.convs.iter_mut().flatten() {
+            match &mut cc.weights {
+                PreparedWeights::Lut16 { plans } => {
+                    for p in plans {
+                        p.use_default_shape();
+                    }
+                }
+                PreparedWeights::LutWide { plans } => {
+                    for p in plans {
+                        p.use_default_shape();
+                    }
+                }
+                PreparedWeights::Lut65k { plans } => {
+                    for p in plans {
+                        p.use_default_shape();
+                    }
+                }
+                PreparedWeights::Lut16F32 { plans } => {
+                    for p in plans {
+                        p.use_default_shape();
+                    }
+                }
+                PreparedWeights::Int8 { plans } => {
+                    for p in plans {
+                        p.use_default_shape();
+                    }
+                }
+                PreparedWeights::BitSerial { .. }
+                | PreparedWeights::Ulp { .. }
+                | PreparedWeights::Portable { .. } => {}
+            }
+        }
+        self.tuning.stale_threads = true;
     }
 
     /// Forward pass (single image), accumulating stage times into `prof`.
@@ -696,6 +771,41 @@ mod tests {
         let y2 = m2.forward(&x, &mut StageProfile::new()).unwrap();
         assert_eq!(y0.data, y1.data, "tuned plan changed integer outputs");
         assert_eq!(y1.data, y2.data, "cached plan changed integer outputs");
+    }
+
+    #[test]
+    fn batched_compile_buckets_cover_grid_and_match_untuned_outputs() {
+        // A batch-aware tuned compile must carry one decision per M
+        // bucket {1,2,4,8}·per-image-M, keep integer outputs
+        // bit-identical to an untuned compile when serving a fused
+        // batch of 8, and support adaptive max_batch estimation.
+        let mut rng = crate::util::rng::Rng::new(0xB1);
+        let g = zoo::small_cnn(9, &mut rng);
+        let assign = |_: usize, _: &crate::nn::ConvSpec| -> Option<Backend> { None };
+        let m0 = CompiledModel::compile(g.clone(), Backend::Lut16(Scheme::D), &[]).unwrap();
+        let m1 = CompiledModel::compile_tuned_batched(
+            g,
+            Backend::Lut16(Scheme::D),
+            &[],
+            &assign,
+            crate::kernels::AutotuneMode::Quick,
+            8,
+        )
+        .unwrap();
+        assert_eq!(m1.tuning.measured_batch_sizes(), vec![1, 2, 4, 8]);
+        assert!(m1.tuning.is_tuned());
+        // Measured (or cached) per-bucket times feed the adaptive
+        // batcher's pick; quick mode always records positive times.
+        let (b, est) = m1.tuning.pick_max_batch(8, 0.0).expect("usable measurements");
+        assert!((1..=8).contains(&b));
+        assert!(est > 0.0);
+        let xs: Vec<Tensor> =
+            (0..8).map(|i| Tensor::random(&[1, 3, 32, 32], 0xB2 + i, -1.0, 1.0)).collect();
+        let y0 = m0.forward_batch(&xs, &mut StageProfile::new()).unwrap();
+        let y1 = m1.forward_batch(&xs, &mut StageProfile::new()).unwrap();
+        for (a, b) in y0.iter().zip(y1.iter()) {
+            assert_eq!(a.data, b.data, "bucketed plans changed integer outputs");
+        }
     }
 
     #[test]

@@ -18,14 +18,22 @@ use crate::kernels::tune::TuneOutcome;
 use crate::nn::Graph;
 
 /// Aggregated compile-time autotune outcomes for one model: one entry
-/// per built [`crate::kernels::GemmPlan`] (layer × group), in schedule
-/// order. Carried on `CompiledModel` so serving workers, metrics and
-/// the `{"cmd":"stats"}` endpoint can report which block shapes every
-/// layer runs with and what tuning cost at startup.
+/// per shape decision (layer × group × M bucket), in schedule order
+/// with a plan's buckets consecutive and ascending. Carried on
+/// `CompiledModel` so serving workers, metrics and the `{"cmd":"stats"}`
+/// endpoint can report which block shapes every layer runs with (per
+/// bucket) and what tuning cost at startup — and so the adaptive
+/// batcher can turn the measured per-bucket times into a `max_batch`
+/// choice ([`TuneReport::pick_max_batch`]).
 #[derive(Clone, Debug, Default)]
 pub struct TuneReport {
-    /// (layer name, outcome) per tuned plan.
+    /// (layer name, outcome) per shape decision.
     pub layers: Vec<(String, TuneOutcome)>,
+    /// Whether the tuned shapes were discarded at registration because
+    /// they were measured under a different worker-thread count than
+    /// the serving pool resolves to (the model then runs default
+    /// shapes; see `CompiledModel::reset_tuned_shapes`).
+    pub stale_threads: bool,
 }
 
 impl TuneReport {
@@ -34,7 +42,7 @@ impl TuneReport {
         self.layers.iter().any(|(_, o)| o.mode.is_on())
     }
 
-    /// Plans built (tuned or not).
+    /// Shape decisions recorded (plans × M buckets; tuned or not).
     pub fn plans(&self) -> usize {
         self.layers.len()
     }
@@ -56,10 +64,110 @@ impl TuneReport {
         self.layers.iter().map(|(_, o)| o.tune_micros).sum()
     }
 
-    /// One human-readable line per plan (layer name + chosen shape +
-    /// provenance), for logs and the stats endpoint.
+    /// Decisions whose measurement sample was truncated below the
+    /// bucket's M by the per-mode row cap (the shape ranking then
+    /// approximates the real M's — see
+    /// [`crate::kernels::tune::QUICK_SAMPLE_CAP`]).
+    pub fn truncated(&self) -> usize {
+        self.layers.iter().filter(|(_, o)| o.sample_truncated).count()
+    }
+
+    /// The worker-thread count the tuned shapes were measured (or
+    /// cache-keyed) at; `None` when no plan was tuned. All decisions of
+    /// one compile share it — the tuner resolves the process-wide knob
+    /// once per plan.
+    pub fn tuned_threads(&self) -> Option<usize> {
+        self.layers.iter().find(|(_, o)| o.mode.is_on()).map(|(_, o)| o.key.threads)
+    }
+
+    /// One human-readable line per decision (layer name + bucket +
+    /// chosen shape + provenance), for logs and the stats endpoint.
     pub fn lines(&self) -> Vec<String> {
         self.layers.iter().map(|(name, o)| format!("{name}: {}", o.describe())).collect()
+    }
+
+    /// The batch-image multipliers the report carries decisions for
+    /// (ascending, deduplicated) — the candidate `max_batch` values of
+    /// [`TuneReport::pick_max_batch`].
+    pub fn measured_batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.layers.iter().map(|(_, o)| o.bucket_images).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Estimated fused-GEMM microseconds for one batch of `b` images:
+    /// the sum over every plan of its measured best time at the bucket
+    /// covering `b` (smallest bucket ≥ `b`, else the largest).
+    /// Truncated measurements (sample capped below the bucket's M) are
+    /// extrapolated linearly to the full fused M — GEMM time is ~linear
+    /// in rows, and without the scaling a large model's estimate would
+    /// be the capped sample's time, so the adaptive latency bound would
+    /// never bind on exactly the models it is meant to protect. Returns
+    /// `None` when any plan lacks a positive measured time for its
+    /// chosen bucket (tuning off, or a legacy cache file without
+    /// timings) — the adaptive batcher then falls back to the
+    /// configured `max_batch`.
+    ///
+    /// Plan boundaries are recovered from the bucket grid invariant:
+    /// every plan's decisions are emitted in multiplier order and the
+    /// grid always starts at 1
+    /// ([`crate::kernels::tune::bucket_multipliers`]), so an outcome
+    /// with `bucket_images == 1` opens a new plan group.
+    pub fn estimated_batch_micros(&self, b: usize) -> Option<f64> {
+        if self.layers.is_empty() {
+            return None;
+        }
+        let mut groups: Vec<Vec<&TuneOutcome>> = Vec::new();
+        for (_, o) in &self.layers {
+            if groups.is_empty() || o.bucket_images <= 1 {
+                groups.push(Vec::new());
+            }
+            groups.last_mut().expect("just pushed").push(o);
+        }
+        let mut total = 0.0;
+        for g in groups {
+            let chosen = g
+                .iter()
+                .find(|o| o.bucket_images >= b)
+                .copied()
+                .or_else(|| g.last().copied())?;
+            if chosen.best_micros <= 0.0 {
+                return None;
+            }
+            let scale = if chosen.sample_truncated && chosen.sample_rows > 0 {
+                chosen.key.m as f64 / chosen.sample_rows as f64
+            } else {
+                1.0
+            };
+            total += chosen.best_micros * scale;
+        }
+        Some(total)
+    }
+
+    /// Pick the fused batch size with the best estimated throughput
+    /// (images per measured GEMM microsecond), subject to `cap` (the
+    /// configured `max_batch`) and to the per-batch GEMM-time bound
+    /// `latency_bound_micros` (0 disables the bound; a batch of 1 is
+    /// always admissible so the pick never comes up empty on a slow
+    /// model). Returns `(batch, estimated micros)`; `None` when the
+    /// report carries no usable measurements.
+    pub fn pick_max_batch(&self, cap: usize, latency_bound_micros: f64) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for b in self.measured_batch_sizes() {
+            if b == 0 || b > cap {
+                continue;
+            }
+            let Some(est) = self.estimated_batch_micros(b) else { continue };
+            if latency_bound_micros > 0.0 && est > latency_bound_micros && b > 1 {
+                continue;
+            }
+            let score = b as f64 / est.max(1e-9);
+            if best.map_or(true, |(_, _, s)| score > s) {
+                best = Some((b, est, score));
+            }
+        }
+        best.map(|(b, e, _)| (b, e))
     }
 }
 
@@ -225,8 +333,100 @@ impl ExecCtx {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::tune::{AutotuneMode, TuneKey};
+    use crate::kernels::TileShape;
     use crate::nn::zoo;
     use crate::util::rng::Rng;
+
+    /// A hand-built tuned outcome for bucket `b` with measured time
+    /// `micros` (0.0 models an untimed/off decision).
+    fn outcome(b: usize, micros: f64) -> TuneOutcome {
+        TuneOutcome {
+            key: TuneKey {
+                kernel: "lut16-d".into(),
+                m: 10 * b,
+                n: 8,
+                k: 64,
+                threads: 2,
+                isa: "avx2".into(),
+            },
+            shape: TileShape::default(),
+            mode: if micros > 0.0 { AutotuneMode::Quick } else { AutotuneMode::Off },
+            bucket_images: b,
+            from_cache: false,
+            candidates: if micros > 0.0 { 3 } else { 0 },
+            tune_micros: 0,
+            best_micros: micros,
+            default_micros: micros * 1.2,
+            sample_rows: 10 * b,
+            sample_truncated: false,
+        }
+    }
+
+    fn report(plans: &[&[(usize, f64)]]) -> TuneReport {
+        let mut r = TuneReport::default();
+        for (pi, buckets) in plans.iter().enumerate() {
+            for &(b, us) in buckets.iter() {
+                r.layers.push((format!("c{pi}"), outcome(b, us)));
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn batch_estimates_sum_per_plan_bucket_times() {
+        // Two plans, buckets {1,2,4,8}; plan boundaries recovered from
+        // the bucket-order restart.
+        let r = report(&[
+            &[(1, 10.0), (2, 14.0), (4, 20.0), (8, 30.0)],
+            &[(1, 5.0), (2, 6.0), (4, 8.0), (8, 10.0)],
+        ]);
+        assert_eq!(r.measured_batch_sizes(), vec![1, 2, 4, 8]);
+        assert_eq!(r.estimated_batch_micros(1), Some(15.0));
+        assert_eq!(r.estimated_batch_micros(2), Some(20.0));
+        // Between buckets: the smallest covering bucket.
+        assert_eq!(r.estimated_batch_micros(3), Some(28.0));
+        assert_eq!(r.estimated_batch_micros(8), Some(40.0));
+        // Unbounded: batch 8 has the best images/µs (8/40 = 0.2).
+        assert_eq!(r.pick_max_batch(8, 0.0), Some((8, 40.0)));
+        // A 30 µs latency bound excludes 8 (and 4 at 28 µs survives).
+        assert_eq!(r.pick_max_batch(8, 30.0), Some((4, 28.0)));
+        // The cap wins over the measurements.
+        assert_eq!(r.pick_max_batch(2, 0.0), Some((2, 20.0)));
+        // Batch 1 is always admissible even when it busts the bound.
+        assert_eq!(r.pick_max_batch(1, 1.0), Some((1, 15.0)));
+    }
+
+    #[test]
+    fn batch_estimates_extrapolate_truncated_samples() {
+        // A big-layer bucket measured on a capped sample must be scaled
+        // to the full fused M, otherwise the latency bound never binds
+        // on large models.
+        let mut o = outcome(8, 10.0);
+        o.key.m = 100_000;
+        o.sample_rows = 1000;
+        o.sample_truncated = true;
+        let mut r = TuneReport::default();
+        r.layers.push(("c0".into(), outcome(1, 5.0)));
+        r.layers.push(("c0".into(), o));
+        // Bucket 8: 10 µs measured on 1000 of 100000 rows → ×100.
+        assert_eq!(r.estimated_batch_micros(8), Some(1000.0));
+        assert_eq!(r.truncated(), 1);
+        // A 900 µs bound now correctly excludes the extrapolated batch.
+        assert_eq!(r.pick_max_batch(8, 900.0), Some((1, 5.0)));
+    }
+
+    #[test]
+    fn batch_estimates_refuse_unmeasured_reports() {
+        let off = report(&[&[(1, 0.0)], &[(1, 0.0)]]);
+        assert!(off.estimated_batch_micros(1).is_none());
+        assert!(off.pick_max_batch(8, 0.0).is_none());
+        assert!(off.tuned_threads().is_none());
+        let r = report(&[&[(1, 10.0), (2, 12.0)]]);
+        assert_eq!(r.tuned_threads(), Some(2));
+        assert_eq!(r.truncated(), 0);
+        assert!(!r.stale_threads);
+    }
 
     /// Two tensors are live simultaneously iff the later-defined one is
     /// defined no later than the earlier one's last read.

@@ -35,7 +35,10 @@
 //!    shape itself can be *measured* instead of defaulted: the
 //!    autotuner ([`tune`]) benchmarks a per-backend candidate grid
 //!    against the real packed operands and caches the winner per
-//!    (kernel, M, N, K, threads, ISA) — see `docs/TUNING.md`.
+//!    (kernel, M, N, K, threads, ISA); serving plans tune one shape
+//!    per batch-fused M *bucket* ([`tune::tune_plan_bucketed`]) and
+//!    `execute` selects the bucket matching its actual M — see
+//!    `docs/TUNING.md`.
 //! 4. **Execute** ([`GemmPlan::execute`]): the blocked, multi-threaded
 //!    driver walks K blocks × weight panels × MR×NR register tiles and
 //!    calls the backend's [`TileKernel`] for the per-tile arithmetic.

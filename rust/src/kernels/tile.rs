@@ -45,7 +45,10 @@
 //! the autotuner in [`crate::kernels::tune`] measures a per-backend
 //! candidate grid against the plan's real packed operands at compile
 //! time and caches the winner (process-wide, optionally persisted to
-//! disk), keyed by (kernel, M, N, K, threads, ISA).
+//! disk), keyed by (kernel, M, N, K, threads, ISA). Because the serving
+//! batcher fuses a batch into M = B·rows, tuned plans carry one shape
+//! per M *bucket* ([`GemmPlan::new_bucketed`]) and [`GemmPlan::execute`]
+//! picks the bucket matching the M it is actually called with.
 
 use super::lut16;
 use super::pack::{unpack_row, Layout, Packed, Scheme};
@@ -448,24 +451,55 @@ impl WeightPanels {
     }
 }
 
+/// One per-M-bucket entry of a bucketed plan (see
+/// [`GemmPlan::new_bucketed`]): the largest GEMM M the bucket covers,
+/// its tuned block shape, and which weight repack it executes with.
+#[derive(Clone, Debug)]
+struct PlanBucket {
+    /// Largest GEMM row count this bucket covers (per-image rows ×
+    /// batch images).
+    m: usize,
+    /// Tuned block shape for GEMMs routed to this bucket (normalised).
+    shape: TileShape,
+    /// Index into `GemmPlan::bucket_panels`; `None` means the bucket's
+    /// `kc` equals the base shape's, so the base panels are reused.
+    panels: Option<usize>,
+}
+
 /// A compiled GEMM execution plan: fixed weights (N×K, panel-repacked),
 /// runtime activations (any M), and the per-backend [`TileKernel`] that
 /// computes register tiles. Build once offline, execute per batch — the
 /// batcher fuses the batch dimension into M so all requests in a batch
 /// share one planned GEMM.
+///
+/// A plan built with [`GemmPlan::new`] runs one block shape for every
+/// M. A plan built with [`GemmPlan::new_bucketed`] additionally carries
+/// a per-M-bucket shape table (one tuned shape per expected batch-fused
+/// row count); [`GemmPlan::execute`] selects the bucket matching the
+/// actual M it is called with, falling back to the base `shape` when no
+/// bucket covers it.
 #[derive(Clone, Debug)]
 pub struct GemmPlan<K: TileKernel> {
     /// The per-backend micro-kernel (owns LUTs / zero-point state).
     pub kernel: K,
-    /// Cache-block sizes (normalised).
+    /// Base cache-block sizes (normalised): the shape executed when the
+    /// plan carries no M buckets, and the fallback after
+    /// [`GemmPlan::use_default_shape`]. See [`GemmPlan::shape_for`] for
+    /// the shape a given M actually runs with.
     pub shape: TileShape,
     /// Worker threads; 0 = process-wide default at execute time.
     pub threads: usize,
     /// Run the portable scalar path even on AVX2 hosts (see
     /// [`PlanOpts::force_scalar`]).
     pub force_scalar: bool,
-    /// Panel-contiguous repacked weights.
+    /// Panel-contiguous repacked weights for the base `shape`.
     pub panels: WeightPanels,
+    /// Per-M-bucket tuned shapes, sorted ascending by `m` (empty for
+    /// single-shape plans).
+    buckets: Vec<PlanBucket>,
+    /// Extra weight repacks for bucket shapes whose `kc` differs from
+    /// the base shape's (deduplicated by `kc`).
+    bucket_panels: Vec<WeightPanels>,
 }
 
 /// Raw output pointer shared across the task grid; every task writes a
@@ -513,7 +547,90 @@ impl<K: TileKernel> GemmPlan<K> {
             threads: opts.threads,
             force_scalar: opts.force_scalar,
             panels,
+            buckets: Vec::new(),
+            bucket_panels: Vec::new(),
         }
+    }
+
+    /// [`GemmPlan::new`] plus a per-M-bucket shape table: `table` maps
+    /// an expected GEMM row count (per-image rows × batch images, as
+    /// produced by the batcher's batch→M fusion) to the block shape
+    /// tuned at that M. Entries are normalised, sorted and deduplicated
+    /// by M; buckets whose `kc` differs from the base shape's get their
+    /// own panel repack (deduplicated by `kc` — repacking permutes, it
+    /// does not expand, so each distinct `kc` costs one weight-sized
+    /// copy at plan time). [`GemmPlan::execute`] routes each call to
+    /// the smallest bucket covering its M (the largest bucket when M
+    /// exceeds them all); `opts.shape` remains the fallback for plans
+    /// with an empty table.
+    pub fn new_bucketed(
+        w: &Packed,
+        kernel: K,
+        opts: PlanOpts,
+        table: &[(usize, TileShape)],
+    ) -> GemmPlan<K> {
+        let mut plan = GemmPlan::new(w, kernel, opts);
+        let mut entries: Vec<(usize, TileShape)> = table
+            .iter()
+            .filter(|(m, _)| *m > 0)
+            .map(|(m, s)| (*m, s.normalized()))
+            .collect();
+        entries.sort_by_key(|(m, _)| *m);
+        entries.dedup_by_key(|e| e.0);
+        for (m, shape) in entries {
+            let panels = if shape.kc == plan.shape.kc {
+                None
+            } else if let Some(i) = plan.bucket_panels.iter().position(|p| p.kc == shape.kc) {
+                Some(i)
+            } else {
+                plan.bucket_panels.push(WeightPanels::build(w, NR, shape.kc));
+                Some(plan.bucket_panels.len() - 1)
+            };
+            plan.buckets.push(PlanBucket { m, shape, panels });
+        }
+        plan
+    }
+
+    /// The (shape, panels) pair [`GemmPlan::execute`] uses for a GEMM of
+    /// `m` rows: the smallest bucket with `bucket.m >= m`, else the
+    /// largest bucket, else the base shape/panels.
+    fn select(&self, m: usize) -> (TileShape, &WeightPanels) {
+        let mut chosen: Option<&PlanBucket> = None;
+        for b in &self.buckets {
+            chosen = Some(b);
+            if b.m >= m {
+                break;
+            }
+        }
+        match chosen {
+            Some(b) => (
+                b.shape,
+                b.panels.map_or(&self.panels, |i| &self.bucket_panels[i]),
+            ),
+            None => (self.shape, &self.panels),
+        }
+    }
+
+    /// The block shape [`GemmPlan::execute`] will run a GEMM of `m`
+    /// rows with (bucket selection included).
+    pub fn shape_for(&self, m: usize) -> TileShape {
+        self.select(m).0
+    }
+
+    /// The M values of the plan's shape buckets, ascending (empty for
+    /// single-shape plans).
+    pub fn bucket_ms(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.m).collect()
+    }
+
+    /// Drop every per-bucket tuned shape (and its extra panel repacks),
+    /// reverting execution to the base `shape` for all M. Used when
+    /// tuned decisions are discovered to be stale — e.g. shapes tuned
+    /// for a different worker-thread count than the pool resolves to at
+    /// serving time.
+    pub fn use_default_shape(&mut self) {
+        self.buckets.clear();
+        self.bucket_panels.clear();
     }
 
     /// Output columns.
@@ -526,9 +643,10 @@ impl<K: TileKernel> GemmPlan<K> {
         self.panels.k
     }
 
-    /// Bytes held by the plan's packed weights.
+    /// Bytes held by the plan's packed weights (the base panels plus
+    /// any per-bucket repacks at other `kc` values).
     pub fn packed_bytes(&self) -> usize {
-        self.panels.bytes()
+        self.panels.bytes() + self.bucket_panels.iter().map(|p| p.bytes()).sum::<usize>()
     }
 
     /// Execute the plan: `out[m][n] = Σ_k Vw(w[n][k]) · Va(a[m][k])`,
@@ -561,10 +679,13 @@ impl<K: TileKernel> GemmPlan<K> {
     /// ```
     pub fn execute(&self, a: &Packed, out: &mut [K::Acc]) {
         let m = a.rows;
-        let n = self.panels.n;
+        // Bucketed plans route to the shape tuned for this M (all panel
+        // repacks share N/K, only the kc split differs).
+        let (shape, panels) = self.select(m);
+        let n = panels.n;
         assert_eq!(a.layout, self.kernel.a_layout(), "activations packed for wrong kernel");
-        assert_eq!(a.k, self.panels.k, "K mismatch");
-        assert_eq!(a.k_padded, self.panels.k_padded, "K padding mismatch");
+        assert_eq!(a.k, panels.k, "K mismatch");
+        assert_eq!(a.k_padded, panels.k_padded, "K padding mismatch");
         assert_eq!(out.len(), m * n, "output buffer size mismatch");
         if m == 0 || n == 0 {
             return;
@@ -574,8 +695,8 @@ impl<K: TileKernel> GemmPlan<K> {
         #[cfg(not(target_arch = "x86_64"))]
         let use_avx2 = false;
 
-        let mc = self.shape.mc;
-        let nc = self.shape.nc;
+        let mc = shape.mc;
+        let nc = shape.nc;
         let m_blocks = m.div_ceil(mc);
         let n_blocks = n.div_ceil(nc);
         let tasks = m_blocks * n_blocks;
@@ -589,6 +710,7 @@ impl<K: TileKernel> GemmPlan<K> {
                 for nb in 0..n_blocks {
                     self.run_region(
                         a,
+                        panels,
                         outp,
                         mb * mc,
                         ((mb + 1) * mc).min(m),
@@ -618,6 +740,7 @@ impl<K: TileKernel> GemmPlan<K> {
                 let (mb, nb) = (t / n_blocks, t % n_blocks);
                 self.run_region(
                     a,
+                    panels,
                     outp,
                     mb * mc,
                     ((mb + 1) * mc).min(m),
@@ -638,6 +761,7 @@ impl<K: TileKernel> GemmPlan<K> {
     fn run_region(
         &self,
         a: &Packed,
+        panels: &WeightPanels,
         out: SendMut<K::Acc>,
         m0: usize,
         m1: usize,
@@ -646,10 +770,10 @@ impl<K: TileKernel> GemmPlan<K> {
         use_avx2: bool,
     ) {
         if use_avx2 {
-            self.run_region_with(a, out, m0, m1, n0, n1, true, &mut [], &mut []);
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, true, &mut [], &mut []);
             return;
         }
-        let kc = self.panels.kc;
+        let kc = panels.kc;
         SCALAR_SCRATCH.with(|cell| {
             let mut guard = cell.borrow_mut();
             let (a_buf, w_buf) = &mut *guard;
@@ -659,7 +783,7 @@ impl<K: TileKernel> GemmPlan<K> {
             if w_buf.len() < NR * kc {
                 w_buf.resize(NR * kc, 0);
             }
-            self.run_region_with(a, out, m0, m1, n0, n1, false, a_buf, w_buf);
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, false, a_buf, w_buf);
         });
     }
 
@@ -672,6 +796,7 @@ impl<K: TileKernel> GemmPlan<K> {
     fn run_region_with(
         &self,
         a: &Packed,
+        panels: &WeightPanels,
         out: SendMut<K::Acc>,
         m0: usize,
         m1: usize,
@@ -681,7 +806,7 @@ impl<K: TileKernel> GemmPlan<K> {
         a_buf: &mut [u8],
         w_buf: &mut [u8],
     ) {
-        let n = self.panels.n;
+        let n = panels.n;
         let outp = out.0;
         let zero = <K::Acc as Accum>::ZERO;
         for mi in m0..m1 {
@@ -690,20 +815,20 @@ impl<K: TileKernel> GemmPlan<K> {
                 unsafe { *outp.add(mi * n + ni) = zero };
             }
         }
-        let kc = self.panels.kc;
+        let kc = panels.kc;
         let a_chunk = a.layout.bytes_for(K_BLOCK);
         let p0 = n0 / NR;
         let p1 = n1.div_ceil(NR);
-        for b in 0..self.panels.blocks() {
-            let vals = self.panels.block_vals(b);
-            let a_off = self.panels.prefix[b] * a_chunk;
-            let a_len = self.panels.block_chunks[b] * a_chunk;
+        for b in 0..panels.blocks() {
+            let vals = panels.block_vals(b);
+            let a_off = panels.prefix[b] * a_chunk;
+            let a_len = panels.block_chunks[b] * a_chunk;
             for p in p0..p1 {
                 let pn0 = p * NR;
                 let nt = (n1 - pn0).min(NR);
-                let mut wf = [self.panels.frag(p, b, 0); NR];
+                let mut wf = [panels.frag(p, b, 0); NR];
                 for (r, slot) in wf.iter_mut().enumerate().take(nt).skip(1) {
-                    *slot = self.panels.frag(p, b, r);
+                    *slot = panels.frag(p, b, r);
                 }
                 if !use_avx2 {
                     self.kernel.prep_panel(&wf, vals, nt, kc, w_buf);
@@ -1431,5 +1556,72 @@ mod tests {
             plan.execute(&pack_activations(img, Scheme::D), &mut single);
             assert_eq!(&got[b * m1 * n..(b + 1) * m1 * n], &single[..], "image {b}");
         }
+    }
+
+    #[test]
+    fn bucketed_plan_selects_expected_bucket_and_stays_exact() {
+        // Three buckets at rows·{1,2,8} with deliberately different
+        // shapes (two sharing kc to exercise panel dedup, one with its
+        // own kc): selection must route M = B·rows to the matching
+        // bucket, and every selected shape must compute bit-identically
+        // to a default-shape plan.
+        let (m1, n, k) = (5usize, 9usize, 300usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 91);
+        let wp = pack_weights(&w, Scheme::D);
+        let s1 = TileShape { mc: 8, nc: 8, kc: K_BLOCK };
+        let s2 = TileShape { mc: 16, nc: 8, kc: 2 * K_BLOCK };
+        let s8 = TileShape { mc: 32, nc: 12, kc: K_BLOCK };
+        let table = [(m1, s1), (2 * m1, s2), (8 * m1, s8)];
+        let plan = GemmPlan::new_bucketed(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut.clone()),
+            PlanOpts { threads: 2, ..Default::default() },
+            &table,
+        );
+        assert_eq!(plan.bucket_ms(), vec![m1, 2 * m1, 8 * m1]);
+        // Smallest covering bucket wins; beyond the largest, the
+        // largest bucket (the batch-fused acceptance case M = 8·rows).
+        assert_eq!(plan.shape_for(1), s1);
+        assert_eq!(plan.shape_for(m1), s1);
+        assert_eq!(plan.shape_for(m1 + 1), s2);
+        assert_eq!(plan.shape_for(3 * m1), s8);
+        assert_eq!(plan.shape_for(8 * m1), s8);
+        assert_eq!(plan.shape_for(20 * m1), s8);
+        // Distinct-kc buckets carry their own repack (s1 and s8 share
+        // kc = K_BLOCK, so one copy serves both): base panels + two
+        // extra kc splits.
+        assert_eq!(plan.packed_bytes(), 3 * wp.data.len());
+        // Every bucket executes bit-identically to a default plan.
+        let dflt = GemmPlan::new(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut.clone()),
+            PlanOpts { threads: 2, ..Default::default() },
+        );
+        for bsz in [1usize, 2, 3, 8, 11] {
+            let m = bsz * m1;
+            let a = CodeMat::random(m, k, 2, 92 + bsz as u64);
+            let ap = pack_activations(&a, Scheme::D);
+            let mut want = vec![0i32; m * n];
+            let mut got = vec![0i32; m * n];
+            dflt.execute(&ap, &mut want);
+            plan.execute(&ap, &mut got);
+            assert_eq!(got, want, "bucketed plan diverges at M = {bsz}·{m1}");
+        }
+        // Resetting drops the table: everything runs the base shape.
+        let mut reset = plan.clone();
+        reset.use_default_shape();
+        assert!(reset.bucket_ms().is_empty());
+        assert_eq!(reset.shape_for(8 * m1), TileShape::default().normalized());
+        assert_eq!(reset.packed_bytes(), wp.data.len());
+        let m = 8 * m1;
+        let a = CodeMat::random(m, k, 2, 93);
+        let ap = pack_activations(&a, Scheme::D);
+        let mut want = vec![0i32; m * n];
+        let mut got = vec![0i32; m * n];
+        dflt.execute(&ap, &mut want);
+        reset.execute(&ap, &mut got);
+        assert_eq!(got, want, "reset plan diverges");
     }
 }

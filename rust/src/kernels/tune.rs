@@ -16,16 +16,23 @@
 //! Flow:
 //!
 //! 1. [`tune_plan`] is handed packed weights, a [`TileKernel`], base
-//!    [`PlanOpts`] and the per-image GEMM M. With
-//!    [`AutotuneMode::Off`] it builds the default plan and returns.
-//! 2. Otherwise it forms a [`TuneKey`] — `(kernel, M, N, K, threads,
-//!    ISA)` — and consults the process-wide cache. A hit skips all
-//!    measurement (a warm server restart performs **zero** tuning
-//!    runs).
+//!    [`PlanOpts`] and the per-image GEMM M; [`tune_plan_bucketed`]
+//!    additionally takes the serving batcher's `max_batch` and tunes
+//!    one shape per M *bucket* (per-image rows × [`bucket_multipliers`]
+//!    — the GEMM Ms batch→M fusion actually produces), building a
+//!    [`GemmPlan::new_bucketed`] plan that routes each execute to the
+//!    bucket matching its real M. With [`AutotuneMode::Off`] both build
+//!    the default plan and return.
+//! 2. Otherwise each decision forms a [`TuneKey`] — `(kernel, M, N, K,
+//!    threads, ISA)`; buckets differ only in M — and consults the
+//!    process-wide cache. A hit skips all measurement (a warm server
+//!    restart performs **zero** tuning runs and restores every
+//!    bucket).
 //! 3. On a miss it builds one candidate plan per [`candidates`] entry
 //!    (the default shape is always candidate 0), executes each against
-//!    a caller-supplied packed activation operand, and caches the
-//!    fastest.
+//!    a caller-supplied packed activation operand sampled at the
+//!    bucket's M (floored/capped per mode, truncation reported), and
+//!    caches the fastest.
 //!
 //! The knob is process-wide like the GEMM thread count: the CLI's
 //! `--autotune`, `ServerConfig::autotune` and the bench binaries all
@@ -72,13 +79,31 @@ pub enum AutotuneMode {
     /// shape.
     Off,
     /// A handful of candidates per backend, two timed repetitions each,
-    /// activation sample capped at 160 rows. Adds milliseconds per
-    /// distinct layer shape to compile time.
+    /// activation sample at the bucket's M (floored at one register
+    /// tile, capped at [`QUICK_SAMPLE_CAP`] rows — truncation is
+    /// reported in the [`TuneOutcome`]). Adds milliseconds per distinct
+    /// (layer shape, M bucket) to compile time.
     Quick,
     /// The full candidate grid, four timed repetitions, sample capped
-    /// at 512 rows. For offline shape studies, not serving startup.
+    /// at [`FULL_SAMPLE_CAP`] rows. For offline shape studies, not
+    /// serving startup.
     Full,
 }
+
+/// Measurement-sample row cap for [`AutotuneMode::Quick`]: buckets are
+/// measured at their real M up to this many rows; larger Ms truncate
+/// (reported via [`TuneOutcome::sample_truncated`]).
+pub const QUICK_SAMPLE_CAP: usize = 1024;
+
+/// Measurement-sample row cap for [`AutotuneMode::Full`].
+pub const FULL_SAMPLE_CAP: usize = 4096;
+
+/// Default serving batch-fusion cap, shared between
+/// [`crate::coordinator::BatcherConfig`] and the default M-bucket grid
+/// of batched compiles ([`TuneSpec::batched`] callers that have no
+/// explicit batcher config) so tuned buckets line up with the batches
+/// the dynamic batcher actually forms.
+pub const DEFAULT_MAX_BATCH: usize = 8;
 
 impl AutotuneMode {
     /// Parse `off` / `quick` / `full` (the CLI/env spellings).
@@ -113,11 +138,18 @@ impl AutotuneMode {
         }
     }
 
+    /// Rows of the synthetic activation sample measured per candidate:
+    /// the bucket's real M, floored at one register tile
+    /// ([`tile::MR`] — so the 4-row micro-kernels are exercised even
+    /// for tiny layers) and capped per mode so tuning a large fused
+    /// batch stays bounded. Capped samples are *truncation*: the caller
+    /// records it in [`TuneOutcome::sample_truncated`] and every
+    /// reporting surface shows it.
     fn sample_rows(&self, m: usize) -> usize {
         match self {
             AutotuneMode::Off => m,
-            AutotuneMode::Quick => m.min(160).max(1),
-            AutotuneMode::Full => m.min(512).max(1),
+            AutotuneMode::Quick => m.max(tile::MR).min(QUICK_SAMPLE_CAP),
+            AutotuneMode::Full => m.max(tile::MR).min(FULL_SAMPLE_CAP),
         }
     }
 }
@@ -162,7 +194,9 @@ pub fn default_mode() -> AutotuneMode {
 pub struct TuneKey {
     /// The backend micro-kernel id ([`TileKernel::name`]).
     pub kernel: String,
-    /// GEMM rows the plan was tuned for (per-image M at compile time).
+    /// GEMM rows the decision was tuned for: the M bucket's fused row
+    /// count (per-image rows × batch images; per-image M for
+    /// unbucketed tuning).
     pub m: usize,
     /// Output columns (weight rows).
     pub n: usize,
@@ -208,6 +242,12 @@ pub fn cache_lookup(key: &TuneKey) -> Option<CachedShape> {
 /// Insert (or overwrite) a cached decision.
 pub fn cache_insert(key: TuneKey, choice: CachedShape) {
     cache().lock().unwrap().insert(key, choice);
+}
+
+/// Remove one cached decision (forced re-tune of a single shape);
+/// returns whether the key was present.
+pub fn cache_remove(key: &TuneKey) -> bool {
+    cache().lock().unwrap().remove(key).is_some()
 }
 
 /// Snapshot of the whole cache, sorted by key for stable output.
@@ -271,40 +311,85 @@ pub fn load_cache(path: &Path) -> crate::Result<usize> {
     Ok(n)
 }
 
-/// What [`tune_plan`] should tune for: the mode plus the GEMM M the
-/// plan will serve (per-image rows at compile time — the batcher's
-/// batch fusion scales M uniformly, which does not change the relative
-/// ranking of block shapes nearly as much as N/K/ISA do).
+/// What [`tune_plan_bucketed`] should tune for: the mode, the per-image
+/// GEMM M, and the largest batch the serving batcher may fuse. The
+/// batcher stacks a batch of B images into one GEMM of M = B·rows, so a
+/// plan tuned only at the per-image M executes every batched request on
+/// a shape measured for the wrong M; the bucket grid
+/// ([`bucket_multipliers`]) tunes each expected fused M separately.
 #[derive(Clone, Copy, Debug)]
 pub struct TuneSpec {
     /// Measurement effort.
     pub mode: AutotuneMode,
-    /// Expected GEMM rows (0 disables tuning for this plan).
+    /// Expected per-image GEMM rows (0 disables tuning for this plan).
     pub m: usize,
+    /// Largest batch the serving batcher fuses into M (≥ 1; 1 tunes the
+    /// per-image bucket only, the pre-bucketing behaviour).
+    pub max_batch: usize,
 }
 
 impl TuneSpec {
     /// No tuning: plans keep their requested shape.
     pub fn off() -> TuneSpec {
-        TuneSpec { mode: AutotuneMode::Off, m: 0 }
+        TuneSpec { mode: AutotuneMode::Off, m: 0, max_batch: 1 }
     }
 
-    /// Tune with `mode` for a GEMM of `m` rows.
+    /// Tune with `mode` for a per-image GEMM of `m` rows only (no batch
+    /// buckets).
     pub fn new(mode: AutotuneMode, m: usize) -> TuneSpec {
-        TuneSpec { mode, m }
+        TuneSpec { mode, m, max_batch: 1 }
+    }
+
+    /// Tune with `mode` over the M-bucket grid `m` ·
+    /// [`bucket_multipliers`]`(max_batch)` — one tuned shape per
+    /// expected batch-fused GEMM M.
+    pub fn batched(mode: AutotuneMode, m: usize, max_batch: usize) -> TuneSpec {
+        TuneSpec { mode, m, max_batch: max_batch.max(1) }
     }
 }
 
-/// The result of one [`tune_plan`] call — everything metrics, logs and
-/// the `{"cmd":"stats"}` endpoint report about a plan's block shape.
+/// The batch-size grid a [`TuneSpec`] expands into M buckets: powers of
+/// two below `max_batch`, plus `max_batch` itself — `{1, 2, 4, …,
+/// max_batch}`. Geometric spacing keeps the grid small (the batcher
+/// forms every size up to its cap, but neighbouring sizes share block
+/// shapes) while always covering the two Ms the serving path actually
+/// concentrates on: single requests and full batches.
+///
+/// ```
+/// use deepgemm::kernels::tune::bucket_multipliers;
+/// assert_eq!(bucket_multipliers(8), vec![1, 2, 4, 8]);
+/// assert_eq!(bucket_multipliers(6), vec![1, 2, 4, 6]);
+/// assert_eq!(bucket_multipliers(1), vec![1]);
+/// assert_eq!(bucket_multipliers(0), vec![1]);
+/// ```
+pub fn bucket_multipliers(max_batch: usize) -> Vec<usize> {
+    let top = max_batch.max(1);
+    let mut v = Vec::new();
+    let mut b = 1usize;
+    while b < top {
+        v.push(b);
+        b *= 2;
+    }
+    v.push(top);
+    v
+}
+
+/// The result of one tuning decision (one M bucket of a
+/// [`tune_plan_bucketed`] call, or the single decision of a
+/// [`tune_plan`] call) — everything metrics, logs and the
+/// `{"cmd":"stats"}` endpoint report about a plan's block shape.
 #[derive(Clone, Debug)]
 pub struct TuneOutcome {
-    /// The cache key the decision is stored under.
+    /// The cache key the decision is stored under (`key.m` is this
+    /// bucket's fused GEMM row count).
     pub key: TuneKey,
     /// The chosen (normalized) block shape.
     pub shape: TileShape,
     /// The mode the call ran with.
     pub mode: AutotuneMode,
+    /// The batch-image multiplier of this bucket (`key.m` = per-image
+    /// rows × `bucket_images`; 1 for per-image/unbucketed decisions).
+    pub bucket_images: usize,
     /// Whether the shape came from the cache (no measurement ran).
     pub from_cache: bool,
     /// Candidates measured (0 when cached or off).
@@ -312,11 +397,22 @@ pub struct TuneOutcome {
     /// Wall-clock microseconds spent measuring (0 when cached or off).
     pub tune_micros: u64,
     /// Best candidate's measured microseconds per GEMM (0 when not
-    /// measured).
+    /// measured; the cached best for cache hits).
     pub best_micros: f64,
     /// The default shape's measured microseconds per GEMM (candidate 0;
     /// 0 when not measured).
     pub default_micros: f64,
+    /// Rows of the activation sample the decision was measured on —
+    /// for cache hits and carried buckets, the rows the current mode
+    /// *would* measure (so truncation stays visible across warm
+    /// restarts). 0 only when tuning was off; use
+    /// [`TuneOutcome::from_cache`] to detect "no measurement ran".
+    pub sample_rows: usize,
+    /// Whether the sample was truncated below the bucket's M by the
+    /// per-mode row cap ([`QUICK_SAMPLE_CAP`] / [`FULL_SAMPLE_CAP`]) —
+    /// the measured ranking then approximates the real M's, and batch
+    /// time estimates extrapolate linearly from the sample.
+    pub sample_truncated: bool,
 }
 
 impl TuneOutcome {
@@ -328,15 +424,25 @@ impl TuneOutcome {
         } else if self.from_cache {
             "cached".to_string()
         } else {
+            let trunc = if self.sample_truncated {
+                format!(", sampled {} of {} rows", self.sample_rows, self.key.m)
+            } else {
+                String::new()
+            };
             format!(
-                "tuned {:.1}ms over {} candidates, {:.2}x vs default",
+                "tuned {:.1}ms over {} candidates, {:.2}x vs default{trunc}",
                 self.tune_micros as f64 / 1e3,
                 self.candidates,
                 self.default_micros / self.best_micros.max(1e-9)
             )
         };
+        let bucket = if self.bucket_images > 1 {
+            format!("[b{}]", self.bucket_images)
+        } else {
+            String::new()
+        };
         format!(
-            "{} M{} N{} K{} t{} {}: mc/nc/kc = {mc}/{nc}/{kc} ({src})",
+            "{} M{}{bucket} N{} K{} t{} {}: mc/nc/kc = {mc}/{nc}/{kc} ({src})",
             self.key.kernel, self.key.m, self.key.n, self.key.k, self.key.threads, self.key.isa
         )
     }
@@ -448,6 +554,89 @@ where
     K: TileKernel + Clone,
     F: FnOnce(usize) -> Packed,
 {
+    let (shape, outcome) = tune_shape(w, &kernel, base, mode, m, 1, None, mk_a);
+    let plan = GemmPlan::new(w, kernel, PlanOpts { shape, ..base });
+    (plan, outcome)
+}
+
+/// [`tune_plan`] made batch-aware: tune one block shape per M *bucket*
+/// (`spec.m` · [`bucket_multipliers`]`(spec.max_batch)` rows — the GEMM
+/// Ms the serving batcher's batch→M fusion actually produces) and build
+/// one [`GemmPlan::new_bucketed`] plan whose `execute` routes each call
+/// to the bucket matching its real M. Every bucket is its own
+/// [`TuneKey`] (the keys differ only in `m`), so all buckets land in
+/// the process-wide cache — and in the persisted
+/// [`TuningCacheDoc`](crate::runtime::manifest::TuningCacheDoc) file —
+/// individually, and a warm restart restores the whole table with zero
+/// measurement.
+///
+/// `mk_a` is called once per non-cached bucket with that bucket's
+/// sample row count. When consecutive buckets clamp to the *same*
+/// sample row count (the per-mode cap saturates, or the floor kicks in
+/// for tiny layers), their measurements would be byte-identical — the
+/// later bucket reuses the earlier winner instead of re-sweeping,
+/// seeding its own cache key so warm restarts still restore every
+/// bucket. With tuning off (or `spec.m == 0`) the plan keeps the base
+/// shape and a single "default" outcome is returned, exactly like
+/// [`tune_plan`].
+pub fn tune_plan_bucketed<K, F>(
+    w: &Packed,
+    kernel: K,
+    base: PlanOpts,
+    spec: TuneSpec,
+    mk_a: F,
+) -> (GemmPlan<K>, Vec<TuneOutcome>)
+where
+    K: TileKernel + Clone,
+    F: Fn(usize) -> Packed,
+{
+    if !spec.mode.is_on() || spec.m == 0 {
+        let (shape, outcome) = tune_shape(w, &kernel, base, spec.mode, spec.m, 1, None, &mk_a);
+        let plan = GemmPlan::new(w, kernel, PlanOpts { shape, ..base });
+        return (plan, vec![outcome]);
+    }
+    let mut table: Vec<(usize, TileShape)> = Vec::new();
+    let mut outcomes: Vec<TuneOutcome> = Vec::new();
+    let mut prev: Option<(usize, CachedShape)> = None;
+    for mult in bucket_multipliers(spec.max_batch) {
+        let m_b = spec.m * mult;
+        let sample = spec.mode.sample_rows(m_b);
+        let carry = match prev {
+            Some((ps, c)) if ps == sample => Some(c),
+            _ => None,
+        };
+        let (shape, outcome) = tune_shape(w, &kernel, base, spec.mode, m_b, mult, carry, &mk_a);
+        prev = Some((sample, CachedShape { shape, micros: outcome.best_micros }));
+        table.push((m_b, shape));
+        outcomes.push(outcome);
+    }
+    let plan = GemmPlan::new_bucketed(w, kernel, base, &table);
+    (plan, outcomes)
+}
+
+/// One tuning decision for one (shape, M) point: consult the cache,
+/// otherwise measure the candidate grid against a sampled activation
+/// operand and cache the winner. `carry` short-circuits the sweep with
+/// an already-measured decision whose sample would be identical (see
+/// [`tune_plan_bucketed`]); it is inserted under this M's cache key so
+/// the bucket persists individually. Returns the winning shape without
+/// building the final plan (callers assemble single-shape or bucketed
+/// plans from the decisions).
+#[allow(clippy::too_many_arguments)]
+fn tune_shape<K, F>(
+    w: &Packed,
+    kernel: &K,
+    base: PlanOpts,
+    mode: AutotuneMode,
+    m: usize,
+    bucket_images: usize,
+    carry: Option<CachedShape>,
+    mk_a: F,
+) -> (TileShape, TuneOutcome)
+where
+    K: TileKernel + Clone,
+    F: FnOnce(usize) -> Packed,
+{
     let threads = tile::resolve_threads(base.threads);
     let isa = isa_name(base.force_scalar);
     let key = TuneKey {
@@ -458,48 +647,53 @@ where
         threads,
         isa: isa.to_string(),
     };
+    // Truncation is a pure function of (mode, M), so cache hits and
+    // carried decisions report it too — a warm restart keeps the
+    // truncated count visible in metrics/stats.
+    let trunc_sample = if mode.is_on() && m > 0 { mode.sample_rows(m) } else { 0 };
+    let off_outcome = |key: TuneKey, shape: TileShape| TuneOutcome {
+        key,
+        shape,
+        mode,
+        bucket_images,
+        from_cache: false,
+        candidates: 0,
+        tune_micros: 0,
+        best_micros: 0.0,
+        default_micros: 0.0,
+        sample_rows: trunc_sample,
+        sample_truncated: trunc_sample > 0 && trunc_sample < m,
+    };
     if !mode.is_on() || m == 0 {
-        let plan = GemmPlan::new(w, kernel, base);
-        let shape = plan.shape;
-        return (
-            plan,
-            TuneOutcome {
-                key,
-                shape,
-                mode,
-                from_cache: false,
-                candidates: 0,
-                tune_micros: 0,
-                best_micros: 0.0,
-                default_micros: 0.0,
-            },
-        );
+        let shape = base.shape.normalized();
+        return (shape, off_outcome(key, shape));
     }
     if let Some(hit) = cache_lookup(&key) {
-        let plan = GemmPlan::new(w, kernel, PlanOpts { shape: hit.shape, ..base });
-        let shape = plan.shape;
-        return (
-            plan,
-            TuneOutcome {
-                key,
-                shape,
-                mode,
-                from_cache: true,
-                candidates: 0,
-                tune_micros: 0,
-                best_micros: hit.micros,
-                default_micros: 0.0,
-            },
-        );
+        let outcome = TuneOutcome {
+            from_cache: true,
+            best_micros: hit.micros,
+            ..off_outcome(key, hit.shape)
+        };
+        return (hit.shape, outcome);
+    }
+    if let Some(c) = carry {
+        cache_insert(key.clone(), c);
+        let outcome = TuneOutcome {
+            from_cache: true,
+            best_micros: c.micros,
+            ..off_outcome(key, c.shape)
+        };
+        return (c.shape, outcome);
     }
     let t0 = Instant::now();
     let a = mk_a(mode.sample_rows(m));
     debug_assert_eq!(a.layout, kernel.a_layout(), "tuning operand packed for wrong kernel");
     debug_assert_eq!(a.k, w.k, "tuning operand K mismatch");
+    let sample = a.rows;
     let cands = candidates(kernel.name(), mode, w.k_padded);
     let reps = mode.reps();
     let mut out = vec![<K::Acc as Accum>::ZERO; a.rows * w.rows];
-    let mut best: Option<(GemmPlan<K>, f64)> = None;
+    let mut best: Option<(TileShape, f64)> = None;
     let mut default_micros = 0.0;
     for (ci, shape) in cands.iter().enumerate() {
         let plan = GemmPlan::new(w, kernel.clone(), PlanOpts { shape: *shape, ..base });
@@ -508,23 +702,25 @@ where
             default_micros = us;
         }
         if best.as_ref().map_or(true, |(_, b)| us < *b) {
-            best = Some((plan, us));
+            best = Some((plan.shape, us));
         }
     }
-    let (plan, best_micros) = best.expect("candidate grid is never empty");
-    cache_insert(key.clone(), CachedShape { shape: plan.shape, micros: best_micros });
-    let shape = plan.shape;
+    let (shape, best_micros) = best.expect("candidate grid is never empty");
+    cache_insert(key.clone(), CachedShape { shape, micros: best_micros });
     (
-        plan,
+        shape,
         TuneOutcome {
             key,
             shape,
             mode,
+            bucket_images,
             from_cache: false,
             candidates: cands.len(),
             tune_micros: t0.elapsed().as_micros() as u64,
             best_micros,
             default_micros,
+            sample_rows: sample,
+            sample_truncated: sample < m,
         },
     )
 }
@@ -781,6 +977,260 @@ mod tests {
                         return Err(format!(
                             "lut16-f32 diverges m={m} n={n} k={k} t={threads}: {e}"
                         ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bucketed_tuning_covers_grid_and_restores_from_cache() {
+        // Unique (n, k) so parallel tests cannot collide on the keys.
+        let (m, n, k) = (6usize, 7usize, 401usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 17);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        let spec = TuneSpec::batched(AutotuneMode::Quick, m, 8);
+        let mk = |ms: usize| pack::pack_activations(&CodeMat::random(ms, k, 2, 18), Scheme::D);
+        let (plan, outs) = tune_plan_bucketed(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut.clone()),
+            PlanOpts::default(),
+            spec,
+            mk,
+        );
+        // One decision per bucket, keyed at the fused M.
+        assert_eq!(plan.bucket_ms(), vec![m, 2 * m, 4 * m, 8 * m]);
+        assert_eq!(outs.len(), 4);
+        for (out, mult) in outs.iter().zip([1usize, 2, 4, 8]) {
+            assert_eq!(out.bucket_images, mult);
+            assert_eq!(out.key.m, m * mult);
+            assert_eq!(plan.shape_for(m * mult), out.shape, "bucket ×{mult}");
+        }
+        // The base shape stays the default fallback.
+        assert_eq!(plan.shape, TileShape::default().normalized());
+        // A second bucketed tune is pure cache hits and restores every
+        // bucket's shape.
+        let (plan2, outs2) = tune_plan_bucketed(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            spec,
+            |_| panic!("warm buckets must not build a tuning operand"),
+        );
+        assert!(outs2.iter().all(|o| o.from_cache), "{outs2:?}");
+        for (a, b) in outs.iter().zip(outs2.iter()) {
+            assert_eq!(a.shape, b.shape);
+        }
+        assert_eq!(plan2.bucket_ms(), plan.bucket_ms());
+    }
+
+    #[test]
+    fn sample_truncation_is_reported() {
+        // A bucket M beyond the quick-mode row cap must measure on the
+        // capped sample and say so.
+        let (m, n, k) = (QUICK_SAMPLE_CAP + 40, 3usize, 409usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 19);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        let (_, out) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            AutotuneMode::Quick,
+            m,
+            |ms| {
+                assert_eq!(ms, QUICK_SAMPLE_CAP, "sample must cap at the documented limit");
+                pack::pack_activations(&CodeMat::random(ms, k, 2, 20), Scheme::D)
+            },
+        );
+        assert!(!out.from_cache);
+        assert_eq!(out.sample_rows, QUICK_SAMPLE_CAP);
+        assert!(out.sample_truncated);
+        assert!(out.describe().contains("sampled"), "{}", out.describe());
+        // Small Ms floor at one register tile instead.
+        assert_eq!(AutotuneMode::Quick.sample_rows(1), crate::kernels::tile::MR);
+    }
+
+    /// Satellite property test: bucketed plans stay bit-identical
+    /// (i32) / ulp-equal (f32) to default-shape plans across 5 backends
+    /// × batch sizes {1, 3, 8} × 1/2/4 threads.
+    #[test]
+    fn bucketed_plans_match_default_shape_plans_across_batches() {
+        prop::check(
+            0xB0CE,
+            3,
+            |r: &mut Rng| {
+                (
+                    r.range(1, 7),
+                    r.range(1, 9),
+                    r.range(1, 260),
+                    [1usize, 2, 4][r.range(0, 3)],
+                    r.next_u64(),
+                )
+            },
+            |&(m, n, k, threads, seed)| {
+                let opts = PlanOpts { threads, ..Default::default() };
+                let spec = TuneSpec::batched(AutotuneMode::Quick, m, 8);
+                let batches = [1usize, 3, 8];
+                // lut16 scheme d
+                {
+                    let cb = IntCodebook::signed(2);
+                    let lut = Lut16::build(&cb, &cb);
+                    let w = CodeMat::random(n, k, 2, seed ^ 1);
+                    let wp = pack::pack_weights(&w, Scheme::D);
+                    let (tuned, outs) = tune_plan_bucketed(
+                        &wp,
+                        Lut16Tile::new(Scheme::D, lut.clone()),
+                        opts,
+                        spec,
+                        |ms| {
+                            pack::pack_activations(&CodeMat::random(ms, k, 2, seed), Scheme::D)
+                        },
+                    );
+                    if outs.len() != 4 {
+                        return Err(format!("lut16-d expected 4 buckets, got {}", outs.len()));
+                    }
+                    let dflt = GemmPlan::new(&wp, Lut16Tile::new(Scheme::D, lut), opts);
+                    for &b in &batches {
+                        let mm = b * m;
+                        let a = CodeMat::random(mm, k, 2, seed ^ (0x10 + b as u64));
+                        let ap = pack::pack_activations(&a, Scheme::D);
+                        let mut want = vec![0i32; mm * n];
+                        let mut got = vec![0i32; mm * n];
+                        dflt.execute(&ap, &mut want);
+                        tuned.execute(&ap, &mut got);
+                        if got != want {
+                            return Err(format!(
+                                "lut16-d diverges m={m} n={n} k={k} t={threads} b={b}"
+                            ));
+                        }
+                    }
+                }
+                // lut65k
+                {
+                    let cb = IntCodebook::signed(2);
+                    let lut = Arc::new(Lut65k::build(&cb, &cb));
+                    let w = CodeMat::random(n, k, 2, seed ^ 2);
+                    let wp = lut65k::pack_dense(&w);
+                    let (tuned, _) = tune_plan_bucketed(
+                        &wp,
+                        Lut65kTile::new(lut.clone()),
+                        opts,
+                        spec,
+                        |ms| lut65k::pack_dense(&CodeMat::random(ms, k, 2, seed ^ 3)),
+                    );
+                    let dflt = GemmPlan::new(&wp, Lut65kTile::new(lut), opts);
+                    for &b in &batches {
+                        let mm = b * m;
+                        let a = CodeMat::random(mm, k, 2, seed ^ (0x20 + b as u64));
+                        let ap = lut65k::pack_dense(&a);
+                        let mut want = vec![0i32; mm * n];
+                        let mut got = vec![0i32; mm * n];
+                        dflt.execute(&ap, &mut want);
+                        tuned.execute(&ap, &mut got);
+                        if got != want {
+                            return Err(format!(
+                                "lut65k diverges m={m} n={n} k={k} t={threads} b={b}"
+                            ));
+                        }
+                    }
+                }
+                // wide 4-bit
+                {
+                    let w_cb = IntCodebook::signed(4);
+                    let a_cb = IntCodebook::unsigned(4);
+                    let lut = Lut16::build(&w_cb, &a_cb);
+                    let w = CodeMat::random(n, k, 4, seed ^ 4);
+                    let wp = lut16_wide::pack_wide(&w);
+                    let (tuned, _) = tune_plan_bucketed(
+                        &wp,
+                        LutWideTile::new(lut.clone()),
+                        opts,
+                        spec,
+                        |ms| lut16_wide::pack_wide(&CodeMat::random(ms, k, 4, seed ^ 5)),
+                    );
+                    let dflt = GemmPlan::new(&wp, LutWideTile::new(lut), opts);
+                    for &b in &batches {
+                        let mm = b * m;
+                        let a = CodeMat::random(mm, k, 4, seed ^ (0x30 + b as u64));
+                        let ap = lut16_wide::pack_wide(&a);
+                        let mut want = vec![0i32; mm * n];
+                        let mut got = vec![0i32; mm * n];
+                        dflt.execute(&ap, &mut want);
+                        tuned.execute(&ap, &mut got);
+                        if got != want {
+                            return Err(format!(
+                                "lut4b diverges m={m} n={n} k={k} t={threads} b={b}"
+                            ));
+                        }
+                    }
+                }
+                // int8
+                {
+                    let mut rng = Rng::new(seed ^ 6);
+                    let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+                    let (wp, sums) = int8::pack_weights_i8(&wvals, n, k);
+                    let (tuned, _) = tune_plan_bucketed(
+                        &wp,
+                        Int8Tile::new(128, sums.clone()),
+                        opts,
+                        spec,
+                        |ms| {
+                            let mut r2 = Rng::new(seed ^ 7);
+                            let codes: Vec<u8> =
+                                (0..ms * k).map(|_| r2.below(256) as u8).collect();
+                            pack::pack(&CodeMat::from_data(ms, k, 8, codes), Layout::Int8)
+                        },
+                    );
+                    let dflt = GemmPlan::new(&wp, Int8Tile::new(128, sums), opts);
+                    for &b in &batches {
+                        let mm = b * m;
+                        let mut r3 = Rng::new(seed ^ (0x40 + b as u64));
+                        let codes: Vec<u8> = (0..mm * k).map(|_| r3.below(256) as u8).collect();
+                        let ap = pack::pack(&CodeMat::from_data(mm, k, 8, codes), Layout::Int8);
+                        let mut want = vec![0i32; mm * n];
+                        let mut got = vec![0i32; mm * n];
+                        dflt.execute(&ap, &mut want);
+                        tuned.execute(&ap, &mut got);
+                        if got != want {
+                            return Err(format!(
+                                "int8 diverges m={m} n={n} k={k} t={threads} b={b}"
+                            ));
+                        }
+                    }
+                }
+                // lut16-f32 (ulp-equal per K-block regrouping)
+                {
+                    let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
+                    let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
+                    let lut = Lut16F32::build(&wcb, &acb);
+                    let w = CodeMat::random(n, k, 2, seed ^ 8);
+                    let wp = pack::pack(&w, Layout::NibbleHi);
+                    let (tuned, _) = tune_plan_bucketed(
+                        &wp,
+                        Lut16F32Tile::new(lut.clone()),
+                        opts,
+                        spec,
+                        |ms| pack::pack(&CodeMat::random(ms, k, 2, seed ^ 9), Layout::NibbleLo),
+                    );
+                    let dflt = GemmPlan::new(&wp, Lut16F32Tile::new(lut), opts);
+                    for &b in &batches {
+                        let mm = b * m;
+                        let a = CodeMat::random(mm, k, 2, seed ^ (0x50 + b as u64));
+                        let ap = pack::pack(&a, Layout::NibbleLo);
+                        let mut want = vec![0f32; mm * n];
+                        let mut got = vec![0f32; mm * n];
+                        dflt.execute(&ap, &mut want);
+                        tuned.execute(&ap, &mut got);
+                        if let Err(e) = prop::assert_close(&got, &want, 1e-4, 1e-5) {
+                            return Err(format!(
+                                "lut16-f32 diverges m={m} n={n} k={k} t={threads} b={b}: {e}"
+                            ));
+                        }
                     }
                 }
                 Ok(())

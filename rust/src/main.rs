@@ -17,8 +17,11 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "model", help: "model name (see `models`)", takes_value: true, default: Some("small_cnn") },
         OptSpec { name: "backend", help: "gemm backend: fp32|int8|lut16[-a..-d]|lut3b|lut4b|lut65k|lut16-f32|bitserial|ulppack|portable", takes_value: true, default: Some("lut16-d") },
         OptSpec { name: "addr", help: "listen address for serve", takes_value: true, default: Some("127.0.0.1:7070") },
-        OptSpec { name: "batch", help: "max dynamic batch size", takes_value: true, default: Some("8") },
+        OptSpec { name: "batch", help: "max dynamic batch size (adaptive mode treats it as the cap)", takes_value: true, default: Some("8") },
         OptSpec { name: "wait-ms", help: "max batching wait (ms)", takes_value: true, default: Some("2") },
+        OptSpec { name: "queue-cap", help: "request queue capacity before rejection (serve)", takes_value: true, default: Some("128") },
+        OptSpec { name: "adaptive-batch", help: "pick max_batch from measured per-M-bucket plan times (serve; needs --autotune)", takes_value: false, default: None },
+        OptSpec { name: "batch-latency-ms", help: "latency bound for --adaptive-batch (estimated fused GEMM ms per batch; 0 = unbounded)", takes_value: true, default: Some("50") },
         OptSpec { name: "iters", help: "iterations for profile/infer", takes_value: true, default: Some("3") },
         OptSpec { name: "classes", help: "classifier width", takes_value: true, default: Some("10") },
         OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
@@ -66,14 +69,19 @@ fn parse_backend(args: &Args) -> Result<Backend, deepgemm::Error> {
     Backend::parse(name).map_err(deepgemm::Error::Config)
 }
 
-fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
+/// Compile the CLI-selected model. `max_batch` is the serving batch
+/// cap the autotuner buckets Ms against (`serve` passes its
+/// `--batch`; single-image commands pass 1 so only the per-image
+/// bucket is tuned).
+fn compile_model(args: &Args, max_batch: usize) -> Result<CompiledModel, deepgemm::Error> {
     let model = args.get_or("model", "small_cnn");
     let classes = args.get_usize("classes", 10).map_err(deepgemm::Error::Config)?;
     let seed = args.get_usize("seed", 0).map_err(deepgemm::Error::Config)? as u64;
     let backend = parse_backend(args)?;
     let graph = zoo::build(model, classes, seed)?;
     // Warm the autotune cache from disk so a restarted server performs
-    // zero tuning runs for shapes it has already measured.
+    // zero tuning runs for shapes (including all M buckets) it has
+    // already measured.
     let cache_path = args.get("tune-cache").map(std::path::PathBuf::from);
     if let Some(p) = &cache_path {
         if p.exists() {
@@ -84,19 +92,28 @@ fn compile_model(args: &Args) -> Result<CompiledModel, deepgemm::Error> {
         }
     }
     eprintln!(
-        "compiling {model} ({} convs, {:.1}M params) for backend {} (autotune {})...",
+        "compiling {model} ({} convs, {:.1}M params) for backend {} (autotune {}, max_batch {max_batch})...",
         graph.conv_count(),
         graph.conv_params() as f64 / 1e6,
         backend.name(),
         tune::default_mode().name()
     );
-    let compiled = CompiledModel::compile(graph, backend, &[])?;
+    let assign = |_: usize, _: &deepgemm::nn::ConvSpec| -> Option<Backend> { None };
+    let compiled = CompiledModel::compile_tuned_batched(
+        graph,
+        backend,
+        &[],
+        &assign,
+        tune::default_mode(),
+        max_batch,
+    )?;
     if compiled.tuning.is_tuned() {
         eprintln!(
-            "autotune: {} plans, {} measured, {} cache hits, {:.1} ms",
+            "autotune: {} shape decisions, {} measured, {} cache hits, {} truncated, {:.1} ms",
             compiled.tuning.plans(),
             compiled.tuning.measured(),
             compiled.tuning.cache_hits(),
+            compiled.tuning.truncated(),
             compiled.tuning.tune_micros() as f64 / 1e3
         );
         if let Some(p) = &cache_path {
@@ -141,30 +158,39 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
             Ok(())
         }
         "serve" => {
-            let model = compile_model(args)?;
-            let mut router = Router::new();
-            let cfg = BatcherConfig {
-                max_batch: args.get_usize("batch", 8).map_err(deepgemm::Error::Config)?,
-                max_wait: Duration::from_millis(
-                    args.get_usize("wait-ms", 2).map_err(deepgemm::Error::Config)? as u64,
-                ),
-                queue_cap: 128,
-            };
-            router.register(model, cfg);
-            // The autotune knob + cache were already applied around
-            // compile_model; the config carries them for observability.
-            serve(
-                Arc::new(router),
-                &ServerConfig {
-                    addr: args.get_or("addr", "127.0.0.1:7070").into(),
-                    threads,
-                    autotune: None,
-                    tune_cache: None,
+            // The server config (incl. batching knobs) first: the
+            // compile tunes its M buckets against the same max_batch
+            // the batcher will fuse, and registration consumes
+            // `config.batcher` so the config is the single source of
+            // batching truth. The autotune knob + cache are applied
+            // around compile_model, so the config leaves them unset.
+            let config = ServerConfig {
+                addr: args.get_or("addr", "127.0.0.1:7070").into(),
+                threads,
+                autotune: None,
+                tune_cache: None,
+                batcher: BatcherConfig {
+                    max_batch: args.get_usize("batch", 8).map_err(deepgemm::Error::Config)?,
+                    max_wait: Duration::from_millis(
+                        args.get_usize("wait-ms", 2).map_err(deepgemm::Error::Config)? as u64,
+                    ),
+                    queue_cap: args
+                        .get_usize("queue-cap", 128)
+                        .map_err(deepgemm::Error::Config)?,
+                    adaptive: args.flag("adaptive-batch"),
+                    latency_bound: Duration::from_millis(
+                        args.get_usize("batch-latency-ms", 50).map_err(deepgemm::Error::Config)?
+                            as u64,
+                    ),
                 },
-            )
+            };
+            let model = compile_model(args, config.batcher.max_batch)?;
+            let mut router = Router::new();
+            router.register(model, config.batcher);
+            serve(Arc::new(router), &config)
         }
         "infer" => {
-            let model = compile_model(args)?;
+            let model = compile_model(args, 1)?;
             let (c, h, w) = model.graph.input_chw;
             let iters = args.get_usize("iters", 3).map_err(deepgemm::Error::Config)?;
             for i in 0..iters {
@@ -182,7 +208,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
             Ok(())
         }
         "profile" => {
-            let model = compile_model(args)?;
+            let model = compile_model(args, 1)?;
             let (c, h, w) = model.graph.input_chw;
             let iters = args.get_usize("iters", 3).map_err(deepgemm::Error::Config)?;
             let mut prof = StageProfile::new();

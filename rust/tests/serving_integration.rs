@@ -1,10 +1,13 @@
 //! Coordinator integration: router + batcher + TCP server under
-//! concurrent load, multi-model routing, and failure behaviour.
+//! concurrent load, multi-model routing, failure behaviour, and the
+//! bucketed tuning-cache persistence path (CI runs this file with
+//! `AUTOTUNE=quick` so the M-bucket autotune path is exercised on
+//! every push).
 
 use deepgemm::coordinator::{server, BatcherConfig, Client, Router, ServerConfig};
 use deepgemm::engine::CompiledModel;
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::Backend;
+use deepgemm::kernels::{tune, Backend};
 use deepgemm::nn::{zoo, Tensor};
 use deepgemm::util::json::Json;
 use deepgemm::util::rng::Rng;
@@ -79,6 +82,7 @@ fn batching_improves_throughput_metrics() {
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(15),
             queue_cap: 64,
+            ..Default::default()
         },
     );
     let router = Arc::new(router);
@@ -99,6 +103,73 @@ fn batching_improves_throughput_metrics() {
 }
 
 #[test]
+fn bucketed_tune_cache_persists_and_warm_restart_restores_all_buckets() {
+    // The warm-restart guarantee, batch-aware: a batched tuned compile
+    // produces one cached decision per (plan, M bucket); saving the
+    // cache, dropping exactly those in-memory entries (a simulated
+    // restart — other parallel tests' entries are untouched), and
+    // reloading the file must restore every bucket, so a recompile
+    // performs zero tuning runs and picks identical shapes.
+    let mut rng = Rng::new(0xCAFE);
+    let mut g = zoo::small_cnn(8, &mut rng);
+    // Unique input size → unique per-layer Ms (900/225/49 per image
+    // instead of the 32×32 zoo's), so this test's cache keys cannot
+    // collide with any other test's and the remove/reload below cannot
+    // race parallel compiles.
+    g.input_chw = (3, 30, 30);
+    let assign = |_: usize, _: &deepgemm::nn::ConvSpec| -> Option<Backend> { None };
+    let m1 = CompiledModel::compile_tuned_batched(
+        g.clone(),
+        Backend::Lut16(Scheme::D),
+        &[],
+        &assign,
+        tune::AutotuneMode::Quick,
+        8,
+    )
+    .unwrap();
+    assert!(m1.tuning.is_tuned());
+    assert_eq!(m1.tuning.measured_batch_sizes(), vec![1, 2, 4, 8]);
+    let keys: Vec<tune::TuneKey> =
+        m1.tuning.layers.iter().map(|(_, o)| o.key.clone()).collect();
+    assert!(!keys.is_empty());
+    for key in &keys {
+        assert!(tune::cache_lookup(key).is_some(), "decision not cached: {key:?}");
+    }
+    // Persist, then simulate the restart for our keys only.
+    let dir = std::env::temp_dir().join("dg_bucketed_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune_cache.json");
+    let saved = tune::save_cache(&path).unwrap();
+    assert!(saved >= keys.len(), "saved {saved} < {} bucketed decisions", keys.len());
+    for key in &keys {
+        tune::cache_remove(key);
+        assert!(tune::cache_lookup(key).is_none());
+    }
+    let loaded = tune::load_cache(&path).unwrap();
+    assert_eq!(loaded, saved);
+    for ((_, o), key) in m1.tuning.layers.iter().zip(&keys) {
+        let back = tune::cache_lookup(key).expect("bucket restored from file");
+        assert_eq!(back.shape, o.shape, "restored shape differs for {key:?}");
+    }
+    // Recompile on the warm cache: all buckets hit, zero measurement.
+    let m2 = CompiledModel::compile_tuned_batched(
+        g,
+        Backend::Lut16(Scheme::D),
+        &[],
+        &assign,
+        tune::AutotuneMode::Quick,
+        8,
+    )
+    .unwrap();
+    assert_eq!(m2.tuning.cache_hits(), m2.tuning.plans());
+    assert_eq!(m2.tuning.measured(), 0);
+    for ((_, a), (_, b)) in m1.tuning.layers.iter().zip(m2.tuning.layers.iter()) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.shape, b.shape, "warm restart changed a bucket shape: {:?}", a.key);
+    }
+}
+
+#[test]
 fn rejected_requests_are_counted_not_crashed() {
     let mut router = Router::new();
     router.register(
@@ -107,6 +178,7 @@ fn rejected_requests_are_counted_not_crashed() {
             max_batch: 1,
             max_wait: std::time::Duration::from_millis(0),
             queue_cap: 1,
+            ..Default::default()
         },
     );
     let router = Arc::new(router);
