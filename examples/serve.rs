@@ -1,6 +1,8 @@
 //! Serving demo: start the TCP server with a small CNN on the LUT-16
 //! engine, drive it with concurrent line-JSON clients, print latency
-//! percentiles, throughput and batcher metrics, then shut down.
+//! percentiles, throughput, batcher metrics and worker health, then
+//! drain gracefully (every accepted request answered before the
+//! listener stops).
 //!
 //!     cargo run --release --example serve [n_clients] [reqs_per_client]
 
@@ -71,5 +73,17 @@ fn main() {
     let mut c = Client::connect(&addr.to_string()).expect("connect");
     let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).expect("metrics");
     println!("server metrics:\n{}", m.get("metrics").unwrap().as_str().unwrap());
-    let _ = c.call(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+    // Worker liveness + queue depth, as a load balancer would poll it.
+    let h = c.call(&Json::obj(vec![("cmd", Json::str("health"))])).expect("health");
+    println!(
+        "health: status={} models={}",
+        h.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
+        h.get("models").map(|v| v.dump()).unwrap_or_default()
+    );
+    // Graceful exit: drain answers everything already accepted, joins
+    // the workers, then stops the listener (vs. shutdown, which only
+    // stops the listener).
+    let d = c.call(&Json::obj(vec![("cmd", Json::str("drain"))])).expect("drain");
+    assert_eq!(d.get("ok").and_then(|v| v.as_bool()), Some(true));
+    println!("drained; server stopped");
 }

@@ -1,15 +1,41 @@
-//! Dynamic batcher: one worker thread per model pulls requests from a
-//! bounded queue and executes them in batches of up to `max_batch`,
-//! waiting at most `max_wait` to fill a batch (the classic
+//! Dynamic batcher: one supervised worker thread per model pulls
+//! requests from a bounded queue and executes them in batches of up to
+//! `max_batch`, waiting at most `max_wait` to fill a batch (the classic
 //! latency/throughput knob). Bounded queues give natural backpressure:
 //! when the queue is full the router rejects instead of buffering
 //! unboundedly.
 //!
 //! A formed batch is executed as *one* fused forward
-//! ([`CompiledModel::forward_batch`]): the batch dimension is stacked
-//! into the GEMM's M, so all requests in the batch share a single
-//! planned (tiled, multi-threaded) GEMM per layer instead of replaying
-//! the model per request.
+//! ([`CompiledModel::forward_batch_with`]): the batch dimension is
+//! stacked into the GEMM's M, so all requests in the batch share a
+//! single planned (tiled, multi-threaded) GEMM per layer instead of
+//! replaying the model per request.
+//!
+//! ## Fault tolerance
+//!
+//! The worker loop is not trusted to stay alive:
+//!
+//! - **Panic isolation.** Every fused forward runs under
+//!   `catch_unwind`; a panic fails the in-flight batch with a typed
+//!   [`crate::Error::WorkerPanic`] (every waiter gets an answer), is
+//!   counted in [`Metrics`], and bubbles a `WorkerExit::Panicked` to
+//!   the supervisor.
+//! - **Supervision.** The thread spawned by [`BatchWorker::spawn`] is a
+//!   *supervisor*: it (re)runs the worker loop, and on panic respawns
+//!   it with a fresh [`crate::engine::ExecCtx`] (the old one may hold
+//!   partially-written state) after a bounded exponential backoff.
+//!   After [`BatcherConfig::max_respawns`] consecutive panics it gives
+//!   up: the model is marked unhealthy ([`WorkerState`]), queued jobs
+//!   are failed with a typed error, and the router rejects new requests
+//!   up front.
+//! - **Deadlines.** Each `Job` may carry a deadline (from
+//!   [`BatcherConfig::request_timeout`]); jobs already expired when a
+//!   batch is fused are *shed* — answered with [`crate::Error::Timeout`]
+//!   without paying for compute. The router counts them as `expired`,
+//!   not `errors`.
+//! - **Drain.** `BatchWorker::drain` closes the queue; the worker
+//!   answers everything already accepted, then exits cleanly and is
+//!   joined.
 //!
 //! With [`BatcherConfig::adaptive`] set, `max_batch` is not taken on
 //! faith: the worker reads the model's per-M-bucket autotune
@@ -19,12 +45,14 @@
 //! buckets the GEMM plans were actually tuned at.
 
 use crate::coordinator::metrics::Metrics;
-use crate::engine::CompiledModel;
+use crate::engine::{CompiledModel, ExecCtx};
 use crate::kernels::tune;
 use crate::nn::Tensor;
 use crate::profiling::StageProfile;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching configuration.
@@ -47,6 +75,20 @@ pub struct BatcherConfig {
     /// Latency bound for the adaptive pick: estimated fused GEMM time
     /// per batch. Zero disables the bound.
     pub latency_bound: Duration,
+    /// Per-request deadline, measured from enqueue: jobs still queued
+    /// past it are shed without compute (counted as `expired`), and
+    /// [`crate::coordinator::Router::infer`] bounds its wait on the
+    /// reply channel by it, so a dead or wedged worker cannot hang a
+    /// client forever. `Duration::ZERO` disables deadlines (clients
+    /// then wait indefinitely, as before).
+    pub request_timeout: Duration,
+    /// Consecutive worker panics tolerated before the supervisor gives
+    /// up and marks the model unhealthy. The counter resets after a
+    /// batch completes without panicking.
+    pub max_respawns: usize,
+    /// Base of the supervisor's exponential respawn backoff (doubles
+    /// per consecutive panic, capped at 5 s).
+    pub respawn_backoff: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -60,6 +102,9 @@ impl Default for BatcherConfig {
             queue_cap: 128,
             adaptive: false,
             latency_bound: Duration::from_millis(50),
+            request_timeout: Duration::from_secs(30),
+            max_respawns: 3,
+            respawn_backoff: Duration::from_millis(50),
         }
     }
 }
@@ -77,48 +122,139 @@ pub struct InferResponse {
 pub(crate) struct Job {
     pub input: Tensor,
     pub enqueued: Instant,
+    /// Shed (answered with [`crate::Error::Timeout`]) if still queued
+    /// past this instant. `None` = no deadline.
+    pub deadline: Option<Instant>,
     pub reply: SyncSender<crate::Result<InferResponse>>,
 }
 
-/// Handle to a model's worker (clone-able sender side).
+/// Liveness/health of one model's worker, shared between the supervisor
+/// thread, the router (fast-fail on unhealthy models, drain) and the
+/// health endpoint. The queue-depth gauge is also registered with
+/// [`Metrics`] so `render()`/`{"cmd":"stats"}` can report it.
+pub struct WorkerState {
+    /// Worker (supervisor) thread currently running.
+    alive: AtomicBool,
+    /// False once the supervisor exhausted its respawn budget; the
+    /// router rejects requests for an unhealthy model up front.
+    healthy: AtomicBool,
+    /// Times the supervisor respawned the worker loop after a panic.
+    respawns: AtomicUsize,
+    /// Requests accepted into the queue but not yet pulled by the
+    /// worker (shared with [`Metrics`] as a per-model gauge).
+    queue_depth: Arc<AtomicUsize>,
+    /// Batches answered without panicking — the supervisor uses it to
+    /// reset its consecutive-panic streak after forward progress.
+    progress: AtomicUsize,
+}
+
+impl WorkerState {
+    fn new() -> Self {
+        Self {
+            alive: AtomicBool::new(true),
+            healthy: AtomicBool::new(true),
+            respawns: AtomicUsize::new(0),
+            queue_depth: Arc::new(AtomicUsize::new(0)),
+            progress: AtomicUsize::new(0),
+        }
+    }
+
+    /// Worker thread still running (false after drain or give-up).
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// False once the supervisor gave up respawning.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::SeqCst)
+    }
+
+    /// Supervisor respawns so far.
+    pub fn respawns(&self) -> usize {
+        self.respawns.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently queued (accepted, not yet pulled).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    fn dec_queue(&self) {
+        // Saturating: a shed/drained job may race the gauge to zero.
+        let _ = self.queue_depth.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+}
+
+/// Handle to a model's supervised worker.
 pub struct BatchWorker {
-    pub(crate) tx: SyncSender<Job>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    tx: Mutex<Option<SyncSender<Job>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Liveness/health shared with the supervisor thread.
+    pub(crate) state: Arc<WorkerState>,
+    /// The worker's effective per-request deadline (the router derives
+    /// job deadlines and its reply wait from it).
+    pub(crate) request_timeout: Duration,
 }
 
 impl BatchWorker {
-    /// Spawn the worker thread owning `model`. With
+    /// Spawn the supervisor thread owning `model`. With
     /// [`BatcherConfig::adaptive`] the effective `max_batch` is
     /// resolved here from the model's measured per-bucket plan times
     /// and published to the metrics sink.
     pub fn spawn(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Self {
         let cfg = resolve_adaptive(&model, cfg);
         metrics.set_batcher(&model.name, cfg.max_batch as u64, cfg.adaptive);
+        let state = Arc::new(WorkerState::new());
+        metrics.set_queue_gauge(&model.name, state.queue_depth.clone());
         let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_cap);
+        let model = Arc::new(model);
+        let st = state.clone();
         let handle = std::thread::Builder::new()
             .name(format!("batcher-{}", model.name))
-            .spawn(move || worker_loop(model, cfg, metrics, rx))
+            .spawn(move || supervise(model, cfg, metrics, rx, st))
             .expect("spawn batch worker");
-        Self { tx, handle: Some(handle) }
+        Self {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            state,
+            request_timeout: cfg.request_timeout,
+        }
     }
 
-    /// Non-blocking submit; `Err` means the queue is full (backpressure).
+    /// Non-blocking submit; `Err` means the queue is full, draining, or
+    /// the worker is gone (backpressure — the router turns it into a
+    /// reject).
     pub(crate) fn try_submit(&self, job: Job) -> Result<(), Job> {
-        match self.tx.try_send(job) {
-            Ok(()) => Ok(()),
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            return Err(job); // draining: queue already closed
+        };
+        match tx.try_send(job) {
+            Ok(()) => {
+                self.state.queue_depth.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }
             Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+
+    /// Graceful drain: close the queue (new submits reject), let the
+    /// worker answer every already-accepted job, then join it. Idempotent.
+    pub(crate) fn drain(&self) {
+        // Dropping the sender closes the channel; the worker loop keeps
+        // receiving queued jobs until empty, then exits Drained.
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
         }
     }
 }
 
 impl Drop for BatchWorker {
     fn drop(&mut self) {
-        // Closing the channel ends the worker loop.
-        let (dead_tx, _) = std::sync::mpsc::sync_channel(1);
-        self.tx = dead_tx;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.drain();
     }
 }
 
@@ -156,45 +292,152 @@ fn resolve_adaptive(model: &CompiledModel, mut cfg: BatcherConfig) -> BatcherCon
     cfg
 }
 
-fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, rx: Receiver<Job>) {
-    // One execution context per worker, reused across batches: the
+/// Why one run of the worker loop ended.
+enum WorkerExit {
+    /// Queue closed and fully flushed — clean shutdown.
+    Drained,
+    /// A panic was caught (in-flight batch already failed with
+    /// [`crate::Error::WorkerPanic`]); the supervisor decides whether
+    /// to respawn.
+    Panicked,
+}
+
+/// Supervisor body: run the worker loop, respawn it on panic with a
+/// fresh [`ExecCtx`] and bounded exponential backoff, give up (mark
+/// unhealthy, fail queued jobs) after `cfg.max_respawns` consecutive
+/// panics.
+fn supervise(
+    model: Arc<CompiledModel>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Job>,
+    state: Arc<WorkerState>,
+) {
+    let mut consecutive = 0usize;
+    let mut first = true;
+    loop {
+        // Fresh ExecCtx per (re)spawn: after a panic the old context may
+        // hold partially-written arena state.
+        let mut ctx = model.new_ctx();
+        let progress_before = state.progress.load(Ordering::SeqCst);
+        let exit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_worker(&model, &cfg, &metrics, &rx, &state, &mut ctx, first)
+        }));
+        first = false;
+        // Forward progress since the last respawn breaks the panic
+        // streak: only back-to-back panics count against the budget.
+        if state.progress.load(Ordering::SeqCst) != progress_before {
+            consecutive = 0;
+        }
+        match exit {
+            Ok(WorkerExit::Drained) => {
+                state.alive.store(false, Ordering::SeqCst);
+                return;
+            }
+            Ok(WorkerExit::Panicked) => { /* counted at the catch site */ }
+            Err(_) => {
+                // Panic outside the per-batch guard (e.g. while forming
+                // a batch). No batch was in flight; any pulled job's
+                // reply sender was dropped by the unwind, which the
+                // router surfaces as a worker error.
+                metrics.on_panic();
+            }
+        }
+        consecutive += 1;
+        if consecutive > cfg.max_respawns {
+            state.healthy.store(false, Ordering::SeqCst);
+            state.alive.store(false, Ordering::SeqCst);
+            eprintln!(
+                "batcher-{}: giving up after {} consecutive panics ({} respawns); \
+                 marking model unhealthy",
+                model.name,
+                consecutive,
+                cfg.max_respawns
+            );
+            // Fail everything still queued with a typed error, then
+            // drop the receiver so future submits disconnect fast.
+            while let Ok(job) = rx.try_recv() {
+                state.dec_queue();
+                let _ = job.reply.send(Err(crate::Error::WorkerPanic(format!(
+                    "model '{}' is unhealthy: worker gave up after {} respawns",
+                    model.name, cfg.max_respawns
+                ))));
+            }
+            return;
+        }
+        state.respawns.fetch_add(1, Ordering::SeqCst);
+        metrics.on_respawn();
+        let backoff = backoff_delay(cfg.respawn_backoff, consecutive);
+        eprintln!(
+            "batcher-{}: worker panicked (consecutive: {consecutive}); respawning with a \
+             fresh ExecCtx in {:.0} ms",
+            model.name,
+            backoff.as_secs_f64() * 1e3
+        );
+        std::thread::sleep(backoff);
+    }
+}
+
+/// Exponential backoff for respawn attempt `n` (1-based), capped at 5 s.
+fn backoff_delay(base: Duration, n: usize) -> Duration {
+    let factor = 1u32 << (n - 1).min(16) as u32;
+    (base * factor).min(Duration::from_secs(5))
+}
+
+fn run_worker(
+    model: &CompiledModel,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+    rx: &Receiver<Job>,
+    state: &WorkerState,
+    ctx: &mut ExecCtx,
+    announce: bool,
+) -> WorkerExit {
+    // One execution context per worker run, reused across batches: the
     // compiled plan's arena + conv scratch grow to the largest batch
     // seen, after which steady-state forwards allocate nothing in the
     // quantize→im2col→pack→GEMM→dequant pipeline. Report the static
     // memory plan once at startup.
-    let mut ctx = model.new_ctx();
-    metrics.set_arena_planned(&model.name, model.plan.arena_bytes_per_image() as u64);
-    eprintln!(
-        "batcher-{}: static memory plan = {} arena slots, {} B/image",
-        model.name,
-        model.plan.n_slots(),
-        model.plan.arena_bytes_per_image()
-    );
-    if model.tuning.is_tuned() {
+    if announce {
+        metrics.set_arena_planned(&model.name, model.plan.arena_bytes_per_image() as u64);
         eprintln!(
-            "batcher-{}: autotune = {} shape decisions, {} measured, {} cache hits, \
-             {} truncated samples, {:.1} ms tuning{}",
+            "batcher-{}: static memory plan = {} arena slots, {} B/image",
             model.name,
-            model.tuning.plans(),
-            model.tuning.measured(),
-            model.tuning.cache_hits(),
-            model.tuning.truncated(),
-            model.tuning.tune_micros() as f64 / 1e3,
-            if model.tuning.stale_threads {
-                " (STALE thread count — serving default shapes)"
-            } else {
-                ""
-            }
+            model.plan.n_slots(),
+            model.plan.arena_bytes_per_image()
         );
-        for line in model.tuning.lines() {
-            eprintln!("batcher-{}:   {line}", model.name);
+        if model.tuning.is_tuned() {
+            eprintln!(
+                "batcher-{}: autotune = {} shape decisions, {} measured, {} cache hits, \
+                 {} truncated samples, {:.1} ms tuning{}",
+                model.name,
+                model.tuning.plans(),
+                model.tuning.measured(),
+                model.tuning.cache_hits(),
+                model.tuning.truncated(),
+                model.tuning.tune_micros() as f64 / 1e3,
+                if model.tuning.stale_threads {
+                    " (STALE thread count — serving default shapes)"
+                } else {
+                    ""
+                }
+            );
+            for line in model.tuning.lines() {
+                eprintln!("batcher-{}:   {line}", model.name);
+            }
         }
     }
     loop {
+        // Fault-injection site for the batch loop itself (outside the
+        // per-batch guard → exercises the supervisor's outer catch).
+        let _ = crate::util::failpoint::eval("batcher_loop");
         // Block for the first request of a batch.
         let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => return, // all senders dropped
+            Ok(j) => {
+                state.dec_queue();
+                j
+            }
+            Err(_) => return WorkerExit::Drained, // queue closed + flushed
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
@@ -204,27 +447,60 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(j) => batch.push(j),
+                Ok(j) => {
+                    state.dec_queue();
+                    batch.push(j);
+                }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        // Shed already-expired jobs before paying for a fused forward:
+        // their clients have timed out (or are about to); answering
+        // `Timeout` costs nothing and keeps the GEMM for live requests.
+        // The router counts these as `expired`, not `errors`.
+        let now = Instant::now();
+        batch.retain(|j| match j.deadline {
+            Some(d) if now >= d => {
+                let _ = j.reply.send(Err(crate::Error::Timeout(format!(
+                    "request expired in queue after {:.0} ms (deadline {:.0} ms)",
+                    j.enqueued.elapsed().as_secs_f64() * 1e3,
+                    cfg.request_timeout.as_secs_f64() * 1e3,
+                ))));
+                false
+            }
+            _ => true,
+        });
+        if batch.is_empty() {
+            continue;
+        }
         metrics.on_batch(batch.len());
         let bsize = batch.len();
         // Fuse the batch into one forward: batch rows become GEMM M.
-        let (inputs, meta): (Vec<Tensor>, Vec<(Instant, SyncSender<crate::Result<InferResponse>>)>) =
-            batch.into_iter().map(|j| (j.input, (j.enqueued, j.reply))).unzip();
+        let mut inputs = Vec::with_capacity(bsize);
+        let mut meta = Vec::with_capacity(bsize);
+        for j in batch {
+            inputs.push(j.input);
+            meta.push((j.enqueued, j.reply));
+        }
         let queue_secs: Vec<f64> =
             meta.iter().map(|(enq, _)| enq.elapsed().as_secs_f64()).collect();
         let t0 = Instant::now();
         let mut prof = StageProfile::new();
         let warm = ctx.runs() > 0;
-        let result = model.forward_batch_with(&inputs, &mut ctx, &mut prof);
+        // The forward runs under catch_unwind so a panic (a kernel bug,
+        // a poisoned LUT, an injected failpoint) fails THIS batch with
+        // a typed error instead of silently killing the only worker and
+        // stranding every later request.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            model.forward_batch_with(&inputs, ctx, &mut prof)
+        }));
         // Every request in the fused batch waits for the whole forward,
         // so each one's compute latency IS the batch compute time.
         let compute_secs = t0.elapsed().as_secs_f64();
         match result {
-            Ok(ys) => {
+            Ok(Ok(ys)) => {
+                state.progress.fetch_add(1, Ordering::SeqCst);
                 if warm {
                     metrics.on_ctx_reuse();
                 }
@@ -236,11 +512,17 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
                         compute_secs,
                         batch_size: bsize,
                     };
-                    metrics.on_complete(q + compute_secs, q);
-                    let _ = reply.send(Ok(resp));
+                    // "Completed" means delivered: a client that gave up
+                    // on its deadline already counted as expired.
+                    if reply.send(Ok(resp)).is_ok() {
+                        metrics.on_complete(q + compute_secs, q);
+                    }
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
+                // A typed error is still forward progress (the worker
+                // answered and stays up) — it breaks a panic streak.
+                state.progress.fetch_add(1, Ordering::SeqCst);
                 // Batch-level failure: every waiter gets the error. (The
                 // router's per-model shape check means a fused batch is
                 // always uniform, so per-request divergence is
@@ -256,7 +538,34 @@ fn worker_loop(model: CompiledModel, cfg: BatcherConfig, metrics: Arc<Metrics>, 
                     let _ = reply.send(Err(payload));
                 }
             }
+            Err(payload) => {
+                // Panic isolation: fail the in-flight batch with the
+                // typed variant, then hand control back to the
+                // supervisor for a fresh-context respawn.
+                metrics.on_panic();
+                let msg = panic_message(payload.as_ref());
+                eprintln!(
+                    "batcher-{}: PANIC in forward (batch of {bsize}): {msg}",
+                    model.name
+                );
+                for (_, reply) in meta {
+                    metrics.on_error();
+                    let _ = reply.send(Err(crate::Error::WorkerPanic(msg.clone())));
+                }
+                return WorkerExit::Panicked;
+            }
         }
+    }
+}
+
+/// Best-effort human-readable message from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".into()
     }
 }
 
@@ -287,6 +596,7 @@ mod tests {
         let job = Job {
             input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         w.try_submit(job).map_err(|_| ()).expect("queue full");
@@ -301,6 +611,9 @@ mod tests {
         assert_eq!(resp.output.len(), 4);
         assert!(resp.compute_secs > 0.0);
         assert_eq!(m.counters().completed, 1);
+        assert!(w.state.is_alive());
+        assert!(w.state.is_healthy());
+        assert_eq!(w.state.respawns(), 0);
     }
 
     #[test]
@@ -330,6 +643,77 @@ mod tests {
         let planned = m.arena_planned();
         assert_eq!(planned.len(), 1);
         assert!(planned[0].1 > 0, "planned arena bytes must be reported at startup");
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_without_compute() {
+        let (w, m) = worker(4, 1, 16);
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        // A job whose deadline is already in the past must be answered
+        // with a typed Timeout and never reach the GEMM.
+        let job = Job {
+            input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
+            enqueued: Instant::now(),
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            reply: tx,
+        };
+        w.try_submit(job).map_err(|_| ()).expect("queue full");
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, crate::Error::Timeout(_)), "{err}");
+        let c = m.counters();
+        assert_eq!(c.completed, 0);
+        assert_eq!(c.batches, 0, "a fully-expired batch must not run a forward");
+        assert_eq!(c.errors, 0, "expired is not an error");
+    }
+
+    #[test]
+    fn drain_answers_queued_jobs_then_joins() {
+        let (w, m) = worker(2, 1, 16);
+        let rxs: Vec<_> = (0..4).map(|_| submit(&w)).collect();
+        w.drain();
+        for rx in &rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.output.len(), 4);
+        }
+        assert_eq!(m.counters().completed, 4);
+        assert!(!w.state.is_alive(), "drained worker must have exited");
+        assert!(w.state.is_healthy(), "drain is not a failure");
+        // Post-drain submits reject cleanly.
+        let (tx, _rx2) = std::sync::mpsc::sync_channel(1);
+        let job = Job {
+            input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: tx,
+        };
+        assert!(w.try_submit(job).is_err(), "drained worker must reject submits");
+    }
+
+    #[test]
+    fn queue_depth_gauge_rises_and_falls() {
+        let (w, m) = worker(1, 0, 8);
+        assert_eq!(w.state.queue_depth(), 0);
+        let rxs: Vec<_> = (0..4).map(|_| submit(&w)).collect();
+        for rx in &rxs {
+            let _ = rx.recv().unwrap();
+        }
+        // All pulled: gauge returns to zero (metrics sees the same atomic).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while w.state.queue_depth() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(w.state.queue_depth(), 0);
+        let depths = m.queue_depths();
+        assert_eq!(depths, vec![("small_cnn".to_string(), 0)]);
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let base = Duration::from_millis(50);
+        assert_eq!(backoff_delay(base, 1), Duration::from_millis(50));
+        assert_eq!(backoff_delay(base, 2), Duration::from_millis(100));
+        assert_eq!(backoff_delay(base, 3), Duration::from_millis(200));
+        assert_eq!(backoff_delay(base, 30), Duration::from_secs(5), "capped");
     }
 
     #[test]
@@ -397,6 +781,7 @@ mod tests {
             let job = Job {
                 input: Tensor::random(&[1, 3, 32, 32], 7, -1.0, 1.0),
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: tx,
             };
             match w.try_submit(job) {

@@ -7,7 +7,8 @@
 
 use crate::util::stats::Histogram;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Per-model autotune summary reported at registration time: how many
 /// shape decisions (plans × M buckets) went through the tuner, how many
@@ -46,6 +47,15 @@ pub struct Counters {
     /// Batches served on an already-warm `ExecCtx` (steady-state,
     /// allocation-free forwards).
     pub ctx_reuses: u64,
+    /// Worker panics caught by the supervision layer (each one fails
+    /// its in-flight batch with a typed `WorkerPanic` error).
+    pub panics: u64,
+    /// Requests that exceeded their deadline — shed from the queue
+    /// before compute, or timed out waiting for a reply. Deliberately
+    /// separate from `errors`: expiry is load shedding, not failure.
+    pub expired: u64,
+    /// Worker respawns performed by supervisors after panics.
+    pub respawns: u64,
 }
 
 struct Inner {
@@ -62,6 +72,10 @@ struct Inner {
     /// Effective batcher settings per model: (resolved max_batch,
     /// adaptive flag), set once per batch worker at spawn.
     batcher: HashMap<String, (u64, bool)>,
+    /// Live per-model queue-depth gauges: the atomic is owned by the
+    /// worker's state and updated lock-free on every submit/pull; the
+    /// metrics sink only reads it at render time.
+    queues: HashMap<String, Arc<AtomicUsize>>,
 }
 
 /// Thread-safe metrics sink shared by router, batchers and server.
@@ -86,6 +100,7 @@ impl Metrics {
                 arena_planned: HashMap::new(),
                 tuning: HashMap::new(),
                 batcher: HashMap::new(),
+                queues: HashMap::new(),
             }),
         }
     }
@@ -126,6 +141,37 @@ impl Metrics {
             g.arena_planned.iter().map(|(k, &b)| (k.clone(), b)).collect();
         v.sort();
         v
+    }
+
+    /// Register a model's live queue-depth gauge — called once per
+    /// batch worker at spawn; the worker updates the atomic lock-free.
+    pub fn set_queue_gauge(&self, model: &str, depth: Arc<AtomicUsize>) {
+        self.inner.lock().unwrap().queues.insert(model.to_string(), depth);
+    }
+
+    /// Current queue depth per model, sorted by model name.
+    pub fn queue_depths(&self) -> Vec<(String, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(String, usize)> =
+            g.queues.iter().map(|(k, d)| (k.clone(), d.load(Ordering::SeqCst))).collect();
+        v.sort();
+        v
+    }
+
+    /// A worker panic caught by the supervision layer.
+    pub fn on_panic(&self) {
+        self.inner.lock().unwrap().counters.panics += 1;
+    }
+
+    /// A request shed or timed out past its deadline (load shedding,
+    /// not an error).
+    pub fn on_expired(&self) {
+        self.inner.lock().unwrap().counters.expired += 1;
+    }
+
+    /// A supervisor respawned its worker after a panic.
+    pub fn on_respawn(&self) {
+        self.inner.lock().unwrap().counters.respawns += 1;
     }
 
     /// A batch served on an already-warm execution context.
@@ -197,8 +243,21 @@ impl Metrics {
                 .collect::<Vec<_>>()
                 .join("; ")
         };
+        let mut queues: Vec<(&String, usize)> =
+            g.queues.iter().map(|(k, d)| (k, d.load(Ordering::SeqCst))).collect();
+        queues.sort();
+        let depth_str = if queues.is_empty() {
+            "-".to_string()
+        } else {
+            queues
+                .iter()
+                .map(|(m, d)| format!("{m}={d}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
         format!(
             "requests={} completed={} rejected={} errors={} batches={}\n\
+             faults  panics={} respawns={} expired={}  queue_depth {depth_str}\n\
              latency p50={:.2}ms p95={:.2}ms mean={:.2}ms\n\
              queue   p50={:.3}ms p95={:.3}ms\n\
              batch   mean={:.2}\n\
@@ -209,6 +268,9 @@ impl Metrics {
             c.rejected,
             c.errors,
             c.batches,
+            c.panics,
+            c.respawns,
+            c.expired,
             g.latency.quantile(0.5) * 1e3,
             g.latency.quantile(0.95) * 1e3,
             g.latency.mean() * 1e3,
@@ -281,6 +343,29 @@ mod tests {
         assert_eq!(t.shapes.len(), 1);
         let r = m.render();
         assert!(r.contains("autotune small_cnn: plans=4 measured=1 hits=3"), "{r}");
+    }
+
+    #[test]
+    fn fault_counters_and_queue_gauge_render() {
+        let m = Metrics::new();
+        m.on_panic();
+        m.on_respawn();
+        m.on_expired();
+        m.on_expired();
+        let depth = Arc::new(AtomicUsize::new(7));
+        m.set_queue_gauge("small_cnn", depth.clone());
+        let c = m.counters();
+        assert_eq!(c.panics, 1);
+        assert_eq!(c.respawns, 1);
+        assert_eq!(c.expired, 2);
+        assert_eq!(c.errors, 0, "expired/panics must not bump errors by themselves");
+        assert_eq!(m.queue_depths(), vec![("small_cnn".to_string(), 7)]);
+        let r = m.render();
+        assert!(r.contains("panics=1 respawns=1 expired=2"), "{r}");
+        assert!(r.contains("queue_depth small_cnn=7"), "{r}");
+        // The gauge is live: the worker's atomic drives it.
+        depth.store(0, Ordering::SeqCst);
+        assert_eq!(m.queue_depths()[0].1, 0);
     }
 
     #[test]

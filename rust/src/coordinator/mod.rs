@@ -7,13 +7,25 @@
 //! is threads + channels, which for CPU-bound inference is the right
 //! shape anyway — one worker thread per model pins the packed weights hot
 //! in cache.
+//!
+//! The layer is fault-tolerant by construction (see `docs/SERVING.md`):
+//! batch workers run under a supervisor that catches panics, fails the
+//! in-flight batch with a typed [`crate::Error::WorkerPanic`], and
+//! respawns with a fresh execution context (bounded exponential
+//! backoff, give-up threshold → model marked unhealthy); requests carry
+//! deadlines ([`BatcherConfig::request_timeout`]) with queue-side
+//! shedding and client-side timeouts; `{"cmd":"health"}` reports
+//! per-model worker liveness + queue depth; and `{"cmd":"drain"}` /
+//! [`Router::drain`] answers every accepted request before shutdown.
+//! Every recovery path is exercised deterministically by the
+//! `failpoints`-gated chaos suite ([`crate::util::failpoint`]).
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatcherConfig, InferResponse};
+pub use batcher::{BatcherConfig, InferResponse, WorkerState};
 pub use metrics::Metrics;
-pub use router::Router;
+pub use router::{ModelHealth, Router};
 pub use server::{serve, Client, ServerConfig};

@@ -1,19 +1,44 @@
-//! Model router: registry of compiled models, each behind its own batch
-//! worker; routes inference requests by model name and applies
-//! backpressure (bounded queues → reject-on-full).
+//! Model router: registry of compiled models, each behind its own
+//! supervised batch worker; routes inference requests by model name,
+//! applies backpressure (bounded queues → reject-on-full), bounds every
+//! client wait by the model's request deadline, fast-fails requests for
+//! unhealthy models, and supports graceful drain.
 
 use crate::coordinator::batcher::{BatchWorker, BatcherConfig, InferResponse, Job};
 use crate::coordinator::metrics::{Metrics, TuneStats};
 use crate::engine::CompiledModel;
 use crate::nn::Tensor;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Extra slack the router grants past a request's deadline before
+/// declaring a client-side timeout: covers a batch that *started*
+/// computing just before the deadline and delivers slightly after it.
+const RECV_GRACE: Duration = Duration::from_millis(100);
+
+/// One model's liveness snapshot, as reported by `{"cmd":"health"}`.
+#[derive(Clone, Debug)]
+pub struct ModelHealth {
+    pub name: String,
+    /// Worker (supervisor) thread currently running.
+    pub alive: bool,
+    /// False once the supervisor exhausted its respawn budget.
+    pub healthy: bool,
+    /// Requests accepted but not yet pulled by the worker.
+    pub queue_depth: usize,
+    /// Times the supervisor respawned the worker after a panic.
+    pub respawns: usize,
+}
 
 /// The router.
 pub struct Router {
     workers: HashMap<String, BatchWorker>,
     input_shapes: HashMap<String, (usize, usize, usize)>,
+    /// Set by [`Self::drain`]: new requests are rejected while queued
+    /// ones are flushed.
+    draining: AtomicBool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -28,6 +53,7 @@ impl Router {
         Self {
             workers: HashMap::new(),
             input_shapes: HashMap::new(),
+            draining: AtomicBool::new(false),
             metrics: Arc::new(Metrics::new()),
         }
     }
@@ -86,13 +112,65 @@ impl Router {
         self.input_shapes.get(model).copied()
     }
 
-    /// Blocking inference: enqueue and wait for the response.
+    /// True once [`Self::drain`] has started (or finished).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Per-model worker liveness for the health endpoint, sorted by
+    /// model name.
+    pub fn health(&self) -> Vec<ModelHealth> {
+        let mut v: Vec<ModelHealth> = self
+            .workers
+            .iter()
+            .map(|(name, w)| ModelHealth {
+                name: name.clone(),
+                alive: w.state.is_alive(),
+                healthy: w.state.is_healthy(),
+                queue_depth: w.state.queue_depth(),
+                respawns: w.state.respawns(),
+            })
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Graceful drain: stop accepting new requests, answer every
+    /// already-accepted one, then join all workers. Idempotent; safe to
+    /// call from any thread holding an `Arc<Router>`. Returns once all
+    /// workers have exited.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for w in self.workers.values() {
+            w.drain();
+        }
+    }
+
+    /// Blocking inference: enqueue and wait for the response. The wait
+    /// is bounded by the model's [`BatcherConfig::request_timeout`]
+    /// (plus a small grace for in-flight compute), so a dead or wedged
+    /// worker yields a typed [`crate::Error::Timeout`] instead of a
+    /// hang; requests shed by the worker's deadline check surface the
+    /// same variant. Both paths count as `expired`, not `errors`.
     pub fn infer(&self, model: &str, input: Tensor) -> crate::Result<InferResponse> {
         self.metrics.on_request();
+        if self.is_draining() {
+            self.metrics.on_reject();
+            return Err(crate::Error::Runtime(format!(
+                "model '{model}' is draining (shutting down)"
+            )));
+        }
         let worker = self.workers.get(model).ok_or_else(|| {
             self.metrics.on_error();
             crate::Error::Config(format!("unknown model '{model}'"))
         })?;
+        if !worker.state.is_healthy() {
+            self.metrics.on_error();
+            return Err(crate::Error::WorkerPanic(format!(
+                "model '{model}' is unhealthy: worker gave up after {} respawns",
+                worker.state.respawns()
+            )));
+        }
         // Shape check up front so the error is synchronous.
         if let Some((c, h, w)) = self.input_chw(model) {
             if input.shape != vec![1, c, h, w] {
@@ -103,16 +181,39 @@ impl Router {
                 )));
             }
         }
+        let timeout = worker.request_timeout;
+        let deadline = (!timeout.is_zero()).then(|| Instant::now() + timeout);
         let (tx, rx) = std::sync::mpsc::sync_channel(1);
-        let job = Job { input, enqueued: Instant::now(), reply: tx };
+        let job = Job { input, enqueued: Instant::now(), deadline, reply: tx };
         if worker.try_submit(job).is_err() {
             self.metrics.on_reject();
             return Err(crate::Error::Runtime(format!(
                 "model '{model}' queue full (backpressure)"
             )));
         }
-        rx.recv()
-            .map_err(|_| crate::Error::Runtime("worker dropped response".into()))?
+        let result = match deadline {
+            Some(_) => match rx.recv_timeout(timeout + RECV_GRACE) {
+                Ok(r) => r,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    self.metrics.on_expired();
+                    return Err(crate::Error::Timeout(format!(
+                        "model '{model}' did not answer within {:.0} ms",
+                        timeout.as_secs_f64() * 1e3
+                    )));
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(crate::Error::Runtime("worker dropped response".into()))
+                }
+            },
+            None => rx
+                .recv()
+                .map_err(|_| crate::Error::Runtime("worker dropped response".into()))?,
+        };
+        if let Err(crate::Error::Timeout(_)) = &result {
+            // Shed by the worker's deadline check before compute.
+            self.metrics.on_expired();
+        }
+        result
     }
 }
 
@@ -151,6 +252,34 @@ mod tests {
         let bad = Tensor::random(&[1, 3, 16, 16], 3, -1.0, 1.0);
         let err = r.infer("small_cnn", bad).unwrap_err();
         assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn health_reports_live_worker() {
+        let r = router();
+        let h = r.health();
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].name, "small_cnn");
+        assert!(h[0].alive && h[0].healthy);
+        assert_eq!(h[0].respawns, 0);
+        assert!(!r.is_draining());
+    }
+
+    #[test]
+    fn drain_rejects_new_requests_and_joins_workers() {
+        let r = router();
+        let x = Tensor::random(&[1, 3, 32, 32], 3, -1.0, 1.0);
+        r.infer("small_cnn", x.clone()).unwrap();
+        r.drain();
+        assert!(r.is_draining());
+        let h = r.health();
+        assert!(!h[0].alive, "drained worker must have exited");
+        assert!(h[0].healthy, "drain is not a failure");
+        let err = r.infer("small_cnn", x).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+        assert!(r.metrics.counters().rejected >= 1);
+        // Idempotent.
+        r.drain();
     }
 
     #[test]

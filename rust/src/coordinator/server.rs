@@ -7,16 +7,25 @@
 //!   → {"cmd": "metrics"}        ← {"ok": true, "metrics": "..."}
 //!   → {"cmd": "models"}         ← {"ok": true, "models": [...]}
 //!   → {"cmd": "stats"}          ← {"ok": true, "models": [{"name",
-//!                                  "arena_planned_bytes_per_image",
+//!                                  "arena_planned_bytes_per_image", "queue_depth",
 //!                                  "autotune": {"plans", "measured", "cache_hits",
 //!                                               "truncated", "stale_threads",
 //!                                               "tune_ms", "shapes": [...]},
 //!                                  "batcher": {"max_batch", "adaptive"}}],
-//!                                  "ctx_reuses": N, "tune_cache_entries": M}
+//!                                  "ctx_reuses": N, "panics": N, "expired": N,
+//!                                  "respawns": N, "tune_cache_entries": M}
 //!                                  (static memory plan + ctx reuse + compile-time
 //!                                  per-M-bucket autotune decisions + effective
 //!                                  batcher settings; see docs/TUNING.md for how
 //!                                  to read the shape lines)
+//!   → {"cmd": "health"}         ← {"ok": true, "status": "ok|degraded|draining",
+//!                                  "models": [{"name", "alive", "healthy",
+//!                                  "queue_depth", "respawns"}]}
+//!                                  (per-model worker liveness + queue depth;
+//!                                  "degraded" once any supervisor gave up)
+//!   → {"cmd": "drain"}          ← {"ok": true}  (graceful: stop accepting,
+//!                                  answer every accepted request, join
+//!                                  workers, then stop the listener)
 //!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
 
 use crate::coordinator::router::Router;
@@ -27,6 +36,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -70,6 +80,11 @@ pub struct ServerConfig {
     /// `CompiledModel::compile_tuned_batched` at this `max_batch`
     /// makes the served batch sizes line up with the tuned M buckets.
     pub batcher: crate::coordinator::BatcherConfig,
+    /// Per-connection socket read/write timeout: a client that stops
+    /// reading or writing mid-request is disconnected instead of
+    /// pinning its handler thread forever. `Duration::ZERO` disables
+    /// (blocking sockets, pre-fault-tolerance behaviour).
+    pub conn_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +95,7 @@ impl Default for ServerConfig {
             autotune: None,
             tune_cache: None,
             batcher: crate::coordinator::BatcherConfig::default(),
+            conn_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -160,6 +176,7 @@ pub fn spawn(
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let conn_timeout = cfg.conn_timeout;
     let handle = std::thread::Builder::new()
         .name("deepgemm-accept".into())
         .spawn(move || {
@@ -169,6 +186,12 @@ pub fn spawn(
                 }
                 match stream {
                     Ok(s) => {
+                        // A wedged or vanished client must not pin its
+                        // handler thread forever: bound both directions.
+                        if !conn_timeout.is_zero() {
+                            let _ = s.set_read_timeout(Some(conn_timeout));
+                            let _ = s.set_write_timeout(Some(conn_timeout));
+                        }
                         let r = router.clone();
                         let st = stop.clone();
                         std::thread::spawn(move || {
@@ -184,7 +207,12 @@ pub fn spawn(
 }
 
 fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
+    // The accepted socket's local address IS the listener's bound
+    // address — kept to wake the accept loop out of `accept()` after a
+    // shutdown/drain command. (Connecting to the *peer* address, as an
+    // earlier version did, dialled the client instead and left the
+    // accept loop blocked until the next organic connection.)
+    let local = stream.local_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -196,8 +224,9 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
         writer.write_all(reply.dump().as_bytes())?;
         writer.write_all(b"\n")?;
         if stop.load(Ordering::SeqCst) {
-            // Wake the accept loop with a dummy connection.
-            let _ = TcpStream::connect(peer);
+            // Wake the accept loop with a dummy connection to our own
+            // listener so it observes the stop flag promptly.
+            let _ = TcpStream::connect(local);
             break;
         }
     }
@@ -262,9 +291,17 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                                     ]),
                                     None => Json::Null,
                                 };
+                                let depth = router
+                                    .metrics
+                                    .queue_depths()
+                                    .into_iter()
+                                    .find(|(m, _)| *m == name)
+                                    .map(|(_, d)| Json::num(d as f64))
+                                    .unwrap_or(Json::Null);
                                 Json::obj(vec![
                                     ("name", Json::str(name)),
                                     ("arena_planned_bytes_per_image", Json::num(bytes as f64)),
+                                    ("queue_depth", depth),
                                     ("autotune", tune_obj),
                                     ("batcher", batcher_obj),
                                 ])
@@ -276,8 +313,52 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                     "ctx_reuses",
                     Json::num(router.metrics.counters().ctx_reuses as f64),
                 ),
+                ("panics", Json::num(router.metrics.counters().panics as f64)),
+                ("expired", Json::num(router.metrics.counters().expired as f64)),
+                ("respawns", Json::num(router.metrics.counters().respawns as f64)),
                 ("tune_cache_entries", Json::num(tune::cache_len() as f64)),
             ]),
+            "health" => {
+                let models = router.health();
+                let draining = router.is_draining();
+                let degraded = models.iter().any(|m| !m.healthy);
+                let status = if draining {
+                    "draining"
+                } else if degraded {
+                    "degraded"
+                } else {
+                    "ok"
+                };
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("status", Json::str(status)),
+                    (
+                        "models",
+                        Json::Arr(
+                            models
+                                .into_iter()
+                                .map(|m| {
+                                    Json::obj(vec![
+                                        ("name", Json::str(m.name)),
+                                        ("alive", Json::Bool(m.alive)),
+                                        ("healthy", Json::Bool(m.healthy)),
+                                        ("queue_depth", Json::num(m.queue_depth as f64)),
+                                        ("respawns", Json::num(m.respawns as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            }
+            "drain" => {
+                // Graceful: reject new work, answer everything already
+                // accepted, join the workers — then stop the listener
+                // (handle_conn wakes the accept loop after replying).
+                router.drain();
+                stop.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))])
@@ -358,7 +439,16 @@ impl Client {
         self.writer.write_all(req.dump().as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            // EOF before any reply byte: the server closed the
+            // connection (shutdown/drain, conn timeout, or crash).
+            // Surface that instead of a confusing `bad json` error
+            // from parsing the empty string.
+            return Err(crate::Error::Runtime(
+                "connection closed by server before a reply arrived".into(),
+            ));
+        }
         Json::parse(&line).map_err(crate::Error::Msg)
     }
 

@@ -301,6 +301,14 @@ impl CompiledModel {
         if xs.is_empty() {
             return Ok(Vec::new());
         }
+        // Fault-injection sites (no-ops unless the `failpoints` feature
+        // is on AND a test/operator armed them): a slow forward, a
+        // failing forward, and a crashing forward — the three failure
+        // shapes the coordinator's supervision/deadline layer must
+        // survive.
+        crate::util::failpoint::eval("forward_delay_ms")?;
+        crate::util::failpoint::eval("forward_err")?;
+        crate::util::failpoint::eval("forward_panic")?;
         let view = self.run_batch(xs, ctx, prof)?;
         let shape = &self.plan.shapes[self.graph.output];
         Ok((0..xs.len()).map(|bi| Tensor::from_vec(shape, view.image(bi).to_vec())).collect())

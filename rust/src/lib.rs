@@ -50,6 +50,14 @@ pub enum Error {
     Config(String),
     Io(std::io::Error),
     Runtime(String),
+    /// A batch worker panicked while this request's batch was in
+    /// flight. The supervisor respawns the worker; retrying the request
+    /// is safe (the panic is counted and surfaced in metrics/health).
+    WorkerPanic(String),
+    /// The request exceeded its deadline — shed from the queue before
+    /// compute, or the client-side wait timed out. Counted as `expired`
+    /// in metrics, not as an error.
+    Timeout(String),
     Msg(String),
 }
 
@@ -60,6 +68,8 @@ impl std::fmt::Display for Error {
             Error::Config(s) => write!(f, "config error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::WorkerPanic(s) => write!(f, "worker panic: {s}"),
+            Error::Timeout(s) => write!(f, "timeout: {s}"),
             Error::Msg(s) => write!(f, "{s}"),
         }
     }

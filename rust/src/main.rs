@@ -22,6 +22,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "queue-cap", help: "request queue capacity before rejection (serve)", takes_value: true, default: Some("128") },
         OptSpec { name: "adaptive-batch", help: "pick max_batch from measured per-M-bucket plan times (serve; needs --autotune)", takes_value: false, default: None },
         OptSpec { name: "batch-latency-ms", help: "latency bound for --adaptive-batch (estimated fused GEMM ms per batch; 0 = unbounded)", takes_value: true, default: Some("50") },
+        OptSpec { name: "request-timeout-ms", help: "per-request deadline (serve): queued past it = shed as expired, client waits bounded by it (0 = no deadline)", takes_value: true, default: Some("30000") },
         OptSpec { name: "iters", help: "iterations for profile/infer", takes_value: true, default: Some("3") },
         OptSpec { name: "classes", help: "classifier width", takes_value: true, default: Some("10") },
         OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
@@ -182,7 +183,13 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
                         args.get_usize("batch-latency-ms", 50).map_err(deepgemm::Error::Config)?
                             as u64,
                     ),
+                    request_timeout: Duration::from_millis(
+                        args.get_usize("request-timeout-ms", 30_000)
+                            .map_err(deepgemm::Error::Config)? as u64,
+                    ),
+                    ..Default::default()
                 },
+                ..Default::default()
             };
             let model = compile_model(args, config.batcher.max_batch)?;
             let mut router = Router::new();

@@ -1,0 +1,271 @@
+//! Deterministic fault-injection harness (compiled under the
+//! `failpoints` cargo feature; a no-op otherwise).
+//!
+//! A *failpoint* is a named site planted in production code — e.g.
+//! `forward_panic` at the top of the engine's batched forward, or
+//! `batcher_loop` inside the batch worker — that normally does nothing.
+//! Tests (or an operator, via the `DEEPGEMM_FAILPOINTS` env var) *arm*
+//! a site with an action, and the next evaluation of that site executes
+//! it:
+//!
+//! - `FailAction::Panic` — `panic!` at the site (exercises
+//!   supervision / respawn paths),
+//! - `FailAction::Err` — return a typed [`crate::Error::Runtime`]
+//!   (exercises error propagation without unwinding),
+//! - `FailAction::DelayMs` — sleep before proceeding (exercises
+//!   deadlines, shedding and client-side timeouts).
+//!
+//! (The arming API — `arm`, `arm_times`, `disarm`, `disarm_all`,
+//! `FailAction` — only exists under the feature, which is why it is
+//! not linked here.)
+//!
+//! Arming is process-global, so concurrent tests that arm the *same*
+//! site must serialize (the chaos suite holds a lock). A site can be
+//! armed for a bounded number of hits (`arm_times`) — the standard
+//! shape for "panic once, then recover" scenarios — or until
+//! `disarm`ed.
+//!
+//! Env format (parsed once, lazily, on the first evaluation):
+//!
+//! ```text
+//! DEEPGEMM_FAILPOINTS="forward_panic=panic:1;forward_delay_ms=delay:250"
+//! ```
+//!
+//! Actions: `panic[:N]`, `err[:message]`, `delay:MS[:N]` where the
+//! optional trailing `N` caps the number of hits.
+//!
+//! With the feature disabled, [`eval`] is an inlined `Ok(())` and the
+//! registry does not exist — zero cost on serving hot paths.
+
+/// Evaluate a failpoint site. Returns `Err` when the site is armed with
+/// an error action, panics when armed with a panic action, sleeps when
+/// armed with a delay; otherwise (unarmed, or feature disabled) returns
+/// `Ok(())` immediately.
+#[inline]
+pub fn eval(site: &str) -> crate::Result<()> {
+    #[cfg(feature = "failpoints")]
+    {
+        imp::eval_armed(site)
+    }
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = site;
+        Ok(())
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use imp::{arm, arm_times, armed_sites, disarm, disarm_all, FailAction};
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    /// What an armed failpoint does when evaluated.
+    #[derive(Clone, Debug, PartialEq, Eq)]
+    pub enum FailAction {
+        /// `panic!` at the site.
+        Panic,
+        /// Return `Error::Runtime` with this message from the site.
+        Err(String),
+        /// Sleep this many milliseconds, then proceed normally.
+        DelayMs(u64),
+    }
+
+    #[derive(Clone, Debug)]
+    struct Armed {
+        action: FailAction,
+        /// Remaining hits; `None` = unlimited until disarmed.
+        remaining: Option<usize>,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+        static REG: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+        REG.get_or_init(|| {
+            let mut map = HashMap::new();
+            if let Ok(spec) = std::env::var("DEEPGEMM_FAILPOINTS") {
+                for (site, armed) in parse_spec(&spec) {
+                    eprintln!("failpoint: armed '{site}' from env: {:?}", armed.action);
+                    map.insert(site, armed);
+                }
+            }
+            Mutex::new(map)
+        })
+    }
+
+    /// Arm `site` with `action` until disarmed.
+    pub fn arm(site: &str, action: FailAction) {
+        registry()
+            .lock()
+            .unwrap()
+            .insert(site.to_string(), Armed { action, remaining: None });
+    }
+
+    /// Arm `site` with `action` for at most `times` hits, after which
+    /// the site disarms itself (the "panic once, then recover" shape).
+    pub fn arm_times(site: &str, action: FailAction, times: usize) {
+        registry()
+            .lock()
+            .unwrap()
+            .insert(site.to_string(), Armed { action, remaining: Some(times) });
+    }
+
+    /// Disarm `site` (no-op if unarmed).
+    pub fn disarm(site: &str) {
+        registry().lock().unwrap().remove(site);
+    }
+
+    /// Disarm every site (test-suite hygiene between scenarios).
+    pub fn disarm_all() {
+        registry().lock().unwrap().clear();
+    }
+
+    /// Currently armed site names, sorted (diagnostics).
+    pub fn armed_sites() -> Vec<String> {
+        let mut v: Vec<String> = registry().lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub(super) fn eval_armed(site: &str) -> crate::Result<()> {
+        // Take the action (decrementing bounded arms) under the lock,
+        // execute it outside — a delay must not block other sites.
+        let action = {
+            let mut reg = registry().lock().unwrap();
+            match reg.get_mut(site) {
+                None => return Ok(()),
+                Some(armed) => {
+                    let action = armed.action.clone();
+                    match &mut armed.remaining {
+                        Some(0) => {
+                            reg.remove(site);
+                            return Ok(());
+                        }
+                        Some(n) => {
+                            *n -= 1;
+                            if *n == 0 {
+                                reg.remove(site);
+                            }
+                        }
+                        None => {}
+                    }
+                    action
+                }
+            }
+        };
+        match action {
+            FailAction::Panic => panic!("failpoint '{site}': injected panic"),
+            FailAction::Err(msg) => {
+                Err(crate::Error::Runtime(format!("failpoint '{site}': {msg}")))
+            }
+            FailAction::DelayMs(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+        }
+    }
+
+    /// Parse `site=action;site=action` (see module docs for the action
+    /// grammar). Unparseable entries are skipped with a warning rather
+    /// than panicking — a typo in an env var must not take serving down.
+    fn parse_spec(spec: &str) -> Vec<(String, Armed)> {
+        let mut out = Vec::new();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let Some((site, action)) = entry.split_once('=') else {
+                eprintln!("failpoint: ignoring malformed entry '{entry}' (want site=action)");
+                continue;
+            };
+            match parse_action(action.trim()) {
+                Some(armed) => out.push((site.trim().to_string(), armed)),
+                None => eprintln!("failpoint: ignoring unknown action '{action}' for '{site}'"),
+            }
+        }
+        out
+    }
+
+    fn parse_action(s: &str) -> Option<Armed> {
+        let mut parts = s.split(':');
+        let kind = parts.next()?;
+        match kind {
+            "panic" => {
+                let remaining = match parts.next() {
+                    Some(n) => Some(n.parse().ok()?),
+                    None => None,
+                };
+                Some(Armed { action: FailAction::Panic, remaining })
+            }
+            "err" => {
+                let msg = parts.next().unwrap_or("injected error").to_string();
+                Some(Armed { action: FailAction::Err(msg), remaining: None })
+            }
+            "delay" => {
+                let ms: u64 = parts.next()?.parse().ok()?;
+                let remaining = match parts.next() {
+                    Some(n) => Some(n.parse().ok()?),
+                    None => None,
+                };
+                Some(Armed { action: FailAction::DelayMs(ms), remaining })
+            }
+            _ => None,
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // These unit tests use their own site names (prefixed `ut_`),
+        // so they cannot collide with the chaos suite's sites even
+        // though the registry is process-global.
+
+        #[test]
+        fn unarmed_site_is_ok() {
+            assert!(eval_armed("ut_never_armed").is_ok());
+        }
+
+        #[test]
+        fn err_action_returns_runtime_error() {
+            arm("ut_err", FailAction::Err("boom".into()));
+            let e = eval_armed("ut_err").unwrap_err();
+            assert!(e.to_string().contains("boom"), "{e}");
+            disarm("ut_err");
+            assert!(eval_armed("ut_err").is_ok());
+        }
+
+        #[test]
+        fn bounded_arm_self_disarms() {
+            arm_times("ut_once", FailAction::Err("once".into()), 1);
+            assert!(eval_armed("ut_once").is_err());
+            assert!(eval_armed("ut_once").is_ok(), "second hit must be disarmed");
+        }
+
+        #[test]
+        fn panic_action_panics() {
+            arm_times("ut_panic", FailAction::Panic, 1);
+            let r = std::panic::catch_unwind(|| eval_armed("ut_panic"));
+            assert!(r.is_err());
+            assert!(eval_armed("ut_panic").is_ok());
+        }
+
+        #[test]
+        fn delay_action_sleeps() {
+            arm_times("ut_delay", FailAction::DelayMs(30), 1);
+            let t0 = std::time::Instant::now();
+            assert!(eval_armed("ut_delay").is_ok());
+            assert!(t0.elapsed() >= Duration::from_millis(25));
+        }
+
+        #[test]
+        fn env_spec_parses() {
+            let parsed = parse_spec("a=panic:2; b=delay:150 ;c=err:kaput;junk;d=wat:1");
+            let names: Vec<&str> = parsed.iter().map(|(s, _)| s.as_str()).collect();
+            assert_eq!(names, vec!["a", "b", "c"]);
+            assert_eq!(parsed[0].1.action, FailAction::Panic);
+            assert_eq!(parsed[0].1.remaining, Some(2));
+            assert_eq!(parsed[1].1.action, FailAction::DelayMs(150));
+            assert!(matches!(parsed[2].1.action, FailAction::Err(ref m) if m == "kaput"));
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! parsing, JSON, a thread pool, and a small property-testing framework.
 
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -1,0 +1,299 @@
+//! Chaos suite: deterministic fault injection against the serving
+//! stack, driven by the `failpoints` feature (`cargo test --features
+//! failpoints --test chaos`). Each scenario arms named failpoint sites
+//! planted in the engine/batcher, then asserts the supervision,
+//! deadline, and drain machinery recovers exactly as documented in
+//! `docs/SERVING.md`.
+//!
+//! The failpoint registry is process-global, so every test serializes
+//! on one mutex and disarms all sites on entry (hygiene against a
+//! previously-panicked test leaving sites armed).
+#![cfg(feature = "failpoints")]
+
+use deepgemm::coordinator::{BatcherConfig, Router};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::util::failpoint::{self, FailAction};
+use deepgemm::util::rng::Rng;
+use deepgemm::Error;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Serializes chaos scenarios: the failpoint registry is one per
+/// process. Lock poisoning (a previous test panicked while holding the
+/// guard) is survivable — the guard protects no data.
+fn serial() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::disarm_all();
+    g
+}
+
+fn router_with(cfg: BatcherConfig) -> Router {
+    let mut rng = Rng::new(11);
+    let g = zoo::small_cnn(4, &mut rng);
+    let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+    let mut r = Router::new();
+    r.register(model, cfg);
+    r
+}
+
+fn input(seed: u64) -> Tensor {
+    Tensor::random(&[1, 3, 32, 32], seed, -1.0, 1.0)
+}
+
+/// Fast supervisor settings so scenarios finish in milliseconds.
+fn fast_cfg() -> BatcherConfig {
+    BatcherConfig {
+        max_wait: Duration::from_millis(1),
+        respawn_backoff: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn injected_panic_fails_waiters_then_worker_respawns_and_recovers() {
+    let _g = serial();
+    let r = Arc::new(router_with(BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+        ..fast_cfg()
+    }));
+    // One panic: the first fused forward dies; everything after succeeds.
+    failpoint::arm_times("forward_panic", FailAction::Panic, 1);
+    let hs: Vec<_> = (0..3)
+        .map(|i| {
+            let r = r.clone();
+            std::thread::spawn(move || r.infer("small_cnn", input(i)))
+        })
+        .collect();
+    let results: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    // Every waiter in the panicked batch gets the typed variant; any
+    // request landing in a later batch simply succeeds.
+    let panicked = results
+        .iter()
+        .filter(|r| matches!(r, Err(Error::WorkerPanic(_))))
+        .count();
+    assert!(panicked >= 1, "no waiter saw the injected panic: {results:?}");
+    for res in &results {
+        match res {
+            Ok(_) | Err(Error::WorkerPanic(_)) => {}
+            Err(e) => panic!("unexpected error variant: {e}"),
+        }
+    }
+    // The supervisor respawned with a fresh ctx: the next request is
+    // served normally.
+    let resp = r.infer("small_cnn", input(99)).expect("post-respawn request must succeed");
+    assert_eq!(resp.output.len(), 4);
+    let c = r.metrics.counters();
+    assert_eq!(c.panics, 1);
+    assert!(c.respawns >= 1, "{c:?}");
+    assert!(c.completed >= 1, "{c:?}");
+    let h = &r.health()[0];
+    assert!(h.alive && h.healthy, "{h:?}");
+    assert!(h.respawns >= 1);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn injected_error_propagates_typed_without_killing_the_worker() {
+    let _g = serial();
+    let r = router_with(fast_cfg());
+    failpoint::arm_times("forward_err", FailAction::Err("disk on fire".into()), 1);
+    let err = r.infer("small_cnn", input(1)).unwrap_err();
+    let injected =
+        matches!(&err, Error::Runtime(m) if m.contains("forward_err") && m.contains("disk on fire"));
+    assert!(injected, "{err}");
+    // An Err return is not a panic: no respawn, worker alive, and the
+    // next request succeeds on the same worker.
+    r.infer("small_cnn", input(2)).expect("worker must survive a typed error");
+    let c = r.metrics.counters();
+    assert_eq!(c.panics, 0);
+    assert_eq!(c.respawns, 0);
+    assert!(c.errors >= 1);
+    assert!(r.health()[0].alive);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn delay_past_deadline_times_out_the_client_in_bounded_time() {
+    let _g = serial();
+    let r = router_with(BatcherConfig {
+        request_timeout: Duration::from_millis(100),
+        ..fast_cfg()
+    });
+    // The forward sleeps 600 ms — far past the 100 ms deadline. The
+    // client must get a typed Timeout at ~deadline + grace, NOT wait
+    // for the slow forward.
+    failpoint::arm_times("forward_delay_ms", FailAction::DelayMs(600), 1);
+    let t0 = Instant::now();
+    let err = r.infer("small_cnn", input(3)).unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(matches!(err, Error::Timeout(_)), "{err}");
+    assert!(
+        elapsed < Duration::from_millis(500),
+        "client waited {elapsed:?}, deadline was 100 ms"
+    );
+    let c = r.metrics.counters();
+    assert_eq!(c.expired, 1, "{c:?}");
+    assert_eq!(c.completed, 0, "a timed-out request must not count completed");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn queued_jobs_behind_a_slow_batch_are_shed_without_compute() {
+    let _g = serial();
+    let r = Arc::new(router_with(BatcherConfig {
+        max_batch: 1, // each job = its own batch; later jobs queue behind
+        max_wait: Duration::ZERO,
+        request_timeout: Duration::from_millis(100),
+        ..fast_cfg()
+    }));
+    // Every forward sleeps 400 ms, so with max_batch=1 the first job
+    // pins the worker past everyone's 100 ms deadline. Stagger the
+    // submits: the first must be in flight before the two doomed jobs
+    // queue, or one could be pulled fresh and form a second batch.
+    failpoint::arm("forward_delay_ms", FailAction::DelayMs(400));
+    let hs: Vec<_> = (0..3)
+        .map(|i| {
+            let r = r.clone();
+            let h = std::thread::spawn(move || r.infer("small_cnn", input(i)));
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            h
+        })
+        .collect();
+    for h in hs {
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+    }
+    failpoint::disarm_all();
+    // Give the worker time to pull + shed the queued jobs (it wakes
+    // from the 400 ms injected sleep first).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while r.metrics.counters().expired < 3 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let c = r.metrics.counters();
+    assert_eq!(c.expired, 3, "{c:?}");
+    // Only the first job reached the GEMM; the two shed jobs must not
+    // have paid for a forward.
+    assert_eq!(c.batches, 1, "shed jobs must not form batches: {c:?}");
+    assert_eq!(c.completed, 0, "{c:?}");
+    assert_eq!(c.errors, 0, "expiry is shedding, not an error: {c:?}");
+}
+
+#[test]
+fn drain_under_load_answers_every_accepted_request() {
+    let _g = serial();
+    let r = Arc::new(router_with(BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        request_timeout: Duration::from_secs(5), // bound any wait
+        ..fast_cfg()
+    }));
+    // Slow each batch a little so a queue builds up before the drain.
+    failpoint::arm("forward_delay_ms", FailAction::DelayMs(30));
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    for i in 0..8u64 {
+        let r = r.clone();
+        let done = done_tx.clone();
+        std::thread::spawn(move || {
+            let res = r.infer("small_cnn", input(i));
+            done.send(res).unwrap();
+        });
+    }
+    drop(done_tx);
+    std::thread::sleep(Duration::from_millis(20)); // let requests land
+    r.drain();
+    // Drain guarantees: every client gets an answer (a result or a
+    // typed rejection) in bounded time — nobody hangs.
+    let mut answered = 0;
+    while let Ok(res) = done_rx.recv_timeout(Duration::from_secs(10)) {
+        answered += 1;
+        match res {
+            Ok(resp) => assert_eq!(resp.output.len(), 4),
+            Err(e) => {
+                let msg = e.to_string();
+                let expected = msg.contains("draining")
+                    || msg.contains("queue full")
+                    || msg.contains("timeout");
+                assert!(expected, "unexpected error under drain: {msg}");
+            }
+        }
+    }
+    assert_eq!(answered, 8, "every client must be answered");
+    // Everything the router accepted was completed, not dropped.
+    let c = r.metrics.counters();
+    assert_eq!(
+        c.completed + c.rejected + c.expired + c.errors,
+        c.requests,
+        "accepted requests went unanswered: {c:?}"
+    );
+    assert!(!r.health()[0].alive, "drained worker must have exited");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn persistent_panics_exhaust_respawn_budget_and_mark_model_unhealthy() {
+    let _g = serial();
+    let r = router_with(BatcherConfig {
+        max_respawns: 2,
+        ..fast_cfg()
+    });
+    failpoint::arm("forward_panic", FailAction::Panic); // every forward dies
+    // Feed requests until the supervisor gives up. Each one either dies
+    // with the in-batch WorkerPanic, races the give-up (dropped reply),
+    // or is fast-failed once the model is marked unhealthy.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while r.health()[0].healthy {
+        assert!(Instant::now() < deadline, "supervisor never gave up");
+        let _ = r.infer("small_cnn", input(4));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    failpoint::disarm_all();
+    let h = &r.health()[0];
+    assert!(!h.healthy && !h.alive, "{h:?}");
+    assert_eq!(h.respawns, 2, "gave up after exactly max_respawns respawns");
+    // The router fast-fails new requests with the typed variant.
+    let err = r.infer("small_cnn", input(5)).unwrap_err();
+    assert!(
+        matches!(&err, Error::WorkerPanic(m) if m.contains("unhealthy")),
+        "{err}"
+    );
+    let c = r.metrics.counters();
+    assert!(c.panics >= 3, "{c:?}"); // initial + 2 respawns, all panicked
+    assert_eq!(c.respawns, 2, "{c:?}");
+}
+
+#[test]
+fn batcher_loop_panic_outside_a_batch_is_supervised_too() {
+    let _g = serial();
+    let r = router_with(fast_cfg());
+    // First request establishes a live worker (and warms the ctx).
+    r.infer("small_cnn", input(6)).unwrap();
+    // Panic at the top of the batch loop — no batch in flight, so this
+    // exercises the supervisor's outer catch_unwind.
+    failpoint::arm_times("batcher_loop", FailAction::Panic, 1);
+    // The loop evaluates the site at the top of its next iteration:
+    // this request is typically still answered (the site fires after
+    // its batch), and the panic lands with no batch in flight.
+    let _ = r.infer("small_cnn", input(7));
+    // Either way the supervisor recovers the worker.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        assert!(Instant::now() < deadline, "worker never recovered");
+        if r.infer("small_cnn", input(8)).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let c = r.metrics.counters();
+    assert!(c.panics >= 1, "{c:?}");
+    assert!(c.respawns >= 1, "{c:?}");
+    assert!(r.health()[0].healthy);
+    failpoint::disarm_all();
+}

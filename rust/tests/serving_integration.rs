@@ -170,6 +170,135 @@ fn bucketed_tune_cache_persists_and_warm_restart_restores_all_buckets() {
 }
 
 #[test]
+fn tcp_backpressure_rejects_with_clear_error_and_counts() {
+    // End-to-end backpressure: a tiny queue behind the TCP front-end
+    // must turn overload into clean queue-full replies, not hangs or
+    // dropped connections.
+    let mut router = Router::new();
+    router.register(
+        model(3, Backend::Lut16(Scheme::D), 6),
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(0),
+            queue_cap: 1,
+            ..Default::default()
+        },
+    );
+    let router = Arc::new(router);
+    let (addr, _h) = server::spawn(
+        router.clone(),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let handles: Vec<_> = (0..16)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let input = vec![0.2f32; 3 * 32 * 32];
+                let mut saw_reject = false;
+                for _ in 0..4 {
+                    let resp = c.infer("small_cnn", &input).unwrap();
+                    if resp.get("ok").and_then(|v| v.as_bool()) == Some(false) {
+                        let err = resp.get("error").unwrap().as_str().unwrap().to_string();
+                        assert!(err.contains("queue full"), "unexpected error: {err}");
+                        saw_reject = true;
+                    }
+                }
+                saw_reject
+            })
+        })
+        .collect();
+    let rejected_clients =
+        handles.into_iter().map(|h| h.join().unwrap_or(false)).filter(|&b| b).count();
+    let c = router.metrics.counters();
+    assert!(
+        rejected_clients >= 1,
+        "cap-1 queue under 16 hammering clients never rejected: {c:?}"
+    );
+    assert!(c.rejected >= 1, "{c:?}");
+    assert_eq!(c.completed + c.rejected, c.requests, "{c:?}");
+}
+
+#[test]
+fn shutdown_command_terminates_accept_loop_promptly() {
+    // Regression: the accept loop is woken by connecting to the
+    // listener's own address after a shutdown command. An earlier
+    // version dialled the *client's* address, leaving the loop blocked
+    // in accept() until the next organic connection — so the join below
+    // would hang.
+    let mut router = Router::new();
+    router.register(model(3, Backend::Lut16(Scheme::D), 7), BatcherConfig::default());
+    let (addr, h) = server::spawn(
+        Arc::new(router),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let resp = c.call(&Json::obj(vec![("cmd", Json::str("shutdown"))])).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    // The join must complete promptly; watch it from a side thread so a
+    // regression fails the test instead of wedging it.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = h.join();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(5))
+        .expect("accept loop did not terminate within 5s of shutdown");
+}
+
+#[test]
+fn health_and_drain_round_trip_over_tcp() {
+    let mut router = Router::new();
+    router.register(model(4, Backend::Lut16(Scheme::D), 8), BatcherConfig::default());
+    let router = Arc::new(router);
+    let (addr, h) = server::spawn(
+        router.clone(),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    // Healthy steady state.
+    let health = c.call(&Json::obj(vec![("cmd", Json::str("health"))])).unwrap();
+    assert_eq!(health.get("ok").and_then(|v| v.as_bool()), Some(true), "{health:?}");
+    assert_eq!(health.get("status").and_then(|v| v.as_str()), Some("ok"));
+    let models = health.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("name").and_then(|v| v.as_str()), Some("small_cnn"));
+    assert_eq!(models[0].get("alive").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(models[0].get("healthy").and_then(|v| v.as_bool()), Some(true));
+    assert!(models[0].get("queue_depth").is_some());
+    // Serve one request, then drain.
+    let input = vec![0.1f32; 3 * 32 * 32];
+    let resp = c.infer("small_cnn", &input).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let drained = c.call(&Json::obj(vec![("cmd", Json::str("drain"))])).unwrap();
+    assert_eq!(drained.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(router.is_draining());
+    assert!(!router.health()[0].alive, "drained worker must have exited");
+    // The handler closes our connection after the drain reply; the
+    // client must surface a connection-level error — the clean-EOF
+    // message, or an I/O error if the kernel's RST beats our read —
+    // never a confusing `bad json` parse of an empty line.
+    let err = c.call(&Json::obj(vec![("cmd", Json::str("models"))])).unwrap_err().to_string();
+    assert!(
+        err.contains("connection closed by server") || err.contains("io error"),
+        "{err}"
+    );
+    assert!(!err.contains("bad json"), "EOF must not be reported as a parse error: {err}");
+    // And the accept loop terminates like a shutdown does.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = h.join();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(5))
+        .expect("accept loop did not terminate within 5s of drain");
+    assert_eq!(router.metrics.counters().completed, 1);
+}
+
+#[test]
 fn rejected_requests_are_counted_not_crashed() {
     let mut router = Router::new();
     router.register(
