@@ -121,7 +121,11 @@ fn main() {
         for &nt in &threads_axis(&[1]) {
             tile::set_default_threads(nt);
             let mut t = stage_table(&model, &x, if quick { 1 } else { 2 });
-            t.title = format!("{} [threads={nt}]", t.title);
+            t.title = format!(
+                "{} [threads={nt} isa={}]",
+                t.title,
+                deepgemm::kernels::simd::active().name()
+            );
             print!("{}", t.render());
             // The bare artifact names stay reserved for the lut16-d
             // paper-comparison numbers; other backends get their own

@@ -169,6 +169,10 @@ fn main() {
     );
     t.note("depthwise convs run the same direct path in both engines; non-conv ops identical");
     t.note("both engines execute tiled GemmPlans at the row's thread count (tiled-vs-tiled)");
+    t.note(format!(
+        "kernel ISA arm: {} (override with --isa / DEEPGEMM_ISA; see docs/SIMD.md)",
+        deepgemm::kernels::simd::active().name()
+    ));
     t.note(
         "b8 columns (autotune on): one fused batch of 8 served on per-image-M shapes \
          (mistuned) vs M-bucket shapes (tuned)",

@@ -1,0 +1,43 @@
+//! Toolchain probe for the AVX-512 kernels.
+//!
+//! The AVX-512 intrinsics and `#[target_feature(enable = "avx512…")]`
+//! are stable from Rust 1.89. The crate must keep building on older
+//! stable toolchains (the build is fully offline and cannot pin a
+//! toolchain), so the 512-bit micro-kernels are compiled only when the
+//! active `rustc` is new enough, behind the custom `deepgemm_avx512`
+//! cfg this script emits. Runtime feature detection still gates every
+//! call — the cfg only decides whether the code *exists*.
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .map(|o| String::from_utf8_lossy(&o.stdout).into_owned())
+        .unwrap_or_default();
+    if let Some((major, minor)) = parse_version(&version) {
+        // `rustc-check-cfg` (so `deepgemm_avx512` is a *known* cfg under
+        // -D warnings) uses the `cargo::` directive syntax, itself only
+        // understood by Cargo ≥ 1.77 — every toolchain that needs the
+        // check-cfg declaration also understands the directive.
+        if (major, minor) >= (1, 80) {
+            println!("cargo::rustc-check-cfg=cfg(deepgemm_avx512)");
+        }
+        if (major, minor) >= (1, 89) {
+            println!("cargo:rustc-cfg=deepgemm_avx512");
+        }
+    }
+}
+
+/// Parse "rustc 1.89.0 (…)" (or a nightly/beta variant) into (1, 89).
+fn parse_version(version: &str) -> Option<(u32, u32)> {
+    let semver = version.split_whitespace().nth(1)?;
+    let mut parts = semver.split(|c: char| !c.is_ascii_digit());
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}

@@ -262,7 +262,8 @@ impl Metrics {
              queue   p50={:.3}ms p95={:.3}ms\n\
              batch   mean={:.2}\n\
              arena   planned {arena_str}  ctx_reuses={}\n\
-             autotune {tune_str}",
+             autotune {tune_str}\n\
+             isa     {}",
             c.requests,
             c.completed,
             c.rejected,
@@ -278,6 +279,7 @@ impl Metrics {
             g.queue_time.quantile(0.95) * 1e3,
             mean_batch,
             c.ctx_reuses,
+            crate::kernels::simd::active().name(),
         )
     }
 }
@@ -301,6 +303,9 @@ mod tests {
         assert_eq!(c.batches, 1);
         let r = m.render();
         assert!(r.contains("requests=2"));
+        // The active kernel ISA arm is part of every metrics render.
+        let isa = crate::kernels::simd::active().name();
+        assert!(r.contains(&format!("isa     {isa}")), "{r}");
     }
 
     #[test]

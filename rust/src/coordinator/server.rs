@@ -13,11 +13,13 @@
 //!                                               "tune_ms", "shapes": [...]},
 //!                                  "batcher": {"max_batch", "adaptive"}}],
 //!                                  "ctx_reuses": N, "panics": N, "expired": N,
-//!                                  "respawns": N, "tune_cache_entries": M}
+//!                                  "respawns": N, "tune_cache_entries": M,
+//!                                  "isa": "scalar|neon|avx2|avx512"}
 //!                                  (static memory plan + ctx reuse + compile-time
 //!                                  per-M-bucket autotune decisions + effective
-//!                                  batcher settings; see docs/TUNING.md for how
-//!                                  to read the shape lines)
+//!                                  batcher settings + the active kernel ISA arm;
+//!                                  see docs/TUNING.md for how to read the shape
+//!                                  lines and docs/SIMD.md for the ISA dispatch)
 //!   → {"cmd": "health"}         ← {"ok": true, "status": "ok|degraded|draining",
 //!                                  "models": [{"name", "alive", "healthy",
 //!                                  "queue_depth", "respawns"}]}
@@ -29,6 +31,7 @@
 //!   → {"cmd": "shutdown"}       ← {"ok": true}  (stops the listener)
 
 use crate::coordinator::router::Router;
+use crate::kernels::simd;
 use crate::kernels::tune::{self, AutotuneMode};
 use crate::nn::Tensor;
 use crate::util::json::Json;
@@ -317,6 +320,7 @@ fn handle_line(line: &str, router: &Router, stop: &AtomicBool) -> Json {
                 ("expired", Json::num(router.metrics.counters().expired as f64)),
                 ("respawns", Json::num(router.metrics.counters().respawns as f64)),
                 ("tune_cache_entries", Json::num(tune::cache_len() as f64)),
+                ("isa", Json::str(simd::active().name())),
             ]),
             "health" => {
                 let models = router.health();
@@ -517,6 +521,9 @@ mod tests {
         assert_eq!(tune.get("stale_threads").unwrap().as_bool(), Some(false));
         assert!(tune.get("shapes").unwrap().as_arr().is_some());
         assert!(st.get("tune_cache_entries").is_some());
+        // The active ISA arm is reported and is a supported spelling.
+        let isa = st.get("isa").unwrap().as_str().unwrap();
+        assert_eq!(crate::kernels::Isa::parse(isa).map(|i| i.is_supported()), Ok(true));
         // Effective batcher settings per model (set at worker spawn).
         let batcher = models[0].get("batcher").expect("batcher stats present");
         assert!(batcher.get("max_batch").unwrap().as_f64().unwrap() >= 1.0, "{batcher:?}");

@@ -149,6 +149,11 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
+        for w in wrows {
+            debug_assert!(w.len() >= k_padded / 4, "weight row too short");
+        }
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let mc = _mm256_set1_epi8(0x0C);
@@ -201,6 +206,12 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
+        for w in wrows {
+            // ByteHi expands to one byte per value.
+            debug_assert!(w.len() >= k_padded, "weight row too short");
+        }
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let zero = _mm256_setzero_si256();
@@ -243,6 +254,12 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 2, "activation row too short");
+        for w in wrows {
+            // Nibble layouts pack 2 values per byte.
+            debug_assert!(w.len() >= k_padded / 2, "weight row too short");
+        }
         let lutv = load_lut(lut);
         let mf = _mm256_set1_epi8(0x0F);
         let zero = _mm256_setzero_si256();
@@ -282,6 +299,9 @@ pub(crate) mod avx2 {
     /// 4 ors, 4 shuffles (Tab. 3 column a: 1.5/2/1/1 per output).
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_a(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
+        debug_assert!(wrow.len() >= k_padded / 4, "weight row too short");
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let mc = _mm256_set1_epi8(0x0C);
@@ -326,6 +346,9 @@ pub(crate) mod avx2 {
     /// chains than scheme a.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_b(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
+        debug_assert!(wrow.len() >= k_padded / 4, "weight row too short");
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let mc = _mm256_set1_epi8(0x0C);
@@ -378,6 +401,10 @@ pub(crate) mod avx2 {
     /// Per 128 values: 3 shifts, 4 ands, 4 ors, 4 shuffles.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_c(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
+        // ByteHi expands to one byte per value.
+        debug_assert!(wrow.len() >= k_padded, "weight row too short");
         let lutv = load_lut(lut);
         let m3 = _mm256_set1_epi8(0x03);
         let zero = _mm256_setzero_si256();
@@ -410,6 +437,10 @@ pub(crate) mod avx2 {
     /// 2 shifts, 4 shuffles.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_d(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
+        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
+        // Nibble layouts pack 2 values per byte.
+        debug_assert!(arow.len() >= k_padded / 2, "activation row too short");
+        debug_assert!(wrow.len() >= k_padded / 2, "weight row too short");
         let lutv = load_lut(lut);
         let mf = _mm256_set1_epi8(0x0F);
         let zero = _mm256_setzero_si256();

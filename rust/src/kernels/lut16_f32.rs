@@ -21,6 +21,7 @@
 //! remainder-panel path).
 
 use super::pack::{unpack_row, Layout};
+use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use crate::quant::Lut16F32;
 
@@ -76,18 +77,23 @@ impl TileKernel for Lut16F32Tile {
         vals: usize,
         mt: usize,
         nt: usize,
-        use_avx2: bool,
+        isa: Isa,
         kc: usize,
         a_scratch: &mut [u8],
         w_scratch: &[u8],
         sums: &mut [[f32; NR]; MR],
     ) {
+        // The AVX-512 arm reuses the AVX2 kernels: `vpermps` has no
+        // cheaper 512-bit analogue for a 16-entry f32 table (the
+        // two-register blend already saturates the shuffle port), so
+        // the f32 backend treats Avx512 as Avx2.
         #[cfg(target_arch = "x86_64")]
-        if use_avx2 {
-            // SAFETY: AVX2 availability checked by the caller; fragments
-            // cover exactly `vals` values in the nibble layouts (entries
-            // of `wf` beyond `nt` duplicate valid fragments, so the
-            // unconditional 4-column kernel stays in bounds).
+        if isa.vectorized() {
+            // SAFETY: the driver only passes host-supported vector arms;
+            // fragments cover exactly `vals` values in the nibble
+            // layouts (entries of `wf` beyond `nt` duplicate valid
+            // fragments, so the unconditional 4-column kernel stays in
+            // bounds).
             unsafe {
                 if nt == NR {
                     avx2::tile_f32_1x4(ar, wf, &self.lut, vals, mt, sums);
@@ -158,6 +164,12 @@ mod avx2 {
         mt: usize,
         sums: &mut [[f32; 4]; 4],
     ) {
+        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Nibble layouts pack 2 values per byte.
+            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
+        }
         let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
         let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
         let mf = _mm256_set1_epi8(0x0F);
@@ -205,6 +217,12 @@ mod avx2 {
         nt: usize,
         sums: &mut [[f32; 4]; 4],
     ) {
+        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Nibble layouts pack 2 values per byte.
+            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
+        }
         let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
         let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
         let mf = _mm256_set1_epi8(0x0F);

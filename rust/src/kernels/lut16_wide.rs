@@ -18,8 +18,10 @@
 //! driver anymore.
 
 use super::pack::{pack_into, unpack_row, Layout, Packed};
+use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
+use crate::quant::lut::lut_index;
 use crate::quant::Lut16;
 
 /// Pack helper for the wide kernels.
@@ -45,6 +47,9 @@ pub fn pack_wide_into(codes: &CodeMat, out: &mut Packed) {
 pub struct LutWideTile {
     /// 64- or 256-entry biased product table (3- or 4-bit codes).
     pub lut: Lut16,
+    /// Precomputed epilogue constant `bias · k_padded` (see
+    /// [`TileKernel::prepare`]).
+    corr_k: i64,
 }
 
 impl LutWideTile {
@@ -55,7 +60,7 @@ impl LutWideTile {
             "LutWideTile drives the 3/4-bit LUT kernels, got {} bits",
             lut.bits
         );
-        LutWideTile { lut }
+        LutWideTile { lut, corr_k: 0 }
     }
 
     /// Operand bit-width (3 or 4).
@@ -91,6 +96,10 @@ impl TileKernel for LutWideTile {
         self.layout()
     }
 
+    fn prepare(&mut self, k_padded: usize) {
+        self.corr_k = self.lut.bias as i64 * k_padded as i64;
+    }
+
     fn prep_panel(
         &self,
         wf: &[&[u8]; NR],
@@ -113,17 +122,32 @@ impl TileKernel for LutWideTile {
         vals: usize,
         mt: usize,
         nt: usize,
-        use_avx2: bool,
+        isa: Isa,
         kc: usize,
         a_scratch: &mut [u8],
         w_scratch: &[u8],
         sums: &mut [[i32; NR]; MR],
     ) {
+        // Every arm returns *raw biased* block sums; the bias total and
+        // pad products are subtracted once in `epilogue`.
+        #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+        if isa == Isa::Avx512 && self.lut.bits == 3 {
+            // SAFETY: the driver only passes host-supported arms;
+            // fragments cover exactly `vals` Dense3 values.
+            let raw = unsafe { avx512::tile3_vpermb(ar, wf, &self.lut, vals, mt, nt) };
+            for (i, row) in raw.iter().enumerate().take(mt) {
+                for (j, s) in row.iter().enumerate().take(nt) {
+                    sums[i][j] = *s as i32;
+                }
+            }
+            return;
+        }
         #[cfg(target_arch = "x86_64")]
-        if use_avx2 {
-            let bias_corr = self.lut.bias as i64 * vals as i64;
-            // SAFETY: AVX2 availability checked by the caller; fragments
-            // cover exactly `vals` values in the Dense3/Dense4 layouts.
+        if isa.vectorized() {
+            // The 4-bit kernel (16 sub-tables) stays on the AVX2 arm
+            // even under `Isa::Avx512` — every AVX-512 host has AVX2.
+            // SAFETY: the driver only passes host-supported arms;
+            // fragments cover exactly `vals` Dense3/Dense4 values.
             let raw = unsafe {
                 if self.lut.bits == 3 {
                     avx2::tile3(ar, wf, &self.lut, vals, mt, nt)
@@ -133,20 +157,23 @@ impl TileKernel for LutWideTile {
             };
             for (i, row) in raw.iter().enumerate().take(mt) {
                 for (j, s) in row.iter().enumerate().take(nt) {
-                    sums[i][j] = (*s - bias_corr) as i32;
+                    sums[i][j] = *s as i32;
                 }
             }
             return;
         }
-        // Portable scalar fallback over the codes staged by `prep_panel`.
+        // Portable scalar fallback over the codes staged by `prep_panel`
+        // — accumulates the same biased table bytes as the vector arms,
+        // so one epilogue fits all.
         let layout = self.layout();
+        let bits = self.lut.bits;
         for i in 0..mt {
             unpack_row(ar[i], vals, layout, &mut a_scratch[..vals]);
             for j in 0..nt {
                 let wrow = &w_scratch[j * kc..j * kc + vals];
                 let mut s = 0i64;
                 for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
-                    s += self.lut.product(*wc, *ac) as i64;
+                    s += self.lut.table[lut_index(*wc, *ac, bits)] as i64;
                 }
                 sums[i][j] = s as i32;
             }
@@ -154,7 +181,9 @@ impl TileKernel for LutWideTile {
     }
 
     fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
-        (self.lut.pad_product as i64 * a_pad as i64) as i32
+        // Raw block sums are biased over the whole padded K; subtract
+        // the precomputed bias total plus the pad products.
+        (self.corr_k + self.lut.pad_product as i64 * a_pad as i64) as i32
     }
 }
 
@@ -178,6 +207,12 @@ mod avx2 {
         nt: usize,
     ) -> [[i64; 4]; 4] {
         debug_assert_eq!(lut.table.len(), 64);
+        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Dense3 packs 2 codes/byte: vals/2 bytes per fragment.
+            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
+        }
         // Four 16-entry sub-tables, each broadcast to both lanes.
         let mut sub = [_mm256_setzero_si256(); 4];
         for (t, s) in sub.iter_mut().enumerate() {
@@ -248,6 +283,12 @@ mod avx2 {
         nt: usize,
     ) -> [[i64; 4]; 4] {
         debug_assert_eq!(lut.table.len(), 256);
+        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Dense4 packs 2 codes/byte: vals/2 bytes per fragment.
+            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
+        }
         let mut sub = [_mm256_setzero_si256(); 16];
         for (t, s) in sub.iter_mut().enumerate() {
             let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
@@ -289,6 +330,88 @@ mod avx2 {
             }
             for (j, a) in acc.iter().enumerate().take(nt) {
                 out[i][j] = hsum_epi64(*a);
+            }
+        }
+        out
+    }
+}
+
+/// AVX-512 VBMI arm of the 3-bit kernel — the `vpermb` showcase: the
+/// full 64-entry table fits one 512-bit register, so a single
+/// `_mm512_permutexvar_epi8` replaces the AVX2 arm's 2-shuffle +
+/// 3-blend sub-table selection per round, on twice the data width.
+/// (The 4-bit kernel's 256-entry table would still need 4 permutes +
+/// selection, so it keeps the AVX2 arm.) Compiled only on toolchains
+/// with stable AVX-512 intrinsics (`deepgemm_avx512`).
+#[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+mod avx512 {
+    use super::*;
+    use crate::kernels::K_BLOCK;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the eight i64 lanes (SAD accumulators).
+    #[inline]
+    #[target_feature(enable = "avx512f,avx2")]
+    unsafe fn hsum_epi64_512(v: __m512i) -> i64 {
+        let lo = _mm512_castsi512_si256(v);
+        let hi = _mm512_extracti64x4_epi64(v, 1);
+        let d256 = _mm256_add_epi64(lo, hi);
+        let d = _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
+        let e = _mm_shuffle_epi32(d, 238);
+        _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+    }
+
+    /// 3-bit tile kernel over one K block on 512-bit vectors. Dense3:
+    /// codes at bits [2:0] and [6:4]; 128 values per 64-byte load, two
+    /// rounds per load, one `vpermb` + one SAD per round (exact for
+    /// every table — one round of biased bytes per SAD).
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub(crate) unsafe fn tile3_vpermb(
+        ar: &[&[u8]; 4],
+        wf: &[&[u8]; 4],
+        lut: &Lut16,
+        vals: usize,
+        mt: usize,
+        nt: usize,
+    ) -> [[i64; 4]; 4] {
+        debug_assert_eq!(lut.table.len(), 64);
+        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Dense3 packs 2 codes/byte: vals/2 bytes per fragment.
+            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
+        }
+        // The whole 64-entry table in one register: index = (w<<3)|a.
+        let lutv = _mm512_loadu_epi8(lut.table.as_ptr() as *const i8);
+        let m7 = _mm512_set1_epi8(0x07);
+        let m38 = _mm512_set1_epi8(0x38);
+        let zero = _mm512_setzero_si512();
+        let bytes = vals / 2;
+        let mut out = [[0i64; 4]; 4];
+        for (i, arow) in ar.iter().enumerate().take(mt) {
+            let mut acc = [_mm512_setzero_si512(); 4];
+            let mut off = 0usize;
+            while off < bytes {
+                let va = _mm512_loadu_epi8(arow.as_ptr().add(off) as *const i8);
+                // round 0: codes at [2:0]; round 1: at [6:4].
+                let ca0 = _mm512_and_si512(va, m7);
+                let ca1 = _mm512_and_si512(_mm512_srli_epi32(va, 4), m7);
+                for (j, wrow) in wf.iter().enumerate().take(nt) {
+                    let vw = _mm512_loadu_epi8(wrow.as_ptr().add(off) as *const i8);
+                    for r in 0..2 {
+                        let (ca, cw) = if r == 0 {
+                            (ca0, _mm512_and_si512(_mm512_slli_epi32(vw, 3), m38))
+                        } else {
+                            (ca1, _mm512_and_si512(_mm512_srli_epi32(vw, 1), m38))
+                        };
+                        let prod = _mm512_permutexvar_epi8(_mm512_or_si512(cw, ca), lutv);
+                        acc[j] = _mm512_add_epi64(acc[j], _mm512_sad_epu8(prod, zero));
+                    }
+                }
+                off += 64;
+            }
+            for (j, a) in acc.iter().enumerate().take(nt) {
+                out[i][j] = hsum_epi64_512(*a);
             }
         }
         out

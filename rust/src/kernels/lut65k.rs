@@ -14,6 +14,7 @@
 //! while a whole MR×NR tile reuses each fragment.
 
 use super::pack::{pack, pack_into, Layout, Packed};
+use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
 use crate::quant::Lut65k;
@@ -68,13 +69,15 @@ impl TileKernel for Lut65kTile {
         vals: usize,
         mt: usize,
         nt: usize,
-        _use_avx2: bool,
+        _isa: Isa,
         _kc: usize,
         _a_scratch: &mut [u8],
         _w_scratch: &[u8],
         sums: &mut [[i32; NR]; MR],
     ) {
-        // Scalar by design on every host (see module docs).
+        // Scalar by design on every host and under every ISA arm (see
+        // module docs): table loads, not vector lanes, are the
+        // bottleneck, so the kernel ignores the dispatch arm.
         let bytes = vals / 4;
         let table = &self.lut.table;
         for i in 0..mt {

@@ -58,13 +58,17 @@
 //! 1. Give it a [`pack::Layout`] (or reuse one) describing its packed
 //!    bytes-per-[`K_BLOCK`] so [`tile::WeightPanels`] can repack rows.
 //! 2. Implement [`TileKernel`] next to its packing code: declare the
-//!    operand layouts, compute one MR×NR register tile over one K block
-//!    in `tile` (AVX2 path gated on `use_avx2`, scalar fallback via the
-//!    scratch buffers — see [`tile::TileKernel::prep_panel`]), and
-//!    report per-column over-counts (K padding, zero-point folds) from
+//!    operand layouts, hoist per-shape constants (e.g. the LUT bias
+//!    correction) in `prepare`, compute one MR×NR register tile over
+//!    one K block in `tile` (dispatch on the [`simd::Isa`] arm the
+//!    driver passes — vector arms behind `#[target_feature]`, scalar
+//!    fallback via the scratch buffers, see
+//!    [`tile::TileKernel::prep_panel`]), and report per-column
+//!    over-counts (K padding, table bias, zero-point folds) from
 //!    `epilogue`. [`Lut16Tile`] is the canonical example;
 //!    [`Int8Tile`] shows a non-LUT integer kernel and
-//!    [`Lut16F32Tile`] an f32 accumulator.
+//!    [`Lut16F32Tile`] an f32 accumulator. `docs/SIMD.md` walks
+//!    through adding an ISA arm to an existing kernel.
 //! 3. Build a [`GemmPlan`] from the packed weights + kernel in the
 //!    engine's `CompiledConv::prepare` arm and call `plan.execute(..)`
 //!    in its GEMM dispatch (see [`crate::engine`]).
@@ -90,6 +94,8 @@
 //! - [`ulppack`] — sub-byte-packed multiply baseline (Won et al.)
 //! - [`portable`] — scalar LUT kernel (the "Arm without tbl" stand-in,
 //!   paper Fig. 8)
+//! - [`simd`] — the ISA dispatch layer: [`simd::Isa`], runtime feature
+//!   detection, the `DEEPGEMM_ISA` / `--isa` override plumbing
 //! - [`tile`] — the plan/execute layer: [`GemmPlan`], [`TileKernel`] and
 //!   the cache-blocked, register-tiled, multi-threaded driver
 //! - [`tune`] — compile-time cache-block autotuning with a persisted
@@ -105,6 +111,8 @@ pub mod lut65k;
 pub mod pack;
 pub mod portable;
 #[warn(missing_docs)]
+pub mod simd;
+#[warn(missing_docs)]
 pub mod tile;
 #[warn(missing_docs)]
 pub mod tune;
@@ -114,13 +122,16 @@ pub use int8::Int8Tile;
 pub use lut16_f32::Lut16F32Tile;
 pub use lut16_wide::LutWideTile;
 pub use lut65k::Lut65kTile;
+pub use simd::Isa;
 pub use tile::{Accum, GemmPlan, Lut16Tile, PlanOpts, TileKernel, TileShape};
 pub use tune::{AutotuneMode, TuneOutcome, TuneSpec};
 
 use crate::quant::IntCodebook;
 
-/// Values-per-AVX2-chunk the 2-bit kernels process per inner iteration:
-/// 32 packed bytes × 4 crumbs. K is always padded to a multiple of this.
+/// Values per inner-loop chunk of the 2-bit kernels: 32 packed dense
+/// bytes × 4 crumbs on AVX2, one 64-byte nibble load on AVX-512. K is
+/// always padded to a multiple of this, on every ISA arm, so a tuned
+/// KC or a packed buffer is valid regardless of where dispatch lands.
 pub const K_BLOCK: usize = 128;
 
 /// A GEMM problem size. Convention follows the paper's layer listings:

@@ -13,8 +13,20 @@
 use super::pack::{Layout, Packed};
 use crate::quant::Lut16;
 
-/// Scalar LUT GEMM over dense-packed 2-bit operands.
+/// Scalar LUT GEMM over dense-packed 2-bit operands. Computes the
+/// bias/padding correction once and delegates to [`gemm_prepared`].
 pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
+    let corr = lut.correction(a.k_padded, a.pad());
+    gemm_prepared(a, w, lut, corr, out);
+}
+
+/// [`gemm`] with a caller-hoisted correction term — the scalar analogue
+/// of [`TileKernel::prepare`](super::TileKernel::prepare): callers that
+/// run many GEMMs at a fixed (k_padded, pad) shape compute
+/// `lut.correction(..)` once instead of per call. The hot loop
+/// accumulates raw biased table bytes only; the correction is applied
+/// in the output epilogue, exactly like the vector arms.
+pub fn gemm_prepared(a: &Packed, w: &Packed, lut: &Lut16, corr: i64, out: &mut [i32]) {
     assert_eq!(a.k, w.k);
     assert_eq!(a.layout, Layout::Dense);
     assert_eq!(w.layout, Layout::Dense);
@@ -23,7 +35,6 @@ pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, out: &mut [i32]) {
     // Use the biased table exactly like the SIMD kernel would, so the
     // instruction mix is honest (bias subtraction in the epilogue).
     let table = &lut.table;
-    let corr = lut.correction(a.k_padded, a.pad());
     for m in 0..a.rows {
         let arow = &a.row(m)[..bytes];
         for n in 0..w.rows {
@@ -65,6 +76,30 @@ mod tests {
                 gemm(&ap, &wp, &lut, &mut got);
                 assert_eq!(got, want, "m={m} n={n} k={k} signed={signed}");
             }
+        }
+    }
+
+    #[test]
+    fn prepared_correction_matches_per_call_for_padded_k() {
+        // K values that force padding (k % 64 != 0): the hoisted
+        // correction must remove both the table bias over k_padded AND
+        // the padded-crumb products, identically to the per-call path.
+        let cb = IntCodebook::signed(2);
+        for &k in &[5usize, 63, 65, 100, 127, 129] {
+            let a = CodeMat::random(3, k, 2, k as u64);
+            let w = CodeMat::random(2, k, 2, k as u64 + 1);
+            let lut = Lut16::build(&cb, &cb);
+            let ap = pack(&a, Layout::Dense);
+            let wp = pack(&w, Layout::Dense);
+            let mut want = vec![0i32; 6];
+            oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+            let mut per_call = vec![0i32; 6];
+            gemm(&ap, &wp, &lut, &mut per_call);
+            let corr = lut.correction(ap.k_padded, ap.pad());
+            let mut prepared = vec![0i32; 6];
+            gemm_prepared(&ap, &wp, &lut, corr, &mut prepared);
+            assert_eq!(per_call, want, "per-call correction wrong at k={k}");
+            assert_eq!(prepared, want, "hoisted correction diverges at k={k}");
         }
     }
 }

@@ -1,0 +1,286 @@
+//! The portable SIMD dispatch layer: which instruction-set arm the
+//! [`TileKernel`](super::TileKernel) micro-kernels run on.
+//!
+//! Every vector kernel in this crate exists as per-ISA arms behind
+//! `#[target_feature]` wrappers — scalar (always available), AVX2,
+//! AVX-512 (VBMI `vpermb` table lookups + VNNI `vpdpbusd` int8 MACs)
+//! and a stubbed NEON arm for aarch64 (currently the scalar paths; the
+//! dispatch plumbing is in place so a later PR only adds kernels). The
+//! arm is picked once per [`GemmPlan::execute`](super::GemmPlan):
+//!
+//! 1. [`PlanOpts::force_scalar`](super::PlanOpts) wins outright
+//!    (diagnostics / oracle testing);
+//! 2. a per-plan [`PlanOpts::isa`](super::PlanOpts) override is next —
+//!    this is how the cross-ISA differential suite forces each arm;
+//! 3. the process-wide request ([`set_requested`], fed by the CLI's
+//!    `--isa` flag, or the `DEEPGEMM_ISA` environment variable) is
+//!    consulted;
+//! 4. otherwise [`detect_best`] picks the widest ISA the host supports
+//!    at runtime (`is_x86_feature_detected!`).
+//!
+//! A requested-but-unsupported ISA falls back to [`detect_best`] with a
+//! warning (printed once per requested arm) instead of failing — a
+//! `DEEPGEMM_ISA=avx512` deployment still serves on an AVX2 host. The
+//! resolved arm flows into the autotune cache key
+//! ([`crate::kernels::tune::TuneKey::isa`]), the `{"cmd":"stats"}`
+//! endpoint and the bench tables, so tuned shapes and reports are
+//! always attributed to the arm that actually ran.
+//!
+//! The AVX-512 arm additionally requires a toolchain with stable
+//! AVX-512 intrinsics (Rust ≥ 1.89, probed by `build.rs` as the
+//! `deepgemm_avx512` cfg); on older toolchains it reports unsupported
+//! and dispatch falls back, exactly like missing hardware. See
+//! `docs/SIMD.md` for the add-an-ISA walkthrough.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// An instruction-set arm a kernel can dispatch to, in ascending
+/// capability order.
+///
+/// ```
+/// use deepgemm::kernels::simd::Isa;
+///
+/// assert_eq!(Isa::parse("avx512"), Ok(Isa::Avx512));
+/// assert!(Isa::Scalar.is_supported());
+/// // The active arm is always one the host actually supports.
+/// assert!(deepgemm::kernels::simd::active().is_supported());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable scalar fallback — every host, every arch.
+    Scalar,
+    /// aarch64 NEON. The dispatch arm exists but its kernels are the
+    /// scalar paths for now (a later PR fills in the intrinsics), so it
+    /// reports [`Isa::vectorized`] = false.
+    Neon,
+    /// x86_64 AVX2: 256-bit `pshufb` LUT lookups + `vpsadbw`/`pmaddwd`
+    /// accumulation.
+    Avx2,
+    /// x86_64 AVX-512 with VBMI (`vpermb` 64-entry byte-table lookups)
+    /// and VNNI (`vpdpbusd` int8 MACs); falls back to the AVX2 arms for
+    /// tile shapes and schemes without a dedicated 512-bit kernel.
+    Avx512,
+}
+
+impl Isa {
+    /// Every arm, in ascending capability order.
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Neon, Isa::Avx2, Isa::Avx512];
+
+    /// Canonical name (round-trips through [`Isa::parse`]); the
+    /// spelling used by `DEEPGEMM_ISA`, `--isa`, the tuning-cache key
+    /// and every reporting surface.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a `DEEPGEMM_ISA` / `--isa` spelling.
+    pub fn parse(s: &str) -> Result<Isa, String> {
+        match s {
+            "scalar" => Ok(Isa::Scalar),
+            "neon" => Ok(Isa::Neon),
+            "avx2" => Ok(Isa::Avx2),
+            "avx512" => Ok(Isa::Avx512),
+            other => Err(format!(
+                "unknown ISA '{other}' (valid: scalar, neon, avx2, avx512)"
+            )),
+        }
+    }
+
+    /// Whether this arm can execute on the current host (compile-time
+    /// arch + runtime feature detection + toolchain support for the
+    /// AVX-512 intrinsics).
+    pub fn is_supported(&self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Neon => cfg!(target_arch = "aarch64"),
+            Isa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Isa::Avx512 => avx512_supported(),
+        }
+    }
+
+    /// Whether this arm runs the vector micro-kernels. False for
+    /// [`Isa::Scalar`] and the stubbed [`Isa::Neon`]: those route
+    /// through the decode-and-multiply fallback (and its per-thread
+    /// scratch / `prep_panel` staging).
+    pub fn vectorized(&self) -> bool {
+        matches!(self, Isa::Avx2 | Isa::Avx512)
+    }
+}
+
+/// AVX-512 support = hardware (F + BW + VBMI + VNNI, the feature set
+/// the 512-bit kernels use) *and* a toolchain whose AVX-512 intrinsics
+/// are stable (`deepgemm_avx512`, probed by `build.rs`).
+fn avx512_supported() -> bool {
+    #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+    {
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+            && std::arch::is_x86_feature_detected!("avx512vbmi")
+            && std::arch::is_x86_feature_detected!("avx512vnni")
+    }
+    #[cfg(not(all(target_arch = "x86_64", deepgemm_avx512)))]
+    {
+        false
+    }
+}
+
+/// The widest ISA the current host supports at runtime.
+pub fn detect_best() -> Isa {
+    if Isa::Avx512.is_supported() {
+        Isa::Avx512
+    } else if Isa::Avx2.is_supported() {
+        Isa::Avx2
+    } else if Isa::Neon.is_supported() {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Process-wide requested ISA: the arm's index in [`Isa::ALL`], or
+/// `u8::MAX` = unset (fall back to the `DEEPGEMM_ISA` env var).
+static REQUESTED: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_requested() -> Option<Isa> {
+    static ENV: OnceLock<Option<Isa>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var("DEEPGEMM_ISA").ok()?;
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return None;
+        }
+        match Isa::parse(raw) {
+            Ok(isa) => Some(isa),
+            Err(e) => {
+                eprintln!("warning: ignoring DEEPGEMM_ISA: {e}");
+                None
+            }
+        }
+    })
+}
+
+/// Set (or with `None` clear) the process-wide requested ISA — the
+/// CLI's `--isa` flag feeds this, overriding the `DEEPGEMM_ISA`
+/// environment variable. The request is clamped to what the host
+/// supports at dispatch time ([`clamp_supported`]), not here.
+pub fn set_requested(isa: Option<Isa>) {
+    let v = match isa {
+        Some(isa) => Isa::ALL.iter().position(|i| *i == isa).unwrap_or(0) as u8,
+        None => u8::MAX,
+    };
+    REQUESTED.store(v, Ordering::Relaxed);
+}
+
+/// The process-wide requested ISA, if any ([`set_requested`] if called,
+/// else a valid `DEEPGEMM_ISA` env var).
+pub fn requested() -> Option<Isa> {
+    match REQUESTED.load(Ordering::Relaxed) {
+        u8::MAX => env_requested(),
+        v => Isa::ALL.get(v as usize).copied(),
+    }
+}
+
+/// Clamp a requested arm to host support: a supported request is
+/// honoured verbatim; an unsupported one falls back to [`detect_best`]
+/// with a warning printed once per requested arm.
+pub fn clamp_supported(isa: Isa) -> Isa {
+    if isa.is_supported() {
+        return isa;
+    }
+    let fallback = detect_best();
+    warn_fallback(isa, fallback);
+    fallback
+}
+
+fn warn_fallback(requested: Isa, fallback: Isa) {
+    static WARNED: [AtomicBool; 4] = [
+        AtomicBool::new(false),
+        AtomicBool::new(false),
+        AtomicBool::new(false),
+        AtomicBool::new(false),
+    ];
+    let idx = Isa::ALL.iter().position(|i| *i == requested).unwrap_or(0);
+    if !WARNED[idx].swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: requested ISA '{}' is not supported on this host; falling back to '{}'",
+            requested.name(),
+            fallback.name()
+        );
+    }
+}
+
+/// The arm plans without a per-plan override dispatch to right now: the
+/// process-wide request clamped to host support, else the detected
+/// best. This is what stats endpoints and bench tables report.
+pub fn active() -> Isa {
+    match requested() {
+        Some(isa) => clamp_supported(isa),
+        None => detect_best(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_arm() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Ok(isa));
+        }
+        assert!(Isa::parse("sse2").is_err());
+        assert!(Isa::parse("AVX2").is_err(), "spellings are lowercase");
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_never_vectorized() {
+        assert!(Isa::Scalar.is_supported());
+        assert!(!Isa::Scalar.vectorized());
+        assert!(!Isa::Neon.vectorized(), "NEON arm is a stub");
+        assert!(Isa::Avx2.vectorized());
+        assert!(Isa::Avx512.vectorized());
+    }
+
+    #[test]
+    fn detect_best_and_active_are_supported() {
+        assert!(detect_best().is_supported());
+        assert!(active().is_supported());
+    }
+
+    #[test]
+    fn clamp_honours_supported_and_falls_back_otherwise() {
+        for isa in Isa::ALL {
+            let clamped = clamp_supported(isa);
+            assert!(clamped.is_supported());
+            if isa.is_supported() {
+                assert_eq!(clamped, isa, "supported requests are honoured verbatim");
+            }
+        }
+    }
+
+    #[test]
+    fn arch_arms_are_mutually_exclusive() {
+        // x86 arms and the NEON arm can never be supported together.
+        assert!(!(Isa::Neon.is_supported() && Isa::Avx2.is_supported()));
+        // AVX-512 support implies AVX2 support (every AVX-512 CPU has
+        // AVX2 — the 512-bit kernels rely on this for remainder tiles).
+        if Isa::Avx512.is_supported() {
+            assert!(Isa::Avx2.is_supported());
+        }
+    }
+}

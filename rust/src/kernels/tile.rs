@@ -52,7 +52,9 @@
 
 use super::lut16;
 use super::pack::{unpack_row, Layout, Packed, Scheme};
+use super::simd::{self, Isa};
 use super::K_BLOCK;
+use crate::quant::lut::lut_index;
 use crate::quant::Lut16;
 use crate::util::pool::ThreadPool;
 use std::cell::RefCell;
@@ -168,15 +170,38 @@ pub struct PlanOpts {
     /// Worker threads; 0 = use the process-wide default (see
     /// [`set_default_threads`]).
     pub threads: usize,
-    /// Skip the AVX2 micro-kernels and run the kernel's portable scalar
-    /// path even when the host supports AVX2. Testing/diagnostics knob —
-    /// it is how the scalar fallbacks stay oracle-tested on AVX2 CI.
+    /// Skip the vector micro-kernels and run the kernel's portable
+    /// scalar path regardless of `isa` or host support.
+    /// Testing/diagnostics knob — it is how the scalar fallbacks stay
+    /// oracle-tested on vector-capable CI. Equivalent to
+    /// `isa: Some(Isa::Scalar)` but wins over any `isa` value.
     pub force_scalar: bool,
+    /// Per-plan ISA override: force this plan's dispatch to one arm
+    /// (clamped to host support at execute time, with a warning). `None`
+    /// (the default) follows the process-wide request / runtime
+    /// detection — see [`crate::kernels::simd`] for the full order.
+    pub isa: Option<Isa>,
 }
 
 impl Default for PlanOpts {
     fn default() -> Self {
-        Self { shape: TileShape::default(), threads: 0, force_scalar: false }
+        Self { shape: TileShape::default(), threads: 0, force_scalar: false, isa: None }
+    }
+}
+
+impl PlanOpts {
+    /// The ISA arm a plan built with these options dispatches to right
+    /// now: `force_scalar` wins outright, then the per-plan `isa`
+    /// override (clamped to host support), then the process-wide
+    /// request / detected best ([`simd::active`]).
+    pub fn resolve_isa(&self) -> Isa {
+        if self.force_scalar {
+            Isa::Scalar
+        } else if let Some(isa) = self.isa {
+            simd::clamp_supported(isa)
+        } else {
+            simd::active()
+        }
     }
 }
 
@@ -265,18 +290,26 @@ impl Accum for f32 {
 /// panels, MR×NR output tiles, worker threads); a `TileKernel` owns
 /// *how*: given panel-contiguous weight fragments and activation row
 /// fragments covering one K block, it fills an MR×NR grid of raw block
-/// dot products. Implementations typically dispatch to an AVX2 path
-/// when `use_avx2` is true and fall back to decode-and-multiply via the
-/// scalar scratch buffers otherwise.
+/// dot products. Implementations dispatch on the resolved [`Isa`] arm
+/// — AVX-512 / AVX2 paths behind `#[target_feature]` wrappers, with a
+/// decode-and-multiply fallback via the scalar scratch buffers for
+/// [`Isa::Scalar`] (and the stubbed [`Isa::Neon`]). The driver
+/// guarantees the arm it passes [`Isa::is_supported`], so kernels never
+/// re-detect features. See `docs/SIMD.md` for the add-an-ISA
+/// walkthrough.
 ///
 /// Contract:
 /// - `tile` must **write** (not accumulate) `sums[i][j]` for every
 ///   `i < mt, j < nt`; the driver adds them into the output and never
 ///   reads beyond `mt`×`nt`.
 /// - Sums must cover all `vals` values of the fragment, padding
-///   included; padding (and any table bias) is removed by returning its
-///   per-output total from [`TileKernel::epilogue`], which the driver
-///   subtracts exactly once per output element after the K-block loop.
+///   included, and must be *arm-independent up to the same raw total*:
+///   every over-count (K-padding products, table bias over the padded
+///   K, zero-point folds) is removed by returning its per-output total
+///   from [`TileKernel::epilogue`], which the driver subtracts exactly
+///   once per output element after the K-block loop. Per-plan constants
+///   the correction needs (e.g. `bias · k_padded`) are precomputed in
+///   [`TileKernel::prepare`], not inside hot loops.
 pub trait TileKernel: Send + Sync {
     /// Accumulator scalar written to the output buffer.
     type Acc: Accum;
@@ -293,12 +326,22 @@ pub trait TileKernel: Send + Sync {
     /// Weight layout [`GemmPlan::new`] expects.
     fn w_layout(&self) -> Layout;
 
+    /// One-time plan-construction hook: [`GemmPlan::new`] calls this
+    /// once with the padded reduction length before the first
+    /// [`TileKernel::tile`] call, so kernels can precompute per-plan
+    /// epilogue constants (e.g. the LUT bias correction
+    /// `bias · k_padded`) instead of rederiving them inside hot loops.
+    /// The default does nothing.
+    fn prepare(&mut self, k_padded: usize) {
+        let _ = k_padded;
+    }
+
     /// Stage a weight panel for the scalar path — called once per
-    /// (K block, weight panel) when AVX2 is unavailable, so per-panel
-    /// decode work is not repeated for every M tile. `w_scratch` holds
-    /// [`NR`] rows of `kc` bytes each (row `j` at offset `j * kc`).
-    /// The default does nothing (kernels that read packed bytes
-    /// directly need no staging).
+    /// (K block, weight panel) when the resolved arm is not
+    /// [`Isa::vectorized`], so per-panel decode work is not repeated
+    /// for every M tile. `w_scratch` holds [`NR`] rows of `kc` bytes
+    /// each (row `j` at offset `j * kc`). The default does nothing
+    /// (kernels that read packed bytes directly need no staging).
     fn prep_panel(
         &self,
         wf: &[&[u8]; NR],
@@ -315,9 +358,10 @@ pub trait TileKernel: Send + Sync {
     /// weight fragments covering `vals` values (a multiple of
     /// [`K_BLOCK`]). Entries of `ar` beyond `mt` and `wf` beyond `nt`
     /// are duplicates of valid fragments, so unconditional 4-wide
-    /// kernels stay in bounds. `a_scratch` (`kc` bytes) and `w_scratch`
-    /// (staged by [`TileKernel::prep_panel`]) are only allocated when
-    /// `use_avx2` is false.
+    /// kernels stay in bounds. `isa` is the resolved dispatch arm
+    /// (guaranteed host-supported). `a_scratch` (`kc` bytes) and
+    /// `w_scratch` (staged by [`TileKernel::prep_panel`]) are only
+    /// allocated when `isa` is not [`Isa::vectorized`].
     #[allow(clippy::too_many_arguments)]
     fn tile(
         &self,
@@ -326,7 +370,7 @@ pub trait TileKernel: Send + Sync {
         vals: usize,
         mt: usize,
         nt: usize,
-        use_avx2: bool,
+        isa: Isa,
         kc: usize,
         a_scratch: &mut [u8],
         w_scratch: &[u8],
@@ -335,9 +379,9 @@ pub trait TileKernel: Send + Sync {
 
     /// Per-output correction subtracted once after the K-block loop:
     /// whatever the raw block sums over-counted for output column `col`
-    /// — K-padding products, zero-point folds (`col` indexes per-column
-    /// state such as weight row sums), but *not* table bias, which
-    /// kernels remove per block inside [`TileKernel::tile`].
+    /// — K-padding products, table bias over the padded K (precomputed
+    /// in [`TileKernel::prepare`]), zero-point folds (`col` indexes
+    /// per-column state such as weight row sums).
     fn epilogue(&self, col: usize, a_pad: usize) -> Self::Acc;
 }
 
@@ -489,9 +533,12 @@ pub struct GemmPlan<K: TileKernel> {
     pub shape: TileShape,
     /// Worker threads; 0 = process-wide default at execute time.
     pub threads: usize,
-    /// Run the portable scalar path even on AVX2 hosts (see
+    /// Run the portable scalar path even on vector-capable hosts (see
     /// [`PlanOpts::force_scalar`]).
     pub force_scalar: bool,
+    /// Per-plan ISA override (see [`PlanOpts::isa`]); `None` follows
+    /// the process-wide request / runtime detection at execute time.
+    pub isa: Option<Isa>,
     /// Panel-contiguous repacked weights for the base `shape`.
     pub panels: WeightPanels,
     /// Per-M-bucket tuned shapes, sorted ascending by `m` (empty for
@@ -541,11 +588,14 @@ impl<K: TileKernel> GemmPlan<K> {
         assert_eq!(w.layout, kernel.w_layout(), "weights packed for wrong kernel");
         let shape = opts.shape.normalized();
         let panels = WeightPanels::build(w, NR, shape.kc);
+        let mut kernel = kernel;
+        kernel.prepare(w.k_padded);
         GemmPlan {
             kernel,
             shape,
             threads: opts.threads,
             force_scalar: opts.force_scalar,
+            isa: opts.isa,
             panels,
             buckets: Vec::new(),
             bucket_panels: Vec::new(),
@@ -649,6 +699,19 @@ impl<K: TileKernel> GemmPlan<K> {
         self.panels.bytes() + self.bucket_panels.iter().map(|p| p.bytes()).sum::<usize>()
     }
 
+    /// The ISA arm [`GemmPlan::execute`] dispatches to right now:
+    /// `force_scalar` wins, then the per-plan override (clamped to host
+    /// support), then the process-wide request / detected best.
+    pub fn resolve_isa(&self) -> Isa {
+        if self.force_scalar {
+            Isa::Scalar
+        } else if let Some(isa) = self.isa {
+            simd::clamp_supported(isa)
+        } else {
+            simd::active()
+        }
+    }
+
     /// Execute the plan: `out[m][n] = Σ_k Vw(w[n][k]) · Va(a[m][k])`,
     /// bit-identical to the backend's reference kernel for integer
     /// accumulators (f32 plans regroup the reduction per K block).
@@ -690,10 +753,9 @@ impl<K: TileKernel> GemmPlan<K> {
         if m == 0 || n == 0 {
             return;
         }
-        #[cfg(target_arch = "x86_64")]
-        let use_avx2 = std::arch::is_x86_feature_detected!("avx2") && !self.force_scalar;
-        #[cfg(not(target_arch = "x86_64"))]
-        let use_avx2 = false;
+        // One dispatch decision per execute; every tile call sees the
+        // same (host-supported) arm.
+        let isa = self.resolve_isa();
 
         let mc = shape.mc;
         let nc = shape.nc;
@@ -716,7 +778,7 @@ impl<K: TileKernel> GemmPlan<K> {
                         ((mb + 1) * mc).min(m),
                         nb * nc,
                         ((nb + 1) * nc).min(n),
-                        use_avx2,
+                        isa,
                     );
                 }
             }
@@ -746,7 +808,7 @@ impl<K: TileKernel> GemmPlan<K> {
                     ((mb + 1) * mc).min(m),
                     nb * nc,
                     ((nb + 1) * nc).min(n),
-                    use_avx2,
+                    isa,
                 );
             }));
         }
@@ -755,7 +817,7 @@ impl<K: TileKernel> GemmPlan<K> {
 
     /// Compute one disjoint output region `[m0, m1) × [n0, n1)`. Routes
     /// the scalar fallback through the per-thread [`SCALAR_SCRATCH`]
-    /// buffers (the AVX2 path needs no scratch), then delegates to
+    /// buffers (the vector paths need no scratch), then delegates to
     /// [`Self::run_region_with`].
     #[allow(clippy::too_many_arguments)]
     fn run_region(
@@ -767,10 +829,10 @@ impl<K: TileKernel> GemmPlan<K> {
         m1: usize,
         n0: usize,
         n1: usize,
-        use_avx2: bool,
+        isa: Isa,
     ) {
-        if use_avx2 {
-            self.run_region_with(a, panels, out, m0, m1, n0, n1, true, &mut [], &mut []);
+        if isa.vectorized() {
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, &mut [], &mut []);
             return;
         }
         let kc = panels.kc;
@@ -783,7 +845,7 @@ impl<K: TileKernel> GemmPlan<K> {
             if w_buf.len() < NR * kc {
                 w_buf.resize(NR * kc, 0);
             }
-            self.run_region_with(a, panels, out, m0, m1, n0, n1, false, a_buf, w_buf);
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, a_buf, w_buf);
         });
     }
 
@@ -791,7 +853,7 @@ impl<K: TileKernel> GemmPlan<K> {
     /// raw partial sums accumulated into `out`, per-column epilogue
     /// correction applied once at the end. `a_buf`/`w_buf` are the
     /// scalar-path decode scratch (≥ `kc` / ≥ `NR·kc` bytes; empty and
-    /// unused under AVX2).
+    /// unused under the vector arms).
     #[allow(clippy::too_many_arguments)]
     fn run_region_with(
         &self,
@@ -802,7 +864,7 @@ impl<K: TileKernel> GemmPlan<K> {
         m1: usize,
         n0: usize,
         n1: usize,
-        use_avx2: bool,
+        isa: Isa,
         a_buf: &mut [u8],
         w_buf: &mut [u8],
     ) {
@@ -830,7 +892,7 @@ impl<K: TileKernel> GemmPlan<K> {
                 for (r, slot) in wf.iter_mut().enumerate().take(nt).skip(1) {
                     *slot = panels.frag(p, b, r);
                 }
-                if !use_avx2 {
+                if !isa.vectorized() {
                     self.kernel.prep_panel(&wf, vals, nt, kc, w_buf);
                 }
                 let mut t0 = m0;
@@ -841,9 +903,7 @@ impl<K: TileKernel> GemmPlan<K> {
                         *slot = &a.row(t0 + i)[a_off..a_off + a_len];
                     }
                     let mut sums = [[zero; NR]; MR];
-                    self.kernel.tile(
-                        &ar, &wf, vals, mt, nt, use_avx2, kc, a_buf, w_buf, &mut sums,
-                    );
+                    self.kernel.tile(&ar, &wf, vals, mt, nt, isa, kc, a_buf, w_buf, &mut sums);
                     for (i, row) in sums.iter().enumerate().take(mt) {
                         for (j, s) in row.iter().enumerate().take(nt) {
                             // SAFETY: disjoint region, see above.
@@ -886,6 +946,11 @@ pub struct Lut16Tile {
     /// Whether the 1×4 / 4×4 kernels are exact for this table (they
     /// batch 4 rounds of biased bytes per SAD).
     tile4_ok: bool,
+    /// Precomputed epilogue constant `bias · k_padded` — every arm
+    /// accumulates raw biased table entries over the padded K, so the
+    /// bias total is plan-time state, not hot-loop arithmetic. Set by
+    /// [`TileKernel::prepare`].
+    corr_k: i64,
 }
 
 impl Lut16Tile {
@@ -896,7 +961,7 @@ impl Lut16Tile {
         // 4×4 kernels batch 4 rounds of biased bytes per SAD.
         let max_entry = *lut.table.iter().max().unwrap_or(&0) as u32;
         let tile4_ok = 4 * max_entry < 256;
-        Lut16Tile { scheme, lut, tile4_ok }
+        Lut16Tile { scheme, lut, tile4_ok, corr_k: 0 }
     }
 }
 
@@ -918,6 +983,10 @@ impl TileKernel for Lut16Tile {
 
     fn w_layout(&self) -> Layout {
         self.scheme.w_layout()
+    }
+
+    fn prepare(&mut self, k_padded: usize) {
+        self.corr_k = self.lut.bias as i64 * k_padded as i64;
     }
 
     fn prep_panel(
@@ -944,23 +1013,47 @@ impl TileKernel for Lut16Tile {
         vals: usize,
         mt: usize,
         nt: usize,
-        use_avx2: bool,
+        isa: Isa,
         kc: usize,
         a_scratch: &mut [u8],
         w_scratch: &[u8],
         sums: &mut [[i32; NR]; MR],
     ) {
         let lut = &self.lut;
+        // Every arm returns *raw biased* block sums; the bias total and
+        // pad products are subtracted once in `epilogue`.
+        #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+        if isa == Isa::Avx512 && mt == MR && nt == NR && self.tile4_ok && self.scheme == Scheme::D {
+            // SAFETY: the driver only passes host-supported arms; all
+            // row fragments cover exactly `vals` scheme-d values.
+            let s = unsafe {
+                x86_512::dot4x4_scheme_d(
+                    [ar[0], ar[1], ar[2], ar[3]],
+                    [wf[0], wf[1], wf[2], wf[3]],
+                    lut,
+                    vals,
+                )
+            };
+            for i in 0..MR {
+                for j in 0..NR {
+                    sums[i][j] = s[i][j] as i32;
+                }
+            }
+            return;
+        }
         #[cfg(target_arch = "x86_64")]
-        if use_avx2 {
-            let bias_corr = lut.bias as i64 * vals as i64;
-            // SAFETY: AVX2 availability checked by the caller; all row
-            // fragments cover exactly `vals` values in their layouts.
+        if isa.vectorized() {
+            // Under `Isa::Avx512`, tiles without a dedicated 512-bit
+            // kernel (schemes a–c, remainder tiles, big-entry tables)
+            // run the AVX2 arms — every AVX-512 host supports AVX2.
+            // SAFETY: the driver only passes host-supported arms; all
+            // row fragments cover exactly `vals` values in their
+            // layouts.
             unsafe {
                 if nt == NR && self.tile4_ok {
                     match self.scheme {
                         Scheme::D if mt == MR => {
-                            let s = simd::dot4x4_scheme_d(
+                            let s = x86::dot4x4_scheme_d(
                                 [ar[0], ar[1], ar[2], ar[3]],
                                 [wf[0], wf[1], wf[2], wf[3]],
                                 lut,
@@ -968,7 +1061,7 @@ impl TileKernel for Lut16Tile {
                             );
                             for i in 0..MR {
                                 for j in 0..NR {
-                                    sums[i][j] = (s[i][j] - bias_corr) as i32;
+                                    sums[i][j] = s[i][j] as i32;
                                 }
                             }
                         }
@@ -981,7 +1074,7 @@ impl TileKernel for Lut16Tile {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = (s[j] - bias_corr) as i32;
+                                    sums[i][j] = s[j] as i32;
                                 }
                             }
                         }
@@ -994,7 +1087,7 @@ impl TileKernel for Lut16Tile {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = (s[j] - bias_corr) as i32;
+                                    sums[i][j] = s[j] as i32;
                                 }
                             }
                         }
@@ -1007,7 +1100,7 @@ impl TileKernel for Lut16Tile {
                                     vals,
                                 );
                                 for j in 0..NR {
-                                    sums[i][j] = (s[j] - bias_corr) as i32;
+                                    sums[i][j] = s[j] as i32;
                                 }
                             }
                         }
@@ -1021,7 +1114,7 @@ impl TileKernel for Lut16Tile {
                                 Scheme::C => lut16::avx2::dot_scheme_c(ar[i], wf[j], lut, vals),
                                 Scheme::D => lut16::avx2::dot_scheme_d(ar[i], wf[j], lut, vals),
                             };
-                            sums[i][j] = (s - bias_corr) as i32;
+                            sums[i][j] = s as i32;
                         }
                     }
                 }
@@ -1030,7 +1123,8 @@ impl TileKernel for Lut16Tile {
         }
         // Portable scalar fallback: weights were already decoded into
         // `w_scratch` by `prep_panel` (once per block/panel); unpack
-        // only the activation rows here.
+        // only the activation rows here. Accumulates the same biased
+        // table bytes as the vector arms, so one epilogue fits all.
         let a_layout = self.scheme.a_layout();
         for i in 0..mt {
             unpack_row(ar[i], vals, a_layout, &mut a_scratch[..vals]);
@@ -1038,7 +1132,7 @@ impl TileKernel for Lut16Tile {
                 let wrow = &w_scratch[j * kc..j * kc + vals];
                 let mut s = 0i64;
                 for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
-                    s += lut.product(*wc, *ac) as i64;
+                    s += lut.table[lut_index(*wc, *ac, 2)] as i64;
                 }
                 sums[i][j] = s as i32;
             }
@@ -1046,14 +1140,15 @@ impl TileKernel for Lut16Tile {
     }
 
     fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
-        // Padding is code 0 on both operands → `pad_product` per padded
-        // value (table bias is removed per block inside `tile`).
-        (self.lut.pad_product as i64 * a_pad as i64) as i32
+        // Raw block sums are biased over the whole padded K; subtract
+        // the precomputed bias total (`prepare`) plus the pad products
+        // (padding is code 0 on both operands).
+        (self.corr_k + self.lut.pad_product as i64 * a_pad as i64) as i32
     }
 }
 
 #[cfg(target_arch = "x86_64")]
-mod simd {
+mod x86 {
     use crate::kernels::lut16::avx2::{hsum_epi64, load_lut};
     use crate::kernels::K_BLOCK;
     use crate::quant::Lut16;
@@ -1072,6 +1167,12 @@ mod simd {
         lut: &Lut16,
         vals: usize,
     ) -> [[i64; 4]; 4] {
+        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Scheme d packs 2 codes/byte: vals/2 bytes per fragment.
+            debug_assert!(arows[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wrows[r].len() >= vals / 2, "weight fragment too short");
+        }
         let lutv = load_lut(lut);
         let mf = _mm256_set1_epi8(0x0F);
         let zero = _mm256_setzero_si256();
@@ -1105,6 +1206,101 @@ mod simd {
         for (i, row) in acc.iter().enumerate() {
             for (j, v) in row.iter().enumerate() {
                 out[i][j] = hsum_epi64(*v);
+            }
+        }
+        out
+    }
+}
+
+/// AVX-512 VBMI arm of the scheme-d tile kernel. `vpermb`
+/// (`_mm512_permutexvar_epi8`) looks up 64 bytes through a 64-entry
+/// table in one instruction — the paper's 16-entry `pshufb` kernel
+/// widened to a full 512-bit lane with no per-128-bit-lane splits — so
+/// one K chunk ([`K_BLOCK`] values, 64 scheme-d bytes) is a single
+/// load + 2 lookups + 1 SAD per (row, column). Compiled only on
+/// toolchains with stable AVX-512 intrinsics (`deepgemm_avx512`,
+/// probed by `build.rs`); runtime dispatch additionally requires the
+/// host features ([`Isa::Avx512`](super::Isa)).
+#[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+mod x86_512 {
+    use crate::kernels::K_BLOCK;
+    use crate::quant::Lut16;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the eight i64 lanes (SAD accumulators).
+    #[inline]
+    #[target_feature(enable = "avx512f,avx2")]
+    unsafe fn hsum_epi64_512(v: __m512i) -> i64 {
+        let lo = _mm512_castsi512_si256(v);
+        let hi = _mm512_extracti64x4_epi64(v, 1);
+        let d256 = _mm256_add_epi64(lo, hi);
+        let d = _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
+        let e = _mm_shuffle_epi32(d, 238);
+        _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+    }
+
+    /// Broadcast the 16-entry biased table into all four 128-bit lanes.
+    /// `vpermb` indexes the full 64-byte vector, but scheme-d indices
+    /// are < 16, so the replicated copies are never addressed — one
+    /// broadcast serves both nibble halves.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn load_lut_512(lut: &Lut16) -> __m512i {
+        debug_assert_eq!(lut.table.len(), 16);
+        let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
+        _mm512_broadcast_i32x4(t)
+    }
+
+    /// 4×4 register-tiled scheme-d micro-kernel on 512-bit vectors: one
+    /// 64-byte load covers a whole [`K_BLOCK`] chunk (vs two 32-byte
+    /// halves on AVX2), `vpermb` replaces the two per-lane `pshufb`s,
+    /// and the sixteen SAD accumulator chains each run at twice the
+    /// AVX2 width. Exactness matches the AVX2 kernel: 2 rounds of
+    /// biased bytes per SAD, gated by the caller's stricter `tile4_ok`.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vbmi")]
+    pub unsafe fn dot4x4_scheme_d(
+        arows: [&[u8]; 4],
+        wrows: [&[u8]; 4],
+        lut: &Lut16,
+        vals: usize,
+    ) -> [[i64; 4]; 4] {
+        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
+        for r in 0..4 {
+            // Scheme d packs 2 codes/byte: vals/2 bytes per fragment.
+            debug_assert!(arows[r].len() >= vals / 2, "activation fragment too short");
+            debug_assert!(wrows[r].len() >= vals / 2, "weight fragment too short");
+        }
+        let lutv = load_lut_512(lut);
+        let mf = _mm512_set1_epi8(0x0F);
+        let zero = _mm512_setzero_si512();
+        let mut acc = [[_mm512_setzero_si512(); 4]; 4];
+        let chunks = vals / K_BLOCK;
+        for c in 0..chunks {
+            let off = 64 * c;
+            let va = [
+                _mm512_loadu_epi8(arows[0].as_ptr().add(off) as *const i8),
+                _mm512_loadu_epi8(arows[1].as_ptr().add(off) as *const i8),
+                _mm512_loadu_epi8(arows[2].as_ptr().add(off) as *const i8),
+                _mm512_loadu_epi8(arows[3].as_ptr().add(off) as *const i8),
+            ];
+            for j in 0..4 {
+                let vw = _mm512_loadu_epi8(wrows[j].as_ptr().add(off) as *const i8);
+                for (i, vai) in va.iter().enumerate() {
+                    let fused = _mm512_or_si512(vw, *vai);
+                    let ilo = _mm512_and_si512(fused, mf);
+                    let ihi = _mm512_and_si512(_mm512_srli_epi16(fused, 4), mf);
+                    let sum8 = _mm512_add_epi8(
+                        _mm512_permutexvar_epi8(ilo, lutv),
+                        _mm512_permutexvar_epi8(ihi, lutv),
+                    );
+                    acc[i][j] = _mm512_add_epi64(acc[i][j], _mm512_sad_epu8(sum8, zero));
+                }
+            }
+        }
+        let mut out = [[0i64; 4]; 4];
+        for (i, row) in acc.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                out[i][j] = hsum_epi64_512(*v);
             }
         }
         out
@@ -1155,7 +1351,7 @@ mod tests {
             let plan = GemmPlan::new(
                 &wp,
                 Lut16Tile::new(scheme, lut.clone()),
-                PlanOpts { shape, threads, force_scalar },
+                PlanOpts { shape, threads, force_scalar, ..Default::default() },
             );
             let mut got = vec![0i32; m * n];
             plan.execute(&ap, &mut got);
@@ -1356,7 +1552,12 @@ mod tests {
                         let plan = GemmPlan::new(
                             &wp,
                             LutWideTile::new(lut.clone()),
-                            PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                            PlanOpts {
+                                shape: tiny_shape(),
+                                threads,
+                                force_scalar,
+                                ..Default::default()
+                            },
                         );
                         let mut got = vec![0i32; m * n];
                         plan.execute(&ap, &mut got);
@@ -1412,7 +1613,12 @@ mod tests {
                     let plan = GemmPlan::new(
                         &wp,
                         Lut16F32Tile::new(lut.clone()),
-                        PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                        PlanOpts {
+                            shape: tiny_shape(),
+                            threads,
+                            force_scalar,
+                            ..Default::default()
+                        },
                     );
                     let mut got = vec![0f32; m * n];
                     plan.execute(&ap, &mut got);
@@ -1450,7 +1656,12 @@ mod tests {
                     let plan = GemmPlan::new(
                         &wp,
                         Int8Tile::new(za, row_sums.clone()),
-                        PlanOpts { shape: tiny_shape(), threads, force_scalar },
+                        PlanOpts {
+                            shape: tiny_shape(),
+                            threads,
+                            force_scalar,
+                            ..Default::default()
+                        },
                     );
                     let mut got = vec![0i32; m * n];
                     plan.execute(&ap, &mut got);
@@ -1623,5 +1834,51 @@ mod tests {
         dflt.execute(&ap, &mut want);
         reset.execute(&ap, &mut got);
         assert_eq!(got, want, "reset plan diverges");
+    }
+
+    #[test]
+    fn isa_resolution_precedence() {
+        // force_scalar wins over any isa override; a supported override
+        // is honoured; an unsupported one clamps to a supported arm.
+        let opts = PlanOpts { force_scalar: true, isa: Some(Isa::Avx2), ..Default::default() };
+        assert_eq!(opts.resolve_isa(), Isa::Scalar);
+        let opts = PlanOpts { isa: Some(Isa::Scalar), ..Default::default() };
+        assert_eq!(opts.resolve_isa(), Isa::Scalar);
+        for isa in Isa::ALL {
+            let opts = PlanOpts { isa: Some(isa), ..Default::default() };
+            assert!(opts.resolve_isa().is_supported());
+        }
+        assert!(PlanOpts::default().resolve_isa().is_supported());
+    }
+
+    #[test]
+    fn forced_isa_arms_match_oracle() {
+        // Every host-supported arm, forced explicitly, matches the
+        // oracle (the full cross-backend sweep lives in
+        // tests/isa_diff.rs).
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let (m, n, k) = (5, 7, 200);
+        let a = CodeMat::random(m, k, 2, 21);
+        let w = CodeMat::random(n, k, 2, 22);
+        let mut want = vec![0i32; m * n];
+        oracle_gemm_i32(&a, &w, &cb, &cb, &mut want);
+        let ap = pack_activations(&a, Scheme::D);
+        let wp = pack_weights(&w, Scheme::D);
+        for isa in Isa::ALL {
+            if !isa.is_supported() {
+                eprintln!("skipping unsupported ISA '{}'", isa.name());
+                continue;
+            }
+            let plan = GemmPlan::new(
+                &wp,
+                Lut16Tile::new(Scheme::D, lut.clone()),
+                PlanOpts { shape: tiny_shape(), isa: Some(isa), ..Default::default() },
+            );
+            assert_eq!(plan.resolve_isa(), isa);
+            let mut got = vec![0i32; m * n];
+            plan.execute(&ap, &mut got);
+            assert_eq!(got, want, "isa {}", isa.name());
+        }
     }
 }

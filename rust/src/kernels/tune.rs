@@ -204,7 +204,10 @@ pub struct TuneKey {
     pub k: usize,
     /// Resolved worker-thread count at tuning time.
     pub threads: usize,
-    /// Instruction set the measurement ran on (`avx2` or `scalar`).
+    /// Instruction-set arm the measurement dispatched to — a
+    /// [`super::simd::Isa::name`] spelling (`scalar`, `neon`, `avx2`,
+    /// `avx512`). Tuned shapes never cross ISA arms: an AVX-512 winner
+    /// says nothing about AVX2's best block shape.
     pub isa: String,
 }
 
@@ -519,17 +522,6 @@ fn measure<K: TileKernel>(plan: &GemmPlan<K>, a: &Packed, out: &mut [K::Acc], re
     best
 }
 
-fn isa_name(force_scalar: bool) -> &'static str {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") && !force_scalar {
-            return "avx2";
-        }
-    }
-    let _ = force_scalar;
-    "scalar"
-}
-
 /// Build a [`GemmPlan`] with an autotuned cache-block shape.
 ///
 /// `w` and `kernel` are exactly what [`GemmPlan::new`] takes; `m` is
@@ -638,7 +630,10 @@ where
     F: FnOnce(usize) -> Packed,
 {
     let threads = tile::resolve_threads(base.threads);
-    let isa = isa_name(base.force_scalar);
+    // The arm the measurement (and later every execute of the tuned
+    // plan) actually dispatches to: force_scalar / per-plan override /
+    // process request / detection, clamped to host support.
+    let isa = base.resolve_isa().name();
     let key = TuneKey {
         kernel: kernel.name().to_string(),
         m,
@@ -982,6 +977,95 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn tune_keys_are_isa_scoped() {
+        use crate::kernels::simd::{self, Isa};
+        // Unique (n, k) so parallel tests cannot collide on the keys.
+        let (m, n, k) = (5usize, 9usize, 419usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 23);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        // Tune with the scalar arm forced via the per-plan ISA override.
+        let scalar_opts = PlanOpts { isa: Some(Isa::Scalar), ..Default::default() };
+        let (_, s_out) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut.clone()),
+            scalar_opts,
+            AutotuneMode::Quick,
+            m,
+            |ms| pack::pack_activations(&CodeMat::random(ms, k, 2, 24), Scheme::D),
+        );
+        assert!(!s_out.from_cache);
+        assert_eq!(s_out.key.isa, "scalar");
+        let active = simd::active();
+        if active == Isa::Scalar {
+            eprintln!("skipping vector half of tune_keys_are_isa_scoped: no vector arm");
+            return;
+        }
+        // The host's best vector arm keys separately: the scalar
+        // decision must not satisfy it, and both entries coexist.
+        let (_, v_out) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            AutotuneMode::Quick,
+            m,
+            |ms| pack::pack_activations(&CodeMat::random(ms, k, 2, 24), Scheme::D),
+        );
+        assert_eq!(v_out.key.isa, active.name());
+        assert!(!v_out.from_cache, "scalar-keyed decision satisfied a vector-arm tune");
+        assert_ne!(s_out.key, v_out.key);
+        assert!(cache_lookup(&s_out.key).is_some());
+        assert!(cache_lookup(&v_out.key).is_some());
+    }
+
+    #[test]
+    fn persisted_cache_entries_do_not_cross_isa_arms() {
+        use crate::kernels::simd::{self, Isa};
+        if simd::active() == Isa::Neon {
+            eprintln!("skipping persisted ISA-scope test: host resolves the planted arm");
+            return;
+        }
+        // A cache file written under one ISA must not satisfy tuning
+        // under another: fabricate a persisted record that matches this
+        // host's (kernel, M, N, K, threads) but carries a foreign ISA.
+        let (m, n, k) = (4usize, 11usize, 421usize);
+        let cb = IntCodebook::signed(2);
+        let lut = Lut16::build(&cb, &cb);
+        let w = CodeMat::random(n, k, 2, 25);
+        let wp = pack::pack_weights(&w, Scheme::D);
+        let threads = tile::resolve_threads(0);
+        let foreign =
+            TuneKey { kernel: "lut16-d".into(), m, n, k, threads, isa: "neon".into() };
+        let planted =
+            CachedShape { shape: TileShape { mc: 64, nc: 128, kc: 512 }, micros: 1.0 };
+        cache_insert(foreign.clone(), planted);
+        let dir = std::env::temp_dir().join("dg_tune_isa_scope_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune_cache.json");
+        save_cache(&path).unwrap();
+        cache_remove(&foreign);
+        let _ = load_cache(&path).unwrap();
+        assert!(cache_lookup(&foreign).is_some(), "foreign-ISA record restored from file");
+        // Tuning on this host resolves a different ISA string, so the
+        // planted record is invisible: the sweep runs and caches its
+        // own ISA-scoped key, leaving the foreign record untouched.
+        let (_, out) = tune_plan(
+            &wp,
+            Lut16Tile::new(Scheme::D, lut),
+            PlanOpts::default(),
+            AutotuneMode::Quick,
+            m,
+            |ms| pack::pack_activations(&CodeMat::random(ms, k, 2, 26), Scheme::D),
+        );
+        assert!(!out.from_cache, "a record tuned under another ISA must force a re-tune");
+        assert_ne!(out.key, foreign);
+        assert_ne!(out.key.isa, "neon");
+        assert!(cache_lookup(&foreign).is_some(), "foreign record survives alongside");
+        assert!(cache_lookup(&out.key).is_some());
     }
 
     #[test]

@@ -28,6 +28,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "weight/input seed", takes_value: true, default: Some("0") },
         OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
         cli::threads_opt(),
+        cli::isa_opt(),
         cli::autotune_opt(),
         cli::tune_cache_opt(),
         OptSpec { name: "verbose", help: "chatty output", takes_value: false, default: None },
@@ -93,10 +94,11 @@ fn compile_model(args: &Args, max_batch: usize) -> Result<CompiledModel, deepgem
         }
     }
     eprintln!(
-        "compiling {model} ({} convs, {:.1}M params) for backend {} (autotune {}, max_batch {max_batch})...",
+        "compiling {model} ({} convs, {:.1}M params) for backend {} (isa {}, autotune {}, max_batch {max_batch})...",
         graph.conv_count(),
         graph.conv_params() as f64 / 1e6,
         backend.name(),
+        deepgemm::kernels::simd::active().name(),
         tune::default_mode().name()
     );
     let assign = |_: usize, _: &deepgemm::nn::ConvSpec| -> Option<Backend> { None };
@@ -131,6 +133,14 @@ fn run(cmd: &str, args: &Args) -> Result<(), deepgemm::Error> {
     // One process-wide GEMM-threads knob, shared by every command.
     let threads = args.get_usize("threads", 0).map_err(deepgemm::Error::Config)?;
     deepgemm::kernels::tile::set_default_threads(threads);
+    // Same contract for the ISA arm; absent flag defers to the
+    // DEEPGEMM_ISA env var and then runtime detection. An unsupported
+    // request warns and falls back at dispatch time (simd::active), so
+    // a shared command line still runs everywhere.
+    if let Some(isa) = args.get("isa") {
+        let isa = deepgemm::kernels::Isa::parse(isa).map_err(deepgemm::Error::Config)?;
+        deepgemm::kernels::simd::set_requested(Some(isa));
+    }
     // Same contract for the autotune mode; absent flag defers to the
     // AUTOTUNE env var (resolved in kernels::tune::default_mode).
     if let Some(mode) = args.get("autotune") {

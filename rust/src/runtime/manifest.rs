@@ -128,7 +128,9 @@ pub struct TuneRecord {
     pub k: usize,
     /// Worker threads at tuning time.
     pub threads: usize,
-    /// Instruction set measured on (`avx2` / `scalar`).
+    /// Instruction-set arm measured on (`scalar` / `neon` / `avx2` /
+    /// `avx512` — a `kernels::simd::Isa::name` spelling). Records never
+    /// cross arms: a file written under one ISA re-tunes under another.
     pub isa: String,
     /// Winning activation-block rows.
     pub mc: usize,

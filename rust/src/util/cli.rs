@@ -110,6 +110,21 @@ pub fn threads_opt() -> OptSpec {
     }
 }
 
+/// The shared `--isa` option spec: instruction-set arm for the tiled
+/// GEMM micro-kernels. No baked-in default — when the flag is absent
+/// the process falls back to the `DEEPGEMM_ISA` env var and then to
+/// runtime detection (resolution lives in `crate::kernels::simd`); an
+/// unsupported request falls back to the detected best with a warning.
+pub fn isa_opt() -> OptSpec {
+    OptSpec {
+        name: "isa",
+        help: "instruction-set arm for GEMM kernels: scalar|neon|avx2|avx512 \
+               (default: $DEEPGEMM_ISA or runtime detection)",
+        takes_value: true,
+        default: None,
+    }
+}
+
 /// The shared `--autotune` option spec: cache-block autotune mode for
 /// tiled GEMM plans, applied at model compile time. No baked-in default
 /// — when the flag is absent the process falls back to the `AUTOTUNE`
@@ -210,6 +225,16 @@ mod tests {
         assert_eq!(a.get_usize("threads", 0).unwrap(), 4);
         let auto = Args::parse(&sv(&["bench"]), &specs).unwrap();
         assert_eq!(auto.get_usize("threads", 1).unwrap(), 0, "default is 0 = auto");
+    }
+
+    #[test]
+    fn isa_opt_parses_with_no_default() {
+        let specs = vec![isa_opt()];
+        let a = Args::parse(&sv(&["bench", "--isa", "avx2"]), &specs).unwrap();
+        assert_eq!(a.get("isa"), Some("avx2"));
+        // No baked-in default: absence means "defer to $DEEPGEMM_ISA".
+        let absent = Args::parse(&sv(&["bench"]), &specs).unwrap();
+        assert_eq!(absent.get("isa"), None);
     }
 
     #[test]

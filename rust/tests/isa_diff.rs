@@ -1,0 +1,259 @@
+//! Cross-ISA differential suite: every tiled backend, executed under
+//! every *forced* instruction-set arm the host supports, must produce
+//! bit-identical integer results (ulp-close for the f32-entry LUT,
+//! whose vector arms regroup the reduction).
+//!
+//! The per-plan `PlanOpts::isa` override is the forcing mechanism —
+//! the same hook the engine and CLI plumb `--isa` / `DEEPGEMM_ISA`
+//! through — so this suite proves the dispatch layer end to end:
+//! scalar vs AVX2 vs AVX-512 (VBMI/VNNI) arms, remainder tiles, K
+//! padding and the hoisted bias correction all have to agree exactly.
+//! Arms the host cannot run are skipped with a log line, never failed:
+//! the suite passes on a scalar-only box, an AVX2 box, and an AVX-512
+//! box, checking strictly more on each.
+
+use deepgemm::kernels::pack::{self, Layout, Scheme};
+use deepgemm::kernels::simd::Isa;
+use deepgemm::kernels::{
+    int8, lut16_wide, lut65k, oracle_gemm_i32, CodeMat, GemmPlan, Int8Tile, Lut16F32Tile,
+    Lut16Tile, Lut65kTile, LutWideTile, PlanOpts,
+};
+use deepgemm::quant::{F32Codebook, IntCodebook, Lut16, Lut16F32, Lut65k};
+use deepgemm::util::rng::Rng;
+use std::sync::Arc;
+
+/// The arms this host can actually run; unsupported ones are logged
+/// and skipped (the differential matrix shrinks, it never fails).
+fn supported_arms(context: &str) -> Vec<Isa> {
+    let mut v = Vec::new();
+    for isa in Isa::ALL {
+        if isa.is_supported() {
+            v.push(isa);
+        } else {
+            eprintln!("[isa_diff] {context}: skipping unsupported arm '{}'", isa.name());
+        }
+    }
+    v
+}
+
+/// Deterministic per-shape seed so every arm sees identical operands.
+fn seed(m: usize, n: usize, k: usize) -> u64 {
+    ((m as u64) << 40) ^ ((n as u64) << 20) ^ (k as u64) ^ 0x15A_D1FF
+}
+
+fn opts(threads: usize, isa: Isa) -> PlanOpts {
+    PlanOpts { threads, isa: Some(isa), ..Default::default() }
+}
+
+fn run_lut16(scheme: Scheme, m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k);
+    let wcb = IntCodebook::signed(2);
+    let acb = IntCodebook::unsigned(2);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let lut = Lut16::build(&wcb, &acb);
+    let ap = pack::pack_activations(&a, scheme);
+    let wp = pack::pack_weights(&w, scheme);
+    let plan = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut), opts(t, isa));
+    assert_eq!(plan.resolve_isa(), isa, "supported forced arm must be honoured");
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn run_wide(bits: u32, m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k) ^ bits as u64;
+    let wcb = IntCodebook::signed(bits);
+    let acb = IntCodebook::unsigned(bits);
+    let a = CodeMat::random(m, k, bits, s);
+    let w = CodeMat::random(n, k, bits, s ^ 1);
+    let lut = Lut16::build(&wcb, &acb);
+    let ap = lut16_wide::pack_wide(&a);
+    let wp = lut16_wide::pack_wide(&w);
+    let plan = GemmPlan::new(&wp, LutWideTile::new(lut), opts(t, isa));
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn run_lut65k(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k) ^ 0x65;
+    let cb = IntCodebook::signed(2);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let lut = Arc::new(Lut65k::build(&cb, &cb));
+    let ap = lut65k::pack_dense(&a);
+    let wp = lut65k::pack_dense(&w);
+    let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), opts(t, isa));
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn run_int8(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k) ^ 0x18;
+    let mut rng = Rng::new(s);
+    let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+    let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+    let (wp, sums) = int8::pack_weights_i8(&wvals, n, k);
+    let ap = pack::pack(&CodeMat::from_data(m, k, 8, acodes), Layout::Int8);
+    let plan = GemmPlan::new(&wp, Int8Tile::new(128, sums), opts(t, isa));
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn run_f32(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<f32> {
+    let s = seed(m, n, k) ^ 0xF32;
+    let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
+    let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let lut = Lut16F32::build(&wcb, &acb);
+    let ap = pack::pack(&a, Layout::NibbleLo);
+    let wp = pack::pack(&w, Layout::NibbleHi);
+    let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), opts(t, isa));
+    let mut out = vec![0f32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn assert_f32_close(got: &[f32], want: &[f32], what: &str) {
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = 1e-3 + 1e-3 * w.abs().max(g.abs());
+        assert!((g - w).abs() <= tol, "{what}: element {i} diverges: {g} vs {w}");
+    }
+}
+
+/// The scalar arm of each integer backend, checked against the code
+/// oracle once per shape — anchors the differential baseline itself.
+fn lut16_oracle(m: usize, n: usize, k: usize) -> Vec<i32> {
+    let s = seed(m, n, k);
+    let wcb = IntCodebook::signed(2);
+    let acb = IntCodebook::unsigned(2);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let mut out = vec![0i32; m * n];
+    oracle_gemm_i32(&a, &w, &wcb, &acb, &mut out);
+    out
+}
+
+#[test]
+fn all_backends_agree_across_forced_arms_odd_shapes() {
+    let arms = supported_arms("odd shapes");
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 5, 7),
+        (2, 3, 127),
+        (5, 9, 128),
+        (7, 4, 129),
+        (6, 11, 300),
+    ];
+    for &(m, n, k) in &shapes {
+        // Scalar is the per-backend baseline; lut16-d's is additionally
+        // anchored to the code-level oracle.
+        let base_d = run_lut16(Scheme::D, m, n, k, 1, Isa::Scalar);
+        assert_eq!(base_d, lut16_oracle(m, n, k), "scalar baseline vs oracle m={m} n={n} k={k}");
+        let base_65k = run_lut65k(m, n, k, 1, Isa::Scalar);
+        let base_i8 = run_int8(m, n, k, 1, Isa::Scalar);
+        let base_f32 = run_f32(m, n, k, 1, Isa::Scalar);
+        let base_w: Vec<Vec<i32>> =
+            [3u32, 4].iter().map(|&b| run_wide(b, m, n, k, 1, Isa::Scalar)).collect();
+        let base_s: Vec<Vec<i32>> =
+            Scheme::ALL.iter().map(|&s| run_lut16(s, m, n, k, 1, Isa::Scalar)).collect();
+        for &isa in &arms {
+            let what = format!("m={m} n={n} k={k} isa={}", isa.name());
+            for (si, &scheme) in Scheme::ALL.iter().enumerate() {
+                assert_eq!(
+                    run_lut16(scheme, m, n, k, 1, isa),
+                    base_s[si],
+                    "lut16-{} {what}",
+                    scheme.name()
+                );
+            }
+            for (bi, &bits) in [3u32, 4].iter().enumerate() {
+                assert_eq!(run_wide(bits, m, n, k, 1, isa), base_w[bi], "lut{bits}b {what}");
+            }
+            assert_eq!(run_lut65k(m, n, k, 1, isa), base_65k, "lut65k {what}");
+            assert_eq!(run_int8(m, n, k, 1, isa), base_i8, "int8 {what}");
+            assert_f32_close(&run_f32(m, n, k, 1, isa), &base_f32, &format!("lut16-f32 {what}"));
+        }
+    }
+}
+
+#[test]
+fn forced_arms_agree_across_batch_fused_m_and_threads() {
+    // Batch-fused Ms (the serving batcher stacks B images into one
+    // GEMM) × worker threads: region splitting and per-thread scratch
+    // must not perturb any arm.
+    let arms = supported_arms("batch/threads");
+    let (n, k) = (9usize, 200usize);
+    for &m in &[8usize, 24, 64] {
+        let base_d = run_lut16(Scheme::D, m, n, k, 1, Isa::Scalar);
+        let base_i8 = run_int8(m, n, k, 1, Isa::Scalar);
+        let base_w3 = run_wide(3, m, n, k, 1, Isa::Scalar);
+        for &t in &[1usize, 2, 4] {
+            for &isa in &arms {
+                let what = format!("m={m} t={t} isa={}", isa.name());
+                assert_eq!(run_lut16(Scheme::D, m, n, k, t, isa), base_d, "lut16-d {what}");
+                assert_eq!(run_int8(m, n, k, t, isa), base_i8, "int8 {what}");
+                assert_eq!(run_wide(3, m, n, k, t, isa), base_w3, "lut3b {what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn remainder_shape_sweep_agrees_across_arms() {
+    // Hardening sweep for the unsafe micro-kernels: every combination
+    // of M, N, K in {1, MR-1, MR, MR+1, 63, 64, 65} (MR = NR = 4)
+    // exercises full tiles, remainder tiles in both dimensions, and
+    // sub-/exact-/over-chunk K under each arm. Debug builds also hit
+    // the kernels' debug-assert preconditions on every call.
+    let arms = supported_arms("remainder sweep");
+    let axis = [1usize, 3, 4, 5, 63, 64, 65];
+    for &m in &axis {
+        for &n in &axis {
+            for &k in &axis {
+                let base_d = run_lut16(Scheme::D, m, n, k, 1, Isa::Scalar);
+                let base_i8 = run_int8(m, n, k, 1, Isa::Scalar);
+                let base_w3 = run_wide(3, m, n, k, 1, Isa::Scalar);
+                for &isa in &arms {
+                    if isa == Isa::Scalar {
+                        continue;
+                    }
+                    let what = format!("m={m} n={n} k={k} isa={}", isa.name());
+                    assert_eq!(run_lut16(Scheme::D, m, n, k, 1, isa), base_d, "lut16-d {what}");
+                    assert_eq!(run_int8(m, n, k, 1, isa), base_i8, "int8 {what}");
+                    assert_eq!(run_wide(3, m, n, k, 1, isa), base_w3, "lut3b {what}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_k_bias_correction_identical_across_arms() {
+    // The bias correction is hoisted to plan build (TileKernel::prepare)
+    // and applied in the epilogue over *padded* K: K values straddling
+    // the 128-value block boundary are where a wrong correction shows.
+    let arms = supported_arms("padding");
+    for &k in &[1usize, 63, 127, 129, 255, 257] {
+        let (m, n) = (3usize, 5usize);
+        let want = lut16_oracle(m, n, k);
+        for &isa in &arms {
+            assert_eq!(
+                run_lut16(Scheme::D, m, n, k, 1, isa),
+                want,
+                "padded-K correction diverges at k={k} isa={}",
+                isa.name()
+            );
+            assert_eq!(
+                run_wide(3, m, n, k, 1, isa),
+                run_wide(3, m, n, k, 1, Isa::Scalar),
+                "lut3b padded-K correction diverges at k={k} isa={}",
+                isa.name()
+            );
+        }
+    }
+}
