@@ -1,8 +1,11 @@
 //! Paper Fig. 7: low-level kernel profiling on x86 — per-stage breakdown
 //! of the quantized convolution pipeline (act-quantize / act-pack /
-//! Lut-Conv / dequantize; we report im2col separately where the paper
-//! folds it into packing), plus the intra-LutConv unpack/lookup/accumulate
-//! split that the paper attributes ~80% / ~20% via VTune.
+//! Lut-Conv / dequantize; like the paper, im2col is folded into packing —
+//! the fused implicit-GEMM path gathers im2col rows inside the pack
+//! stage, so no standalone im2col row appears for these backends, and
+//! the tiled backends' dequant epilogue runs inside Lut-Conv), plus the
+//! intra-LutConv unpack/lookup/accumulate split that the paper
+//! attributes ~80% / ~20% via VTune.
 //!
 //! Expected shape: Lut-Conv dominates; within it, unpacking is the
 //! majority (the paper's headline profiling insight and the motivation

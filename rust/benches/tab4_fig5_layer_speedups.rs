@@ -12,11 +12,19 @@
 //! the JSON artifacts get an `_tuned` suffix. The tuned shape must beat
 //! or match the default (it is always in the candidate grid), modulo
 //! measurement noise — see docs/TUNING.md.
+//!
+//! A second per-model table (`fig5_<model>_fused` artifacts) reports
+//! the implicit-GEMM memory effect per layer: the bytes of the M×K
+//! im2col code matrix the pre-fusion pipeline materialized (now
+//! eliminated — see docs/FUSION.md), the K-byte gather row that
+//! replaced it, and the packed activation operand (unchanged by the
+//! fusion). Tuning is unaffected: tune keys and the measured GEMM are
+//! identical in both pipelines.
 
 use deepgemm::bench::{autotune_mode, support, threads_axis, BenchOpts, Table};
 use deepgemm::kernels::pack::Scheme;
-use deepgemm::kernels::{tile, Backend};
-use deepgemm::util::geomean;
+use deepgemm::kernels::{tile, Backend, K_BLOCK};
+use deepgemm::util::{align_up, geomean};
 
 fn main() {
     let opts = BenchOpts {
@@ -107,6 +115,44 @@ fn main() {
         }
         fig5.write_json(&file).expect("write json");
         summary.row(model, vec![geo, paper]);
+
+        // Implicit-GEMM memory effect: what the kill-im2col fusion
+        // removes per layer. The materialized pipeline allocated an M×K
+        // u8 code matrix per conv; the fused pipeline gathers one
+        // K-byte row at a time while packing (docs/FUSION.md).
+        let mut fused = Table::new(
+            format!("Fig 5 (fused) — {model}: per-layer im2col bytes eliminated"),
+            &["M", "K", "im2col KiB eliminated", "gather row B", "packed act KiB"],
+        );
+        let a_layout = Scheme::D.a_layout();
+        let mut total_elim = 0usize;
+        let mut total_packed = 0usize;
+        for (name, size) in &layers {
+            let elim = size.m * size.k; // one u8 code per (m, k)
+            let packed = size.m * a_layout.bytes_for(align_up(size.k.max(1), K_BLOCK));
+            total_elim += elim;
+            total_packed += packed;
+            fused.row(
+                format!("{name} ({},{},{})", size.m, size.n, size.k),
+                vec![
+                    size.m as f64,
+                    size.k as f64,
+                    elim as f64 / 1024.0,
+                    size.k as f64,
+                    packed as f64 / 1024.0,
+                ],
+            );
+        }
+        fused.note(format!(
+            "total eliminated = {:.1} KiB of materialized im2col; steady-state gather \
+             scratch = max-K row ({} B); packed operand ({:.1} KiB, lut16-d layout) is \
+             unchanged by the fusion",
+            total_elim as f64 / 1024.0,
+            layers.iter().map(|(_, s)| s.k).max().unwrap_or(0),
+            total_packed as f64 / 1024.0
+        ));
+        print!("{}", fused.render());
+        fused.write_json(&format!("fig5_{model}_fused")).expect("write json");
     }
     summary.row("average", vec![geomean(&all_geo), 1.66]);
     summary.note("backend lut16-d (scheme d) vs QNNPACK-style int8 (unpack+pmaddwd)");

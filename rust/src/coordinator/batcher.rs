@@ -396,8 +396,8 @@ fn run_worker(
     // One execution context per worker run, reused across batches: the
     // compiled plan's arena + conv scratch grow to the largest batch
     // seen, after which steady-state forwards allocate nothing in the
-    // quantize→im2col→pack→GEMM→dequant pipeline. Report the static
-    // memory plan once at startup.
+    // quantize → pack(implicit im2col) → GEMM+epilogue pipeline.
+    // Report the static memory plan once at startup.
     if announce {
         metrics.set_arena_planned(&model.name, model.plan.arena_bytes_per_image() as u64);
         eprintln!(

@@ -3,31 +3,46 @@
 //! request time the pipeline runs entirely in caller-provided buffers
 //! ([`ConvScratch`] + output slab), so steady-state serving allocates
 //! nothing here.
+//!
+//! The production pipeline is **implicit-GEMM**: the M×K im2col code
+//! matrix is never materialized. Packing gathers LUT codes straight out
+//! of the quantized activation tensor through an
+//! [`crate::nn::im2col::Im2ColView`] (driven by a plan-time
+//! [`Im2ColOffsets`] table), and the dequant + bias + ReLU (+ fused
+//! residual add, see [`ConvEpilogue`]) runs as a [`RegionSink`] inside
+//! the GEMM while each output region is cache-hot. The pre-fusion
+//! materialized pipeline survives as
+//! [`CompiledConv::forward_batch_reference`], the differential-test
+//! oracle.
 
 use crate::kernels::fp32::MatF32;
-use crate::kernels::pack::{self, Packed, Scheme};
+use crate::kernels::pack::{self, CodeSource, Packed, Scheme};
+use crate::kernels::tile::{RegionAcc, RegionSink};
 use crate::kernels::{
     bitserial, int8, lut16_wide, lut65k, portable, tune, ulppack, Backend, CodeMat, GemmPlan,
     Int8Tile, Lut16F32Tile, Lut16Tile, Lut65kTile, LutWideTile, PlanOpts, TuneOutcome, TuneSpec,
 };
-use crate::nn::im2col::im2col_codes_append;
+use crate::nn::im2col::{im2col_codes_append, Im2ColOffsets, Im2ColView};
 use crate::nn::{ConvSpec, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::{uniform::Quantizer, F32Codebook, Lut16, Lut16F32, Lut65k};
 use std::sync::Arc;
 
 /// Reusable scratch for the quantized conv pipeline (plus the batched
-/// FC GEMM): activation codes, the batch-fused im2col matrix, the
+/// FC GEMM): activation codes, the packer's single gathered K-row, the
 /// packed activation operand and the accumulators. Owned by an
 /// [`crate::engine::ExecCtx`] and shared across all layers of a model —
 /// every buffer grows to the largest layer seen and is then reused, so
-/// repeated forwards perform no heap allocation.
+/// repeated forwards perform no heap allocation. There is deliberately
+/// no M×K im2col buffer here: the fused pipeline lowers one K-sized row
+/// at a time (`row_buf`), which is what makes the arena footprint drop
+/// versus the materialized pipeline.
 #[derive(Debug)]
 pub struct ConvScratch {
     /// Quantized activation codes for the whole input slab.
     codes: Vec<u8>,
-    /// Batch-fused im2col code matrix (M×K, one group at a time).
-    fused: Vec<u8>,
+    /// One gathered im2col row (K codes) for the implicit-GEMM packers.
+    row_buf: Vec<u8>,
     /// Packed activation operand (layout switches per backend).
     packed: Packed,
     /// Integer accumulator (i32 backends).
@@ -48,7 +63,7 @@ impl Default for ConvScratch {
     fn default() -> Self {
         ConvScratch {
             codes: Vec::new(),
-            fused: Vec::new(),
+            row_buf: Vec::new(),
             packed: Packed::empty(),
             acc_i32: Vec::new(),
             acc_f32: Vec::new(),
@@ -64,7 +79,7 @@ impl ConvScratch {
     /// Bytes currently held by the scratch buffers.
     pub fn footprint_bytes(&self) -> usize {
         self.codes.capacity()
-            + self.fused.capacity()
+            + self.row_buf.capacity()
             + self.packed.data.capacity()
             + self.acc_i32.capacity() * 4
             + self.acc_f32.capacity() * 4
@@ -80,6 +95,108 @@ impl ConvScratch {
 enum AccKind {
     I32,
     F32,
+}
+
+/// A consumer epilogue fused into the conv's dequant stage by the graph
+/// executor: a following `Relu` and/or residual `Add` applied while the
+/// conv output is being produced, so those ops never run as separate
+/// arena-to-arena passes. Order matches unfused execution exactly: the
+/// conv's own ReLU first, then the residual add (in the `Add` node's
+/// operand order), then the consumer's ReLU.
+#[derive(Clone, Copy, Default)]
+pub struct ConvEpilogue<'a> {
+    /// The fused consumer's ReLU (applied after the residual add).
+    pub relu: bool,
+    /// Residual operand of a fused `Add` — same `[bsz, out_ch, oh, ow]`
+    /// layout and length as the conv's output slab.
+    pub residual: Option<&'a [f32]>,
+    /// Whether the residual was the `Add`'s *first* input; kept so the
+    /// fused `a + b` reproduces the unfused operand order bit-for-bit.
+    pub residual_first: bool,
+}
+
+impl ConvEpilogue<'static> {
+    /// No fused consumer — plain conv semantics.
+    pub const NONE: ConvEpilogue<'static> =
+        ConvEpilogue { relu: false, residual: None, residual_first: false };
+}
+
+/// The fused dequant epilogue handed to [`GemmPlan::execute_with_sink`]:
+/// scales + biases + activates each finished accumulator region and
+/// scatters it into the NCHW output slab while the region is cache-hot.
+/// Raw pointers because regions complete concurrently on the plan's
+/// worker threads; every GEMM (row, col) maps to a unique output
+/// element, so region writes are disjoint.
+struct DequantSink<'a> {
+    out: *mut f32,
+    residual: Option<*const f32>,
+    residual_first: bool,
+    bias: &'a [f32],
+    /// `w_scale · act_scale` for integer accumulators; f32-LUT plans
+    /// accumulate already-scaled values and ignore it.
+    scale: f32,
+    conv_relu: bool,
+    epi_relu: bool,
+    /// First output channel of the group being executed.
+    oc0: usize,
+    /// Per-image GEMM rows (oh·ow).
+    m1: usize,
+    /// Per-image output elements (out_ch·oh·ow).
+    out_elems: usize,
+}
+
+// SAFETY: the sink is shared across the plan's worker tasks; each task's
+// region maps to a disjoint set of output elements (see write_raw), and
+// the residual pointer is only ever read.
+unsafe impl Send for DequantSink<'_> {}
+unsafe impl Sync for DequantSink<'_> {}
+
+impl DequantSink<'_> {
+    /// Dequantize one value and scatter it: GEMM row `mi` = (image,
+    /// spatial index), GEMM column `ni` = channel within the group.
+    /// Math and order are identical to the unfused dequant pass.
+    #[inline]
+    fn write_raw(&self, mi: usize, ni: usize, raw: f32) {
+        let (bi, ri) = (mi / self.m1, mi % self.m1);
+        let oc = self.oc0 + ni;
+        let idx = bi * self.out_elems + oc * self.m1 + ri;
+        let mut v = raw + if self.bias.is_empty() { 0.0 } else { self.bias[oc] };
+        if self.conv_relu {
+            v = v.max(0.0);
+        }
+        if let Some(r) = self.residual {
+            // SAFETY: idx < bsz·out_elems and the residual slab length
+            // was checked against the output slab by the caller.
+            let rv = unsafe { *r.add(idx) };
+            v = if self.residual_first { rv + v } else { v + rv };
+        }
+        if self.epi_relu {
+            v = v.max(0.0);
+        }
+        // SAFETY: distinct (mi, ni) map to distinct idx, and this
+        // worker's region owns its (mi, ni) range exclusively.
+        unsafe { *self.out.add(idx) = v };
+    }
+}
+
+impl RegionSink<i32> for DequantSink<'_> {
+    fn region(&self, acc: RegionAcc<'_, i32>, rm0: usize, rm1: usize, rn0: usize, rn1: usize) {
+        for mi in rm0..rm1 {
+            for ni in rn0..rn1 {
+                self.write_raw(mi, ni, acc.at(mi, ni) as f32 * self.scale);
+            }
+        }
+    }
+}
+
+impl RegionSink<f32> for DequantSink<'_> {
+    fn region(&self, acc: RegionAcc<'_, f32>, rm0: usize, rm1: usize, rn0: usize, rn1: usize) {
+        for mi in rm0..rm1 {
+            for ni in rn0..rn1 {
+                self.write_raw(mi, ni, acc.at(mi, ni));
+            }
+        }
+    }
 }
 
 /// Offline-prepared weights for one conv layer (one entry per group).
@@ -136,6 +253,10 @@ pub struct CompiledConv {
     /// bucket) in bucket order — a bucketed tune yields one outcome per
     /// bucket per plan (empty for backends without tiled plans).
     pub tuning: Vec<TuneOutcome>,
+    /// Plan-time implicit-im2col offset table for the compiled input
+    /// geometry (set by [`Self::prepare_geometry`]; forwards at other
+    /// geometries build a transient table, which allocates).
+    geom: Option<Im2ColOffsets>,
 }
 
 impl CompiledConv {
@@ -389,7 +510,17 @@ impl CompiledConv {
             a_zp,
             weights: prepared,
             tuning,
+            geom: None,
         })
+    }
+
+    /// Precompute the implicit-im2col offset table for the layer's input
+    /// geometry `h`×`w`. The compiled-model executor calls this once at
+    /// compile time so steady-state forwards gather through a plan-time
+    /// table; standalone forwards at other geometries fall back to a
+    /// transient table built per call.
+    pub fn prepare_geometry(&mut self, h: usize, w: usize) {
+        self.geom = Some(Im2ColOffsets::build(&self.spec, h, w));
     }
 
     /// Instrumented quantized forward for a single image (testing /
@@ -414,13 +545,118 @@ impl CompiledConv {
     /// `bsz` images image-major (`[bsz, C, H, W]`), `out` receives the
     /// `[bsz, out_ch, oh, ow]` result. The batch dimension is fused into
     /// the GEMM's M (rows = B·oh·ow), so every image in the batch shares
-    /// one planned GEMM per group — the tiled/threaded execution
-    /// amortizes LUT loads, weight-panel traffic and thread fan-out
-    /// across the batch. Every intermediate lives in `scratch`: once its
-    /// buffers have grown to this layer's sizes, repeated calls perform
-    /// no heap allocation.
+    /// one planned GEMM per group. Equivalent to
+    /// [`Self::forward_batch_fused`] with no fused consumer.
     #[allow(clippy::too_many_arguments)]
     pub fn forward_batch_into(
+        &self,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        scratch: &mut ConvScratch,
+        out: &mut [f32],
+        prof: &mut StageProfile,
+    ) -> crate::Result<()> {
+        self.forward_batch_fused(x, bsz, h, w, scratch, out, &ConvEpilogue::NONE, prof)
+    }
+
+    /// The production forward: implicit-GEMM packing plus a fused
+    /// epilogue. Activation codes are gathered straight out of the
+    /// quantized input tensor by an [`Im2ColView`] during packing (the
+    /// M×K im2col matrix is never materialized), and for the tiled
+    /// backends the dequant + bias + ReLU (+ `epi`'s fused consumer ops)
+    /// runs as a [`RegionSink`] inside the GEMM while each output region
+    /// is cache-hot. Outputs are bit-identical to
+    /// [`Self::forward_batch_reference`] followed by the unfused
+    /// consumer ops. Every intermediate lives in `scratch`: once its
+    /// buffers have grown to this layer's sizes, repeated calls perform
+    /// no heap allocation (given a [`Self::prepare_geometry`]-matched
+    /// input geometry).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_fused(
+        &self,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        scratch: &mut ConvScratch,
+        out: &mut [f32],
+        epi: &ConvEpilogue<'_>,
+        prof: &mut StageProfile,
+    ) -> crate::Result<()> {
+        if bsz == 0 {
+            return Ok(());
+        }
+        let (m1, og, kk) = self.check_shapes(x, bsz, h, w, out, epi)?;
+        let c = self.spec.in_ch;
+        let groups = self.spec.groups;
+        let m = bsz * m1;
+        let s_out = self.w_scale * self.act_q.params.scale;
+
+        // Stage 1 — activation quantization (the whole slab, once).
+        prof.time(Stage::Quantize, || {
+            if scratch.codes.len() != x.len() {
+                scratch.codes.resize(x.len(), 0);
+            }
+            self.act_q.quantize(x, &mut scratch.codes);
+        });
+        let pad_code = self.act_q.quantize_one(0.0);
+        let bits = self.code_bits();
+        let chw = c * h * w;
+        let out_elems = self.spec.out_ch * m1;
+
+        // Implicit-im2col geometry: the compiled table when it matches,
+        // else a transient one (standalone / odd-geometry calls only —
+        // the compiled-model serving path always hits the plan-time
+        // table and stays allocation-free).
+        let transient;
+        let offs = match &self.geom {
+            Some(g) if g.matches(h, w) => g,
+            _ => {
+                transient = Im2ColOffsets::build(&self.spec, h, w);
+                &transient
+            }
+        };
+
+        // The Im2ColView borrows the code slab; take it out of the
+        // scratch so the packers can borrow the rest mutably alongside.
+        let codes = std::mem::take(&mut scratch.codes);
+        for g in 0..groups {
+            let src = Im2ColView::new(&codes, offs, bsz, chw, g, pad_code, bits);
+            let sink = DequantSink {
+                out: out.as_mut_ptr(),
+                residual: epi.residual.map(|r| r.as_ptr()),
+                residual_first: epi.residual_first,
+                bias: &self.bias,
+                scale: s_out,
+                conv_relu: self.relu,
+                epi_relu: epi.relu,
+                oc0: g * og,
+                m1,
+                out_elems,
+            };
+            // Stages 2+3 fused — gather+pack, then GEMM; tiled backends
+            // dequant inside the GEMM through the sink, the row-streaming
+            // baselines fall through to a separate dequant pass.
+            if let Some(acc) = self.gemm_group_fused(&src, g, m, og, kk, &sink, scratch, prof) {
+                prof.time(Stage::Dequant, || {
+                    self.dequant_group(acc, scratch, g, bsz, m1, og, out_elems, s_out, epi, out)
+                });
+            }
+        }
+        scratch.codes = codes;
+        Ok(())
+    }
+
+    /// The pre-fusion materialized pipeline (quantize → im2col → pack →
+    /// GEMM → dequant over an M×K column matrix), kept as the
+    /// differential-test oracle for the implicit-im2col fused path and
+    /// as the remaining owner of the `Stage::Im2col` profiling stage.
+    /// Allocates its column matrix per call; serving uses
+    /// [`Self::forward_batch_fused`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_reference(
         &self,
         x: &[f32],
         bsz: usize,
@@ -433,29 +669,12 @@ impl CompiledConv {
         if bsz == 0 {
             return Ok(());
         }
+        let (m1, og, kk) = self.check_shapes(x, bsz, h, w, out, &ConvEpilogue::NONE)?;
         let c = self.spec.in_ch;
-        if x.len() != bsz * c * h * w {
-            return Err(crate::Error::Shape(format!(
-                "conv expects {bsz}·{c}·{h}·{w} input elements, got {}",
-                x.len()
-            )));
-        }
-        let (oh, ow) = self.spec.out_hw(h, w);
         let groups = self.spec.groups;
-        let og = self.spec.out_ch / groups;
-        let kk = self.spec.in_ch / groups * self.spec.kh * self.spec.kw;
-        let m1 = oh * ow;
         let m = bsz * m1;
-        if out.len() != bsz * self.spec.out_ch * m1 {
-            return Err(crate::Error::Shape(format!(
-                "conv output buffer holds {}, expected {}",
-                out.len(),
-                bsz * self.spec.out_ch * m1
-            )));
-        }
         let s_out = self.w_scale * self.act_q.params.scale;
 
-        // Stage 1 — activation quantization (the whole slab, once).
         prof.time(Stage::Quantize, || {
             if scratch.codes.len() != x.len() {
                 scratch.codes.resize(x.len(), 0);
@@ -463,20 +682,16 @@ impl CompiledConv {
             self.act_q.quantize(x, &mut scratch.codes);
         });
         let pad_code = self.act_q.quantize_one(0.0);
-        let bits = match self.backend {
-            Backend::Int8 => 8,
-            Backend::LutWide(b) => b,
-            _ => 2,
-        };
-
+        let bits = self.code_bits();
         let chw = c * h * w;
         let out_elems = self.spec.out_ch * m1;
+        let mut fused: Vec<u8> = Vec::new();
         for g in 0..groups {
             // Stage 2 — im2col on codes, every image lowered directly
-            // into its slice of the batch-fused M×K buffer (no copy).
+            // into its slice of the batch-fused M×K buffer.
             prof.time(Stage::Im2col, || {
-                scratch.fused.clear();
-                scratch.fused.reserve(m * kk);
+                fused.clear();
+                fused.reserve(m * kk);
                 for bi in 0..bsz {
                     im2col_codes_append(
                         &scratch.codes[bi * chw..(bi + 1) * chw],
@@ -486,39 +701,126 @@ impl CompiledConv {
                         &self.spec,
                         g,
                         pad_code,
-                        &mut scratch.fused,
+                        &mut fused,
                     );
                 }
             });
-            let col_mat = CodeMat::from_data(m, kk, bits, std::mem::take(&mut scratch.fused));
+            let col_mat = CodeMat::from_data(m, kk, bits, std::mem::take(&mut fused));
 
             // Stages 3+4 — pack + GEMM (+ per-backend extras), then
             // stage 5 — dequantize into each image's output plane.
             let acc = self.gemm_group(&col_mat, g, m, og, kk, scratch, prof)?;
-            let bias = &self.bias;
-            let relu = self.relu;
             prof.time(Stage::Dequant, || {
-                for bi in 0..bsz {
-                    let obase = bi * out_elems;
-                    for mi in 0..m1 {
-                        let row = bi * m1 + mi;
-                        for ni in 0..og {
-                            let oc = g * og + ni;
-                            let mut v = match acc {
-                                AccKind::I32 => scratch.acc_i32[row * og + ni] as f32 * s_out,
-                                AccKind::F32 => scratch.acc_f32[row * og + ni],
-                            } + if bias.is_empty() { 0.0 } else { bias[oc] };
-                            if relu {
-                                v = v.max(0.0);
-                            }
-                            out[obase + oc * m1 + mi] = v;
-                        }
-                    }
-                }
+                self.dequant_group(
+                    acc,
+                    scratch,
+                    g,
+                    bsz,
+                    m1,
+                    og,
+                    out_elems,
+                    s_out,
+                    &ConvEpilogue::NONE,
+                    out,
+                )
             });
-            scratch.fused = col_mat.data; // hand the buffer back
+            fused = col_mat.data; // hand the buffer back
         }
         Ok(())
+    }
+
+    /// Validate input/output/residual slab sizes; returns (m1, og, kk).
+    fn check_shapes(
+        &self,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        out: &[f32],
+        epi: &ConvEpilogue<'_>,
+    ) -> crate::Result<(usize, usize, usize)> {
+        let c = self.spec.in_ch;
+        if x.len() != bsz * c * h * w {
+            return Err(crate::Error::Shape(format!(
+                "conv expects {bsz}·{c}·{h}·{w} input elements, got {}",
+                x.len()
+            )));
+        }
+        let (oh, ow) = self.spec.out_hw(h, w);
+        let m1 = oh * ow;
+        if out.len() != bsz * self.spec.out_ch * m1 {
+            return Err(crate::Error::Shape(format!(
+                "conv output buffer holds {}, expected {}",
+                out.len(),
+                bsz * self.spec.out_ch * m1
+            )));
+        }
+        if let Some(r) = epi.residual {
+            if r.len() != out.len() {
+                return Err(crate::Error::Shape(format!(
+                    "fused residual holds {}, expected {}",
+                    r.len(),
+                    out.len()
+                )));
+            }
+        }
+        let og = self.spec.out_ch / self.spec.groups;
+        let kk = self.spec.in_ch / self.spec.groups * self.spec.kh * self.spec.kw;
+        Ok((m1, og, kk))
+    }
+
+    /// Activation code bit-width for this backend.
+    fn code_bits(&self) -> u32 {
+        match self.backend {
+            Backend::Int8 => 8,
+            Backend::LutWide(b) => b,
+            _ => 2,
+        }
+    }
+
+    /// The shared dequant + bias + activation (+ fused consumer) scatter
+    /// for the backends whose GEMM does not run the [`DequantSink`]
+    /// in-loop (bit-serial / ULPPACK / portable), and for the reference
+    /// path. Math and order are identical to [`DequantSink::write_raw`].
+    #[allow(clippy::too_many_arguments)]
+    fn dequant_group(
+        &self,
+        acc: AccKind,
+        scratch: &ConvScratch,
+        g: usize,
+        bsz: usize,
+        m1: usize,
+        og: usize,
+        out_elems: usize,
+        s_out: f32,
+        epi: &ConvEpilogue<'_>,
+        out: &mut [f32],
+    ) {
+        let bias = &self.bias;
+        for bi in 0..bsz {
+            let obase = bi * out_elems;
+            for mi in 0..m1 {
+                let row = bi * m1 + mi;
+                for ni in 0..og {
+                    let oc = g * og + ni;
+                    let mut v = match acc {
+                        AccKind::I32 => scratch.acc_i32[row * og + ni] as f32 * s_out,
+                        AccKind::F32 => scratch.acc_f32[row * og + ni],
+                    } + if bias.is_empty() { 0.0 } else { bias[oc] };
+                    if self.relu {
+                        v = v.max(0.0);
+                    }
+                    let idx = obase + oc * m1 + mi;
+                    if let Some(r) = epi.residual {
+                        v = if epi.residual_first { r[idx] + v } else { v + r[idx] };
+                    }
+                    if epi.relu {
+                        v = v.max(0.0);
+                    }
+                    out[idx] = v;
+                }
+            }
+        }
     }
 
     /// Pack + GEMM for one group, entirely in `scratch` buffers; returns
@@ -641,6 +943,147 @@ impl CompiledConv {
         Ok(AccKind::I32)
     }
 
+    /// Implicit-GEMM pack + GEMM for one group: activation codes are
+    /// gathered from `src` (no materialized M×K matrix), and the tiled
+    /// backends run `sink` inside the GEMM so dequant happens cache-hot
+    /// (returning `None` — the output slab is already written). The
+    /// row-streaming baselines (bit-serial, ULPPACK, portable) still fill
+    /// a scratch accumulator and return which one, for the caller's
+    /// separate dequant pass.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_group_fused(
+        &self,
+        src: &Im2ColView<'_>,
+        g: usize,
+        m: usize,
+        og: usize,
+        kk: usize,
+        sink: &DequantSink<'_>,
+        scratch: &mut ConvScratch,
+        prof: &mut StageProfile,
+    ) -> Option<AccKind> {
+        if !matches!(&self.weights, PreparedWeights::Lut16F32 { .. })
+            && scratch.acc_i32.len() != m * og
+        {
+            scratch.acc_i32.resize(m * og, 0);
+        }
+        match &self.weights {
+            PreparedWeights::Lut16 { plans } => {
+                let plan = &plans[g];
+                prof.time(Stage::Pack, || {
+                    pack::pack_source_into(
+                        src,
+                        plan.kernel.scheme.a_layout(),
+                        &mut scratch.row_buf,
+                        &mut scratch.packed,
+                    )
+                });
+                prof.time(Stage::LutConv, || {
+                    plan.execute_with_sink(&scratch.packed, &mut scratch.acc_i32, sink)
+                });
+                None
+            }
+            PreparedWeights::LutWide { plans } => {
+                prof.time(Stage::Pack, || {
+                    lut16_wide::pack_wide_source_into(src, &mut scratch.row_buf, &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute_with_sink(&scratch.packed, &mut scratch.acc_i32, sink)
+                });
+                None
+            }
+            PreparedWeights::Lut65k { plans } => {
+                prof.time(Stage::Pack, || {
+                    lut65k::pack_dense_source_into(src, &mut scratch.row_buf, &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute_with_sink(&scratch.packed, &mut scratch.acc_i32, sink)
+                });
+                None
+            }
+            PreparedWeights::Lut16F32 { plans } => {
+                prof.time(Stage::Pack, || {
+                    pack::pack_source_into(
+                        src,
+                        Scheme::D.a_layout(),
+                        &mut scratch.row_buf,
+                        &mut scratch.packed,
+                    )
+                });
+                if scratch.acc_f32.len() != m * og {
+                    scratch.acc_f32.resize(m * og, 0.0);
+                }
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute_with_sink(&scratch.packed, &mut scratch.acc_f32, sink)
+                });
+                None
+            }
+            PreparedWeights::Int8 { plans } => {
+                prof.time(Stage::Pack, || {
+                    int8::pack_a_source_into(src, &mut scratch.row_buf, &mut scratch.packed)
+                });
+                prof.time(Stage::LutConv, || {
+                    plans[g].execute_with_sink(&scratch.packed, &mut scratch.acc_i32, sink)
+                });
+                None
+            }
+            PreparedWeights::Portable { packed, lut } => {
+                prof.time(Stage::Pack, || {
+                    pack::pack_source_into(
+                        src,
+                        pack::Layout::Dense,
+                        &mut scratch.row_buf,
+                        &mut scratch.packed,
+                    )
+                });
+                prof.time(Stage::LutConv, || {
+                    portable::gemm(&scratch.packed, &packed[g], lut, &mut scratch.acc_i32)
+                });
+                Some(AccKind::I32)
+            }
+            PreparedWeights::BitSerial { planes, w_code_sums } => {
+                prof.time(Stage::Pack, || {
+                    bitserial::Planes::from_source_into(src, &mut scratch.row_buf, &mut scratch.planes);
+                    row_sums_from_source(src, &mut scratch.row_buf, &mut scratch.a_sums);
+                });
+                prof.time(Stage::LutConv, || {
+                    bitserial::gemm(&scratch.planes, &planes[g], &mut scratch.acc_i32)
+                });
+                prof.time(Stage::Dequant, || {
+                    self.unsigned_fixup(
+                        &mut scratch.acc_i32,
+                        &scratch.a_sums,
+                        &w_code_sums[g],
+                        m,
+                        og,
+                        kk,
+                    )
+                });
+                Some(AccKind::I32)
+            }
+            PreparedWeights::Ulp { packed, w_code_sums } => {
+                prof.time(Stage::Pack, || {
+                    ulppack::UlpPacked::from_source_into(src, true, &mut scratch.row_buf, &mut scratch.ulp);
+                    row_sums_from_source(src, &mut scratch.row_buf, &mut scratch.a_sums);
+                });
+                prof.time(Stage::LutConv, || {
+                    ulppack::gemm(&scratch.ulp, &packed[g], &mut scratch.acc_i32)
+                });
+                prof.time(Stage::Dequant, || {
+                    self.unsigned_fixup(
+                        &mut scratch.acc_i32,
+                        &scratch.a_sums,
+                        &w_code_sums[g],
+                        m,
+                        og,
+                        kk,
+                    )
+                });
+                Some(AccKind::I32)
+            }
+        }
+    }
+
     /// Convert an unsigned-code accumulator Σ cw·ca into the centered
     /// Σ (cw−zw)(ca−za) using offline weight sums and runtime act sums.
     fn unsigned_fixup(
@@ -682,6 +1125,22 @@ fn row_sums_into(codes: &[u8], rows: usize, k: usize, out: &mut Vec<i32>) {
     out.extend(
         (0..rows).map(|r| codes[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum::<i32>()),
     );
+}
+
+/// [`row_sums_into`] over a [`CodeSource`]: gather each row into
+/// `row_buf`, then sum — the implicit-im2col analogue for the
+/// bit-serial / ULPPACK signed fixup.
+fn row_sums_from_source<S: CodeSource + ?Sized>(src: &S, row_buf: &mut Vec<u8>, out: &mut Vec<i32>) {
+    let (rows, k) = (src.rows(), src.k());
+    if row_buf.len() < k {
+        row_buf.resize(k, 0);
+    }
+    out.clear();
+    out.reserve(rows);
+    for r in 0..rows {
+        src.fill_row(r, &mut row_buf[..k]);
+        out.push(row_buf[..k].iter().map(|&v| v as i32).sum::<i32>());
+    }
 }
 
 #[cfg(test)]

@@ -1,11 +1,17 @@
 //! Inference engine: compiles a model [`Graph`] for a GEMM [`Backend`]
 //! and executes forward passes with per-stage instrumentation.
 //!
-//! The quantized convolution pipeline matches the paper's Fig. 7 stages:
-//! activation quantize → im2col → activation pack → Lut-Conv → dequant.
-//! Depthwise convolutions run a direct f32 path in *every* engine (as
-//! real deployments do — QNNPACK itself ships dedicated depthwise
-//! kernels), so engine-vs-engine ratios reflect the GEMM kernels.
+//! The quantized convolution pipeline is **implicit-GEMM**: activation
+//! quantize → pack (gathering im2col rows on the fly — no materialized
+//! M×K code matrix) → Lut-Conv with the dequant + bias + ReLU (+ fused
+//! residual-Add consumer) epilogue running per output region while it
+//! is cache-hot. See [`crate::engine::conv`] and `docs/FUSION.md`; the
+//! paper's Fig. 7 stage split (quantize → im2col → pack → Lut-Conv →
+//! dequant) survives as [`CompiledConv::forward_batch_reference`], the
+//! differential-test oracle. Depthwise convolutions run a direct f32
+//! path in *every* engine (as real deployments do — QNNPACK itself
+//! ships dedicated depthwise kernels), so engine-vs-engine ratios
+//! reflect the GEMM kernels.
 //!
 //! ## Compile → plan → execute
 //!
@@ -27,17 +33,22 @@
 //!    and surface through metrics and `{"cmd":"stats"}`, and the
 //!    adaptive batcher turns the measured per-bucket times into its
 //!    `max_batch` choice.
-//! 2. **Memory** ([`ExecPlan`]): a topological schedule plus
+//! 2. **Memory** ([`ExecPlan`]): epilogue fusion
+//!    ([`crate::engine::plan`]'s `fuse_epilogues`) folds each conv's
+//!    single-reader `Relu` / residual `Add` consumer into the conv's
+//!    dequant epilogue, then a topological schedule plus
 //!    tensor-liveness analysis assigns every intermediate a slot in a
-//!    size-planned arena — slots are reused the moment their tensor
-//!    dies, so a deep network needs only a handful of buffers.
+//!    size-planned arena — fused pairs share one slot, and slots are
+//!    reused the moment their tensor dies, so a deep network needs
+//!    only a handful of buffers.
 //! 3. **Execution state** ([`ExecCtx`]): the arena buffers plus the
-//!    conv-pipeline scratch (activation codes, the batch-fused im2col
-//!    matrix, packed panels, accumulators). A serving worker creates
-//!    one context per model ([`CompiledModel::new_ctx`]) and reuses it
-//!    across batches: after warm-up, [`CompiledModel::forward_batch_with`]
-//!    performs **no heap allocation** in the quantize → im2col → pack →
-//!    GEMM → dequant pipeline (asserted by the `zero_alloc` integration
+//!    conv-pipeline scratch (activation codes, one gathered im2col
+//!    row, packed panels, accumulators — deliberately *no* M×K im2col
+//!    matrix). A serving worker creates one context per model
+//!    ([`CompiledModel::new_ctx`]) and reuses it across batches: after
+//!    warm-up, [`CompiledModel::forward_batch_with`] performs **no
+//!    heap allocation** in the quantize → pack(implicit im2col) →
+//!    GEMM+epilogue pipeline (asserted by the `zero_alloc` integration
 //!    test).
 //!
 //! At request time every op is batch-aware and runs in one pass over a
@@ -49,8 +60,9 @@
 //! [`crate::kernels::TileKernel`] next to its packing code (see the
 //! walkthrough in [`crate::kernels`]), build a `GemmPlan` from the
 //! packed weights + kernel in its `prepare` arm, and call
-//! `plan.execute(..)` in `gemm_group` (writing into the shared
-//! [`ConvScratch`] accumulators). Worker-thread count is the
+//! `plan.execute_with_sink(..)` in `gemm_group_fused` (packing straight
+//! from the conv's `CodeSource` into the shared [`ConvScratch`]
+//! buffers). Worker-thread count is the
 //! process-wide knob (`--threads` on the CLI, `ServerConfig::threads`
 //! when serving, [`crate::kernels::tile::set_default_threads`]
 //! directly); the few remaining row-streaming baselines (bit-serial,
@@ -59,7 +71,7 @@
 mod conv;
 mod plan;
 
-pub use conv::{CompiledConv, ConvScratch, PreparedWeights};
+pub use conv::{CompiledConv, ConvEpilogue, ConvScratch, PreparedWeights};
 pub use plan::{ExecCtx, ExecPlan, TuneReport};
 
 use crate::kernels::fp32::{self, MatF32};
@@ -80,6 +92,14 @@ pub struct CompiledModel {
     convs: Vec<Option<CompiledConv>>,
     /// Static execution plan: schedule, liveness, arena slot map.
     pub plan: ExecPlan,
+    /// Epilogue-fusion assignment: `fused_sink[i] = Some(j)` means conv
+    /// node `i` writes node `j`'s output directly (the `Relu`/`Add` at
+    /// `j` runs inside the conv's dequant epilogue and the executor
+    /// skips node `j`). All `None` for [`Self::compile_unfused`].
+    fused_sink: Vec<Option<usize>>,
+    /// Inverse of `fused_sink`: `fused_from[j] = Some(i)` marks node `j`
+    /// as a fused sink whose output was produced by conv `i`.
+    fused_from: Vec<Option<usize>>,
     /// Prepared fp32 weight matrices per FC node (batched GEMM).
     fc_weights: Vec<Option<MatF32>>,
     /// Compile-time autotune outcomes (one entry per built `GemmPlan`;
@@ -148,6 +168,40 @@ impl CompiledModel {
         autotune: AutotuneMode,
         max_batch: usize,
     ) -> crate::Result<Self> {
+        Self::compile_impl(graph, backend, calib, assign, autotune, max_batch, true)
+    }
+
+    /// [`Self::compile`] with epilogue fusion disabled: every `Relu` /
+    /// `Add` node executes as its own arena-to-arena pass, exactly as a
+    /// fused compile's conv epilogues would compute it. Exists for the
+    /// fused-vs-unfused differential tests (outputs must be
+    /// bit-identical) and for debugging.
+    pub fn compile_unfused(
+        graph: Graph,
+        backend: Backend,
+        calib: &[Tensor],
+    ) -> crate::Result<Self> {
+        Self::compile_impl(
+            graph,
+            backend,
+            calib,
+            &|_, _| None,
+            tune::default_mode(),
+            tune::DEFAULT_MAX_BATCH,
+            false,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn compile_impl(
+        graph: Graph,
+        backend: Backend,
+        calib: &[Tensor],
+        assign: &dyn Fn(usize, &crate::nn::ConvSpec) -> Option<Backend>,
+        autotune: AutotuneMode,
+        max_batch: usize,
+        fuse: bool,
+    ) -> crate::Result<Self> {
         graph.validate()?;
         let owned_calib;
         let calib: &[Tensor] = if calib.is_empty() {
@@ -159,9 +213,19 @@ impl CompiledModel {
         };
         // Record per-conv input ranges by replaying the fp32 forward.
         let ranges = calibrate(&graph, calib)?;
-        // Static memory plan first: its inferred shapes give every conv
-        // its per-image GEMM M (= oh·ow) for autotuning.
-        let exec_plan = ExecPlan::build(&graph)?;
+        // Epilogue-fusion assignment, then the static memory plan under
+        // it (fused conv→ReLU/Add pairs share an arena slot); the plan's
+        // inferred shapes give every conv its per-image GEMM M (= oh·ow)
+        // for autotuning.
+        let fused_sink =
+            if fuse { plan::fuse_epilogues(&graph) } else { vec![None; graph.nodes.len()] };
+        let mut fused_from: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+        for (i, &s) in fused_sink.iter().enumerate() {
+            if let Some(j) = s {
+                fused_from[j] = Some(i);
+            }
+        }
+        let exec_plan = ExecPlan::build_fused(&graph, &fused_sink)?;
         let mut tuning = TuneReport::default();
         let mut convs = Vec::with_capacity(graph.nodes.len());
         for (i, node) in graph.nodes.iter().enumerate() {
@@ -176,7 +240,7 @@ impl CompiledModel {
                             [_, _, oh, ow] => oh * ow,
                             _ => 0,
                         };
-                        let cc = CompiledConv::prepare_tuned(
+                        let mut cc = CompiledConv::prepare_tuned(
                             spec,
                             weights,
                             bias,
@@ -186,6 +250,14 @@ impl CompiledModel {
                             hi,
                             TuneSpec::batched(autotune, m1, max_batch),
                         )?;
+                        // Plan-time implicit-im2col offset table for the
+                        // layer's compiled input geometry.
+                        let (_, h_in, w_in) = if node.inputs[0] == Graph::INPUT {
+                            graph.input_chw
+                        } else {
+                            chw(&exec_plan.shapes[node.inputs[0]])
+                        };
+                        cc.prepare_geometry(h_in, w_in);
                         for out in &cc.tuning {
                             tuning.layers.push((node.name.clone(), out.clone()));
                         }
@@ -213,6 +285,8 @@ impl CompiledModel {
             graph,
             convs,
             plan: exec_plan,
+            fused_sink,
+            fused_from,
             fc_weights,
             tuning,
         })
@@ -355,7 +429,14 @@ impl CompiledModel {
             }
         }
         for (i, node) in self.graph.nodes.iter().enumerate() {
-            let need = bsz * self.plan.elems[i];
+            if self.fused_from[i].is_some() {
+                // Fused sink (ReLU / residual Add): its output was
+                // already written by the producing conv's epilogue.
+                continue;
+            }
+            // A fused conv writes its sink's output; both share a slot.
+            let sink = self.fused_sink[i];
+            let need = bsz * self.plan.elems[sink.unwrap_or(i)];
             // Take the output slot out of the arena for the duration of
             // the op; liveness guarantees it aliases no live input.
             let mut outbuf = std::mem::take(&mut ctx.slots[self.plan.slot_of[i]]);
@@ -365,15 +446,38 @@ impl CompiledModel {
             match &node.op {
                 Op::Conv { spec, weights, bias, relu } => {
                     let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    // Fused-consumer epilogue (ReLU and/or residual Add),
+                    // applied inside the conv's dequant stage.
+                    let epi = match sink.map(|j| (j, &self.graph.nodes[j])) {
+                        Some((_, sn)) if matches!(sn.op, Op::Relu) => {
+                            ConvEpilogue { relu: true, residual: None, residual_first: false }
+                        }
+                        Some((_, sn)) => {
+                            let Op::Add { relu: add_relu } = &sn.op else {
+                                unreachable!("fusion plans only Relu/Add sinks")
+                            };
+                            let other =
+                                if sn.inputs[0] == i { sn.inputs[1] } else { sn.inputs[0] };
+                            let rv =
+                                node_view(&self.plan, &ctx.slots, (ic, ih, iw), other, bsz);
+                            ConvEpilogue {
+                                relu: *add_relu,
+                                residual: Some(rv.data),
+                                residual_first: sn.inputs[0] != i,
+                            }
+                        }
+                        None => ConvEpilogue::NONE,
+                    };
                     match &self.convs[i] {
                         Some(cc) => {
-                            let r = cc.forward_batch_into(
+                            let r = cc.forward_batch_fused(
                                 v.data,
                                 bsz,
                                 v.h,
                                 v.w,
                                 &mut ctx.scratch,
                                 &mut outbuf,
+                                &epi,
                                 prof,
                             );
                             if let Err(e) = r {
@@ -383,8 +487,11 @@ impl CompiledModel {
                         }
                         None => prof.time(Stage::Other, || {
                             // Direct f32 path (depthwise / Fp32 layers).
+                            // With no residual, a fused consumer ReLU
+                            // folds into the conv's own ReLU flag.
                             let (oh, ow) = spec.out_hw(v.h, v.w);
                             let oelems = spec.out_ch * oh * ow;
+                            let fold_relu = *relu || (epi.relu && epi.residual.is_none());
                             for bi in 0..bsz {
                                 crate::nn::im2col::conv2d_direct_into(
                                     v.image(bi),
@@ -394,9 +501,18 @@ impl CompiledModel {
                                     weights,
                                     bias,
                                     spec,
-                                    *relu,
+                                    fold_relu,
                                     &mut outbuf[bi * oelems..(bi + 1) * oelems],
                                 );
+                            }
+                            if let Some(r) = epi.residual {
+                                // Residual add (+ the Add's ReLU) as a
+                                // post-pass, in unfused operand order.
+                                for (o, &rv) in outbuf.iter_mut().zip(r.iter()) {
+                                    let s =
+                                        if epi.residual_first { rv + *o } else { *o + rv };
+                                    *o = if epi.relu { s.max(0.0) } else { s };
+                                }
                             }
                         }),
                     }
@@ -642,8 +758,36 @@ mod tests {
         let m = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
         let mut prof = StageProfile::new();
         m.forward(&x, &mut prof).unwrap();
-        for st in [Stage::Quantize, Stage::Im2col, Stage::Pack, Stage::LutConv, Stage::Dequant] {
+        for st in [Stage::Quantize, Stage::Pack, Stage::LutConv] {
             assert!(prof.calls(st) > 0, "stage {} never recorded", st.name());
+        }
+        // Implicit-GEMM: no standalone im2col pass (gather happens
+        // inside Pack), and the LUT backends dequant inside the GEMM.
+        assert_eq!(prof.calls(Stage::Im2col), 0, "fused path must not run a separate im2col");
+    }
+
+    #[test]
+    fn fused_compile_matches_unfused_bit_for_bit() {
+        // The epilogue-fusion contract: conv→ReLU and conv→Add folding
+        // (tiny_mixed has both) must not change a single output bit
+        // versus a compile with fusion disabled.
+        let mut rng = crate::util::rng::Rng::new(0xF0);
+        let g = zoo::tiny_mixed(5, &mut rng);
+        let xs: Vec<Tensor> =
+            (0..3).map(|i| Tensor::random(&[1, 3, 16, 16], 0xF1 + i, -1.0, 1.0)).collect();
+        for backend in [Backend::Lut16(Scheme::D), Backend::Int8, Backend::Fp32] {
+            let mf = CompiledModel::compile(g.clone(), backend, &[]).unwrap();
+            let mu = CompiledModel::compile_unfused(g.clone(), backend, &[]).unwrap();
+            assert!(
+                mf.fused_sink.iter().any(|s| s.is_some()),
+                "tiny_mixed must produce at least one fused pair"
+            );
+            assert!(mu.fused_sink.iter().all(|s| s.is_none()));
+            let yf = mf.forward_batch(&xs, &mut StageProfile::new()).unwrap();
+            let yu = mu.forward_batch(&xs, &mut StageProfile::new()).unwrap();
+            for (a, b) in yf.iter().zip(yu.iter()) {
+                assert_eq!(a.data, b.data, "{}: fusion changed outputs", backend.name());
+            }
         }
     }
 

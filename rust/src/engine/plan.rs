@@ -15,7 +15,66 @@
 
 use crate::engine::conv::ConvScratch;
 use crate::kernels::tune::TuneOutcome;
+use crate::nn::graph::Op;
 use crate::nn::Graph;
+
+/// Epilogue-fusion planning: for every conv node, find the single
+/// consumer op that can fold into the conv's dequant epilogue — a
+/// `Relu`, or a two-operand residual `Add` whose other operand is
+/// already computed when the conv runs. Returns `sink_of`:
+/// `sink_of[i] = Some(j)` means node `i`'s output is never
+/// materialized; the conv at `i` writes node `j`'s output directly
+/// ([`ExecPlan::build_fused`] aliases their arena slots and the
+/// executor skips node `j`).
+///
+/// A conv fuses only when its output has exactly one reader (the sink)
+/// and is not the graph output, so the fused write can never be
+/// observed by another consumer.
+pub(crate) fn fuse_epilogues(graph: &Graph) -> Vec<Option<usize>> {
+    let n = graph.nodes.len();
+    // readers[i] = total occurrences of node i as an input operand.
+    let mut readers = vec![0usize; n];
+    for node in &graph.nodes {
+        for &inp in &node.inputs {
+            if inp != Graph::INPUT {
+                readers[inp] += 1;
+            }
+        }
+    }
+    let fusable = |i: usize, j: usize| -> bool {
+        i != Graph::INPUT
+            && i != graph.output
+            && readers[i] == 1
+            && matches!(graph.nodes[i].op, Op::Conv { .. })
+            && i < j
+    };
+    let mut sink_of: Vec<Option<usize>> = vec![None; n];
+    for (j, node) in graph.nodes.iter().enumerate() {
+        let producer = match &node.op {
+            Op::Relu => {
+                let i = node.inputs[0];
+                fusable(i, j).then_some(i)
+            }
+            Op::Add { .. } if node.inputs.len() == 2 => {
+                // Only the later-scheduled operand can fuse: the other
+                // operand (the residual) must already be computed when
+                // the conv executes.
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let (conv, other) = if b == Graph::INPUT || (a != Graph::INPUT && a > b) {
+                    (a, b)
+                } else {
+                    (b, a)
+                };
+                (fusable(conv, j) && (other == Graph::INPUT || other < conv)).then_some(conv)
+            }
+            _ => None,
+        };
+        if let Some(i) = producer {
+            sink_of[i] = Some(j);
+        }
+    }
+    sink_of
+}
 
 /// Aggregated compile-time autotune outcomes for one model: one entry
 /// per shape decision (layer × group × M bucket), in schedule order
@@ -210,13 +269,31 @@ fn grab_slot(size: usize, slot_elems: &mut Vec<usize>, free: &mut Vec<usize>) ->
 }
 
 impl ExecPlan {
-    /// Derive the plan for `graph` (shapes must infer cleanly).
+    /// Derive the plan for `graph` (shapes must infer cleanly) with no
+    /// epilogue fusion — every node gets its own materialized output.
     pub fn build(graph: &Graph) -> crate::Result<ExecPlan> {
+        Self::build_fused(graph, &vec![None; graph.nodes.len()])
+    }
+
+    /// [`Self::build`] under an epilogue-fusion assignment (from
+    /// [`fuse_epilogues`]): a fused producer `i` with `sink_of[i] ==
+    /// Some(j)` shares node `j`'s arena slot — the conv writes the
+    /// sink's output directly and node `i`'s intermediate never exists,
+    /// which is where the fused arena footprint shrinks on
+    /// conv→ReLU / conv→Add chains.
+    pub fn build_fused(graph: &Graph, sink_of: &[Option<usize>]) -> crate::Result<ExecPlan> {
         let shapes = graph.infer_shapes()?;
         let elems: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
         let n = graph.nodes.len();
         let (ic, ih, iw) = graph.input_chw;
         let input_elems = ic * ih * iw;
+        // Inverse of sink_of: producer_of[j] = the conv fused into j.
+        let mut producer_of: Vec<Option<usize>> = vec![None; n];
+        for (i, &s) in sink_of.iter().enumerate() {
+            if let Some(j) = s {
+                producer_of[j] = Some(i);
+            }
+        }
 
         // Liveness: last reader of every node's output (and of the graph
         // input). A node's own index marks "never read"; the graph
@@ -248,7 +325,20 @@ impl ExecPlan {
             free.push(input_slot);
         }
         for (i, node) in graph.nodes.iter().enumerate() {
-            slot_of[i] = grab_slot(elems[i], &mut slot_elems, &mut free);
+            slot_of[i] = match producer_of[i] {
+                // A sink inherits its fused producer's slot: the conv
+                // already wrote this node's output there.
+                Some(p) => slot_of[p],
+                // A fused producer's slot must hold the *sink's* output
+                // (same shape for ReLU/Add, but take the max anyway).
+                None => {
+                    let size = match sink_of[i] {
+                        Some(j) => elems[i].max(elems[j]),
+                        None => elems[i],
+                    };
+                    grab_slot(size, &mut slot_elems, &mut free)
+                }
+            };
             for (j, &inp) in node.inputs.iter().enumerate() {
                 if node.inputs[..j].contains(&inp) {
                     continue; // duplicated input: release its slot once
@@ -259,11 +349,13 @@ impl ExecPlan {
                         input_read = false; // repeated INPUT reads later in
                                             // the walk cannot re-free
                     }
-                } else if last_use[inp] == i {
+                } else if last_use[inp] == i && producer_of[i] != Some(inp) {
+                    // (a fused producer shares this node's slot — the
+                    // sink's output lives there, so it never frees)
                     free.push(slot_of[inp]);
                 }
             }
-            if last_use[i] == i {
+            if last_use[i] == i && sink_of[i].is_none() {
                 // Dead output (never read, not the graph output): its
                 // slot is immediately reusable.
                 free.push(slot_of[i]);
@@ -296,8 +388,8 @@ impl ExecPlan {
 /// planned slot) plus the conv-pipeline scratch. Created once per
 /// worker via [`crate::engine::CompiledModel::new_ctx`] and reused
 /// across batches — after warm-up, `forward_batch_with` performs no
-/// heap allocation in the quantize → im2col → pack → GEMM → dequant
-/// pipeline.
+/// heap allocation in the quantize → pack (implicit im2col) →
+/// GEMM+epilogue pipeline.
 #[derive(Debug)]
 pub struct ExecCtx {
     /// Arena slot buffers (lengths bound per batch at execution time).

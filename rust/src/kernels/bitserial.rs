@@ -11,6 +11,7 @@
 //! x86 there is no vector popcount, so scalar u64 popcnt at 1/cycle is
 //! the standard approach).
 
+use super::pack::CodeSource;
 use crate::util::align_up;
 
 /// Bit-plane packed matrix: per row, `bits` planes of `words` u64 each.
@@ -42,25 +43,55 @@ impl Planes {
     /// its buffer (allocation-free once capacity has stabilized).
     pub fn from_codes_into(codes: &[u8], rows: usize, k: usize, bits: u32, out: &mut Planes) {
         assert_eq!(codes.len(), rows * k);
+        Self::header_into(rows, k, bits, out);
+        for r in 0..rows {
+            Self::set_row(&codes[r * k..(r + 1) * k], r, bits, out.words, &mut out.data);
+        }
+    }
+
+    /// [`Planes::from_codes_into`] from a [`CodeSource`] (implicit-im2col
+    /// path): each row is gathered into `row_buf` and bit-sliced without
+    /// ever materializing the full code matrix. Bit-identical to the
+    /// slice path.
+    pub fn from_source_into<S: CodeSource + ?Sized>(
+        src: &S,
+        row_buf: &mut Vec<u8>,
+        out: &mut Planes,
+    ) {
+        let (rows, k, bits) = (src.rows(), src.k(), src.bits());
+        Self::header_into(rows, k, bits, out);
+        if row_buf.len() < k {
+            row_buf.resize(k, 0);
+        }
+        for r in 0..rows {
+            src.fill_row(r, &mut row_buf[..k]);
+            Self::set_row(&row_buf[..k], r, bits, out.words, &mut out.data);
+        }
+    }
+
+    /// Size `out` for a rows×k matrix and zero its planes.
+    fn header_into(rows: usize, k: usize, bits: u32, out: &mut Planes) {
         let k_padded = align_up(k.max(1), 64);
         let words = k_padded / 64;
         out.data.clear();
         out.data.resize(rows * bits as usize * words, 0);
-        for r in 0..rows {
-            for (i, &c) in codes[r * k..(r + 1) * k].iter().enumerate() {
-                debug_assert!((c as u32) < (1 << bits));
-                for b in 0..bits as usize {
-                    if (c >> b) & 1 == 1 {
-                        out.data[(r * bits as usize + b) * words + i / 64] |= 1u64 << (i % 64);
-                    }
-                }
-            }
-        }
         out.rows = rows;
         out.k = k;
         out.k_padded = k_padded;
         out.bits = bits;
         out.words = words;
+    }
+
+    /// Bit-slice one row of codes into the (already zeroed) plane words.
+    fn set_row(codes: &[u8], r: usize, bits: u32, words: usize, data: &mut [u64]) {
+        for (i, &c) in codes.iter().enumerate() {
+            debug_assert!((c as u32) < (1 << bits));
+            for b in 0..bits as usize {
+                if (c >> b) & 1 == 1 {
+                    data[(r * bits as usize + b) * words + i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
     }
 
     #[inline]

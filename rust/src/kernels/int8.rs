@@ -17,7 +17,7 @@
 //! padding is neutral because padded weights are 0 and the zero-point
 //! fold uses row sums over the real K only.
 
-use super::pack::{pack, Layout, Packed};
+use super::pack::{pack, pack_source_into, CodeSource, Layout, Packed};
 use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
@@ -35,6 +35,17 @@ pub fn pack_weights_i8(values: &[i8], rows: usize, k: usize) -> (Packed, Vec<i32
         .map(|r| values[r * k..(r + 1) * k].iter().map(|&v| v as i32).sum())
         .collect();
     (packed, row_sums)
+}
+
+/// Pack u8 activation codes from a [`CodeSource`] into the INT8 plan
+/// layout (implicit-im2col path — one gathered row at a time through
+/// `row_buf`, bit-identical to materializing the matrix first).
+pub fn pack_a_source_into<S: CodeSource + ?Sized>(
+    src: &S,
+    row_buf: &mut Vec<u8>,
+    out: &mut Packed,
+) {
+    pack_source_into(src, Layout::Int8, row_buf, out)
 }
 
 /// The INT8 tile kernel: `pmaddwd` MACs over u8 activations × i8

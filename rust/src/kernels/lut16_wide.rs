@@ -17,7 +17,7 @@
 //! [`crate::kernels::GemmPlan`]; there is no standalone row-streaming
 //! driver anymore.
 
-use super::pack::{pack_into, unpack_row, Layout, Packed};
+use super::pack::{pack_into, pack_source_into, unpack_row, CodeSource, Layout, Packed};
 use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
@@ -37,6 +37,21 @@ pub fn pack_wide_into(codes: &CodeMat, out: &mut Packed) {
     match codes.bits {
         3 => pack_into(codes, Layout::Dense3, out),
         4 => pack_into(codes, Layout::Dense4, out),
+        b => panic!("lut16_wide supports 3/4-bit, got {b}"),
+    }
+}
+
+/// [`pack_wide_into`] from a [`CodeSource`] (implicit-im2col path): rows
+/// are gathered into `row_buf` one at a time, never materializing the
+/// full code matrix. Bit-identical to the [`CodeMat`] path.
+pub fn pack_wide_source_into<S: CodeSource + ?Sized>(
+    src: &S,
+    row_buf: &mut Vec<u8>,
+    out: &mut Packed,
+) {
+    match src.bits() {
+        3 => pack_source_into(src, Layout::Dense3, row_buf, out),
+        4 => pack_source_into(src, Layout::Dense4, row_buf, out),
         b => panic!("lut16_wide supports 3/4-bit, got {b}"),
     }
 }

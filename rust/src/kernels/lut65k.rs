@@ -13,7 +13,7 @@
 //! threads of [`crate::kernels::GemmPlan`] — the table stays L2-resident
 //! while a whole MR×NR tile reuses each fragment.
 
-use super::pack::{pack, pack_into, Layout, Packed};
+use super::pack::{pack, pack_into, pack_source_into, CodeSource, Layout, Packed};
 use super::simd::Isa;
 use super::tile::{TileKernel, MR, NR};
 use super::CodeMat;
@@ -29,6 +29,17 @@ pub fn pack_dense(codes: &CodeMat) -> Packed {
 /// steady state — see [`super::pack::pack_into`]).
 pub fn pack_dense_into(codes: &CodeMat, out: &mut Packed) {
     pack_into(codes, Layout::Dense, out)
+}
+
+/// [`pack_dense_into`] from a [`CodeSource`] (implicit-im2col path):
+/// gathers each row into `row_buf` instead of reading a materialized
+/// matrix. Bit-identical to the [`CodeMat`] path.
+pub fn pack_dense_source_into<S: CodeSource + ?Sized>(
+    src: &S,
+    row_buf: &mut Vec<u8>,
+    out: &mut Packed,
+) {
+    pack_source_into(src, Layout::Dense, row_buf, out)
 }
 
 /// The LUT-65k tile kernel: scalar 16-bit-indexed block-product lookups

@@ -123,7 +123,7 @@ pub use lut16_f32::Lut16F32Tile;
 pub use lut16_wide::LutWideTile;
 pub use lut65k::Lut65kTile;
 pub use simd::Isa;
-pub use tile::{Accum, GemmPlan, Lut16Tile, PlanOpts, TileKernel, TileShape};
+pub use tile::{Accum, GemmPlan, Lut16Tile, NullSink, PlanOpts, RegionAcc, RegionSink, TileKernel, TileShape};
 pub use tune::{AutotuneMode, TuneOutcome, TuneSpec};
 
 use crate::quant::IntCodebook;

@@ -307,6 +307,78 @@ pub fn unpack_row(src: &[u8], k: usize, layout: Layout, out: &mut [u8]) {
     }
 }
 
+/// A provider of unpacked code rows for the packing routines: either a
+/// materialized [`CodeMat`] or a virtual view that gathers codes on the
+/// fly (the implicit-im2col [`crate::nn::im2col::Im2ColView`], which maps
+/// GEMM (row, k) coordinates back into the activation code tensor).
+///
+/// Source-based packing ([`pack_source_into`]) drives the exact same
+/// [`pack_row`] per gathered row as materialize-then-pack, so the two
+/// paths are bit-identical by construction — the property the fused
+/// conv pipeline's differential tests pin down.
+pub trait CodeSource {
+    /// Number of rows (GEMM M).
+    fn rows(&self) -> usize;
+    /// Codes per row (GEMM K).
+    fn k(&self) -> usize;
+    /// Code bit-width (must match the target [`Layout::bits`]).
+    fn bits(&self) -> u32;
+    /// Write row `r`'s `k()` codes into `out` (exactly `k()` bytes).
+    fn fill_row(&self, r: usize, out: &mut [u8]);
+}
+
+impl CodeSource for CodeMat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn k(&self) -> usize {
+        self.cols
+    }
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+    fn fill_row(&self, r: usize, out: &mut [u8]) {
+        out.copy_from_slice(self.row(r));
+    }
+}
+
+/// [`pack_into`] from any [`CodeSource`]: each row is gathered into
+/// `row_buf` (grown once, then reused — allocation-free in steady state)
+/// and packed with the shared [`pack_row`]. This is the implicit-GEMM
+/// packing entry point: with an `Im2ColView` source the M×K im2col
+/// matrix is never materialized, only one K-sized row at a time.
+pub fn pack_source_into<S: CodeSource + ?Sized>(
+    src: &S,
+    layout: Layout,
+    row_buf: &mut Vec<u8>,
+    out: &mut Packed,
+) {
+    assert_eq!(
+        src.bits(),
+        layout.bits(),
+        "layout bit-width must match code bit-width"
+    );
+    let rows = src.rows();
+    let k = src.k();
+    let k_padded = align_up(k.max(1), K_BLOCK);
+    let stride = layout.bytes_for(k_padded);
+    out.rows = rows;
+    out.k = k;
+    out.k_padded = k_padded;
+    out.layout = layout;
+    out.stride = stride;
+    // pack_row ORs bits into place, so the buffer must be zeroed first.
+    out.data.clear();
+    out.data.resize(rows * stride, 0);
+    if row_buf.len() < k {
+        row_buf.resize(k, 0);
+    }
+    for r in 0..rows {
+        src.fill_row(r, &mut row_buf[..k]);
+        pack_row(&row_buf[..k], &mut out.data[r * stride..(r + 1) * stride], layout);
+    }
+}
+
 /// Pack activations for a scheme (the runtime "activation packing" stage
 /// of Fig. 7). Weights use [`pack`] with `scheme.w_layout()` offline.
 pub fn pack_activations(codes: &CodeMat, scheme: Scheme) -> Packed {
@@ -468,6 +540,39 @@ mod tests {
             assert_eq!(scratch.data, fresh.data, "{layout:?} k={k}");
             assert_eq!((scratch.rows, scratch.k, scratch.k_padded), (rows, k, fresh.k_padded));
             assert_eq!(scratch.data.capacity(), cap, "repack must not reallocate");
+        }
+    }
+
+    #[test]
+    fn pack_source_matches_materialized_pack() {
+        // CodeMat-as-CodeSource through pack_source_into must be
+        // bit-identical to pack_into for every layout, including the
+        // K_BLOCK padding region.
+        let mut row_buf = Vec::new();
+        let mut from_src = Packed::empty();
+        let mut direct = Packed::empty();
+        for layout in [
+            Layout::Dense,
+            Layout::NibbleHi,
+            Layout::NibbleLo,
+            Layout::ByteHi,
+            Layout::Dense3,
+            Layout::Dense4,
+            Layout::Int8,
+        ] {
+            let mut rng = Rng::new(0xBEEF ^ layout.bits() as u64);
+            for _ in 0..20 {
+                let rows = rng.range(1, 9);
+                let k = rng.range(1, 400);
+                let m = CodeMat::random(rows, k, layout.bits(), rng.below(1 << 20) as u64);
+                pack_into(&m, layout, &mut direct);
+                pack_source_into(&m, layout, &mut row_buf, &mut from_src);
+                assert_eq!(from_src.data, direct.data, "{layout:?} rows={rows} k={k}");
+                assert_eq!(
+                    (from_src.rows, from_src.k, from_src.k_padded, from_src.stride),
+                    (direct.rows, direct.k, direct.k_padded, direct.stride)
+                );
+            }
         }
     }
 

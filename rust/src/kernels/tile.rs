@@ -562,6 +562,55 @@ impl<T> Copy for SendMut<T> {}
 unsafe impl<T> Send for SendMut<T> {}
 unsafe impl<T> Sync for SendMut<T> {}
 
+/// Read-only window into the GEMM accumulator, handed to a
+/// [`RegionSink`] for one finished output region. Indexing is in whole-
+/// matrix coordinates (`mi` ∈ [m0, m1), `ni` ∈ [n0, n1) of the sink
+/// call); reads outside the region race with other worker tasks and are
+/// forbidden.
+pub struct RegionAcc<'a, A> {
+    ptr: *const A,
+    /// Row stride (the GEMM's N).
+    n: usize,
+    _life: std::marker::PhantomData<&'a A>,
+}
+
+impl<A: Accum> RegionAcc<'_, A> {
+    /// The accumulator value at matrix coordinates (`mi`, `ni`).
+    ///
+    /// Callers must stay inside the region passed to
+    /// [`RegionSink::region`] — bounds are only debug-checked against
+    /// the full matrix, not the region.
+    #[inline]
+    pub fn at(&self, mi: usize, ni: usize) -> A {
+        // SAFETY: the sink contract restricts (mi, ni) to this task's
+        // exclusively-owned region, which execute sized within `out`.
+        unsafe { *self.ptr.add(mi * self.n + ni) }
+    }
+}
+
+/// Per-region epilogue hook for [`GemmPlan::execute_with_sink`]: called
+/// exactly once per disjoint output region, on the worker thread that
+/// computed it, immediately after the region's padding correction —
+/// i.e. while the region is still cache-hot. The engine uses this to
+/// fuse dequantize + bias + ReLU (+ residual add) into the GEMM instead
+/// of running them as separate passes over the whole matrix.
+///
+/// Implementations must be `Sync`: regions complete concurrently on the
+/// plan's worker threads.
+pub trait RegionSink<A: Accum>: Sync {
+    /// Consume the finished region `[m0, m1) × [n0, n1)`.
+    fn region(&self, acc: RegionAcc<'_, A>, m0: usize, m1: usize, n0: usize, n1: usize);
+}
+
+/// The default no-fusion sink: leaves the raw accumulator untouched
+/// (callers read `out` after [`GemmPlan::execute`] returns).
+pub struct NullSink;
+
+impl<A: Accum> RegionSink<A> for NullSink {
+    #[inline]
+    fn region(&self, _acc: RegionAcc<'_, A>, _m0: usize, _m1: usize, _n0: usize, _n1: usize) {}
+}
+
 impl<K: TileKernel> GemmPlan<K> {
     /// Build a plan from offline-packed weights (`kernel.w_layout()`).
     ///
@@ -741,6 +790,21 @@ impl<K: TileKernel> GemmPlan<K> {
     /// assert_eq!(got, want);
     /// ```
     pub fn execute(&self, a: &Packed, out: &mut [K::Acc]) {
+        self.execute_with_sink(a, out, &NullSink)
+    }
+
+    /// [`GemmPlan::execute`] with a fused per-region epilogue: `sink`
+    /// runs once per disjoint output region, on the worker that computed
+    /// it, right after the padding correction — the region is still
+    /// cache-hot, so dequant/bias/activation fusion costs no extra pass
+    /// over memory. The accumulator values `sink` observes are exactly
+    /// what [`GemmPlan::execute`] would leave in `out`.
+    pub fn execute_with_sink<S: RegionSink<K::Acc>>(
+        &self,
+        a: &Packed,
+        out: &mut [K::Acc],
+        sink: &S,
+    ) {
         let m = a.rows;
         // Bucketed plans route to the shape tuned for this M (all panel
         // repacks share N/K, only the kc split differs).
@@ -779,6 +843,7 @@ impl<K: TileKernel> GemmPlan<K> {
                         nb * nc,
                         ((nb + 1) * nc).min(n),
                         isa,
+                        sink,
                     );
                 }
             }
@@ -809,6 +874,7 @@ impl<K: TileKernel> GemmPlan<K> {
                     nb * nc,
                     ((nb + 1) * nc).min(n),
                     isa,
+                    sink,
                 );
             }));
         }
@@ -820,7 +886,7 @@ impl<K: TileKernel> GemmPlan<K> {
     /// buffers (the vector paths need no scratch), then delegates to
     /// [`Self::run_region_with`].
     #[allow(clippy::too_many_arguments)]
-    fn run_region(
+    fn run_region<S: RegionSink<K::Acc>>(
         &self,
         a: &Packed,
         panels: &WeightPanels,
@@ -830,9 +896,10 @@ impl<K: TileKernel> GemmPlan<K> {
         n0: usize,
         n1: usize,
         isa: Isa,
+        sink: &S,
     ) {
         if isa.vectorized() {
-            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, &mut [], &mut []);
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, &mut [], &mut [], sink);
             return;
         }
         let kc = panels.kc;
@@ -845,7 +912,7 @@ impl<K: TileKernel> GemmPlan<K> {
             if w_buf.len() < NR * kc {
                 w_buf.resize(NR * kc, 0);
             }
-            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, a_buf, w_buf);
+            self.run_region_with(a, panels, out, m0, m1, n0, n1, isa, a_buf, w_buf, sink);
         });
     }
 
@@ -855,7 +922,7 @@ impl<K: TileKernel> GemmPlan<K> {
     /// scalar-path decode scratch (≥ `kc` / ≥ `NR·kc` bytes; empty and
     /// unused under the vector arms).
     #[allow(clippy::too_many_arguments)]
-    fn run_region_with(
+    fn run_region_with<S: RegionSink<K::Acc>>(
         &self,
         a: &Packed,
         panels: &WeightPanels,
@@ -867,6 +934,7 @@ impl<K: TileKernel> GemmPlan<K> {
         isa: Isa,
         a_buf: &mut [u8],
         w_buf: &mut [u8],
+        sink: &S,
     ) {
         let n = panels.n;
         let outp = out.0;
@@ -930,6 +998,15 @@ impl<K: TileKernel> GemmPlan<K> {
                 }
             }
         }
+        // Fused epilogue: the region's final accumulator values are in
+        // cache right now — hand them to the sink before moving on.
+        sink.region(
+            RegionAcc { ptr: outp, n, _life: std::marker::PhantomData },
+            m0,
+            m1,
+            n0,
+            n1,
+        );
     }
 }
 

@@ -10,6 +10,7 @@
 //! codes only — the paper's §5.3 point about ULPPACK's signed-input
 //! limitation falls out of this construction.
 
+use super::pack::CodeSource;
 use crate::util::align_up;
 
 /// Values per packed inner iteration: 16 u16 lanes × 2 values.
@@ -46,27 +47,59 @@ impl UlpPacked {
     /// its buffer (allocation-free once capacity has stabilized).
     pub fn from_codes_into(codes: &[u8], rows: usize, k: usize, reversed: bool, out: &mut Self) {
         assert_eq!(codes.len(), rows * k);
+        Self::header_into(rows, k, reversed, out);
+        let lanes = out.lanes;
+        for r in 0..rows {
+            Self::set_row(&codes[r * k..(r + 1) * k], r, reversed, lanes, &mut out.data);
+        }
+    }
+
+    /// [`UlpPacked::from_codes_into`] from a [`CodeSource`]
+    /// (implicit-im2col path): rows are gathered into `row_buf` one at a
+    /// time instead of reading a materialized matrix. Bit-identical to
+    /// the slice path.
+    pub fn from_source_into<S: CodeSource + ?Sized>(
+        src: &S,
+        reversed: bool,
+        row_buf: &mut Vec<u8>,
+        out: &mut Self,
+    ) {
+        let (rows, k) = (src.rows(), src.k());
+        Self::header_into(rows, k, reversed, out);
+        if row_buf.len() < k {
+            row_buf.resize(k, 0);
+        }
+        let lanes = out.lanes;
+        for r in 0..rows {
+            src.fill_row(r, &mut row_buf[..k]);
+            Self::set_row(&row_buf[..k], r, reversed, lanes, &mut out.data);
+        }
+    }
+
+    /// Size `out` for a rows×k matrix and zero its lanes.
+    fn header_into(rows: usize, k: usize, reversed: bool, out: &mut Self) {
         let k_padded = align_up(k.max(1), K_BLOCK_ULP);
         let lanes = k_padded / 2;
         out.data.clear();
         out.data.resize(rows * lanes, 0);
-        for r in 0..rows {
-            for i in 0..k {
-                debug_assert!(codes[r * k + i] < 4);
-                let lane = i / 2;
-                let hi = i % 2 == 1;
-                let v = codes[r * k + i] as u16;
-                // weight: pair (v0, v1) → v0 | v1<<8
-                // activation: pair (v0, v1) → v1 | v0<<8 (reversed)
-                let shift = if hi != reversed { 8 } else { 0 };
-                out.data[r * lanes + lane] |= v << shift;
-            }
-        }
         out.rows = rows;
         out.k = k;
         out.k_padded = k_padded;
         out.lanes = lanes;
         out.reversed = reversed;
+    }
+
+    /// Pack one row of codes into the (already zeroed) u16 lanes.
+    fn set_row(codes: &[u8], r: usize, reversed: bool, lanes: usize, data: &mut [u16]) {
+        for (i, &c) in codes.iter().enumerate() {
+            debug_assert!(c < 4);
+            let lane = i / 2;
+            let hi = i % 2 == 1;
+            // weight: pair (v0, v1) → v0 | v1<<8
+            // activation: pair (v0, v1) → v1 | v0<<8 (reversed)
+            let shift = if hi != reversed { 8 } else { 0 };
+            data[r * lanes + lane] |= (c as u16) << shift;
+        }
     }
 
     #[inline]

@@ -16,11 +16,15 @@
 //! - [`quant`] — uniform (affine / LSQ-style) and non-uniform codebook
 //!   quantization, and lookup-table construction for signed/unsigned,
 //!   integer/float entries.
-//! - [`nn`] — tensors, im2col convolution, layers and the model zoo
-//!   (MobileNetV1, ResNet18/34/50, ResNeXt101, GoogleNet, InceptionV3,
-//!   VGG16) whose conv shapes drive the paper's evaluation.
+//! - [`nn`] — tensors, convolution lowering (the implicit-im2col offset
+//!   table and gather view; a materialized im2col kept as the test
+//!   oracle), layers and the model zoo (MobileNetV1, ResNet18/34/50,
+//!   ResNeXt101, GoogleNet, InceptionV3, VGG16) whose conv shapes drive
+//!   the paper's evaluation.
 //! - [`engine`] — graph executor with per-stage instrumentation and
-//!   pluggable GEMM engines.
+//!   pluggable GEMM engines; convs pack the B operand straight from the
+//!   quantized codes (no materialized im2col) and apply dequant + fused
+//!   ReLU/residual epilogues per output tile (`docs/FUSION.md`).
 //! - [`runtime`] — PJRT (xla crate) loader/executor for the AOT artifacts
 //!   produced by the python/JAX layer.
 //! - [`coordinator`] — the L3 serving runtime: request router, dynamic

@@ -110,6 +110,156 @@ pub fn im2col_codes_append(
     }
 }
 
+/// One gather run of the implicit-im2col offset table: `kw` consecutive
+/// K-columns that all read from input channel plane `plane` (relative to
+/// the group's first channel) at kernel row `ky`.
+#[derive(Clone, Copy, Debug)]
+struct GatherRun {
+    plane: usize,
+    ky: usize,
+}
+
+/// Plan-time offset table for implicit-GEMM (im2col-free) packing: maps a
+/// GEMM row's K-columns back to (channel, y, x) coordinates in the
+/// activation code tensor, precomputed once per compiled conv for the
+/// layer's input geometry (`CompiledConv::prepare_geometry`). One table
+/// covers every group — groups differ only by a channel-plane base offset
+/// that [`Im2ColView`] adds at gather time.
+///
+/// Layout: K splits into `cg·kh` runs of `kw` columns each (matching
+/// [`im2col_codes_append`]'s `(ci, ky, kx)` column order); each run is a
+/// contiguous x-range of one input row, so in-bounds runs gather with a
+/// single `copy_from_slice`.
+#[derive(Clone, Debug)]
+pub struct Im2ColOffsets {
+    /// Input spatial geometry the table was built for.
+    pub h: usize,
+    /// See [`Self::h`].
+    pub w: usize,
+    /// Output spatial geometry at (h, w).
+    pub oh: usize,
+    /// See [`Self::oh`].
+    pub ow: usize,
+    /// GEMM K = (in_ch/groups)·kh·kw.
+    pub k: usize,
+    /// Code elements per group: (in_ch/groups)·h·w.
+    pub group_elems: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    runs: Vec<GatherRun>,
+}
+
+impl Im2ColOffsets {
+    /// Build the table for `spec` at input geometry `h`×`w`.
+    pub fn build(spec: &ConvSpec, h: usize, w: usize) -> Im2ColOffsets {
+        let (oh, ow) = spec.out_hw(h, w);
+        let cg = spec.in_ch / spec.groups;
+        let mut runs = Vec::with_capacity(cg * spec.kh);
+        for ci in 0..cg {
+            for ky in 0..spec.kh {
+                runs.push(GatherRun { plane: ci * h * w, ky });
+            }
+        }
+        Im2ColOffsets {
+            h,
+            w,
+            oh,
+            ow,
+            k: cg * spec.kh * spec.kw,
+            group_elems: cg * h * w,
+            kw: spec.kw,
+            stride: spec.stride,
+            pad: spec.pad,
+            runs,
+        }
+    }
+
+    /// Whether the table was built for input geometry `h`×`w`.
+    pub fn matches(&self, h: usize, w: usize) -> bool {
+        self.h == h && self.w == w
+    }
+}
+
+/// A virtual, gather-on-read view of the batch-fused im2col code matrix:
+/// row `r` = (image, oy, ox) is materialized on demand into the packer's
+/// K-sized row buffer ([`crate::kernels::pack::pack_source_into`]), so
+/// the M×K column matrix never exists in memory. Gathers in exactly
+/// [`im2col_codes_append`]'s order and padding convention, making the
+/// implicit path bit-identical to the materialized one.
+pub struct Im2ColView<'a> {
+    codes: &'a [u8],
+    offs: &'a Im2ColOffsets,
+    /// Image stride in the batch code slab (C·H·W).
+    chw: usize,
+    bsz: usize,
+    /// Channel-plane base of the group being lowered: g·group_elems.
+    group_base: usize,
+    pad_code: u8,
+    bits: u32,
+}
+
+impl<'a> Im2ColView<'a> {
+    /// View over a `[bsz, C, H, W]` code slab for group `g`.
+    pub fn new(
+        codes: &'a [u8],
+        offs: &'a Im2ColOffsets,
+        bsz: usize,
+        chw: usize,
+        g: usize,
+        pad_code: u8,
+        bits: u32,
+    ) -> Im2ColView<'a> {
+        assert!(codes.len() >= bsz * chw);
+        assert!((g + 1) * offs.group_elems <= chw);
+        Im2ColView { codes, offs, chw, bsz, group_base: g * offs.group_elems, pad_code, bits }
+    }
+}
+
+impl crate::kernels::pack::CodeSource for Im2ColView<'_> {
+    fn rows(&self) -> usize {
+        self.bsz * self.offs.oh * self.offs.ow
+    }
+
+    fn k(&self) -> usize {
+        self.offs.k
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    fn fill_row(&self, r: usize, out: &mut [u8]) {
+        let o = self.offs;
+        let m1 = o.oh * o.ow;
+        let (bi, ri) = (r / m1, r % m1);
+        let (oy, ox) = (ri / o.ow, ri % o.ow);
+        let img = &self.codes[bi * self.chw..(bi + 1) * self.chw];
+        let ix0 = (ox * o.stride) as isize - o.pad as isize;
+        for (run, dst) in o.runs.iter().zip(out.chunks_exact_mut(o.kw)) {
+            let iy = (oy * o.stride + run.ky) as isize - o.pad as isize;
+            if iy < 0 || iy as usize >= o.h {
+                dst.fill(self.pad_code);
+                continue;
+            }
+            let row0 = self.group_base + run.plane + iy as usize * o.w;
+            if ix0 >= 0 && ix0 as usize + o.kw <= o.w {
+                let s = row0 + ix0 as usize;
+                dst.copy_from_slice(&img[s..s + o.kw]);
+            } else {
+                for (kx, d) in dst.iter_mut().enumerate() {
+                    let ix = ix0 + kx as isize;
+                    *d = if ix >= 0 && (ix as usize) < o.w {
+                        img[row0 + ix as usize]
+                    } else {
+                        self.pad_code
+                    };
+                }
+            }
+        }
+    }
+}
+
 /// Direct (naive) convolution — the correctness oracle for the GEMM path.
 pub fn conv2d_direct(x: &Tensor, weights: &[f32], bias: &[f32], spec: &ConvSpec) -> Tensor {
     let (n, c, h, w) = x.nchw();
@@ -215,6 +365,53 @@ mod tests {
             }
             assert_close(&got.data, &want.data, 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("c={c} groups={groups}: {e}"));
+        }
+    }
+
+    #[test]
+    fn im2col_view_matches_materialized_rows() {
+        use crate::kernels::pack::CodeSource;
+        // Im2ColView must reproduce im2col_codes_append byte-for-byte
+        // across stride/pad/groups/batch, including the pad_code borders.
+        for &(c, h, w, k, s, p, groups, bsz) in &[
+            (3usize, 8usize, 8usize, 3usize, 1usize, 1usize, 1usize, 1usize),
+            (4, 7, 9, 3, 2, 1, 1, 3),
+            (2, 6, 5, 1, 1, 0, 1, 2),
+            (4, 6, 6, 3, 1, 1, 2, 2), // grouped
+            (6, 5, 5, 5, 2, 2, 3, 1), // big kernel, heavy pad
+            (2, 3, 3, 3, 1, 2, 1, 2), // pad wider than the input
+        ] {
+            let spec = ConvSpec::new(c, c.max(groups), k, s, p).grouped(groups);
+            let chw = c * h * w;
+            let codes: Vec<u8> = (0..bsz * chw).map(|i| (i % 4) as u8 + 1).collect();
+            let pad_code = 7u8;
+            let offs = Im2ColOffsets::build(&spec, h, w);
+            for g in 0..groups {
+                let mut want = Vec::new();
+                for bi in 0..bsz {
+                    im2col_codes_append(
+                        &codes[bi * chw..(bi + 1) * chw],
+                        c,
+                        h,
+                        w,
+                        &spec,
+                        g,
+                        pad_code,
+                        &mut want,
+                    );
+                }
+                let view = Im2ColView::new(&codes, &offs, bsz, chw, g, pad_code, 8);
+                assert_eq!(view.rows() * view.k(), want.len());
+                let mut got = vec![0u8; view.k()];
+                for r in 0..view.rows() {
+                    view.fill_row(r, &mut got);
+                    assert_eq!(
+                        got,
+                        &want[r * view.k()..(r + 1) * view.k()],
+                        "c={c} h={h} w={w} k={k} s={s} p={p} g={g}/{groups} bsz={bsz} row={r}"
+                    );
+                }
+            }
         }
     }
 

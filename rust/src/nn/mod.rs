@@ -1,4 +1,6 @@
-//! Neural-network substrate: tensors, im2col convolution lowering, layer
+//! Neural-network substrate: tensors, convolution lowering (the
+//! implicit-im2col offset table and gather view used by the fused
+//! engine, plus the materialized im2col kept as the test oracle), layer
 //! graph, and the model zoo whose convolution shapes drive the paper's
 //! evaluation (Fig. 5/6, Tab. 4/5).
 

@@ -1,22 +1,36 @@
 //! Per-stage wall-clock profiling (paper Fig. 7/8): activation
-//! quantization, im2col, activation packing, Lut-Conv (unpack + lookup +
-//! accumulate), dequantization, and everything else.
+//! quantization, activation packing (which, on the fused implicit-GEMM
+//! path, includes the on-the-fly im2col gather — matching how the paper
+//! folds im2col into packing), Lut-Conv (unpack + lookup + accumulate),
+//! dequantization, and everything else.
 
 use std::time::Instant;
 
-/// Pipeline stages of one quantized convolution (Fig. 7's categories,
-/// plus im2col which the paper folds into packing).
+/// Pipeline stages of one quantized convolution (Fig. 7's categories).
+///
+/// The production implicit-GEMM path records only `Quantize`, `Pack`
+/// (gather + bit-pack fused) and `LutConv` (for the tiled backends the
+/// dequant epilogue runs inside the GEMM, so their `Dequant` time lands
+/// under `LutConv`; the row-streaming baselines still record a separate
+/// `Dequant` pass). `Im2col` is recorded only by the materialized
+/// reference pipeline
+/// ([`crate::engine::CompiledConv::forward_batch_reference`]) and by
+/// standalone lowering helpers — fused-backend profiles report zero
+/// calls for it and Fig. 7 tables drop the row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage {
     /// f32 → codes.
     Quantize,
-    /// Convolution lowering (code im2col).
+    /// Standalone convolution lowering (code im2col) — reference
+    /// pipeline only; the fused path gathers inside `Pack`.
     Im2col,
-    /// Bit-packing of activation codes.
+    /// Bit-packing of activation codes (fused path: gather + pack).
     Pack,
-    /// The LUT convolution itself (unpack + lookup + accumulate).
+    /// The LUT convolution itself (unpack + lookup + accumulate; fused
+    /// tiled backends also dequant in here via the region sink).
     LutConv,
-    /// i32/f32 accumulators → f32 output (+ bias/ReLU).
+    /// i32/f32 accumulators → f32 output (+ bias/ReLU) when run as a
+    /// separate pass (row-streaming baselines, reference pipeline).
     Dequant,
     /// Non-conv ops (pool, add, concat, fc).
     Other,

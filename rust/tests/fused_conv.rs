@@ -1,0 +1,295 @@
+//! Differential suite for the fused implicit-GEMM conv pipeline:
+//!
+//! 1. `forward_batch_fused` (no materialized im2col, dequant-in-GEMM)
+//!    must be **bit-identical** to `forward_batch_reference` (the
+//!    pre-fusion quantize → im2col → pack → GEMM → dequant pipeline)
+//!    for every quantized backend, across odd geometries (stride,
+//!    asymmetric pad, pad wider than the input, groups, 1×1), batch
+//!    sizes {1, 3, 8} and worker-thread counts {1, 2, 4}. Runs under
+//!    whatever `DEEPGEMM_ISA` selects, so the CI matrix exercises every
+//!    ISA arm.
+//! 2. The fused consumer epilogue (ReLU / residual Add folded into the
+//!    conv's dequant) must match running the same ops as separate
+//!    passes — at the single-conv level and at the whole-model level
+//!    (`CompiledModel::compile` vs `CompiledModel::compile_unfused`).
+//! 3. The fused path must not record a standalone `Im2col` stage; the
+//!    reference must.
+
+use deepgemm::engine::{CompiledConv, CompiledModel, ConvEpilogue, ConvScratch};
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::{tile, Backend};
+use deepgemm::nn::{zoo, ConvSpec, Tensor};
+use deepgemm::profiling::{Stage, StageProfile};
+use deepgemm::util::rng::Rng;
+
+/// Every quantized conv backend (the row-streaming baselines also pack
+/// from the implicit-im2col `CodeSource`, so they are covered too).
+const BACKENDS: [Backend; 10] = [
+    Backend::Lut16(Scheme::A),
+    Backend::Lut16(Scheme::B),
+    Backend::Lut16(Scheme::C),
+    Backend::Lut16(Scheme::D),
+    Backend::LutWide(3),
+    Backend::LutWide(4),
+    Backend::Lut65k,
+    Backend::Lut16F32,
+    Backend::Int8,
+    Backend::Portable,
+];
+
+/// Odd conv geometries: (spec, h, w) covering stride, pad, pad wider
+/// than the input, 1×1, groups, and a rectangular input.
+fn shapes() -> Vec<(ConvSpec, usize, usize)> {
+    vec![
+        (ConvSpec::new(3, 5, 3, 1, 1), 7, 9),
+        (ConvSpec::new(4, 6, 3, 2, 1), 9, 7),
+        (ConvSpec::new(5, 7, 1, 1, 0), 5, 5),
+        (ConvSpec::new(6, 8, 3, 1, 2), 5, 3),
+        (ConvSpec::new(8, 12, 3, 1, 1).grouped(4), 6, 6),
+        (ConvSpec::new(2, 3, 5, 2, 3), 4, 6),
+    ]
+}
+
+fn prepared(spec: &ConvSpec, backend: Backend, relu: bool, seed: u64) -> CompiledConv {
+    let mut rng = Rng::new(seed);
+    let wlen = spec.out_ch * spec.in_ch / spec.groups * spec.kh * spec.kw;
+    let mut w = vec![0f32; wlen];
+    rng.fill_normal(&mut w, 0.5);
+    let mut bias = vec![0f32; spec.out_ch];
+    rng.fill_normal(&mut bias, 0.2);
+    CompiledConv::prepare(spec, &w, &bias, relu, backend, -1.0, 1.0).expect("prepare")
+}
+
+#[test]
+fn fused_is_bit_identical_to_materialized_reference() {
+    for &threads in &[1usize, 2, 4] {
+        tile::set_default_threads(threads);
+        for backend in BACKENDS {
+            for (si, (spec, h, w)) in shapes().into_iter().enumerate() {
+                // Alternate the conv's own ReLU flag across shapes so
+                // both dequant variants are covered.
+                let cc = prepared(&spec, backend, si % 2 == 0, 0xD1F * (si as u64 + 1));
+                let (oh, ow) = spec.out_hw(h, w);
+                for bsz in [1usize, 3, 8] {
+                    let x = Tensor::random(
+                        &[bsz, spec.in_ch, h, w],
+                        0xA0 + si as u64 * 10 + bsz as u64,
+                        -1.0,
+                        1.0,
+                    );
+                    let mut y_fused = vec![0f32; bsz * spec.out_ch * oh * ow];
+                    let mut y_ref = vec![0f32; bsz * spec.out_ch * oh * ow];
+                    let mut s1 = ConvScratch::default();
+                    let mut s2 = ConvScratch::default();
+                    cc.forward_batch_fused(
+                        &x.data,
+                        bsz,
+                        h,
+                        w,
+                        &mut s1,
+                        &mut y_fused,
+                        &ConvEpilogue::NONE,
+                        &mut StageProfile::new(),
+                    )
+                    .expect("fused forward");
+                    cc.forward_batch_reference(
+                        &x.data,
+                        bsz,
+                        h,
+                        w,
+                        &mut s2,
+                        &mut y_ref,
+                        &mut StageProfile::new(),
+                    )
+                    .expect("reference forward");
+                    assert_eq!(
+                        y_fused,
+                        y_ref,
+                        "{} shape#{si} bsz={bsz} threads={threads}: fused != materialized",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+    tile::set_default_threads(1);
+}
+
+#[test]
+fn row_streaming_backends_match_reference() {
+    // BitSerial and UlpPack gather through the same CodeSource but keep
+    // the separate dequant pass; same bit-identicality contract.
+    tile::set_default_threads(1);
+    for backend in [Backend::BitSerial, Backend::UlpPack] {
+        for (si, (spec, h, w)) in shapes().into_iter().enumerate() {
+            let cc = prepared(&spec, backend, true, 0xB5 * (si as u64 + 1));
+            let (oh, ow) = spec.out_hw(h, w);
+            for bsz in [1usize, 3] {
+                let x =
+                    Tensor::random(&[bsz, spec.in_ch, h, w], 0xC0 + si as u64, -1.0, 1.0);
+                let mut y_fused = vec![0f32; bsz * spec.out_ch * oh * ow];
+                let mut y_ref = vec![0f32; bsz * spec.out_ch * oh * ow];
+                cc.forward_batch_fused(
+                    &x.data,
+                    bsz,
+                    h,
+                    w,
+                    &mut ConvScratch::default(),
+                    &mut y_fused,
+                    &ConvEpilogue::NONE,
+                    &mut StageProfile::new(),
+                )
+                .expect("fused forward");
+                cc.forward_batch_reference(
+                    &x.data,
+                    bsz,
+                    h,
+                    w,
+                    &mut ConvScratch::default(),
+                    &mut y_ref,
+                    &mut StageProfile::new(),
+                )
+                .expect("reference forward");
+                assert_eq!(
+                    y_fused,
+                    y_ref,
+                    "{} shape#{si} bsz={bsz}: fused != materialized",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_epilogue_matches_separate_passes() {
+    // Fusing a consumer ReLU and/or residual Add into the conv must
+    // reproduce the unfused op sequence bit-for-bit, in both residual
+    // operand orders.
+    tile::set_default_threads(1);
+    let spec = ConvSpec::new(4, 6, 3, 1, 1);
+    let (h, w, bsz) = (6usize, 5usize, 3usize);
+    let (oh, ow) = spec.out_hw(h, w);
+    let out_len = bsz * spec.out_ch * oh * ow;
+    for backend in [Backend::Lut16(Scheme::D), Backend::Int8, Backend::Lut16F32, Backend::BitSerial]
+    {
+        // conv_relu=true exercises conv-ReLU → add → consumer-ReLU order.
+        let cc = prepared(&spec, backend, true, 0xE9);
+        let x = Tensor::random(&[bsz, spec.in_ch, h, w], 0xEA, -1.0, 1.0);
+        let residual = Tensor::random(&[out_len], 0xEB, -2.0, 2.0);
+        let mut base = vec![0f32; out_len];
+        cc.forward_batch_into(
+            &x.data,
+            bsz,
+            h,
+            w,
+            &mut ConvScratch::default(),
+            &mut base,
+            &mut StageProfile::new(),
+        )
+        .expect("plain forward");
+        for residual_first in [false, true] {
+            for epi_relu in [false, true] {
+                let epi = ConvEpilogue {
+                    relu: epi_relu,
+                    residual: Some(&residual.data),
+                    residual_first,
+                };
+                let mut y = vec![0f32; out_len];
+                cc.forward_batch_fused(
+                    &x.data,
+                    bsz,
+                    h,
+                    w,
+                    &mut ConvScratch::default(),
+                    &mut y,
+                    &epi,
+                    &mut StageProfile::new(),
+                )
+                .expect("fused forward");
+                let want: Vec<f32> = base
+                    .iter()
+                    .zip(residual.data.iter())
+                    .map(|(&v, &r)| {
+                        let s = if residual_first { r + v } else { v + r };
+                        if epi_relu {
+                            s.max(0.0)
+                        } else {
+                            s
+                        }
+                    })
+                    .collect();
+                assert_eq!(
+                    y,
+                    want,
+                    "{} residual_first={residual_first} epi_relu={epi_relu}",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn model_level_fusion_matches_unfused_compile() {
+    // tiny_mixed carries a conv→Add{relu} chain (and conv-internal
+    // ReLUs); the fused compile must match the unfused one exactly for
+    // integer, float-LUT, row-streaming and direct-f32 engines.
+    tile::set_default_threads(1);
+    let mut rng = Rng::new(0x77);
+    let g = zoo::tiny_mixed(6, &mut rng);
+    let xs: Vec<Tensor> =
+        (0..3).map(|i| Tensor::random(&[1, 3, 16, 16], 0x78 + i, -1.0, 1.0)).collect();
+    for backend in [
+        Backend::Lut16(Scheme::D),
+        Backend::Int8,
+        Backend::Lut65k,
+        Backend::Lut16F32,
+        Backend::UlpPack,
+        Backend::Fp32,
+    ] {
+        let mf = CompiledModel::compile(g.clone(), backend, &[]).expect("fused compile");
+        let mu = CompiledModel::compile_unfused(g.clone(), backend, &[]).expect("unfused");
+        let yf = mf.forward_batch(&xs, &mut StageProfile::new()).expect("fused fwd");
+        let yu = mu.forward_batch(&xs, &mut StageProfile::new()).expect("unfused fwd");
+        for (a, b) in yf.iter().zip(yu.iter()) {
+            assert_eq!(a.data, b.data, "{}: fusion changed model outputs", backend.name());
+        }
+    }
+}
+
+#[test]
+fn fused_path_never_runs_standalone_im2col() {
+    tile::set_default_threads(1);
+    let spec = ConvSpec::new(3, 4, 3, 1, 1);
+    let cc = prepared(&spec, Backend::Lut16(Scheme::D), true, 0xF1);
+    let x = Tensor::random(&[2, 3, 6, 6], 0xF2, -1.0, 1.0);
+    let (oh, ow) = spec.out_hw(6, 6);
+    let mut y = vec![0f32; 2 * spec.out_ch * oh * ow];
+    let mut prof_fused = StageProfile::new();
+    cc.forward_batch_fused(
+        &x.data,
+        2,
+        6,
+        6,
+        &mut ConvScratch::default(),
+        &mut y,
+        &ConvEpilogue::NONE,
+        &mut prof_fused,
+    )
+    .expect("fused");
+    assert_eq!(prof_fused.calls(Stage::Im2col), 0, "fused path ran a separate im2col");
+    assert!(prof_fused.calls(Stage::Pack) > 0);
+    let mut prof_ref = StageProfile::new();
+    cc.forward_batch_reference(
+        &x.data,
+        2,
+        6,
+        6,
+        &mut ConvScratch::default(),
+        &mut y,
+        &mut prof_ref,
+    )
+    .expect("reference");
+    assert!(prof_ref.calls(Stage::Im2col) > 0, "reference must keep the im2col stage");
+}

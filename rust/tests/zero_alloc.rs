@@ -1,7 +1,9 @@
 //! Steady-state allocation accounting for the compiled executor: after
 //! warm-up, `CompiledModel::run_batch` on a reused `ExecCtx` must
-//! perform ZERO heap allocations in the quantize → im2col → pack →
-//! GEMM → dequant pipeline.
+//! perform ZERO heap allocations in the quantize → pack(implicit
+//! im2col) → GEMM+epilogue pipeline — and, now that the M×K im2col
+//! matrix is never materialized, the steady-state footprint must stay
+//! under a checked-in bound (the CI arena-regression guard).
 //!
 //! The hook is a counting `#[global_allocator]` with a thread-local
 //! toggle: only allocations made by this test's thread while the gate
@@ -111,6 +113,38 @@ fn steady_state_forward_is_allocation_free() {
             backend.name()
         );
     }
+}
+
+/// Arena-footprint regression guard (wired into CI): the implicit-GEMM
+/// pipeline keeps only a K-byte gather row where the materialized
+/// pipeline held a batch-fused M×K code matrix. For `tiny_mixed` at
+/// 16×16 and batch 3 the steady-state context (arena slots + conv
+/// scratch) sits near 230 KiB; the old pipeline's extra M×K slab
+/// (768×144 B for the widest layer) pushed it past 340 KiB. The bound
+/// below separates the two with headroom for allocator rounding — if
+/// this assertion fires, a scratch buffer proportional to M×K (or an
+/// arena slot leak) has crept back in.
+#[test]
+fn fused_arena_footprint_stays_under_bound() {
+    const FOOTPRINT_BOUND_BYTES: usize = 300 * 1024;
+    tile::set_default_threads(1);
+    let mut rng = Rng::new(42);
+    let graph = zoo::tiny_mixed(5, &mut rng);
+    let xs: Vec<Tensor> =
+        (0..3).map(|i| Tensor::random(&[1, 3, 16, 16], 90 + i, -1.0, 1.0)).collect();
+    let model = CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[]).unwrap();
+    let mut ctx = model.new_ctx();
+    let mut prof = StageProfile::new();
+    for _ in 0..3 {
+        model.run_batch(&xs, &mut ctx, &mut prof).unwrap();
+    }
+    let fp = ctx.footprint_bytes();
+    assert!(fp > 0, "footprint accounting broken");
+    assert!(
+        fp <= FOOTPRINT_BOUND_BYTES,
+        "steady-state footprint {fp} B exceeds the {FOOTPRINT_BOUND_BYTES} B guard — \
+         did a materialized M×K buffer come back?"
+    );
 }
 
 #[test]
