@@ -77,7 +77,7 @@ pub use plan::{ExecCtx, ExecPlan, TuneReport};
 use crate::kernels::fp32::{self, MatF32};
 use crate::kernels::tune::{self, AutotuneMode, TuneSpec};
 use crate::kernels::Backend;
-use crate::nn::graph::{forward_fp32, forward_fp32_all, Graph, Op};
+use crate::nn::graph::{forward_fp32, forward_fp32_all, layer_norm_row, softmax_row, Graph, Op};
 use crate::nn::{BatchView, Tensor};
 use crate::profiling::{Stage, StageProfile};
 use crate::quant::Quantizer;
@@ -264,16 +264,44 @@ impl CompiledModel {
                         Some(cc)
                     }
                 }
+                Op::Fc { in_f, out_f, weights, bias, quant: true }
+                    if backend != Backend::Fp32 =>
+                {
+                    // Quantized FC: compiled as a 1×1 conv on a 1×1
+                    // input — per-image GEMM M = 1, the autoregressive-
+                    // decode shape [`crate::kernels::GemmPlan`] routes
+                    // down the GEMV row path (and tunes at the M = 1
+                    // bucket of the batched grid).
+                    let (lo, hi) = ranges[i];
+                    let spec = crate::nn::ConvSpec::new(*in_f, *out_f, 1, 1, 0);
+                    let mut cc = CompiledConv::prepare_tuned(
+                        &spec,
+                        weights,
+                        bias,
+                        false,
+                        backend,
+                        lo,
+                        hi,
+                        TuneSpec::batched(autotune, 1, max_batch),
+                    )?;
+                    cc.prepare_geometry(1, 1);
+                    for out in &cc.tuning {
+                        tuning.layers.push((node.name.clone(), out.clone()));
+                    }
+                    Some(cc)
+                }
                 _ => None,
             };
             convs.push(compiled);
         }
-        // FC weight matrices (batched fp32 GEMM).
+        // FC weight matrices (batched fp32 GEMM) for the layers that did
+        // not compile a quantized pipeline above.
         let fc_weights = graph
             .nodes
             .iter()
-            .map(|n| match &n.op {
-                Op::Fc { in_f, out_f, weights, .. } => {
+            .enumerate()
+            .map(|(i, n)| match &n.op {
+                Op::Fc { in_f, out_f, weights, .. } if convs[i].is_none() => {
                     Some(MatF32::from_values(weights, *out_f, *in_f))
                 }
                 _ => None,
@@ -296,7 +324,7 @@ impl CompiledModel {
     /// workers create one per model and reuse it across batches
     /// ([`Self::forward_batch_with`]) for allocation-free steady state.
     pub fn new_ctx(&self) -> ExecCtx {
-        ExecCtx::new(self.plan.n_slots())
+        ExecCtx::new(self.plan.n_slots(), self.plan.kv_elems.len())
     }
 
     /// Drop every autotuned per-bucket block shape and revert all tiled
@@ -342,6 +370,47 @@ impl CompiledModel {
             }
         }
         self.tuning.stale_threads = true;
+    }
+
+    /// Enable or disable the dedicated M = 1 GEMV row path on every
+    /// prepared tiled plan (on by default — see
+    /// [`crate::kernels::PlanOpts::gemv`]). Turning it off forces
+    /// decode-shaped GEMMs through the register-tiled grid driver: the
+    /// differential oracle the decode bench and tests check the row
+    /// path against, end to end.
+    pub fn set_gemv(&mut self, on: bool) {
+        for cc in self.convs.iter_mut().flatten() {
+            match &mut cc.weights {
+                PreparedWeights::Lut16 { plans } => {
+                    for p in plans {
+                        p.gemv = on;
+                    }
+                }
+                PreparedWeights::LutWide { plans } => {
+                    for p in plans {
+                        p.gemv = on;
+                    }
+                }
+                PreparedWeights::Lut65k { plans } => {
+                    for p in plans {
+                        p.gemv = on;
+                    }
+                }
+                PreparedWeights::Lut16F32 { plans } => {
+                    for p in plans {
+                        p.gemv = on;
+                    }
+                }
+                PreparedWeights::Int8 { plans } => {
+                    for p in plans {
+                        p.gemv = on;
+                    }
+                }
+                PreparedWeights::BitSerial { .. }
+                | PreparedWeights::Ulp { .. }
+                | PreparedWeights::Portable { .. } => {}
+            }
+        }
     }
 
     /// Forward pass (single image), accumulating stage times into `prof`.
@@ -403,7 +472,7 @@ impl CompiledModel {
         if bsz == 0 {
             return Err(crate::Error::Config("run_batch requires a non-empty batch".into()));
         }
-        if ctx.slots.len() != self.plan.n_slots() {
+        if ctx.slots.len() != self.plan.n_slots() || ctx.kv.len() != self.plan.kv_elems.len() {
             return Err(crate::Error::Config(
                 "ExecCtx was created for a different model".into(),
             ));
@@ -427,6 +496,36 @@ impl CompiledModel {
             for (bi, x) in xs.iter().enumerate() {
                 islot[bi * in_elems..(bi + 1) * in_elems].copy_from_slice(&x.data);
             }
+        }
+        // Bind the persistent KV caches (decode graphs only): the batch
+        // size is pinned for the whole sequence, the compile-time window
+        // bounds the position, and the buffers reach their full
+        // `bsz · 2 · max_seq · heads · head_dim` size on the first step —
+        // steady-state decode never grows them.
+        if !self.plan.kv_elems.is_empty() {
+            if ctx.kv_batch != 0 && ctx.kv_batch != bsz {
+                return Err(crate::Error::Config(format!(
+                    "decode batch changed mid-sequence: KV caches hold {} image(s), got \
+                     {bsz} (finish the sequence or ExecCtx::reset_decode first)",
+                    ctx.kv_batch
+                )));
+            }
+            if ctx.pos >= self.plan.seq_capacity {
+                return Err(crate::Error::Config(format!(
+                    "KV cache full: decode position {} reached the compiled max_seq {}",
+                    ctx.pos, self.plan.seq_capacity
+                )));
+            }
+            for (s, buf) in ctx.kv.iter_mut().enumerate() {
+                let need = bsz * self.plan.kv_elems[s];
+                if buf.len() != need {
+                    buf.resize(need, 0.0);
+                }
+            }
+            if ctx.scores.len() != self.plan.seq_capacity {
+                ctx.scores.resize(self.plan.seq_capacity, 0.0);
+            }
+            ctx.kv_batch = bsz;
         }
         for (i, node) in self.graph.nodes.iter().enumerate() {
             if self.fused_from[i].is_some() {
@@ -525,21 +624,48 @@ impl CompiledModel {
                     let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
                     prof.time(Stage::Other, || v.global_avg_pool_into(&mut outbuf));
                 }
-                Op::Fc { in_f, out_f, weights: _, bias } => {
+                Op::Fc { in_f, out_f, weights: _, bias, .. } => {
                     let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
-                    let wm = self.fc_weights[i].as_ref().expect("fc weights prepared");
-                    prof.time(Stage::Other, || {
-                        // One fp32 GEMM over the whole batch: per-image
-                        // flattened inputs are already contiguous rows.
-                        ctx.scratch.fc.store(v.data, bsz, *in_f);
-                        fp32::gemm(&ctx.scratch.fc, wm, &mut outbuf);
-                        for bi in 0..bsz {
-                            let row = &mut outbuf[bi * *out_f..(bi + 1) * *out_f];
-                            for (o, b) in row.iter_mut().zip(bias.iter()) {
-                                *o += *b;
+                    match &self.convs[i] {
+                        Some(cc) => {
+                            // Quantized FC: the 1×1-conv GEMM through
+                            // the pack→LUT pipeline at per-image M = 1.
+                            // A batch-1 decode step is GEMM M = 1 — the
+                            // GEMV row path (tile::gemv_executes counts
+                            // it).
+                            let r = cc.forward_batch_fused(
+                                v.data,
+                                bsz,
+                                1,
+                                1,
+                                &mut ctx.scratch,
+                                &mut outbuf,
+                                &ConvEpilogue::NONE,
+                                prof,
+                            );
+                            if let Err(e) = r {
+                                ctx.slots[self.plan.slot_of[i]] = outbuf;
+                                return Err(e);
                             }
                         }
-                    });
+                        None => {
+                            let wm =
+                                self.fc_weights[i].as_ref().expect("fc weights prepared");
+                            prof.time(Stage::Other, || {
+                                // One fp32 GEMM over the whole batch:
+                                // per-image flattened inputs are already
+                                // contiguous rows.
+                                ctx.scratch.fc.store(v.data, bsz, *in_f);
+                                fp32::gemm(&ctx.scratch.fc, wm, &mut outbuf);
+                                for bi in 0..bsz {
+                                    let row = &mut outbuf[bi * *out_f..(bi + 1) * *out_f];
+                                    for (o, b) in row.iter_mut().zip(bias.iter()) {
+                                        *o += *b;
+                                    }
+                                }
+                            });
+                        }
+                    }
                 }
                 Op::Add { relu } => {
                     let a = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
@@ -561,8 +687,110 @@ impl CompiledModel {
                         }
                     });
                 }
+                Op::LayerNorm { dim, gamma, beta, eps } => {
+                    let d = *dim;
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    prof.time(Stage::Other, || {
+                        for bi in 0..bsz {
+                            layer_norm_row(
+                                v.image(bi),
+                                gamma,
+                                beta,
+                                *eps,
+                                &mut outbuf[bi * d..(bi + 1) * d],
+                            );
+                        }
+                    });
+                }
+                Op::Softmax => {
+                    let v = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    let d = self.plan.elems[i];
+                    prof.time(Stage::Other, || {
+                        for bi in 0..bsz {
+                            let row = &mut outbuf[bi * d..(bi + 1) * d];
+                            row.copy_from_slice(v.image(bi));
+                            softmax_row(row);
+                        }
+                    });
+                }
+                Op::Attention { heads, head_dim, max_seq } => {
+                    let (heads, head_dim, max_seq) = (*heads, *head_dim, *max_seq);
+                    let d = heads * head_dim;
+                    let kvi = self.plan.kv_of[i].expect("attention node has a KV slot");
+                    let kve = self.plan.kv_elems[kvi];
+                    let pos = ctx.pos;
+                    // Append this step's K/V rows into the persistent
+                    // cache slot: per-image layout is
+                    // [K: max_seq × d][V: max_seq × d]. Writes are
+                    // idempotent at a fixed `pos` — a failed step is
+                    // simply retried and overwrites its partial rows,
+                    // because `ctx.pos` only advances on success.
+                    {
+                        let kview =
+                            node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[1], bsz);
+                        let vview =
+                            node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[2], bsz);
+                        let kv = &mut ctx.kv[kvi];
+                        for bi in 0..bsz {
+                            let base = bi * kve;
+                            kv[base + pos * d..base + (pos + 1) * d]
+                                .copy_from_slice(kview.image(bi));
+                            let vbase = base + max_seq * d;
+                            kv[vbase + pos * d..vbase + (pos + 1) * d]
+                                .copy_from_slice(vview.image(bi));
+                        }
+                    }
+                    // Fault-injection site for the decode chaos test:
+                    // fires after the KV append, before the attention
+                    // compute — the step fails half-done, and the retry
+                    // must still produce bit-identical output.
+                    if let Err(e) = crate::util::failpoint::eval("decode_attn") {
+                        ctx.slots[self.plan.slot_of[i]] = outbuf;
+                        return Err(e);
+                    }
+                    let q = node_view(&self.plan, &ctx.slots, (ic, ih, iw), node.inputs[0], bsz);
+                    let kv = &ctx.kv[kvi];
+                    let scores = &mut ctx.scores;
+                    let inv_sqrt = 1.0 / (head_dim as f32).sqrt();
+                    prof.time(Stage::Other, || {
+                        for bi in 0..bsz {
+                            let base = bi * kve;
+                            let krows = &kv[base..base + max_seq * d];
+                            let vrows = &kv[base + max_seq * d..base + 2 * max_seq * d];
+                            let qrow = q.image(bi);
+                            let orow = &mut outbuf[bi * d..(bi + 1) * d];
+                            for h in 0..heads {
+                                let ho = h * head_dim;
+                                let qh = &qrow[ho..ho + head_dim];
+                                for (s, score) in scores[..=pos].iter_mut().enumerate() {
+                                    let kh = &krows[s * d + ho..s * d + ho + head_dim];
+                                    let mut acc = 0.0f32;
+                                    for (a, b) in qh.iter().zip(kh.iter()) {
+                                        acc += a * b;
+                                    }
+                                    *score = acc * inv_sqrt;
+                                }
+                                softmax_row(&mut scores[..=pos]);
+                                let oh = &mut orow[ho..ho + head_dim];
+                                oh.fill(0.0);
+                                for (s, &w) in scores[..=pos].iter().enumerate() {
+                                    let vh = &vrows[s * d + ho..s * d + ho + head_dim];
+                                    for (o, &vv) in oh.iter_mut().zip(vh.iter()) {
+                                        *o += w * vv;
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
             }
             ctx.slots[self.plan.slot_of[i]] = outbuf;
+        }
+        // Commit point: the decode position advances only after every
+        // node (and every KV append) in the step succeeded, so a failed
+        // step can be retried against the same context.
+        if !self.plan.kv_elems.is_empty() {
+            ctx.pos += 1;
         }
         ctx.runs += 1;
         let out_id = self.graph.output;
@@ -625,7 +853,7 @@ fn calibrate(graph: &Graph, calib: &[Tensor]) -> crate::Result<Vec<(f32, f32)>> 
     for x in calib {
         let outs = forward_fp32_all(graph, x)?;
         for (i, n) in graph.nodes.iter().enumerate() {
-            if matches!(n.op, Op::Conv { .. }) {
+            if matches!(n.op, Op::Conv { .. } | Op::Fc { quant: true, .. }) {
                 let input = if n.inputs[0] == Graph::INPUT { x } else { &outs[n.inputs[0]] };
                 let (mut lo, mut hi) = ranges[i];
                 for &v in &input.data {

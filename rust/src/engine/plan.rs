@@ -252,6 +252,18 @@ pub struct ExecPlan {
     /// graph output (alive past the end), `i` itself for dead nodes
     /// whose output nobody reads.
     pub last_use: Vec<usize>,
+    /// KV-cache slot index per node: `Some(s)` for every `Attention`
+    /// node. KV slots are *persistent* arena state — unlike the
+    /// liveness-reused activation slots above they survive across
+    /// `forward_batch` calls (one decode step appends one position) and
+    /// are never shared between nodes.
+    pub kv_of: Vec<Option<usize>>,
+    /// Per-KV-slot per-image element count, sized at compile time:
+    /// `2 · max_seq · heads · head_dim` (the K rows, then the V rows).
+    pub kv_elems: Vec<usize>,
+    /// Decode positions the plan's KV caches can hold (min over the
+    /// attention nodes' `max_seq`); 0 when the graph has no attention.
+    pub seq_capacity: usize,
 }
 
 /// Pop the largest free slot (minimizes growth when tensors of mixed
@@ -362,6 +374,23 @@ impl ExecPlan {
             }
         }
 
+        // KV-cache slots: one persistent slot per attention node, sized
+        // for the full decode window at compile time so steady-state
+        // decode never grows them.
+        let mut kv_of: Vec<Option<usize>> = vec![None; n];
+        let mut kv_elems: Vec<usize> = Vec::new();
+        let mut seq_capacity = usize::MAX;
+        for (i, node) in graph.nodes.iter().enumerate() {
+            if let Op::Attention { heads, head_dim, max_seq } = node.op {
+                kv_of[i] = Some(kv_elems.len());
+                kv_elems.push(2 * max_seq * heads * head_dim);
+                seq_capacity = seq_capacity.min(max_seq);
+            }
+        }
+        if kv_elems.is_empty() {
+            seq_capacity = 0;
+        }
+
         Ok(ExecPlan {
             shapes,
             elems,
@@ -370,6 +399,9 @@ impl ExecPlan {
             input_elems,
             slot_elems,
             last_use,
+            kv_of,
+            kv_elems,
+            seq_capacity,
         })
     }
 
@@ -381,6 +413,13 @@ impl ExecPlan {
     /// Planned arena footprint for a batch-of-one, in bytes.
     pub fn arena_bytes_per_image(&self) -> usize {
         self.slot_elems.iter().sum::<usize>() * std::mem::size_of::<f32>()
+    }
+
+    /// Planned KV-cache footprint for a batch-of-one, in bytes — the
+    /// persistent decode state on top of [`Self::arena_bytes_per_image`]
+    /// (0 for graphs without attention).
+    pub fn kv_bytes_per_image(&self) -> usize {
+        self.kv_elems.iter().sum::<usize>() * std::mem::size_of::<f32>()
     }
 }
 
@@ -398,14 +437,33 @@ pub struct ExecCtx {
     pub(crate) scratch: ConvScratch,
     /// Completed forward passes served by this context.
     pub(crate) runs: u64,
+    /// Persistent KV-cache buffers, one per planned KV slot (attention
+    /// node), each `bsz · kv_elems[s]` once bound. Unlike the activation
+    /// slots these carry state *between* `forward_batch` calls: position
+    /// `pos` of every cache is appended each decode step.
+    pub(crate) kv: Vec<Vec<f32>>,
+    /// Next decode position (sequence length served so far). Advanced
+    /// once per successful `run_batch` on a plan with KV slots — the
+    /// step's commit point: a failed or interrupted step leaves `pos`
+    /// unchanged and the retry overwrites the partial row.
+    pub(crate) pos: usize,
+    /// Batch size the KV caches are laid out for (0 = no step taken);
+    /// changing it mid-sequence is rejected.
+    pub(crate) kv_batch: usize,
+    /// Attention-score scratch row (`seq_capacity` long once bound).
+    pub(crate) scores: Vec<f32>,
 }
 
 impl ExecCtx {
-    pub(crate) fn new(n_slots: usize) -> ExecCtx {
+    pub(crate) fn new(n_slots: usize, n_kv: usize) -> ExecCtx {
         ExecCtx {
             slots: (0..n_slots).map(|_| Vec::new()).collect(),
             scratch: ConvScratch::default(),
             runs: 0,
+            kv: (0..n_kv).map(|_| Vec::new()).collect(),
+            pos: 0,
+            kv_batch: 0,
+            scores: Vec::new(),
         }
     }
 
@@ -414,10 +472,28 @@ impl ExecCtx {
         self.runs
     }
 
-    /// Bytes currently held by the arena and scratch buffers — the
-    /// steady-state memory a serving worker keeps resident per model.
+    /// Next decode position: how many tokens this context's KV caches
+    /// hold (0 for fresh contexts and non-attention graphs).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Start a new decode sequence: rewind the KV position to 0. Cache
+    /// buffers keep their capacity, so the next sequence decodes
+    /// allocation-free; stale rows are overwritten position by position
+    /// and never read (attention only looks at `0..=pos`).
+    pub fn reset_decode(&mut self) {
+        self.pos = 0;
+        self.kv_batch = 0;
+    }
+
+    /// Bytes currently held by the arena, KV-cache and scratch buffers —
+    /// the steady-state memory a serving worker keeps resident per
+    /// model.
     pub fn footprint_bytes(&self) -> usize {
         self.slots.iter().map(|s| s.capacity() * std::mem::size_of::<f32>()).sum::<usize>()
+            + self.kv.iter().map(|s| s.capacity() * std::mem::size_of::<f32>()).sum::<usize>()
+            + self.scores.capacity() * std::mem::size_of::<f32>()
             + self.scratch.footprint_bytes()
     }
 }

@@ -123,6 +123,52 @@ impl TileKernel for Int8Tile {
         }
     }
 
+    #[allow(unused_variables)]
+    fn gemv(
+        &self,
+        ar: &[u8],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        isa: Isa,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [i32; NR],
+    ) {
+        // The vector micro-kernels already stream one activation row
+        // against all four weight columns; run them at `mt == 1` (the
+        // duplicated row slots are never read) and take row 0.
+        #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+        if isa == Isa::Avx512 {
+            let mut full = [[0i32; NR]; MR];
+            // SAFETY: the driver only passes host-supported arms
+            // (Avx512 implies VNNI); fragments hold exactly `vals`
+            // bytes (one per value).
+            unsafe { avx512::tile_i8_vnni(&[ar; MR], wf, vals, 1, nt, &mut full) };
+            *sums = full[0];
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if isa.vectorized() {
+            let mut full = [[0i32; NR]; MR];
+            // SAFETY: the driver only passes host-supported arms;
+            // fragments hold exactly `vals` bytes (one per value).
+            unsafe { avx2::tile_i8(&[ar; MR], wf, vals, 1, nt, &mut full) };
+            *sums = full[0];
+            return;
+        }
+        // Portable scalar fallback: bytes are values, no decode needed.
+        let arow = &ar[..vals];
+        for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+            let mut acc = 0i64;
+            for (wb, ab) in wf[j][..vals].iter().zip(arow.iter()) {
+                acc += (*wb as i8) as i64 * *ab as i64;
+            }
+            *sum = acc as i32;
+        }
+    }
+
     fn epilogue(&self, col: usize, _a_pad: usize) -> i32 {
         // Fold the zero-point: Σ(a−za)w = Σ a·w − za·Σw. K padding is
         // neutral (padded weights are 0; row sums span the real K only).

@@ -195,6 +195,64 @@ impl TileKernel for LutWideTile {
         }
     }
 
+    #[allow(unused_variables)]
+    fn gemv(
+        &self,
+        ar: &[u8],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        isa: Isa,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [i32; NR],
+    ) {
+        // Same raw-biased-sum convention as `tile`: run the vector tile
+        // kernels at `mt == 1` (the duplicated row slots are never
+        // read) and take row 0 — the per-row accumulation inside them
+        // is already a row-vector loop.
+        #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
+        if isa == Isa::Avx512 && self.lut.bits == 3 {
+            // SAFETY: the driver only passes host-supported arms;
+            // fragments cover exactly `vals` Dense3 values.
+            let raw = unsafe { avx512::tile3_vpermb(&[ar; MR], wf, &self.lut, vals, 1, nt) };
+            for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+                *sum = raw[0][j] as i32;
+            }
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if isa.vectorized() {
+            // SAFETY: the driver only passes host-supported arms;
+            // fragments cover exactly `vals` Dense3/Dense4 values.
+            let raw = unsafe {
+                if self.lut.bits == 3 {
+                    avx2::tile3(&[ar; MR], wf, &self.lut, vals, 1, nt)
+                } else {
+                    avx2::tile4(&[ar; MR], wf, &self.lut, vals, 1, nt)
+                }
+            };
+            for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+                *sum = raw[0][j] as i32;
+            }
+            return;
+        }
+        // Scalar: the panel was staged by `prep_panel`; decode only the
+        // single activation row.
+        let layout = self.layout();
+        let bits = self.lut.bits;
+        unpack_row(ar, vals, layout, &mut a_scratch[..vals]);
+        for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+            let wrow = &w_scratch[j * kc..j * kc + vals];
+            let mut s = 0i64;
+            for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
+                s += self.lut.table[lut_index(*wc, *ac, bits)] as i64;
+            }
+            *sum = s as i32;
+        }
+    }
+
     fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
         // Raw block sums are biased over the whole padded K; subtract
         // the precomputed bias total plus the pad products.

@@ -118,6 +118,45 @@ impl TileKernel for Lut65kTile {
         }
     }
 
+    fn gemv(
+        &self,
+        ar: &[u8],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        _isa: Isa,
+        _kc: usize,
+        _a_scratch: &mut [u8],
+        _w_scratch: &[u8],
+        sums: &mut [i32; NR],
+    ) {
+        // Same scalar lookup loop as `tile` (row 0), with the MR tile
+        // plumbing deleted — M = 1 decode reads one activation stream.
+        let bytes = vals / 4;
+        let table = &self.lut.table;
+        let arow = &ar[..bytes];
+        for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+            let wrow = &wf[j][..bytes];
+            let mut acc0 = 0i32;
+            let mut acc1 = 0i32;
+            let mut acc2 = 0i32;
+            let mut acc3 = 0i32;
+            let mut t = 0usize;
+            while t + 4 <= bytes {
+                acc0 += table[((wrow[t] as usize) << 8) | arow[t] as usize] as i32;
+                acc1 += table[((wrow[t + 1] as usize) << 8) | arow[t + 1] as usize] as i32;
+                acc2 += table[((wrow[t + 2] as usize) << 8) | arow[t + 2] as usize] as i32;
+                acc3 += table[((wrow[t + 3] as usize) << 8) | arow[t + 3] as usize] as i32;
+                t += 4;
+            }
+            while t < bytes {
+                acc0 += table[((wrow[t] as usize) << 8) | arow[t] as usize] as i32;
+                t += 1;
+            }
+            *sum = acc0 + acc1 + acc2 + acc3;
+        }
+    }
+
     fn epilogue(&self, _col: usize, a_pad: usize) -> i32 {
         // Padded crumbs are code 0 on both sides.
         self.lut.pad_product * a_pad as i32

@@ -58,7 +58,7 @@ use crate::quant::lut::lut_index;
 use crate::quant::Lut16;
 use crate::util::pool::ThreadPool;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 thread_local! {
@@ -181,11 +181,23 @@ pub struct PlanOpts {
     /// (the default) follows the process-wide request / runtime
     /// detection — see [`crate::kernels::simd`] for the full order.
     pub isa: Option<Isa>,
+    /// Allow the dedicated GEMV row path for M = 1 executions (the
+    /// autoregressive-decode shape): on by default. Set `false` to force
+    /// single-row GEMMs through the register-tiled grid driver — the
+    /// differential oracle the GEMV path is tested against
+    /// (`tests/isa_diff.rs`).
+    pub gemv: bool,
 }
 
 impl Default for PlanOpts {
     fn default() -> Self {
-        Self { shape: TileShape::default(), threads: 0, force_scalar: false, isa: None }
+        Self {
+            shape: TileShape::default(),
+            threads: 0,
+            force_scalar: false,
+            isa: None,
+            gemv: true,
+        }
     }
 }
 
@@ -247,6 +259,25 @@ fn global_pool(threads: usize) -> Arc<ThreadPool> {
     let pool = Arc::new(ThreadPool::new(threads));
     *guard = Some((threads, pool.clone()));
     pool
+}
+
+/// Process-wide path counters: every [`GemmPlan::execute`] (and
+/// `execute_with_sink`) that computed a non-empty output increments
+/// exactly one of these. Benches and tests read them to assert the
+/// decode shape (M = 1) actually took the GEMV path.
+static GEMV_EXECUTES: AtomicU64 = AtomicU64::new(0);
+static TILED_EXECUTES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of plan executions routed down the dedicated
+/// GEMV (M = 1) row path.
+pub fn gemv_executes() -> u64 {
+    GEMV_EXECUTES.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of plan executions routed down the register-tiled
+/// grid driver.
+pub fn tiled_executes() -> u64 {
+    TILED_EXECUTES.load(Ordering::Relaxed)
 }
 
 /// An accumulator scalar a [`TileKernel`] can produce: `i32` for the
@@ -376,6 +407,38 @@ pub trait TileKernel: Send + Sync {
         w_scratch: &[u8],
         sums: &mut [[Self::Acc; NR]; MR],
     );
+
+    /// Compute one 1×NR (or remainder) row tile over one K block — the
+    /// M = 1 analogue of [`TileKernel::tile`], driven by the streaming
+    /// GEMV path [`GemmPlan::execute`] selects for single-row GEMMs
+    /// (autoregressive decode). `ar` is the single activation row's
+    /// fragment; every other argument matches [`TileKernel::tile`].
+    ///
+    /// Contract: **write** (not accumulate) `sums[j]` for every
+    /// `j < nt`, with exactly the raw block sum `tile` would produce in
+    /// row 0 at `mt == 1` — integer sums bit-identical, f32 sums from
+    /// the identical reduction order. The default delegates to `tile`
+    /// with the row duplicated across the tile, which guarantees the
+    /// contract; overriding kernels dispatch straight to their
+    /// single-row micro-kernels to skip the 4-row tile plumbing.
+    #[allow(clippy::too_many_arguments)]
+    fn gemv(
+        &self,
+        ar: &[u8],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        isa: Isa,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [Self::Acc; NR],
+    ) {
+        let arr = [ar; MR];
+        let mut full = [[<Self::Acc as Accum>::ZERO; NR]; MR];
+        self.tile(&arr, wf, vals, 1, nt, isa, kc, a_scratch, w_scratch, &mut full);
+        *sums = full[0];
+    }
 
     /// Per-output correction subtracted once after the K-block loop:
     /// whatever the raw block sums over-counted for output column `col`
@@ -539,6 +602,9 @@ pub struct GemmPlan<K: TileKernel> {
     /// Per-plan ISA override (see [`PlanOpts::isa`]); `None` follows
     /// the process-wide request / runtime detection at execute time.
     pub isa: Option<Isa>,
+    /// Route M = 1 executions down the dedicated GEMV row path (see
+    /// [`PlanOpts::gemv`]).
+    pub gemv: bool,
     /// Panel-contiguous repacked weights for the base `shape`.
     pub panels: WeightPanels,
     /// Per-M-bucket tuned shapes, sorted ascending by `m` (empty for
@@ -645,6 +711,7 @@ impl<K: TileKernel> GemmPlan<K> {
             threads: opts.threads,
             force_scalar: opts.force_scalar,
             isa: opts.isa,
+            gemv: opts.gemv,
             panels,
             buckets: Vec::new(),
             bucket_panels: Vec::new(),
@@ -820,6 +887,17 @@ impl<K: TileKernel> GemmPlan<K> {
         // One dispatch decision per execute; every tile call sees the
         // same (host-supported) arm.
         let isa = self.resolve_isa();
+
+        if m == 1 && self.gemv {
+            // Autoregressive-decode shape: stream the single activation
+            // row against the weight panels — no M blocking, no 4-row
+            // register tiles. The M = 1 bucket's tuned shape (selected
+            // above) still supplies `nc`/`kc`.
+            GEMV_EXECUTES.fetch_add(1, Ordering::Relaxed);
+            self.run_gemv(a, panels, shape, SendMut(out.as_mut_ptr()), isa, sink);
+            return;
+        }
+        TILED_EXECUTES.fetch_add(1, Ordering::Relaxed);
 
         let mc = shape.mc;
         let nc = shape.nc;
@@ -1007,6 +1085,146 @@ impl<K: TileKernel> GemmPlan<K> {
             n0,
             n1,
         );
+    }
+
+    /// Dedicated GEMV (M = 1) driver: streams the single activation row
+    /// against the weight panels with no M-blocking and no 4-row
+    /// register tiles (the M = 1 bucket's tuned shape still supplies
+    /// `nc`/`kc`). Parallelism is over N blocks only; per-column
+    /// accumulation visits K blocks in the same ascending order as the
+    /// tiled driver, so integer results are bit-identical and f32
+    /// results reuse the exact same reduction grouping.
+    fn run_gemv<S: RegionSink<K::Acc>>(
+        &self,
+        a: &Packed,
+        panels: &WeightPanels,
+        shape: TileShape,
+        out: SendMut<K::Acc>,
+        isa: Isa,
+        sink: &S,
+    ) {
+        let n = panels.n;
+        let nc = shape.nc;
+        let n_blocks = n.div_ceil(nc);
+        let threads = resolve_threads(self.threads);
+        if threads <= 1 || n_blocks <= 1 {
+            for nb in 0..n_blocks {
+                self.gemv_region(a, panels, out, nb * nc, ((nb + 1) * nc).min(n), isa, sink);
+            }
+            return;
+        }
+        let pool = global_pool(threads);
+        let next = AtomicUsize::new(0);
+        let workers = threads.min(n_blocks);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let next = &next;
+            jobs.push(Box::new(move || loop {
+                let nb = next.fetch_add(1, Ordering::Relaxed);
+                if nb >= n_blocks {
+                    break;
+                }
+                self.gemv_region(a, panels, out, nb * nc, ((nb + 1) * nc).min(n), isa, sink);
+            }));
+        }
+        pool.scope_run(jobs);
+    }
+
+    /// One GEMV output span `[n0, n1)` of row 0: routes the scalar
+    /// fallback through the per-thread [`SCALAR_SCRATCH`] buffers, then
+    /// delegates to [`Self::gemv_region_with`].
+    fn gemv_region<S: RegionSink<K::Acc>>(
+        &self,
+        a: &Packed,
+        panels: &WeightPanels,
+        out: SendMut<K::Acc>,
+        n0: usize,
+        n1: usize,
+        isa: Isa,
+        sink: &S,
+    ) {
+        if isa.vectorized() {
+            self.gemv_region_with(a, panels, out, n0, n1, isa, &mut [], &mut [], sink);
+            return;
+        }
+        let kc = panels.kc;
+        SCALAR_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (a_buf, w_buf) = &mut *guard;
+            if a_buf.len() < kc {
+                a_buf.resize(kc, 0);
+            }
+            if w_buf.len() < NR * kc {
+                w_buf.resize(NR * kc, 0);
+            }
+            self.gemv_region_with(a, panels, out, n0, n1, isa, a_buf, w_buf, sink);
+        });
+    }
+
+    /// K-block outer loop, NR-panel inner loop, one row-vector kernel
+    /// call per (block, panel) — the M = 1 specialization of
+    /// [`Self::run_region_with`] with the MR tile loop deleted.
+    #[allow(clippy::too_many_arguments)]
+    fn gemv_region_with<S: RegionSink<K::Acc>>(
+        &self,
+        a: &Packed,
+        panels: &WeightPanels,
+        out: SendMut<K::Acc>,
+        n0: usize,
+        n1: usize,
+        isa: Isa,
+        a_buf: &mut [u8],
+        w_buf: &mut [u8],
+        sink: &S,
+    ) {
+        let n = panels.n;
+        let outp = out.0;
+        let zero = <K::Acc as Accum>::ZERO;
+        for ni in n0..n1 {
+            // SAFETY: this task owns row 0 × [n0, n1) exclusively.
+            unsafe { *outp.add(ni) = zero };
+        }
+        let kc = panels.kc;
+        let a_chunk = a.layout.bytes_for(K_BLOCK);
+        let p0 = n0 / NR;
+        let p1 = n1.div_ceil(NR);
+        let row = a.row(0);
+        for b in 0..panels.blocks() {
+            let vals = panels.block_vals(b);
+            let a_off = panels.prefix[b] * a_chunk;
+            let a_len = panels.block_chunks[b] * a_chunk;
+            let ar = &row[a_off..a_off + a_len];
+            for p in p0..p1 {
+                let pn0 = p * NR;
+                let nt = (n1 - pn0).min(NR);
+                let mut wf = [panels.frag(p, b, 0); NR];
+                for (r, slot) in wf.iter_mut().enumerate().take(nt).skip(1) {
+                    *slot = panels.frag(p, b, r);
+                }
+                if !isa.vectorized() {
+                    self.kernel.prep_panel(&wf, vals, nt, kc, w_buf);
+                }
+                let mut sums = [zero; NR];
+                self.kernel.gemv(ar, &wf, vals, nt, isa, kc, a_buf, w_buf, &mut sums);
+                for (j, s) in sums.iter().enumerate().take(nt) {
+                    // SAFETY: disjoint span, see above.
+                    unsafe {
+                        let slot = outp.add(pn0 + j);
+                        *slot = (*slot).acc_add(*s);
+                    }
+                }
+            }
+        }
+        let a_pad = a.pad();
+        for ni in n0..n1 {
+            let corr = self.kernel.epilogue(ni, a_pad);
+            // SAFETY: disjoint span, see above.
+            unsafe {
+                let slot = outp.add(ni);
+                *slot = (*slot).acc_sub(corr);
+            }
+        }
+        sink.region(RegionAcc { ptr: outp, n, _life: std::marker::PhantomData }, 0, 1, n0, n1);
     }
 }
 
@@ -1213,6 +1431,72 @@ impl TileKernel for Lut16Tile {
                 }
                 sums[i][j] = s as i32;
             }
+        }
+    }
+
+    #[allow(unused_variables)]
+    fn gemv(
+        &self,
+        ar: &[u8],
+        wf: &[&[u8]; NR],
+        vals: usize,
+        nt: usize,
+        isa: Isa,
+        kc: usize,
+        a_scratch: &mut [u8],
+        w_scratch: &[u8],
+        sums: &mut [i32; NR],
+    ) {
+        let lut = &self.lut;
+        // Same raw-biased-sum convention as `tile`; at M = 1 the 4×4
+        // arms are the wrong shape, so dispatch straight to the 1×4 /
+        // 1×1 row kernels (exactly what `tile` runs at `mt == 1`).
+        #[cfg(target_arch = "x86_64")]
+        if isa.vectorized() {
+            // SAFETY: the driver only passes host-supported arms; all
+            // row fragments cover exactly `vals` values in their
+            // layouts.
+            unsafe {
+                if nt == NR && self.tile4_ok {
+                    let s = match self.scheme {
+                        Scheme::A | Scheme::B => {
+                            lut16::avx2::dot4_dense(ar, [wf[0], wf[1], wf[2], wf[3]], lut, vals)
+                        }
+                        Scheme::C => {
+                            lut16::avx2::dot4_scheme_c(ar, [wf[0], wf[1], wf[2], wf[3]], lut, vals)
+                        }
+                        Scheme::D => {
+                            lut16::avx2::dot4_scheme_d(ar, [wf[0], wf[1], wf[2], wf[3]], lut, vals)
+                        }
+                    };
+                    for (j, sum) in sums.iter_mut().enumerate() {
+                        *sum = s[j] as i32;
+                    }
+                } else {
+                    for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+                        let s = match self.scheme {
+                            Scheme::A => lut16::avx2::dot_scheme_a(ar, wf[j], lut, vals),
+                            Scheme::B => lut16::avx2::dot_scheme_b(ar, wf[j], lut, vals),
+                            Scheme::C => lut16::avx2::dot_scheme_c(ar, wf[j], lut, vals),
+                            Scheme::D => lut16::avx2::dot_scheme_d(ar, wf[j], lut, vals),
+                        };
+                        *sum = s as i32;
+                    }
+                }
+            }
+            return;
+        }
+        // Scalar: the panel was staged by `prep_panel`; decode only the
+        // single activation row.
+        let a_layout = self.scheme.a_layout();
+        unpack_row(ar, vals, a_layout, &mut a_scratch[..vals]);
+        for (j, sum) in sums.iter_mut().enumerate().take(nt) {
+            let wrow = &w_scratch[j * kc..j * kc + vals];
+            let mut s = 0i64;
+            for (wc, ac) in wrow.iter().zip(a_scratch[..vals].iter()) {
+                s += lut.table[lut_index(*wc, *ac, 2)] as i64;
+            }
+            *sum = s as i32;
         }
     }
 
@@ -1452,6 +1736,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn gemv_path_matches_tiled_oracle_and_counts() {
+        // The M = 1 fast path must be bit-identical to the same plan
+        // forced down the register-tiled grid driver, for every scheme,
+        // odd/padded K, multi-panel N and every thread count (threads
+        // only change N-block ownership, never per-column order).
+        let gemv_before = gemv_executes();
+        let tiled_before = tiled_executes();
+        let mut runs = 0u64;
+        for scheme in Scheme::ALL {
+            for &(n, k) in &[(1usize, 1usize), (3, 63), (9, 129), (17, 257)] {
+                for &threads in &[1usize, 4] {
+                    for &force_scalar in &[false, true] {
+                        let w_cb = IntCodebook::signed(2);
+                        let a_cb = IntCodebook::unsigned(2);
+                        let a = CodeMat::random(1, k, 2, 77 + k as u64);
+                        let w = CodeMat::random(n, k, 2, 78 + n as u64);
+                        let lut = Lut16::build(&w_cb, &a_cb);
+                        let ap = pack_activations(&a, scheme);
+                        let wp = pack_weights(&w, scheme);
+                        let opts = PlanOpts {
+                            shape: tiny_shape(),
+                            threads,
+                            force_scalar,
+                            ..Default::default()
+                        };
+                        let fast = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut.clone()), opts);
+                        let slow = GemmPlan::new(
+                            &wp,
+                            Lut16Tile::new(scheme, lut.clone()),
+                            PlanOpts { gemv: false, ..opts },
+                        );
+                        let mut got = vec![0i32; n];
+                        let mut want = vec![0i32; n];
+                        fast.execute(&ap, &mut got);
+                        slow.execute(&ap, &mut want);
+                        runs += 1;
+                        assert_eq!(
+                            got, want,
+                            "scheme {scheme:?} n={n} k={k} threads={threads} \
+                             force_scalar={force_scalar}"
+                        );
+                    }
+                }
+            }
+        }
+        // Counters are process-wide (other tests may bump them
+        // concurrently), so assert a floor, not an exact delta.
+        assert!(gemv_executes() - gemv_before >= runs, "GEMV path not taken at M = 1");
+        assert!(tiled_executes() - tiled_before >= runs, "gemv: false did not take the tiled path");
     }
 
     #[test]

@@ -22,12 +22,16 @@ pub enum Op {
         pad: usize,
     },
     GlobalAvgPool,
-    /// Fully connected [out_f × in_f] (+ bias).
+    /// Fully connected [out_f × in_f] (+ bias). `quant: true` routes the
+    /// layer through the quantized pack→LUT pipeline as a 1×1-conv GEMM
+    /// (per-image M = 1 — the autoregressive-decode shape the GEMV row
+    /// path serves); `false` keeps the batched fp32 GEMM.
     Fc {
         in_f: usize,
         out_f: usize,
         weights: Vec<f32>,
         bias: Vec<f32>,
+        quant: bool,
     },
     /// Elementwise add of two inputs (+ optional fused ReLU).
     Add {
@@ -36,6 +40,33 @@ pub enum Op {
     Relu,
     /// Channel concat of ≥2 inputs.
     Concat,
+    /// Layer normalization over the flattened per-image vector:
+    /// `(x - mean) / sqrt(var + eps) * gamma + beta`, with `gamma`/
+    /// `beta` of length `dim`.
+    LayerNorm {
+        dim: usize,
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+        eps: f32,
+    },
+    /// Numerically-stable softmax over the flattened per-image vector.
+    Softmax,
+    /// Single-token multi-head self-attention against a persistent
+    /// KV cache. Inputs are `[q, k, v]`, each a flat
+    /// `heads * head_dim` vector for the *current* decode position; the
+    /// executor appends k/v to the node's KV-cache arena slot (sized
+    /// `max_seq × heads × head_dim` at compile time, one slot pair per
+    /// attention node), computes `softmax(q·Kᵀ/√head_dim)·V` over
+    /// positions `0..=pos`, and advances `pos` once per
+    /// `forward_batch` call. The stateless fp32 reference treats every
+    /// call as position 0 (softmax over one score is 1, so the output
+    /// equals `v`) — enough for calibration; decode semantics are
+    /// covered by the engine's differential tests.
+    Attention {
+        heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+    },
 }
 
 impl Op {
@@ -48,6 +79,9 @@ impl Op {
             Op::Add { .. } => "add",
             Op::Relu => "relu",
             Op::Concat => "concat",
+            Op::LayerNorm { .. } => "layernorm",
+            Op::Softmax => "softmax",
+            Op::Attention { .. } => "attention",
         }
     }
 }
@@ -137,6 +171,7 @@ impl Graph {
             let arity_ok = match n.op {
                 Op::Add { .. } => n.inputs.len() == 2,
                 Op::Concat => n.inputs.len() >= 2,
+                Op::Attention { .. } => n.inputs.len() == 3,
                 _ => n.inputs.len() == 1,
             };
             if !arity_ok {
@@ -213,6 +248,41 @@ impl Graph {
                     a
                 }
                 Op::Relu => get(n.inputs[0])?.clone(),
+                Op::LayerNorm { dim, gamma, beta, .. } => {
+                    let s = get(n.inputs[0])?.clone();
+                    let flat: usize = s.iter().product();
+                    if flat != *dim || gamma.len() != *dim || beta.len() != *dim {
+                        return Err(crate::Error::Shape(format!(
+                            "node {} ({}): layernorm dim {dim} vs tensor {flat} \
+                             (gamma {}, beta {})",
+                            i,
+                            n.name,
+                            gamma.len(),
+                            beta.len()
+                        )));
+                    }
+                    s
+                }
+                Op::Softmax => get(n.inputs[0])?.clone(),
+                Op::Attention { heads, head_dim, max_seq } => {
+                    let d = heads * head_dim;
+                    if *max_seq == 0 || d == 0 {
+                        return Err(crate::Error::Shape(format!(
+                            "node {} ({}): attention needs heads·head_dim > 0 and max_seq > 0",
+                            i, n.name
+                        )));
+                    }
+                    for &inp in &n.inputs {
+                        let flat: usize = get(inp)?.iter().product();
+                        if flat != d {
+                            return Err(crate::Error::Shape(format!(
+                                "node {} ({}): attention expects q/k/v of {d} elems, got {flat}",
+                                i, n.name
+                            )));
+                        }
+                    }
+                    vec![1, d]
+                }
                 Op::Concat => {
                     let first = get(n.inputs[0])?.clone();
                     let mut c_total = 0usize;
@@ -255,6 +325,55 @@ impl Graph {
     }
 }
 
+/// Numerically-stable in-place softmax over one row (max-subtract →
+/// exp → normalize). Shared by the fp32 reference and the compiled
+/// executor so both paths are bit-identical, and unit-tested against an
+/// f64 naive reference (all-equal logits, large-negative rows,
+/// single-element rows).
+pub fn softmax_row(row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
+    let mut max = f32::MIN;
+    for &v in row.iter() {
+        max = max.max(v);
+    }
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Layer normalization of one row into `out`:
+/// `(x - mean) / sqrt(var + eps) * gamma + beta` with population
+/// variance. Shared by the fp32 reference and the compiled executor
+/// (bit-identical paths); unit-tested against an f64 naive reference.
+pub fn layer_norm_row(x: &[f32], gamma: &[f32], beta: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n > 0 && gamma.len() == n && beta.len() == n && out.len() == n);
+    let inv_n = 1.0 / n as f32;
+    let mut mean = 0f32;
+    for &v in x {
+        mean += v;
+    }
+    mean *= inv_n;
+    let mut var = 0f32;
+    for &v in x {
+        let d = v - mean;
+        var += d * d;
+    }
+    var *= inv_n;
+    let inv_std = 1.0 / (var + eps).sqrt();
+    for i in 0..n {
+        out[i] = (x[i] - mean) * inv_std * gamma[i] + beta[i];
+    }
+}
+
 /// Reference FP32 forward pass (single image) — the semantic oracle that
 /// the quantized engines are compared against in integration tests.
 pub fn forward_fp32(g: &Graph, x: &Tensor) -> crate::Result<Tensor> {
@@ -288,7 +407,7 @@ pub fn forward_fp32_all(g: &Graph, x: &Tensor) -> crate::Result<Vec<Tensor>> {
             }
             Op::MaxPool { k, stride, pad } => get(n.inputs[0]).max_pool(*k, *stride, *pad),
             Op::GlobalAvgPool => get(n.inputs[0]).global_avg_pool(),
-            Op::Fc { in_f, out_f, weights, bias } => {
+            Op::Fc { in_f, out_f, weights, bias, .. } => {
                 let xin = get(n.inputs[0]);
                 let mut y = Tensor::zeros(&[1, *out_f]);
                 for o in 0..*out_f {
@@ -309,6 +428,25 @@ pub fn forward_fp32_all(g: &Graph, x: &Tensor) -> crate::Result<Vec<Tensor>> {
                 }
             }
             Op::Relu => get(n.inputs[0]).map(|v| v.max(0.0)),
+            Op::LayerNorm { gamma, beta, eps, .. } => {
+                let xin = get(n.inputs[0]);
+                let mut y = Tensor::zeros(&xin.shape);
+                layer_norm_row(&xin.data, gamma, beta, *eps, &mut y.data);
+                y
+            }
+            Op::Softmax => {
+                let mut y = get(n.inputs[0]).clone();
+                softmax_row(&mut y.data);
+                y
+            }
+            Op::Attention { heads, head_dim, .. } => {
+                // Stateless position-0 reference: a one-position KV
+                // cache makes the softmax weight exactly 1, so the
+                // attention output equals v. Calibration only needs
+                // value ranges; decode semantics live in the engine.
+                let v = get(n.inputs[2]);
+                Tensor::from_vec(&[1, heads * head_dim], v.data.clone())
+            }
             Op::Concat => {
                 let parts: Vec<&Tensor> = n.inputs.iter().map(|&i| get(i)).collect();
                 Tensor::concat_channels(&parts)
@@ -334,7 +472,7 @@ mod tests {
         rng.fill_normal(&mut wfc, 0.5);
         g.push(
             "fc",
-            Op::Fc { in_f: 4, out_f: 2, weights: wfc, bias: vec![0.0; 2] },
+            Op::Fc { in_f: 4, out_f: 2, weights: wfc, bias: vec![0.0; 2], quant: false },
             vec![gap],
         );
         g
@@ -373,5 +511,132 @@ mod tests {
         assert_eq!(inv.len(), 2);
         assert_eq!(inv[0].2, 8);
         assert_eq!(inv[1].3, 8);
+    }
+
+    /// f64 reference softmax (stable form — the mathematically exact
+    /// result up to f64 rounding).
+    fn softmax_f64(xs: &[f32]) -> Vec<f64> {
+        let max = xs.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v as f64));
+        let exps: Vec<f64> = xs.iter().map(|&v| (v as f64 - max).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        exps.iter().map(|e| e / sum).collect()
+    }
+
+    /// f64 reference layer norm (population variance).
+    fn layer_norm_f64(xs: &[f32], gamma: &[f32], beta: &[f32], eps: f32) -> Vec<f64> {
+        let n = xs.len() as f64;
+        let mean: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            xs.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / n;
+        let inv_std = 1.0 / (var + eps as f64).sqrt();
+        xs.iter()
+            .enumerate()
+            .map(|(i, &v)| (v as f64 - mean) * inv_std * gamma[i] as f64 + beta[i] as f64)
+            .collect()
+    }
+
+    fn assert_close_f64(got: &[f32], want: &[f64], tol: f64, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g as f64 - w).abs() <= tol * (1.0 + w.abs()),
+                "{what}: element {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_matches_f64_reference() {
+        let cases: Vec<Vec<f32>> = vec![
+            vec![0.5],                              // single element → exactly 1
+            vec![3.0, 3.0, 3.0, 3.0],               // all-equal → uniform
+            vec![-1.0e4, -1.0e4 + 1.0, -1.0e4 - 2.0], // large-negative row
+            vec![1.0, -2.5, 0.25, 7.5, -0.125],
+            vec![88.0, 87.0, -90.0],                // near f32 exp overflow pre-shift
+        ];
+        for xs in &cases {
+            let mut got = xs.clone();
+            softmax_row(&mut got);
+            let want = softmax_f64(xs);
+            assert_close_f64(&got, &want, 1e-5, &format!("softmax {xs:?}"));
+            let sum: f32 = got.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax rows must sum to 1, got {sum}");
+        }
+        let mut one = vec![-123.0f32];
+        softmax_row(&mut one);
+        assert_eq!(one, vec![1.0], "single-element softmax is exactly one");
+        let mut empty: Vec<f32> = vec![];
+        softmax_row(&mut empty); // must not panic
+    }
+
+    #[test]
+    fn layer_norm_matches_f64_reference() {
+        let eps = 1e-5f32;
+        let cases: Vec<Vec<f32>> = vec![
+            vec![4.25],                      // single element → beta exactly
+            vec![2.0, 2.0, 2.0],             // all-equal → zero-centred, var 0
+            vec![-1.0e4, -1.0e4 + 3.0, -1.0e4 - 3.0], // large-negative row
+            vec![0.1, -0.7, 1.3, 2.9, -3.3, 0.0],
+        ];
+        for xs in &cases {
+            let n = xs.len();
+            let gamma: Vec<f32> = (0..n).map(|i| 0.5 + 0.25 * i as f32).collect();
+            let beta: Vec<f32> = (0..n).map(|i| -0.25 + 0.125 * i as f32).collect();
+            let mut got = vec![0f32; n];
+            layer_norm_row(xs, &gamma, &beta, eps, &mut got);
+            let want = layer_norm_f64(xs, &gamma, &beta, eps);
+            assert_close_f64(&got, &want, 1e-4, &format!("layernorm {xs:?}"));
+        }
+        // Single element: x - mean = 0, so the output is exactly beta.
+        let mut got = vec![0f32];
+        layer_norm_row(&[7.5], &[2.0], &[0.625], eps, &mut got);
+        assert_eq!(got, vec![0.625]);
+    }
+
+    #[test]
+    fn transformer_ops_validate_and_infer() {
+        let mut g = Graph::new("attn", (8, 1, 1));
+        let mut rng = Rng::new(2);
+        let mut w = vec![0f32; 8 * 8];
+        rng.fill_normal(&mut w, 0.3);
+        let q = g.push(
+            "q",
+            Op::Fc { in_f: 8, out_f: 8, weights: w.clone(), bias: vec![0.0; 8], quant: true },
+            vec![Graph::INPUT],
+        );
+        let k = g.push(
+            "k",
+            Op::Fc { in_f: 8, out_f: 8, weights: w.clone(), bias: vec![0.0; 8], quant: true },
+            vec![Graph::INPUT],
+        );
+        let v = g.push(
+            "v",
+            Op::Fc { in_f: 8, out_f: 8, weights: w, bias: vec![0.0; 8], quant: true },
+            vec![Graph::INPUT],
+        );
+        let a = g.push(
+            "attn",
+            Op::Attention { heads: 2, head_dim: 4, max_seq: 16 },
+            vec![q, k, v],
+        );
+        let ln = g.push(
+            "ln",
+            Op::LayerNorm { dim: 8, gamma: vec![1.0; 8], beta: vec![0.0; 8], eps: 1e-5 },
+            vec![a],
+        );
+        g.push("sm", Op::Softmax, vec![ln]);
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[a], vec![1, 8]);
+        assert_eq!(shapes[ln], vec![1, 8]);
+        let x = Tensor::random(&[1, 8, 1, 1], 3, -1.0, 1.0);
+        let y = forward_fp32(&g, &x).unwrap();
+        assert_eq!(y.shape, vec![1, 8]);
+        let sum: f32 = y.data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "softmax output must normalize");
+        // Wrong-arity attention is rejected.
+        let mut bad = Graph::new("bad", (8, 1, 1));
+        bad.push("a", Op::Attention { heads: 2, head_dim: 4, max_seq: 4 }, vec![Graph::INPUT]);
+        assert!(bad.validate().is_err());
     }
 }

@@ -34,6 +34,9 @@ pub fn build(name: &str, num_classes: usize, seed: u64) -> crate::Result<Graph> 
         "googlenet" => googlenet(num_classes, &mut rng),
         "inception_v3" => inception_v3(num_classes, &mut rng),
         "vgg16" => vgg16(num_classes, &mut rng),
+        // Decode workload (not in MODELS — it has no conv inventory):
+        // num_classes doubles as the vocab size.
+        "tiny_transformer" => tiny_transformer(num_classes, &mut rng),
         other => return Err(crate::Error::Config(format!("unknown model '{other}'"))),
     };
     g.validate()?;
@@ -93,7 +96,66 @@ fn fc(g: &mut Graph, name: &str, in_f: usize, out_f: usize, input: usize, rng: &
     let mut w = vec![0f32; in_f * out_f];
     rng.fill_normal(&mut w, (1.0 / in_f as f32).sqrt());
     let bias = vec![0f32; out_f];
-    g.push(name, Op::Fc { in_f, out_f, weights: w, bias }, vec![input])
+    g.push(name, Op::Fc { in_f, out_f, weights: w, bias, quant: false }, vec![input])
+}
+
+/// A quantized FC: routed through the backend's pack→LUT pipeline as a
+/// 1×1-conv GEMM (per-image M = 1 — the GEMV decode shape).
+fn qfc(g: &mut Graph, name: &str, in_f: usize, out_f: usize, input: usize, rng: &mut Rng) -> usize {
+    let mut w = vec![0f32; in_f * out_f];
+    rng.fill_normal(&mut w, (1.0 / in_f as f32).sqrt());
+    let mut bias = vec![0f32; out_f];
+    rng.fill_f32(&mut bias, -0.02, 0.02);
+    g.push(name, Op::Fc { in_f, out_f, weights: w, bias, quant: true }, vec![input])
+}
+
+fn layer_norm(g: &mut Graph, name: &str, dim: usize, input: usize, rng: &mut Rng) -> usize {
+    let mut gamma = vec![0f32; dim];
+    rng.fill_f32(&mut gamma, 0.8, 1.2);
+    let mut beta = vec![0f32; dim];
+    rng.fill_f32(&mut beta, -0.05, 0.05);
+    g.push(name, Op::LayerNorm { dim, gamma, beta, eps: 1e-5 }, vec![input])
+}
+
+/// `tiny_transformer` geometry: (d_model, heads, head_dim, ffn width,
+/// layers, max decode positions). d_model = heads · head_dim.
+pub const TINY_TRANSFORMER_DIMS: (usize, usize, usize, usize, usize, usize) =
+    (32, 4, 8, 64, 2, 64);
+
+/// Tiny 2-layer pre-norm decoder-only transformer for the
+/// autoregressive-decode workload: per step the graph input is one
+/// token's `d_model` embedding, every projection (q/k/v/out and the
+/// FFN) is a *quantized* FC running the pack→LUT pipeline at per-image
+/// M = 1 (the GEMV row path), attention keeps a per-node KV cache in
+/// the arena (capacity `max_seq` positions), and a final fp32 FC
+/// produces `vocab` logits. See `docs/TRANSFORMER.md`.
+pub fn tiny_transformer(vocab: usize, rng: &mut Rng) -> Graph {
+    let (d, heads, head_dim, ffn, layers, max_seq) = TINY_TRANSFORMER_DIMS;
+    let mut g = Graph::new("tiny_transformer", (d, 1, 1));
+    // Input projection: maps the [1, d, 1, 1] input into a flat [1, d]
+    // node so residual adds compare identical shapes downstream.
+    let mut cur = qfc(&mut g, "embed", d, d, Graph::INPUT, rng);
+    for l in 0..layers {
+        let ln1 = layer_norm(&mut g, &format!("l{l}.ln1"), d, cur, rng);
+        let q = qfc(&mut g, &format!("l{l}.q"), d, d, ln1, rng);
+        let k = qfc(&mut g, &format!("l{l}.k"), d, d, ln1, rng);
+        let v = qfc(&mut g, &format!("l{l}.v"), d, d, ln1, rng);
+        let attn = g.push(
+            format!("l{l}.attn"),
+            Op::Attention { heads, head_dim, max_seq },
+            vec![q, k, v],
+        );
+        let proj = qfc(&mut g, &format!("l{l}.proj"), d, d, attn, rng);
+        let res1 = g.push(format!("l{l}.add1"), Op::Add { relu: false }, vec![cur, proj]);
+        let ln2 = layer_norm(&mut g, &format!("l{l}.ln2"), d, res1, rng);
+        let ff1 = qfc(&mut g, &format!("l{l}.ff1"), d, ffn, ln2, rng);
+        let act = g.push(format!("l{l}.act"), Op::Relu, vec![ff1]);
+        let ff2 = qfc(&mut g, &format!("l{l}.ff2"), ffn, d, act, rng);
+        cur = g.push(format!("l{l}.add2"), Op::Add { relu: false }, vec![res1, ff2]);
+    }
+    let lnf = layer_norm(&mut g, "ln_f", d, cur, rng);
+    fc(&mut g, "logits", d, vocab, lnf, rng);
+    g
 }
 
 /// MobileNetV1 (1.0×, 224) — depthwise-separable stacks.
@@ -425,5 +487,29 @@ mod tests {
     #[test]
     fn unknown_model_rejected() {
         assert!(build("resnet99", 10, 0).is_err());
+    }
+
+    #[test]
+    fn tiny_transformer_validates_and_infers() {
+        let (d, heads, head_dim, _, layers, _) = TINY_TRANSFORMER_DIMS;
+        assert_eq!(d, heads * head_dim);
+        let g = build("tiny_transformer", 96, 1).unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output], vec![1, 96], "logits over the vocab");
+        let attn = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Attention { .. }))
+            .count();
+        assert_eq!(attn, layers, "one attention node per layer");
+        let quant_fcs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Fc { quant: true, .. }))
+            .count();
+        // embed + per-layer (q, k, v, proj, ff1, ff2).
+        assert_eq!(quant_fcs, 1 + 6 * layers);
+        assert_eq!(g.conv_count(), 0, "the decode workload is FC/attention only");
+        assert!(g.conv_params() > 0, "FC weights count as parameters");
     }
 }

@@ -1,0 +1,269 @@
+//! Autoregressive-decode differential suite for the KV-cached
+//! transformer path: incremental decode on a reused [`ExecCtx`] must be
+//! bit-identical to a full-prefill recompute (fresh context, replay
+//! every token from position 0) at *every* step, across batch sizes and
+//! worker-thread counts — and the KV cache must stay consistent through
+//! injected mid-decode faults (the chaos cases, behind the `failpoints`
+//! feature).
+//!
+//! The model is `zoo::tiny_transformer`: every projection is a
+//! quantized FC running the pack→LUT pipeline at per-image M = 1, so a
+//! batch-1 decode step is also the end-to-end proof that the GEMV row
+//! path produces the same numbers the tiled grid driver would (the
+//! kernel-level sweep lives in `tests/isa_diff.rs`).
+
+use deepgemm::engine::{CompiledModel, ExecCtx};
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::{tile, Backend};
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::profiling::StageProfile;
+
+const VOCAB: usize = 16;
+
+fn d_model() -> usize {
+    zoo::TINY_TRANSFORMER_DIMS.0
+}
+
+fn seq_capacity() -> usize {
+    zoo::TINY_TRANSFORMER_DIMS.5
+}
+
+/// Deterministic per-(step, image) token embedding, so every context
+/// and every replay sees identical inputs.
+fn token(t: usize, bi: usize) -> Tensor {
+    let d = d_model();
+    let seed = ((t as u64) << 16) ^ (bi as u64) ^ 0xD0_C0DE;
+    Tensor::random(&[1, d, 1, 1], seed, -1.0, 1.0)
+}
+
+fn step_inputs(t: usize, bsz: usize) -> Vec<Tensor> {
+    (0..bsz).map(|bi| token(t, bi)).collect()
+}
+
+fn compile(backend: Backend) -> CompiledModel {
+    let g = zoo::build("tiny_transformer", VOCAB, 11).unwrap();
+    let calib: Vec<Tensor> = (0..2).map(|i| token(i, 0)).collect();
+    CompiledModel::compile(g, backend, &calib).unwrap()
+}
+
+/// Decode `steps` tokens on `ctx`, returning per-step per-image logits.
+fn decode_on(
+    model: &CompiledModel,
+    ctx: &mut ExecCtx,
+    steps: usize,
+    bsz: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut prof = StageProfile::new();
+    let mut outs = Vec::with_capacity(steps);
+    for t in 0..steps {
+        let xs = step_inputs(t, bsz);
+        let ys = model.forward_batch_with(&xs, ctx, &mut prof).unwrap();
+        assert_eq!(ctx.pos(), t + 1, "pos must advance once per committed step");
+        outs.push(ys.into_iter().map(|y| y.data).collect());
+    }
+    outs
+}
+
+/// Decode `steps` tokens on a fresh context — the full-prefill
+/// recompute oracle.
+fn decode_fresh(model: &CompiledModel, steps: usize, bsz: usize) -> Vec<Vec<Vec<f32>>> {
+    let mut ctx = model.new_ctx();
+    decode_on(model, &mut ctx, steps, bsz)
+}
+
+#[test]
+fn incremental_decode_matches_full_recompute() {
+    // One incremental pass per (backend, batch, threads) combo, checked
+    // at every step against a fresh-context replay of the whole prefix:
+    // the KV cache built token by token must reproduce exactly what a
+    // from-scratch recompute of positions 0..=t yields. The thread
+    // sweep lives inside the one test because the worker count is a
+    // process-wide knob.
+    const STEPS: usize = 5;
+    for backend in [Backend::Lut16(Scheme::D), Backend::Int8, Backend::Fp32] {
+        let model = compile(backend);
+        for &bsz in &[1usize, 3] {
+            for &threads in &[1usize, 2, 4] {
+                tile::set_default_threads(threads);
+                let gemv_before = tile::gemv_executes();
+                let mut ctx = model.new_ctx();
+                let incr = decode_on(&model, &mut ctx, STEPS, bsz);
+                if bsz == 1 && backend != Backend::Fp32 {
+                    assert!(
+                        tile::gemv_executes() > gemv_before,
+                        "{}: batch-1 decode never took the GEMV row path",
+                        backend.name()
+                    );
+                }
+                for t in 0..STEPS {
+                    let replay = decode_fresh(&model, t + 1, bsz);
+                    assert_eq!(
+                        replay[t],
+                        incr[t],
+                        "{} bsz={bsz} threads={threads}: step {t} diverges from \
+                         full-prefill recompute",
+                        backend.name()
+                    );
+                }
+                for row in incr.iter().flatten() {
+                    assert!(row.iter().all(|v| v.is_finite()));
+                }
+            }
+        }
+    }
+    tile::set_default_threads(0);
+}
+
+#[test]
+fn gemv_decode_matches_forced_tiled_decode() {
+    // End-to-end row-path oracle: the same compiled model decoding with
+    // the GEMV path enabled vs forced through the register-tiled grid
+    // driver must produce bit-identical logits (integer backends only —
+    // the f32-entry LUT regroups its reduction across paths).
+    for backend in
+        [Backend::Lut16(Scheme::D), Backend::Int8, Backend::Lut65k, Backend::LutWide(4)]
+    {
+        let mut model = compile(backend);
+        let gemv_before = tile::gemv_executes();
+        let fast = decode_fresh(&model, 4, 1);
+        assert!(
+            tile::gemv_executes() > gemv_before,
+            "{}: decode never took the GEMV path",
+            backend.name()
+        );
+        model.set_gemv(false);
+        let tiled_before = tile::tiled_executes();
+        let tiled = decode_fresh(&model, 4, 1);
+        assert!(
+            tile::tiled_executes() > tiled_before,
+            "{}: set_gemv(false) did not force the tiled driver",
+            backend.name()
+        );
+        assert_eq!(
+            fast,
+            tiled,
+            "{}: GEMV decode diverges from the forced-tiled oracle",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn reset_decode_reuses_context_for_a_new_sequence() {
+    let model = compile(Backend::Lut16(Scheme::D));
+    let mut ctx = model.new_ctx();
+    let first = decode_on(&model, &mut ctx, 4, 1);
+    ctx.reset_decode();
+    assert_eq!(ctx.pos(), 0);
+    // Same inputs after reset → bit-identical logits: stale KV rows
+    // beyond the rewound position are never read.
+    let second = decode_on(&model, &mut ctx, 4, 1);
+    assert_eq!(first, second);
+}
+
+#[test]
+fn kv_cache_full_and_batch_change_are_rejected() {
+    // Fp32 keeps the 64-step fill cheap; the KV plumbing under test is
+    // backend-independent.
+    let model = compile(Backend::Fp32);
+    let mut ctx = model.new_ctx();
+    let cap = seq_capacity();
+    let mut prof = StageProfile::new();
+    for t in 0..cap {
+        model.forward_batch_with(&step_inputs(t, 1), &mut ctx, &mut prof).unwrap();
+    }
+    assert_eq!(ctx.pos(), cap);
+    let err = model
+        .forward_batch_with(&step_inputs(cap, 1), &mut ctx, &mut prof)
+        .unwrap_err();
+    assert!(err.to_string().contains("KV cache full"), "{err}");
+    assert_eq!(ctx.pos(), cap, "a rejected step must not advance pos");
+
+    // Changing the batch size mid-sequence is rejected; a reset starts
+    // a new sequence at the new size.
+    let mut ctx = model.new_ctx();
+    model.forward_batch_with(&step_inputs(0, 1), &mut ctx, &mut prof).unwrap();
+    let err = model
+        .forward_batch_with(&step_inputs(1, 3), &mut ctx, &mut prof)
+        .unwrap_err();
+    assert!(err.to_string().contains("batch changed mid-sequence"), "{err}");
+    assert_eq!(ctx.pos(), 1);
+    ctx.reset_decode();
+    model.forward_batch_with(&step_inputs(0, 3), &mut ctx, &mut prof).unwrap();
+    assert_eq!(ctx.pos(), 1);
+}
+
+#[test]
+fn non_attention_graphs_are_unaffected_by_decode_state() {
+    // A plain CNN has no KV slots: pos stays 0 over repeated runs and
+    // reset_decode is a no-op.
+    let mut rng = deepgemm::util::rng::Rng::new(3);
+    let g = zoo::small_cnn(5, &mut rng);
+    let x = Tensor::random(&[1, 3, 32, 32], 4, -1.0, 1.0);
+    let model =
+        CompiledModel::compile(g, Backend::Lut16(Scheme::D), std::slice::from_ref(&x)).unwrap();
+    let mut ctx = model.new_ctx();
+    let mut prof = StageProfile::new();
+    for _ in 0..3 {
+        model.forward_batch_with(std::slice::from_ref(&x), &mut ctx, &mut prof).unwrap();
+    }
+    assert_eq!(ctx.pos(), 0);
+    ctx.reset_decode();
+    assert_eq!(ctx.pos(), 0);
+}
+
+/// Chaos cases: a fault injected mid-decode (after the step's KV rows
+/// were appended, before the attention compute — the worst spot) must
+/// leave the cache consistent. `ctx.pos` is the commit point: the
+/// failed step never advances it, so both a same-context retry and a
+/// worker-respawn replay reconverge bit-identically.
+#[cfg(feature = "failpoints")]
+#[test]
+fn decode_survives_injected_faults_mid_decode() {
+    use deepgemm::util::failpoint::{arm_times, disarm_all, FailAction};
+
+    const STEPS: usize = 6;
+    let model = compile(Backend::Lut16(Scheme::D));
+    let clean = decode_fresh(&model, STEPS, 1);
+    let mut prof = StageProfile::new();
+
+    // Case A: typed error mid-step → retry on the SAME context. The
+    // partial KV append is overwritten by the retry (writes at a fixed
+    // pos are idempotent) and every logit matches the clean run.
+    let mut ctx = model.new_ctx();
+    let mut outs = Vec::new();
+    for t in 0..STEPS {
+        if t == 3 {
+            arm_times("decode_attn", FailAction::Err("injected".into()), 1);
+        }
+        let xs = step_inputs(t, 1);
+        let ys = match model.forward_batch_with(&xs, &mut ctx, &mut prof) {
+            Ok(ys) => ys,
+            Err(e) => {
+                assert!(e.to_string().contains("decode_attn"), "{e}");
+                assert_eq!(ctx.pos(), t, "failed step must not commit");
+                model.forward_batch_with(&xs, &mut ctx, &mut prof).unwrap()
+            }
+        };
+        assert_eq!(ctx.pos(), t + 1);
+        outs.push(ys.into_iter().map(|y| y.data).collect::<Vec<_>>());
+    }
+    assert_eq!(outs, clean, "error-and-retry decode diverged from the clean run");
+
+    // Case B: worker death (panic) mid-step. The supervisor respawns
+    // the worker with a fresh context and replays the sequence — the
+    // replay must be bit-identical to the clean run.
+    let mut ctx = model.new_ctx();
+    for t in 0..3 {
+        model.forward_batch_with(&step_inputs(t, 1), &mut ctx, &mut prof).unwrap();
+    }
+    arm_times("decode_attn", FailAction::Panic, 1);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut p = StageProfile::new();
+        let _ = model.forward_batch_with(&step_inputs(3, 1), &mut ctx, &mut p);
+    }));
+    assert!(r.is_err(), "armed panic failpoint must fire");
+    let replay = decode_fresh(&model, STEPS, 1);
+    assert_eq!(replay, clean, "post-respawn replay diverged from the clean run");
+    disarm_all();
+}

@@ -29,7 +29,11 @@ fn mini_resnet(seed: u64) -> Graph {
     let gap = g.push("gap", Op::GlobalAvgPool, vec![add2]);
     let mut wfc = vec![0f32; 32 * 5];
     rng.fill_normal(&mut wfc, 0.2);
-    g.push("fc", Op::Fc { in_f: 32, out_f: 5, weights: wfc, bias: vec![0.0; 5] }, vec![gap]);
+    g.push(
+        "fc",
+        Op::Fc { in_f: 32, out_f: 5, weights: wfc, bias: vec![0.0; 5], quant: false },
+        vec![gap],
+    );
     g
 }
 

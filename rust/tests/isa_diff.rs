@@ -45,8 +45,20 @@ fn opts(threads: usize, isa: Isa) -> PlanOpts {
     PlanOpts { threads, isa: Some(isa), ..Default::default() }
 }
 
+/// [`opts`] with the M=1 GEMV row path explicitly enabled/disabled —
+/// `gemv: false` at M = 1 is the forced-tiled oracle the row path is
+/// differentially checked against.
+fn opts_gemv(threads: usize, isa: Isa, gemv: bool) -> PlanOpts {
+    PlanOpts { threads, isa: Some(isa), gemv, ..Default::default() }
+}
+
 fn run_lut16(scheme: Scheme, m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    run_lut16_opts(scheme, m, n, k, opts(t, isa))
+}
+
+fn run_lut16_opts(scheme: Scheme, m: usize, n: usize, k: usize, o: PlanOpts) -> Vec<i32> {
     let s = seed(m, n, k);
+    let isa = o.isa.expect("forced arm");
     let wcb = IntCodebook::signed(2);
     let acb = IntCodebook::unsigned(2);
     let a = CodeMat::random(m, k, 2, s);
@@ -54,7 +66,7 @@ fn run_lut16(scheme: Scheme, m: usize, n: usize, k: usize, t: usize, isa: Isa) -
     let lut = Lut16::build(&wcb, &acb);
     let ap = pack::pack_activations(&a, scheme);
     let wp = pack::pack_weights(&w, scheme);
-    let plan = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut), opts(t, isa));
+    let plan = GemmPlan::new(&wp, Lut16Tile::new(scheme, lut), o);
     assert_eq!(plan.resolve_isa(), isa, "supported forced arm must be honoured");
     let mut out = vec![0i32; m * n];
     plan.execute(&ap, &mut out);
@@ -62,6 +74,10 @@ fn run_lut16(scheme: Scheme, m: usize, n: usize, k: usize, t: usize, isa: Isa) -
 }
 
 fn run_wide(bits: u32, m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    run_wide_opts(bits, m, n, k, opts(t, isa))
+}
+
+fn run_wide_opts(bits: u32, m: usize, n: usize, k: usize, o: PlanOpts) -> Vec<i32> {
     let s = seed(m, n, k) ^ bits as u64;
     let wcb = IntCodebook::signed(bits);
     let acb = IntCodebook::unsigned(bits);
@@ -70,13 +86,17 @@ fn run_wide(bits: u32, m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<
     let lut = Lut16::build(&wcb, &acb);
     let ap = lut16_wide::pack_wide(&a);
     let wp = lut16_wide::pack_wide(&w);
-    let plan = GemmPlan::new(&wp, LutWideTile::new(lut), opts(t, isa));
+    let plan = GemmPlan::new(&wp, LutWideTile::new(lut), o);
     let mut out = vec![0i32; m * n];
     plan.execute(&ap, &mut out);
     out
 }
 
 fn run_lut65k(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    run_lut65k_opts(m, n, k, opts(t, isa))
+}
+
+fn run_lut65k_opts(m: usize, n: usize, k: usize, o: PlanOpts) -> Vec<i32> {
     let s = seed(m, n, k) ^ 0x65;
     let cb = IntCodebook::signed(2);
     let a = CodeMat::random(m, k, 2, s);
@@ -84,26 +104,34 @@ fn run_lut65k(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
     let lut = Arc::new(Lut65k::build(&cb, &cb));
     let ap = lut65k::pack_dense(&a);
     let wp = lut65k::pack_dense(&w);
-    let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), opts(t, isa));
+    let plan = GemmPlan::new(&wp, Lut65kTile::new(lut), o);
     let mut out = vec![0i32; m * n];
     plan.execute(&ap, &mut out);
     out
 }
 
 fn run_int8(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<i32> {
+    run_int8_opts(m, n, k, opts(t, isa))
+}
+
+fn run_int8_opts(m: usize, n: usize, k: usize, o: PlanOpts) -> Vec<i32> {
     let s = seed(m, n, k) ^ 0x18;
     let mut rng = Rng::new(s);
     let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
     let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
     let (wp, sums) = int8::pack_weights_i8(&wvals, n, k);
     let ap = pack::pack(&CodeMat::from_data(m, k, 8, acodes), Layout::Int8);
-    let plan = GemmPlan::new(&wp, Int8Tile::new(128, sums), opts(t, isa));
+    let plan = GemmPlan::new(&wp, Int8Tile::new(128, sums), o);
     let mut out = vec![0i32; m * n];
     plan.execute(&ap, &mut out);
     out
 }
 
 fn run_f32(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<f32> {
+    run_f32_opts(m, n, k, opts(t, isa))
+}
+
+fn run_f32_opts(m: usize, n: usize, k: usize, o: PlanOpts) -> Vec<f32> {
     let s = seed(m, n, k) ^ 0xF32;
     let wcb = F32Codebook::new(2, vec![-1.7, -0.45, 0.38, 1.55]);
     let acb = F32Codebook::new(2, vec![0.0, 0.31, 0.9, 2.2]);
@@ -112,7 +140,7 @@ fn run_f32(m: usize, n: usize, k: usize, t: usize, isa: Isa) -> Vec<f32> {
     let lut = Lut16F32::build(&wcb, &acb);
     let ap = pack::pack(&a, Layout::NibbleLo);
     let wp = pack::pack(&w, Layout::NibbleHi);
-    let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), opts(t, isa));
+    let plan = GemmPlan::new(&wp, Lut16F32Tile::new(lut), o);
     let mut out = vec![0f32; m * n];
     plan.execute(&ap, &mut out);
     out
@@ -230,6 +258,79 @@ fn remainder_shape_sweep_agrees_across_arms() {
             }
         }
     }
+}
+
+#[test]
+fn gemv_row_path_matches_forced_tiled_oracle_across_arms() {
+    // The M = 1 (autoregressive decode) row path: every backend, under
+    // every supported forced arm, with the GEMV fast path *enabled*
+    // must match the same plan with the fast path *disabled* (the tiled
+    // oracle, scalar arm) bit-for-bit — ulp-close for the f32-entry
+    // LUT. The axis covers sub-/exact-/over-tile N and K, plus K values
+    // straddling the 128-value bias-correction block boundary (63, 65,
+    // 257) so the hoisted padded-K correction is checked on the row
+    // path too.
+    let arms = supported_arms("gemv sweep");
+    let axis = [1usize, 3, 16, 63, 64, 65, 257];
+    let gemv_before = deepgemm::kernels::tile::gemv_executes();
+    for &n in &axis {
+        for &k in &axis {
+            // Forced-tiled oracles (gemv off, scalar arm); lut16-d's is
+            // additionally anchored to the code-level oracle.
+            let base_d = run_lut16_opts(Scheme::D, 1, n, k, opts_gemv(1, Isa::Scalar, false));
+            assert_eq!(base_d, lut16_oracle(1, n, k), "tiled oracle vs code oracle n={n} k={k}");
+            let base_s: Vec<Vec<i32>> = Scheme::ALL
+                .iter()
+                .map(|&s| run_lut16_opts(s, 1, n, k, opts_gemv(1, Isa::Scalar, false)))
+                .collect();
+            let base_w: Vec<Vec<i32>> = [3u32, 4]
+                .iter()
+                .map(|&b| run_wide_opts(b, 1, n, k, opts_gemv(1, Isa::Scalar, false)))
+                .collect();
+            let base_65k = run_lut65k_opts(1, n, k, opts_gemv(1, Isa::Scalar, false));
+            let base_i8 = run_int8_opts(1, n, k, opts_gemv(1, Isa::Scalar, false));
+            let base_f32 = run_f32_opts(1, n, k, opts_gemv(1, Isa::Scalar, false));
+            for &isa in &arms {
+                let what = format!("gemv n={n} k={k} isa={}", isa.name());
+                for (si, &scheme) in Scheme::ALL.iter().enumerate() {
+                    assert_eq!(
+                        run_lut16_opts(scheme, 1, n, k, opts_gemv(1, isa, true)),
+                        base_s[si],
+                        "lut16-{} {what}",
+                        scheme.name()
+                    );
+                }
+                for (bi, &bits) in [3u32, 4].iter().enumerate() {
+                    assert_eq!(
+                        run_wide_opts(bits, 1, n, k, opts_gemv(1, isa, true)),
+                        base_w[bi],
+                        "lut{bits}b {what}"
+                    );
+                }
+                assert_eq!(
+                    run_lut65k_opts(1, n, k, opts_gemv(1, isa, true)),
+                    base_65k,
+                    "lut65k {what}"
+                );
+                assert_eq!(
+                    run_int8_opts(1, n, k, opts_gemv(1, isa, true)),
+                    base_i8,
+                    "int8 {what}"
+                );
+                assert_f32_close(
+                    &run_f32_opts(1, n, k, opts_gemv(1, isa, true)),
+                    &base_f32,
+                    &format!("lut16-f32 {what}"),
+                );
+            }
+        }
+    }
+    // The sweep must actually have exercised the row path (PlanOpts
+    // routing, not a silent tiled fallback).
+    assert!(
+        deepgemm::kernels::tile::gemv_executes() > gemv_before,
+        "GEMV row path was never selected during the M=1 sweep"
+    );
 }
 
 #[test]

@@ -148,6 +148,80 @@ fn fused_arena_footprint_stays_under_bound() {
 }
 
 #[test]
+fn steady_state_decode_is_allocation_free() {
+    // Per-token autoregressive decode on the KV-cached transformer:
+    // after warm-up (arena, conv scratch, KV buffers and the score row
+    // all reach capacity on the first steps) every further token step —
+    // quantized GEMV projections, KV append, attention, layer norms —
+    // must allocate nothing.
+    tile::set_default_threads(1);
+    let graph = zoo::build("tiny_transformer", 16, 11).unwrap();
+    let d = zoo::TINY_TRANSFORMER_DIMS.0;
+    let token = |t: u64| Tensor::random(&[1, d, 1, 1], 0xDEC0 + t, -1.0, 1.0);
+    for backend in [Backend::Lut16(Scheme::D), Backend::Int8, Backend::Lut65k] {
+        let model = CompiledModel::compile(graph.clone(), backend, &[]).unwrap();
+        let mut ctx = model.new_ctx();
+        let mut prof = StageProfile::new();
+        for t in 0..3 {
+            let x = token(t);
+            model.run_batch(std::slice::from_ref(&x), &mut ctx, &mut prof).unwrap();
+        }
+        for t in 3..8 {
+            let x = token(t);
+            let allocs = count_allocs(|| {
+                model.run_batch(std::slice::from_ref(&x), &mut ctx, &mut prof).unwrap();
+            });
+            assert_eq!(
+                allocs,
+                0,
+                "{}: decode step {t} allocated {allocs}×",
+                backend.name()
+            );
+        }
+        // A new sequence on the same context decodes allocation-free
+        // from position 0 (buffers keep their capacity across resets).
+        ctx.reset_decode();
+        let x = token(100);
+        let allocs = count_allocs(|| {
+            model.run_batch(std::slice::from_ref(&x), &mut ctx, &mut prof).unwrap();
+        });
+        assert_eq!(allocs, 0, "{}: post-reset step allocated", backend.name());
+    }
+}
+
+/// KV-cache footprint guard (wired into CI like the arena bound above):
+/// the planner sizes each attention node's cache at exactly
+/// `2 · max_seq · heads · head_dim` f32 per image, and the steady-state
+/// decode context — arena + KV + score row + conv scratch — must stay
+/// under a checked-in bound. If this fires, either a KV slot grew past
+/// its compile-time window or decode scratch proportional to the
+/// sequence crept in.
+#[test]
+fn decode_kv_footprint_is_planned_and_bounded() {
+    const DECODE_FOOTPRINT_BOUND_BYTES: usize = 128 * 1024;
+    tile::set_default_threads(1);
+    let (d, heads, head_dim, _, layers, max_seq) = zoo::TINY_TRANSFORMER_DIMS;
+    assert_eq!(d, heads * head_dim);
+    let graph = zoo::build("tiny_transformer", 16, 11).unwrap();
+    let model = CompiledModel::compile(graph, Backend::Lut16(Scheme::D), &[]).unwrap();
+    let planned_kv = layers * 2 * max_seq * d * std::mem::size_of::<f32>();
+    assert_eq!(model.plan.kv_bytes_per_image(), planned_kv, "KV plan size drifted");
+    let mut ctx = model.new_ctx();
+    let mut prof = StageProfile::new();
+    for t in 0..4u64 {
+        let x = Tensor::random(&[1, d, 1, 1], 0xF007 + t, -1.0, 1.0);
+        model.run_batch(std::slice::from_ref(&x), &mut ctx, &mut prof).unwrap();
+    }
+    let fp = ctx.footprint_bytes();
+    assert!(fp >= planned_kv, "footprint {fp} B cannot be below the KV plan {planned_kv} B");
+    assert!(
+        fp <= DECODE_FOOTPRINT_BOUND_BYTES,
+        "steady-state decode footprint {fp} B exceeds the \
+         {DECODE_FOOTPRINT_BOUND_BYTES} B guard (planned KV is {planned_kv} B)"
+    );
+}
+
+#[test]
 fn warmup_allocates_then_stops_across_batch_sizes() {
     // Growing to a larger batch may allocate once; returning to any
     // previously-seen size must not.
