@@ -367,6 +367,11 @@ fn supervise(
         }
         state.respawns.fetch_add(1, Ordering::SeqCst);
         metrics.on_respawn();
+        // Stress site: perturb the window between the respawn counter
+        // update and the worker loop restart, so concurrent submitters
+        // observe intermediate supervisor states (jitter only — errors
+        // are ignored, the respawn path stays infallible).
+        let _ = crate::util::failpoint::eval("supervisor_respawn");
         let backoff = backoff_delay(cfg.respawn_backoff, consecutive);
         eprintln!(
             "batcher-{}: worker panicked (consecutive: {consecutive}); respawning with a \

@@ -149,6 +149,8 @@ struct DequantSink<'a> {
 // region maps to a disjoint set of output elements (see write_raw), and
 // the residual pointer is only ever read.
 unsafe impl Send for DequantSink<'_> {}
+// SAFETY: as for Send — concurrent regions never write overlapping
+// output elements, and nothing reads the output until the scope join.
 unsafe impl Sync for DequantSink<'_> {}
 
 impl DequantSink<'_> {

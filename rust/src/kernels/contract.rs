@@ -1,0 +1,330 @@
+//! Machine-checked safety contracts for the unsafe micro-kernels.
+//!
+//! Every `unsafe` `#[target_feature]` micro-kernel in this crate owes its
+//! soundness to *preconditions* — slice-length arithmetic, K-chunk
+//! divisibility, LUT table sizes — that used to live as hand-written
+//! `debug_assert!`s scattered across the kernel files. This module turns
+//! those preconditions into first-class data:
+//!
+//! - [`kernel_contract!`] declares a kernel's preconditions **once**, as a
+//!   named [`KernelContract`] with human-readable rule expressions and
+//!   executable [`Rule`] predicates.
+//! - [`contract_assert!`] expands to the entry assertion inside the kernel
+//!   (active under `debug_assertions`, free in release), so the checked
+//!   predicate and the documented predicate can never drift apart.
+//! - [`contracts()`] iterates the full registry at runtime, so tests can
+//!   fuzz every kernel's boundary ([`KernelContract::check`]) and tooling
+//!   (`cargo xtask audit --table`) can regenerate the docs table from the
+//!   same source of truth.
+//!
+//! The static auditor (`cargo xtask audit`) enforces the closed loop:
+//! every `#[target_feature]` function must either call
+//! [`contract_assert!`] or carry a `// CONTRACT: helper` marker (for
+//! register-level helpers whose callers own the contract).
+//!
+//! See `docs/SAFETY.md` for the grammar and the add-a-kernel checklist.
+
+use super::simd::Isa;
+use std::fmt;
+
+/// The shape of one kernel invocation, as seen by a contract predicate.
+///
+/// Fields are a superset across kernels; each contract documents which
+/// fields it reads and callers fill only those (the rest stay at the
+/// [`ShapeQuery::EMPTY`] zeros). All lengths are in the units the kernel
+/// indexes with (bytes for packed code rows, `f32` elements for the fp32
+/// kernel, `u16` lanes for the ULPPACK kernel).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShapeQuery {
+    /// Tile rows actually used (`mt` in the tile kernels, `a.rows` for
+    /// whole-matrix kernels).
+    pub mt: usize,
+    /// Tile columns actually used (`nt`, or `w.rows` for whole-matrix
+    /// kernels).
+    pub nt: usize,
+    /// Padded K extent the kernel streams (`k_padded` / `vals`).
+    pub vals: usize,
+    /// Length of (the shortest of) the activation row slice(s).
+    pub a_len: usize,
+    /// Length of (the shortest of) the weight row slice(s).
+    pub w_len: usize,
+    /// Lookup-table length in entries (0 where no LUT is involved).
+    pub lut_len: usize,
+}
+
+impl ShapeQuery {
+    /// All-zero query; start here and set the fields a contract reads.
+    pub const EMPTY: ShapeQuery =
+        ShapeQuery { mt: 0, nt: 0, vals: 0, a_len: 0, w_len: 0, lut_len: 0 };
+}
+
+/// One named precondition of a [`KernelContract`].
+#[derive(Clone, Copy)]
+pub struct Rule {
+    /// Short identifier, unique within its contract (e.g. `k_chunk`).
+    pub name: &'static str,
+    /// The predicate as written in the contract declaration, verbatim —
+    /// what the docs table and violation messages show.
+    pub expr: &'static str,
+    /// The executable predicate; `true` means the rule holds.
+    pub check: fn(&ShapeQuery) -> bool,
+}
+
+impl fmt::Debug for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Rule").field("name", &self.name).field("expr", &self.expr).finish()
+    }
+}
+
+/// A registered safety contract for one unsafe micro-kernel.
+#[derive(Debug)]
+pub struct KernelContract {
+    /// Fully-qualified kernel path relative to `kernels` (e.g.
+    /// `lut16::avx2::dot4_dense`).
+    pub kernel: &'static str,
+    /// The ISA arm the kernel belongs to (dispatch guarantees the arm is
+    /// supported before the kernel is reached).
+    pub isa: Isa,
+    /// CPU features the caller must have verified, comma-separated —
+    /// mirrors the `#[target_feature(enable = ...)]` list.
+    pub features: &'static str,
+    /// One-line description of what the kernel computes.
+    pub doc: &'static str,
+    /// A known-good query: `check(&example)` must pass. Anchors tests and
+    /// documents which fields the contract reads.
+    pub example: ShapeQuery,
+    /// The preconditions; all must hold for a call to be sound.
+    pub rules: &'static [Rule],
+}
+
+impl KernelContract {
+    /// Check `q` against every rule; `Err` names the first violated rule.
+    pub fn check(&self, q: &ShapeQuery) -> Result<(), Violation> {
+        for rule in self.rules {
+            if !(rule.check)(q) {
+                return Err(Violation {
+                    kernel: self.kernel,
+                    rule: rule.name,
+                    expr: rule.expr,
+                    query: *q,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A failed [`KernelContract::check`]: which kernel, which rule, and the
+/// offending shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// The kernel whose contract was violated.
+    pub kernel: &'static str,
+    /// The violated rule's name.
+    pub rule: &'static str,
+    /// The violated rule's predicate, verbatim.
+    pub expr: &'static str,
+    /// The query that failed the predicate.
+    pub query: ShapeQuery,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kernel `{}` precondition `{}` ({}) violated by shape {:?}",
+            self.kernel, self.rule, self.expr, self.query
+        )
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Declare a [`KernelContract`] as a `static`, registered by listing it in
+/// the table behind [`contracts()`].
+///
+/// Grammar (all fields required, in this order):
+///
+/// ```text
+/// kernel_contract! {
+///     pub(crate) static NAME = {
+///         kernel: "module::path::fn_name",
+///         isa: Avx2,
+///         features: "avx2",
+///         doc: "what it computes",
+///         example: { mt: 1, nt: 4, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+///         rules: {
+///             rule_name: "q.vals % 128 == 0" => |q| q.vals % 128 == 0,
+///         },
+///     }
+/// }
+/// ```
+///
+/// The `expr` string is shown verbatim in violation messages and in the
+/// generated docs table; keep it a faithful rendering of the closure.
+#[macro_export]
+macro_rules! kernel_contract {
+    (
+        $(#[$attr:meta])*
+        $vis:vis static $name:ident = {
+            kernel: $kernel:literal,
+            isa: $isa:ident,
+            features: $features:literal,
+            doc: $doc:literal,
+            example: { $($efield:ident: $eval:expr),* $(,)? },
+            rules: { $($rname:ident: $rexpr:literal => $rcheck:expr),* $(,)? } $(,)?
+        }
+    ) => {
+        $(#[$attr])*
+        #[doc = $doc]
+        $vis static $name: $crate::kernels::contract::KernelContract =
+            $crate::kernels::contract::KernelContract {
+                kernel: $kernel,
+                isa: $crate::kernels::simd::Isa::$isa,
+                features: $features,
+                doc: $doc,
+                example: $crate::kernels::contract::ShapeQuery { $($efield: $eval),* },
+                rules: &[$($crate::kernels::contract::Rule {
+                    name: stringify!($rname),
+                    expr: $rexpr,
+                    check: $rcheck,
+                }),*],
+            };
+    };
+}
+
+/// Assert a [`KernelContract`] at a kernel's entry.
+///
+/// Fills a [`ShapeQuery`] from the given `field: value` pairs (unset
+/// fields stay zero) and panics with the full [`Violation`] if any rule
+/// fails. Compiles to nothing without `debug_assertions`, exactly like
+/// the hand-written `debug_assert!`s it replaces.
+#[macro_export]
+macro_rules! contract_assert {
+    ($contract:expr, $($field:ident: $value:expr),+ $(,)?) => {
+        if cfg!(debug_assertions) {
+            let mut __q = $crate::kernels::contract::ShapeQuery::EMPTY;
+            $(__q.$field = $value;)+
+            if let Err(__violation) = $contract.check(&__q) {
+                panic!("{}", __violation);
+            }
+        }
+    };
+}
+
+/// The registry: every contract declared across the kernel files. A
+/// `#[target_feature]` kernel without an entry here (or a
+/// `// CONTRACT: helper` marker) fails `cargo xtask audit`.
+static TABLE: &[&KernelContract] = &[
+    // lut16 (2-bit, 16-entry vpshufb LUT): row-streaming GEMM + dot kernels.
+    &super::lut16::C_GEMM_AVX2,
+    &super::lut16::C_DOT4_DENSE,
+    &super::lut16::C_DOT4_SCHEME_C,
+    &super::lut16::C_DOT4_SCHEME_D,
+    &super::lut16::C_DOT_SCHEME_A,
+    &super::lut16::C_DOT_SCHEME_B,
+    &super::lut16::C_DOT_SCHEME_C,
+    &super::lut16::C_DOT_SCHEME_D,
+    // tile: the 4×4 register-tiled scheme-d kernels behind GemmPlan.
+    &super::tile::C_DOT4X4_SCHEME_D_AVX2,
+    &super::tile::C_DOT4X4_SCHEME_D_AVX512,
+    // lut16_wide (3/4-bit, 64/256-entry LUTs).
+    &super::lut16_wide::C_TILE3_AVX2,
+    &super::lut16_wide::C_TILE4_AVX2,
+    &super::lut16_wide::C_TILE3_VPERMB,
+    // lut16_f32 (f32-valued 16-entry LUT).
+    &super::lut16_f32::C_TILE_F32_1X4,
+    &super::lut16_f32::C_TILE_F32,
+    // int8 (maddubs / VNNI vpdpbusd).
+    &super::int8::C_TILE_I8_AVX2,
+    &super::int8::C_TILE_I8_VNNI,
+    // Full-precision + ULPPACK baselines.
+    &super::fp32::C_GEMM_F32_AVX2,
+    &super::ulppack::C_GEMM_ULP_AVX2,
+];
+
+/// Iterate every registered [`KernelContract`].
+pub fn contracts() -> impl Iterator<Item = &'static KernelContract> {
+    TABLE.iter().copied()
+}
+
+/// Look a contract up by its `kernel` path (used by tests and tooling).
+pub fn find(kernel: &str) -> Option<&'static KernelContract> {
+    contracts().find(|c| c.kernel == kernel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    crate::kernel_contract! {
+        static TEST_CONTRACT = {
+            kernel: "contract::tests::fake",
+            isa: Scalar,
+            features: "",
+            doc: "test-only contract",
+            example: { mt: 1, nt: 1, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+            rules: {
+                k_chunk: "q.vals % 128 == 0" => |q| q.vals % 128 == 0,
+                a_rows: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            },
+        }
+    }
+
+    #[test]
+    fn example_passes_own_contract() {
+        TEST_CONTRACT.check(&TEST_CONTRACT.example).unwrap();
+    }
+
+    #[test]
+    fn violation_names_first_failed_rule() {
+        let mut q = TEST_CONTRACT.example;
+        q.vals = 127;
+        let v = TEST_CONTRACT.check(&q).unwrap_err();
+        assert_eq!(v.rule, "k_chunk");
+        assert_eq!(v.kernel, "contract::tests::fake");
+        let msg = v.to_string();
+        assert!(msg.contains("k_chunk"), "{msg}");
+        assert!(msg.contains("q.vals % 128 == 0"), "{msg}");
+    }
+
+    #[test]
+    fn short_rows_fail_second_rule() {
+        let mut q = TEST_CONTRACT.example;
+        q.a_len = 31;
+        assert_eq!(TEST_CONTRACT.check(&q).unwrap_err().rule, "a_rows");
+    }
+
+    #[test]
+    fn contract_assert_passes_in_contract() {
+        // Must not panic.
+        crate::contract_assert!(TEST_CONTRACT, vals: 256, a_len: 64, w_len: 64);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "contract_assert is debug-only")]
+    #[should_panic(expected = "k_chunk")]
+    fn contract_assert_panics_out_of_contract() {
+        crate::contract_assert!(TEST_CONTRACT, vals: 130, a_len: 64);
+    }
+
+    #[test]
+    fn registry_is_populated_and_consistent() {
+        let mut names = std::collections::HashSet::new();
+        let mut n = 0usize;
+        for c in contracts() {
+            n += 1;
+            assert!(names.insert(c.kernel), "duplicate contract for {}", c.kernel);
+            assert!(!c.rules.is_empty(), "{} has no rules", c.kernel);
+            // Every example must satisfy its own contract.
+            c.check(&c.example).unwrap_or_else(|v| panic!("{v}"));
+            // Vectorized arms must name their features.
+            if c.isa.vectorized() {
+                assert!(!c.features.is_empty(), "{} lists no features", c.kernel);
+            }
+        }
+        assert!(n >= 15, "registry unexpectedly small: {n}");
+        assert!(find("lut16::avx2::dot4_dense").is_some());
+        assert!(find("no::such::kernel").is_none());
+    }
+}

@@ -57,7 +57,7 @@ impl MatF32 {
 
 /// Scalar reference.
 pub fn gemm_scalar(a: &MatF32, w: &MatF32, out: &mut [f32]) {
-    assert_eq!(a.k, w.k);
+    assert_eq!(a.k, w.k, "K mismatch");
     assert_eq!(out.len(), a.rows * w.rows);
     for m in 0..a.rows {
         let arow = a.row(m);
@@ -75,13 +75,34 @@ pub fn gemm_scalar(a: &MatF32, w: &MatF32, out: &mut [f32]) {
 pub fn gemm(a: &MatF32, w: &MatF32, out: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        // Miri has no vector intrinsics: stay on the scalar reference.
+        if !cfg!(miri)
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
         {
+            // SAFETY: AVX2 and FMA were just runtime-detected; the
+            // kernel's shape preconditions are asserted at its entry
+            // (C_GEMM_F32_AVX2).
             unsafe { avx2::gemm(a, w, out) };
             return;
         }
     }
     gemm_scalar(a, w, out);
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_GEMM_F32_AVX2 = {
+        kernel: "fp32::avx2::gemm",
+        isa: Avx2,
+        features: "avx2,fma",
+        doc: "FP32 baseline GEMM: 4-chain FMA microkernel over K-padded rows.",
+        example: { mt: 1, nt: 1, vals: 32, a_len: 32, w_len: 32, lut_len: 0 },
+        rules: {
+            k_chunk32: "q.vals % 32 == 0" => |q| q.vals % 32 == 0,
+            a_row: "q.a_len >= q.vals" => |q| q.a_len >= q.vals,
+            w_row: "q.w_len >= q.vals" => |q| q.w_len >= q.vals,
+        },
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -92,42 +113,69 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_ps(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps(v, 1);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
-        _mm_cvtss_f32(s)
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps(v, 1);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+            _mm_cvtss_f32(s)
+        }
     }
 
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn gemm(a: &MatF32, w: &MatF32, out: &mut [f32]) {
-        for m in 0..a.rows {
-            let arow = a.row(m);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
-                let mut acc0 = _mm256_setzero_ps();
-                let mut acc1 = _mm256_setzero_ps();
-                let mut acc2 = _mm256_setzero_ps();
-                let mut acc3 = _mm256_setzero_ps();
-                let mut kb = 0usize;
-                while kb < a.k_padded {
-                    let a0 = _mm256_loadu_ps(arow.as_ptr().add(kb));
-                    let a1 = _mm256_loadu_ps(arow.as_ptr().add(kb + 8));
-                    let a2 = _mm256_loadu_ps(arow.as_ptr().add(kb + 16));
-                    let a3 = _mm256_loadu_ps(arow.as_ptr().add(kb + 24));
-                    let w0 = _mm256_loadu_ps(wrow.as_ptr().add(kb));
-                    let w1 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 8));
-                    let w2 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 16));
-                    let w3 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 24));
-                    acc0 = _mm256_fmadd_ps(a0, w0, acc0);
-                    acc1 = _mm256_fmadd_ps(a1, w1, acc1);
-                    acc2 = _mm256_fmadd_ps(a2, w2, acc2);
-                    acc3 = _mm256_fmadd_ps(a3, w3, acc3);
-                    kb += 32;
+        crate::contract_assert!(
+            super::C_GEMM_F32_AVX2,
+            mt: a.rows,
+            nt: w.rows,
+            vals: a.k_padded,
+            a_len: a.k_padded,
+            w_len: w.k_padded,
+        );
+        // The kernel streams `a.k_padded` floats from both operands, so
+        // mismatched K would read past the shorter weight rows even in
+        // release builds — keep this check release-safe.
+        assert_eq!(a.k, w.k, "K mismatch");
+        assert_eq!(out.len(), a.rows * w.rows);
+        // SAFETY: C_GEMM_F32_AVX2 — rows of both matrices are exactly
+        // `k_padded` floats by construction and `a.k == w.k` implies
+        // equal padding, so every 8-float load reaches
+        // `kb + 24 + 8 <= k_padded` (`vals % 32 == 0`). AVX2/FMA come
+        // from this fn's target_feature set.
+        unsafe {
+            for m in 0..a.rows {
+                let arow = a.row(m);
+                for n in 0..w.rows {
+                    let wrow = w.row(n);
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut kb = 0usize;
+                    while kb < a.k_padded {
+                        let a0 = _mm256_loadu_ps(arow.as_ptr().add(kb));
+                        let a1 = _mm256_loadu_ps(arow.as_ptr().add(kb + 8));
+                        let a2 = _mm256_loadu_ps(arow.as_ptr().add(kb + 16));
+                        let a3 = _mm256_loadu_ps(arow.as_ptr().add(kb + 24));
+                        let w0 = _mm256_loadu_ps(wrow.as_ptr().add(kb));
+                        let w1 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 8));
+                        let w2 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 16));
+                        let w3 = _mm256_loadu_ps(wrow.as_ptr().add(kb + 24));
+                        acc0 = _mm256_fmadd_ps(a0, w0, acc0);
+                        acc1 = _mm256_fmadd_ps(a1, w1, acc1);
+                        acc2 = _mm256_fmadd_ps(a2, w2, acc2);
+                        acc3 = _mm256_fmadd_ps(a3, w3, acc3);
+                        kb += 32;
+                    }
+                    let acc =
+                        _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+                    out[m * w.rows + n] = hsum_ps(acc);
                 }
-                let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
-                out[m * w.rows + n] = hsum_ps(acc);
             }
         }
     }
@@ -158,6 +206,18 @@ mod tests {
             gemm(&a, &w, &mut got);
             assert_close(&got, &want, 1e-4, 1e-4).unwrap();
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "K mismatch")]
+    fn mismatched_k_is_rejected_before_any_load() {
+        // Regression: the AVX2 arm streams `a.k_padded` floats from the
+        // weight rows, so a K mismatch used to read past the shorter
+        // rows in release builds. Both arms now reject it up front.
+        let (a, _) = random_problem(2, 2, 64, 1);
+        let (_, w) = random_problem(2, 2, 32, 2);
+        let mut out = vec![0f32; 4];
+        gemm(&a, &w, &mut out);
     }
 
     #[test]

@@ -176,6 +176,36 @@ impl TileKernel for Int8Tile {
     }
 }
 
+crate::kernel_contract! {
+    pub(crate) static C_TILE_I8_AVX2 = {
+        kernel: "int8::avx2::tile_i8",
+        isa: Avx2,
+        features: "avx2",
+        doc: "QNNPACK-style pmaddwd INT8 tile kernel, Int8 layout (1 byte/value).",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 128, w_len: 128, lut_len: 0 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            a_rows: "q.a_len >= q.vals" => |q| q.a_len >= q.vals,
+            w_rows: "q.w_len >= q.vals" => |q| q.w_len >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_TILE_I8_VNNI = {
+        kernel: "int8::avx512::tile_i8_vnni",
+        isa: Avx512,
+        features: "avx512f,avx512bw,avx512vnni",
+        doc: "vpdpbusd INT8 tile kernel, Int8 layout (1 byte/value).",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 128, w_len: 128, lut_len: 0 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            a_rows: "q.a_len >= q.vals" => |q| q.a_len >= q.vals,
+            w_rows: "q.w_len >= q.vals" => |q| q.w_len >= q.vals,
+        },
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::*;
@@ -183,12 +213,18 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
-        let lo = _mm256_castsi256_si128(v);
-        let hi = _mm256_extracti128_si256(v, 1);
-        let s = _mm_add_epi32(lo, hi);
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
-        _mm_cvtsi128_si32(s)
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm256_castsi256_si128(v);
+            let hi = _mm256_extracti128_si256(v, 1);
+            let s = _mm_add_epi32(lo, hi);
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+            _mm_cvtsi128_si32(s)
+        }
     }
 
     /// QNNPACK-style tile micro-kernel: each 32-byte activation load is
@@ -203,35 +239,44 @@ mod avx2 {
         nt: usize,
         sums: &mut [[i32; 4]; 4],
     ) {
-        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Int8 packs 1 byte per value.
-            debug_assert!(ar[r].len() >= vals, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals, "weight fragment too short");
-        }
-        let zero = _mm256_setzero_si256();
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm256_setzero_si256(); 4];
-            let mut kb = 0usize;
-            while kb < vals {
-                let va = _mm256_loadu_si256(arow.as_ptr().add(kb) as *const __m256i);
-                // u8 → u16 (zero extend): activations are unsigned.
-                let a_lo = _mm256_unpacklo_epi8(va, zero);
-                let a_hi = _mm256_unpackhi_epi8(va, zero);
-                for (j, wrow) in wf.iter().enumerate().take(nt) {
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(kb) as *const __m256i);
-                    // i8 → i16 (sign extend via compare trick, QNNPACK's
-                    // punpck + sign-mask idiom).
-                    let wsign = _mm256_cmpgt_epi8(zero, vw);
-                    let w_lo = _mm256_unpacklo_epi8(vw, wsign);
-                    let w_hi = _mm256_unpackhi_epi8(vw, wsign);
-                    acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_lo, w_lo));
-                    acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_hi, w_hi));
+        crate::contract_assert!(
+            super::C_TILE_I8_AVX2,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+        );
+        // SAFETY: C_TILE_I8_AVX2 — Int8 packs 1 byte/value, so every
+        // fragment holds >= vals bytes (`a_len >= vals` /
+        // `w_len >= vals`) and each 32-byte load reaches
+        // `kb + 32 <= vals` (vals is a K_BLOCK multiple). AVX2 comes
+        // from this fn's target_feature set.
+        unsafe {
+            let zero = _mm256_setzero_si256();
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm256_setzero_si256(); 4];
+                let mut kb = 0usize;
+                while kb < vals {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(kb) as *const __m256i);
+                    // u8 → u16 (zero extend): activations are unsigned.
+                    let a_lo = _mm256_unpacklo_epi8(va, zero);
+                    let a_hi = _mm256_unpackhi_epi8(va, zero);
+                    for (j, wrow) in wf.iter().enumerate().take(nt) {
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(kb) as *const __m256i);
+                        // i8 → i16 (sign extend via compare trick,
+                        // QNNPACK's punpck + sign-mask idiom).
+                        let wsign = _mm256_cmpgt_epi8(zero, vw);
+                        let w_lo = _mm256_unpacklo_epi8(vw, wsign);
+                        let w_hi = _mm256_unpackhi_epi8(vw, wsign);
+                        acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_lo, w_lo));
+                        acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(a_hi, w_hi));
+                    }
+                    kb += 32;
                 }
-                kb += 32;
-            }
-            for (j, a) in acc.iter().enumerate().take(nt) {
-                sums[i][j] = hsum_epi32(*a);
+                for (j, a) in acc.iter().enumerate().take(nt) {
+                    sums[i][j] = hsum_epi32(*a);
+                }
             }
         }
     }
@@ -244,20 +289,26 @@ mod avx2 {
 /// (`deepgemm_avx512`).
 #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
 mod avx512 {
-    use crate::kernels::K_BLOCK;
     use std::arch::x86_64::*;
 
     /// Horizontal sum of the sixteen i32 lanes.
     #[inline]
     #[target_feature(enable = "avx512f,avx2")]
     unsafe fn hsum_epi32_512(v: __m512i) -> i32 {
-        let lo = _mm512_castsi512_si256(v);
-        let hi = _mm512_extracti64x4_epi64(v, 1);
-        let s256 = _mm256_add_epi32(lo, hi);
-        let s = _mm_add_epi32(_mm256_castsi256_si128(s256), _mm256_extracti128_si256(s256, 1));
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
-        _mm_cvtsi128_si32(s)
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm512_castsi512_si256(v);
+            let hi = _mm512_extracti64x4_epi64(v, 1);
+            let s256 = _mm256_add_epi32(lo, hi);
+            let s =
+                _mm_add_epi32(_mm256_castsi256_si128(s256), _mm256_extracti128_si256(s256, 1));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+            _mm_cvtsi128_si32(s)
+        }
     }
 
     /// VNNI tile micro-kernel: each 64-byte activation load is
@@ -275,25 +326,34 @@ mod avx512 {
         nt: usize,
         sums: &mut [[i32; 4]; 4],
     ) {
-        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Int8 packs 1 byte per value.
-            debug_assert!(ar[r].len() >= vals, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals, "weight fragment too short");
-        }
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm512_setzero_si512(); 4];
-            let mut kb = 0usize;
-            while kb < vals {
-                let va = _mm512_loadu_epi8(arow.as_ptr().add(kb) as *const i8);
-                for (j, wrow) in wf.iter().enumerate().take(nt) {
-                    let vw = _mm512_loadu_epi8(wrow.as_ptr().add(kb) as *const i8);
-                    acc[j] = _mm512_dpbusd_epi32(acc[j], va, vw);
+        crate::contract_assert!(
+            super::C_TILE_I8_VNNI,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+        );
+        // SAFETY: C_TILE_I8_VNNI — Int8 packs 1 byte/value, so every
+        // fragment holds >= vals bytes (`a_len >= vals` /
+        // `w_len >= vals`); `vals % K_BLOCK == 0` with K_BLOCK = 128
+        // makes each 64-byte load reach `kb + 64 <= vals`. AVX-512
+        // F/BW/VNNI come from this fn's target_feature set.
+        unsafe {
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm512_setzero_si512(); 4];
+                let mut kb = 0usize;
+                while kb < vals {
+                    let va = _mm512_loadu_epi8(arow.as_ptr().add(kb) as *const i8);
+                    for (j, wrow) in wf.iter().enumerate().take(nt) {
+                        let vw = _mm512_loadu_epi8(wrow.as_ptr().add(kb) as *const i8);
+                        acc[j] = _mm512_dpbusd_epi32(acc[j], va, vw);
+                    }
+                    kb += 64;
                 }
-                kb += 64;
-            }
-            for (j, a) in acc.iter().enumerate().take(nt) {
-                sums[i][j] = hsum_epi32_512(*a);
+                for (j, a) in acc.iter().enumerate().take(nt) {
+                    sums[i][j] = hsum_epi32_512(*a);
+                }
             }
         }
     }

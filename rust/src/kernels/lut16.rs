@@ -46,12 +46,143 @@ pub fn gemm(a: &Packed, w: &Packed, lut: &Lut16, scheme: Scheme, out: &mut [i32]
     assert_eq!(w.layout, scheme.w_layout(), "weights packed for wrong scheme");
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") {
+        // Miri has no vector intrinsics: stay on the scalar reference.
+        if !cfg!(miri) && std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 support was verified on the line above; the
+            // layout asserts above plus `pack_*` (K padded to K_BLOCK,
+            // rows sized per layout) satisfy C_GEMM_AVX2, re-checked at
+            // the kernel's entry in debug builds.
             unsafe { avx2::gemm(a, w, lut, scheme, out) };
             return;
         }
     }
     gemm_scalar(a, w, lut, out);
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_GEMM_AVX2 = {
+        kernel: "lut16::avx2::gemm",
+        isa: Avx2,
+        features: "avx2",
+        doc: "Row-streaming 2-bit LUT-16 GEMM (all four packing schemes).",
+        example: { mt: 1, nt: 1, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT4_DENSE = {
+        kernel: "lut16::avx2::dot4_dense",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x4 dense/dense (schemes a,b) dot microkernel, 4 crumbs/byte.",
+        example: { mt: 1, nt: 4, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            w_rows: "q.w_len * 4 >= q.vals" => |q| q.w_len * 4 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT4_SCHEME_C = {
+        kernel: "lut16::avx2::dot4_scheme_c",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x4 scheme-c dot microkernel: byte-expanded weights, dense activations.",
+        example: { mt: 1, nt: 4, vals: 128, a_len: 32, w_len: 128, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            w_rows: "q.w_len >= q.vals" => |q| q.w_len >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT4_SCHEME_D = {
+        kernel: "lut16::avx2::dot4_scheme_d",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x4 scheme-d dot microkernel: complementary nibbles, 2 values/byte.",
+        example: { mt: 1, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT_SCHEME_A = {
+        kernel: "lut16::avx2::dot_scheme_a",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x1 scheme-a dot: naive dense/dense unpack (Tab. 3 column a).",
+        example: { mt: 1, nt: 1, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            w_row: "q.w_len * 4 >= q.vals" => |q| q.w_len * 4 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT_SCHEME_B = {
+        kernel: "lut16::avx2::dot_scheme_b",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x1 scheme-b dot: dense/dense with hoisted shift temporaries.",
+        example: { mt: 1, nt: 1, vals: 128, a_len: 32, w_len: 32, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            w_row: "q.w_len * 4 >= q.vals" => |q| q.w_len * 4 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT_SCHEME_C = {
+        kernel: "lut16::avx2::dot_scheme_c",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x1 scheme-c dot: byte-expanded weights, dense activations.",
+        example: { mt: 1, nt: 1, vals: 128, a_len: 32, w_len: 128, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 4 >= q.vals" => |q| q.a_len * 4 >= q.vals,
+            w_row: "q.w_len >= q.vals" => |q| q.w_len >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT_SCHEME_D = {
+        kernel: "lut16::avx2::dot_scheme_d",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x1 scheme-d dot: complementary nibbles, fused OR indices.",
+        example: { mt: 1, nt: 1, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_row: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_row: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -64,25 +195,45 @@ pub(crate) mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn hsum_epi64(v: __m256i) -> i64 {
-        let lo = _mm256_castsi256_si128(v);
-        let hi = _mm256_extracti128_si256(v, 1);
-        let d = _mm_add_epi64(hi, lo);
-        let e = _mm_shuffle_epi32(d, 238);
-        let f = _mm_add_epi64(e, d);
-        _mm_cvtsi128_si64(f)
+        // CONTRACT: helper — register-only; callers own the kernel contract.
+        // SAFETY: register-to-register intrinsics with no memory access;
+        // the caller guarantees AVX2 (same target_feature set).
+        unsafe {
+            let lo = _mm256_castsi256_si128(v);
+            let hi = _mm256_extracti128_si256(v, 1);
+            let d = _mm_add_epi64(hi, lo);
+            let e = _mm_shuffle_epi32(d, 238);
+            let f = _mm_add_epi64(e, d);
+            _mm_cvtsi128_si64(f)
+        }
     }
 
     /// Broadcast the 16-entry biased table into both 128-bit lanes.
     #[inline]
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn load_lut(lut: &Lut16) -> __m256i {
-        debug_assert_eq!(lut.table.len(), 16);
-        let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
-        _mm256_broadcastsi128_si256(t)
+        // CONTRACT: helper — callers assert `lut_len == 16` via their own
+        // contract before the 16-byte load below.
+        // SAFETY: every calling kernel's contract requires
+        // `lut.table.len() == 16`, covering the one 16-byte load; the
+        // caller guarantees AVX2.
+        unsafe {
+            let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
+            _mm256_broadcastsi128_si256(t)
+        }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm(a: &Packed, w: &Packed, lut: &Lut16, scheme: Scheme, out: &mut [i32]) {
+        crate::contract_assert!(
+            C_GEMM_AVX2,
+            mt: a.rows,
+            nt: w.rows,
+            vals: a.k_padded,
+            lut_len: lut.table.len(),
+        );
+        assert_eq!(a.k, w.k, "K mismatch");
+        assert_eq!(out.len(), a.rows * w.rows);
         let corr = lut.correction(a.k_padded, a.pad());
         // The 1×4 microkernels accumulate 4 (dense) / 2 (nibble) rounds
         // of biased-u8 entries in a byte lane before the SAD: exact iff
@@ -100,25 +251,32 @@ pub(crate) mod avx2 {
             // amortized 4×, and four independent SAD accumulator chains
             // hide the accumulate latency).
             while tile4_ok && n + 4 <= w.rows {
-                let sads: [i64; 4] = match scheme {
-                    Scheme::A | Scheme::B => dot4_dense(
-                        arow,
-                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
-                        lut,
-                        a.k_padded,
-                    ),
-                    Scheme::C => dot4_scheme_c(
-                        arow,
-                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
-                        lut,
-                        a.k_padded,
-                    ),
-                    Scheme::D => dot4_scheme_d(
-                        arow,
-                        [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
-                        lut,
-                        a.k_padded,
-                    ),
+                // SAFETY: AVX2 is guaranteed by this fn's own
+                // target_feature set; `Packed::row` slices are
+                // `stride = layout.bytes_for(k_padded)` bytes, which
+                // satisfies each scheme's row-length contract (re-checked
+                // at the callee's entry in debug builds).
+                let sads: [i64; 4] = unsafe {
+                    match scheme {
+                        Scheme::A | Scheme::B => dot4_dense(
+                            arow,
+                            [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                            lut,
+                            a.k_padded,
+                        ),
+                        Scheme::C => dot4_scheme_c(
+                            arow,
+                            [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                            lut,
+                            a.k_padded,
+                        ),
+                        Scheme::D => dot4_scheme_d(
+                            arow,
+                            [w.row(n), w.row(n + 1), w.row(n + 2), w.row(n + 3)],
+                            lut,
+                            a.k_padded,
+                        ),
+                    }
                 };
                 for (j, s) in sads.into_iter().enumerate() {
                     out[m * w.rows + n + j] = (s - corr) as i32;
@@ -127,11 +285,15 @@ pub(crate) mod avx2 {
             }
             while n < w.rows {
                 let wrow = w.row(n);
-                let sad: i64 = match scheme {
-                    Scheme::A => dot_scheme_a(arow, wrow, lut, a.k_padded),
-                    Scheme::B => dot_scheme_b(arow, wrow, lut, a.k_padded),
-                    Scheme::C => dot_scheme_c(arow, wrow, lut, a.k_padded),
-                    Scheme::D => dot_scheme_d(arow, wrow, lut, a.k_padded),
+                // SAFETY: as above — same target_feature set, row slices
+                // sized by `Packed` for each scheme's layout.
+                let sad: i64 = unsafe {
+                    match scheme {
+                        Scheme::A => dot_scheme_a(arow, wrow, lut, a.k_padded),
+                        Scheme::B => dot_scheme_b(arow, wrow, lut, a.k_padded),
+                        Scheme::C => dot_scheme_c(arow, wrow, lut, a.k_padded),
+                        Scheme::D => dot_scheme_d(arow, wrow, lut, a.k_padded),
+                    }
                 };
                 out[m * w.rows + n] = (sad - corr) as i32;
                 n += 1;
@@ -149,53 +311,63 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
-        for w in wrows {
-            debug_assert!(w.len() >= k_padded / 4, "weight row too short");
-        }
-        let lutv = load_lut(lut);
-        let m3 = _mm256_set1_epi8(0x03);
-        let mc = _mm256_set1_epi8(0x0C);
-        let zero = _mm256_setzero_si256();
-        let mut acc = [_mm256_setzero_si256(); 4];
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
-            // Hoisted activation parts, one per round.
-            let ta = [
-                _mm256_and_si256(va, m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
-            ];
-            for j in 0..4 {
-                let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(32 * c) as *const __m256i);
-                let tw = [
-                    _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
-                    _mm256_and_si256(vw, mc),
-                    _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
-                    _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+        crate::contract_assert!(
+            C_DOT4_DENSE,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrows.iter().map(|w| w.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT4_DENSE — all loads are 32 bytes at offsets
+        // `32 * c` with `c < k_padded / K_BLOCK`, i.e. within the first
+        // `k_padded / 4` bytes of every row, which the contract's
+        // `a_len * 4 >= vals` / `w_len * 4 >= vals` rules cover; the
+        // 16-byte LUT load is covered by `lut_len == 16`. AVX2 comes
+        // from this fn's target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let m3 = _mm256_set1_epi8(0x03);
+            let mc = _mm256_set1_epi8(0x0C);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+                // Hoisted activation parts, one per round.
+                let ta = [
+                    _mm256_and_si256(va, m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
                 ];
-                let mut sum8 = _mm256_setzero_si256();
-                for r in 0..4 {
-                    let idx = _mm256_or_si256(tw[r], ta[r]);
-                    let prod = _mm256_shuffle_epi8(lutv, idx);
-                    sum8 = _mm256_add_epi8(prod, sum8);
-                    // 4 rounds × max entry 9 (unsigned) / 6 (signed-bias)
-                    // stays < 256 → one SAD per 4 rounds is exact.
-                    if r == 3 {
-                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+                for j in 0..4 {
+                    let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(32 * c) as *const __m256i);
+                    let tw = [
+                        _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                        _mm256_and_si256(vw, mc),
+                        _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
+                        _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+                    ];
+                    let mut sum8 = _mm256_setzero_si256();
+                    for r in 0..4 {
+                        let idx = _mm256_or_si256(tw[r], ta[r]);
+                        let prod = _mm256_shuffle_epi8(lutv, idx);
+                        sum8 = _mm256_add_epi8(prod, sum8);
+                        // 4 rounds × max entry 9 (unsigned) / 6 (signed-bias)
+                        // stays < 256 → one SAD per 4 rounds is exact.
+                        if r == 3 {
+                            acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+                        }
                     }
                 }
             }
+            [
+                hsum_epi64(acc[0]),
+                hsum_epi64(acc[1]),
+                hsum_epi64(acc[2]),
+                hsum_epi64(acc[3]),
+            ]
         }
-        [
-            hsum_epi64(acc[0]),
-            hsum_epi64(acc[1]),
-            hsum_epi64(acc[2]),
-            hsum_epi64(acc[3]),
-        ]
     }
 
     /// 1×4 microkernel for scheme c (ready weight bytes).
@@ -206,42 +378,50 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
-        for w in wrows {
-            // ByteHi expands to one byte per value.
-            debug_assert!(w.len() >= k_padded, "weight row too short");
-        }
-        let lutv = load_lut(lut);
-        let m3 = _mm256_set1_epi8(0x03);
-        let zero = _mm256_setzero_si256();
-        let mut acc = [_mm256_setzero_si256(); 4];
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
-            let ta = [
-                _mm256_and_si256(va, m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
-            ];
-            for j in 0..4 {
-                let wbase = wrows[j].as_ptr().add(128 * c);
-                let mut sum8 = _mm256_setzero_si256();
-                for (r, tar) in ta.iter().enumerate() {
-                    let tw = _mm256_loadu_si256(wbase.add(32 * r) as *const __m256i);
-                    let idx = _mm256_or_si256(tw, *tar);
-                    sum8 = _mm256_add_epi8(_mm256_shuffle_epi8(lutv, idx), sum8);
+        crate::contract_assert!(
+            C_DOT4_SCHEME_C,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrows.iter().map(|w| w.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT4_SCHEME_C — activation loads stay within
+        // `k_padded / 4` bytes (`a_len * 4 >= vals`); ByteHi weight loads
+        // reach `128 * c + 32 * r + 32 <= k_padded` bytes
+        // (`w_len >= vals`); the 16-byte LUT load is covered by
+        // `lut_len == 16`. AVX2 comes from this fn's target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let m3 = _mm256_set1_epi8(0x03);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+                let ta = [
+                    _mm256_and_si256(va, m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+                ];
+                for j in 0..4 {
+                    let wbase = wrows[j].as_ptr().add(128 * c);
+                    let mut sum8 = _mm256_setzero_si256();
+                    for (r, tar) in ta.iter().enumerate() {
+                        let tw = _mm256_loadu_si256(wbase.add(32 * r) as *const __m256i);
+                        let idx = _mm256_or_si256(tw, *tar);
+                        sum8 = _mm256_add_epi8(_mm256_shuffle_epi8(lutv, idx), sum8);
+                    }
+                    acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
                 }
-                acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
             }
+            [
+                hsum_epi64(acc[0]),
+                hsum_epi64(acc[1]),
+                hsum_epi64(acc[2]),
+                hsum_epi64(acc[3]),
+            ]
         }
-        [
-            hsum_epi64(acc[0]),
-            hsum_epi64(acc[1]),
-            hsum_epi64(acc[2]),
-            hsum_epi64(acc[3]),
-        ]
     }
 
     /// 1×4 microkernel for scheme d (complementary nibbles): the fused
@@ -254,42 +434,50 @@ pub(crate) mod avx2 {
         lut: &Lut16,
         k_padded: usize,
     ) -> i64x4 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 2, "activation row too short");
-        for w in wrows {
-            // Nibble layouts pack 2 values per byte.
-            debug_assert!(w.len() >= k_padded / 2, "weight row too short");
-        }
-        let lutv = load_lut(lut);
-        let mf = _mm256_set1_epi8(0x0F);
-        let zero = _mm256_setzero_si256();
-        let mut acc = [_mm256_setzero_si256(); 4];
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            for half in 0..2 {
-                let off = 64 * c + 32 * half;
-                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                for j in 0..4 {
-                    let vw =
-                        _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
-                    let fused = _mm256_or_si256(vw, va);
-                    let ilo = _mm256_and_si256(fused, mf);
-                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
-                    // Two rounds → max 2 × entry ≤ 18 < 256: one SAD.
-                    let sum8 = _mm256_add_epi8(
-                        _mm256_shuffle_epi8(lutv, ilo),
-                        _mm256_shuffle_epi8(lutv, ihi),
-                    );
-                    acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+        crate::contract_assert!(
+            C_DOT4_SCHEME_D,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrows.iter().map(|w| w.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT4_SCHEME_D — nibble rows hold `k_padded / 2`
+        // bytes (`a_len * 2 >= vals` / `w_len * 2 >= vals`) and every
+        // load reaches `64 * c + 32 * half + 32 <= k_padded / 2`; the
+        // 16-byte LUT load is covered by `lut_len == 16`. AVX2 comes
+        // from this fn's target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let mf = _mm256_set1_epi8(0x0F);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [_mm256_setzero_si256(); 4];
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                for half in 0..2 {
+                    let off = 64 * c + 32 * half;
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    for j in 0..4 {
+                        let vw =
+                            _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
+                        let fused = _mm256_or_si256(vw, va);
+                        let ilo = _mm256_and_si256(fused, mf);
+                        let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                        // Two rounds → max 2 × entry ≤ 18 < 256: one SAD.
+                        let sum8 = _mm256_add_epi8(
+                            _mm256_shuffle_epi8(lutv, ilo),
+                            _mm256_shuffle_epi8(lutv, ihi),
+                        );
+                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(sum8, zero));
+                    }
                 }
             }
+            [
+                hsum_epi64(acc[0]),
+                hsum_epi64(acc[1]),
+                hsum_epi64(acc[2]),
+                hsum_epi64(acc[3]),
+            ]
         }
-        [
-            hsum_epi64(acc[0]),
-            hsum_epi64(acc[1]),
-            hsum_epi64(acc[2]),
-            hsum_epi64(acc[3]),
-        ]
     }
 
     #[allow(non_camel_case_types)]
@@ -299,44 +487,55 @@ pub(crate) mod avx2 {
     /// 4 ors, 4 shuffles (Tab. 3 column a: 1.5/2/1/1 per output).
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_a(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
-        debug_assert!(wrow.len() >= k_padded / 4, "weight row too short");
-        let lutv = load_lut(lut);
-        let m3 = _mm256_set1_epi8(0x03);
-        let mc = _mm256_set1_epi8(0x0C);
-        let zero = _mm256_setzero_si256();
-        let mut acc = _mm256_setzero_si256();
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
-            let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
-            // round 0: w crumb0 → [3:2] needs <<2; a crumb0 in place.
-            let i0 = _mm256_or_si256(
-                _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
-                _mm256_and_si256(va, m3),
-            );
-            // round 1: w crumb1 already at [3:2]; a crumb1 needs >>2.
-            let i1 = _mm256_or_si256(
-                _mm256_and_si256(vw, mc),
-                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
-            );
-            // round 2: w >>2, a >>4.
-            let i2 = _mm256_or_si256(
-                _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
-                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
-            );
-            // round 3: w >>4, a >>6.
-            let i3 = _mm256_or_si256(
-                _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
-                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
-            );
-            for idx in [i0, i1, i2, i3] {
-                let prod = _mm256_shuffle_epi8(lutv, idx);
-                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            C_DOT_SCHEME_A,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrow.len(),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT_SCHEME_A — 32-byte loads at `32 * c` stay within
+        // the first `k_padded / 4` bytes of both rows
+        // (`a_len * 4 >= vals` / `w_len * 4 >= vals`); the 16-byte LUT
+        // load is covered by `lut_len == 16`. AVX2 comes from this fn's
+        // target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let m3 = _mm256_set1_epi8(0x03);
+            let mc = _mm256_set1_epi8(0x0C);
+            let zero = _mm256_setzero_si256();
+            let mut acc = _mm256_setzero_si256();
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+                let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
+                // round 0: w crumb0 → [3:2] needs <<2; a crumb0 in place.
+                let i0 = _mm256_or_si256(
+                    _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                    _mm256_and_si256(va, m3),
+                );
+                // round 1: w crumb1 already at [3:2]; a crumb1 needs >>2.
+                let i1 = _mm256_or_si256(
+                    _mm256_and_si256(vw, mc),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                );
+                // round 2: w >>2, a >>4.
+                let i2 = _mm256_or_si256(
+                    _mm256_and_si256(_mm256_srli_epi32(vw, 2), mc),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                );
+                // round 3: w >>4, a >>6.
+                let i3 = _mm256_or_si256(
+                    _mm256_and_si256(_mm256_srli_epi32(vw, 4), mc),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+                );
+                for idx in [i0, i1, i2, i3] {
+                    let prod = _mm256_shuffle_epi8(lutv, idx);
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                }
             }
+            hsum_epi64(acc)
         }
-        hsum_epi64(acc)
     }
 
     /// Scheme b: same dense layout, but the unpack order elides the
@@ -346,53 +545,64 @@ pub(crate) mod avx2 {
     /// chains than scheme a.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_b(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
-        debug_assert!(wrow.len() >= k_padded / 4, "weight row too short");
-        let lutv = load_lut(lut);
-        let m3 = _mm256_set1_epi8(0x03);
-        let mc = _mm256_set1_epi8(0x0C);
-        let zero = _mm256_setzero_si256();
-        let mut acc = _mm256_setzero_si256();
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
-            let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
-            let w2 = _mm256_srli_epi32(vw, 2); // crumbs 2,3 shifted toward [3:2]
-            let a2 = _mm256_srli_epi32(va, 2);
-            let i0 = _mm256_or_si256(
-                _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
-                _mm256_and_si256(va, m3),
-            );
-            let i1 = _mm256_or_si256(_mm256_and_si256(vw, mc), _mm256_and_si256(a2, m3));
-            let i2 = _mm256_or_si256(
-                _mm256_and_si256(w2, mc),
-                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
-            );
-            // round 3: (w>>4)&mc | (a>>6) — a>>6 has bits [1:0] only, and
-            // epi32 shifts leak at most neighbouring-byte crumbs into
-            // bits >= 2 of... no: a>>6 within epi32 lanes brings byte b+1
-            // bits into byte b bits [7:2]; pshufb masks bits 4-6 but bits
-            // [3:2] would corrupt the weight field, EXCEPT we OR the
-            // weight field in — so we shift the *or-combined* register:
-            // build t = (w>>4)&mc first, then or with (a>>6)&m3... the
-            // elision is only safe for the last byte; keep correctness:
-            // elide instead the *weight* mask by pre-cleaning: w>>4 of the
-            // top crumb is clean in bits [3:2] per byte? No — same leak.
-            // => only genuine elision: compute a6 = srli_epi16(va, 6) and
-            // rely on pshufb ignoring bits 4-6 after masking bit7+[3:2]:
-            // not free either. We therefore keep round 3 masked but reuse
-            // w2/a2 (hoisting wins come from ILP, not op count).
-            let i3 = _mm256_or_si256(
-                _mm256_and_si256(_mm256_srli_epi32(w2, 2), mc),
-                _mm256_and_si256(_mm256_srli_epi32(a2, 4), m3),
-            );
-            for idx in [i0, i1, i2, i3] {
-                let prod = _mm256_shuffle_epi8(lutv, idx);
-                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            C_DOT_SCHEME_B,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrow.len(),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT_SCHEME_B — identical access pattern to scheme a:
+        // 32-byte loads at `32 * c` within `k_padded / 4` bytes of both
+        // rows (`a_len * 4 >= vals` / `w_len * 4 >= vals`), 16-byte LUT
+        // load covered by `lut_len == 16`, AVX2 from target_feature.
+        unsafe {
+            let lutv = load_lut(lut);
+            let m3 = _mm256_set1_epi8(0x03);
+            let mc = _mm256_set1_epi8(0x0C);
+            let zero = _mm256_setzero_si256();
+            let mut acc = _mm256_setzero_si256();
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+                let vw = _mm256_loadu_si256(wrow.as_ptr().add(32 * c) as *const __m256i);
+                let w2 = _mm256_srli_epi32(vw, 2); // crumbs 2,3 shifted toward [3:2]
+                let a2 = _mm256_srli_epi32(va, 2);
+                let i0 = _mm256_or_si256(
+                    _mm256_and_si256(_mm256_slli_epi32(vw, 2), mc),
+                    _mm256_and_si256(va, m3),
+                );
+                let i1 = _mm256_or_si256(_mm256_and_si256(vw, mc), _mm256_and_si256(a2, m3));
+                let i2 = _mm256_or_si256(
+                    _mm256_and_si256(w2, mc),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                );
+                // round 3: (w>>4)&mc | (a>>6) — a>>6 has bits [1:0] only,
+                // and epi32 shifts leak at most neighbouring-byte crumbs
+                // into bits >= 2 of... no: a>>6 within epi32 lanes brings
+                // byte b+1 bits into byte b bits [7:2]; pshufb masks bits
+                // 4-6 but bits [3:2] would corrupt the weight field,
+                // EXCEPT we OR the weight field in — so we shift the
+                // *or-combined* register: build t = (w>>4)&mc first, then
+                // or with (a>>6)&m3... the elision is only safe for the
+                // last byte; keep correctness: elide instead the *weight*
+                // mask by pre-cleaning: w>>4 of the top crumb is clean in
+                // bits [3:2] per byte? No — same leak. => only genuine
+                // elision: compute a6 = srli_epi16(va, 6) and rely on
+                // pshufb ignoring bits 4-6 after masking bit7+[3:2]: not
+                // free either. We therefore keep round 3 masked but reuse
+                // w2/a2 (hoisting wins come from ILP, not op count).
+                let i3 = _mm256_or_si256(
+                    _mm256_and_si256(_mm256_srli_epi32(w2, 2), mc),
+                    _mm256_and_si256(_mm256_srli_epi32(a2, 4), m3),
+                );
+                for idx in [i0, i1, i2, i3] {
+                    let prod = _mm256_shuffle_epi8(lutv, idx);
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                }
             }
+            hsum_epi64(acc)
         }
-        hsum_epi64(acc)
     }
 
     /// Scheme c: weights byte-expanded & round-grouped offline
@@ -401,32 +611,42 @@ pub(crate) mod avx2 {
     /// Per 128 values: 3 shifts, 4 ands, 4 ors, 4 shuffles.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_c(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        debug_assert!(arow.len() >= k_padded / 4, "activation row too short");
-        // ByteHi expands to one byte per value.
-        debug_assert!(wrow.len() >= k_padded, "weight row too short");
-        let lutv = load_lut(lut);
-        let m3 = _mm256_set1_epi8(0x03);
-        let zero = _mm256_setzero_si256();
-        let mut acc = _mm256_setzero_si256();
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
-            let wbase = wrow.as_ptr().add(128 * c);
-            let ta = [
-                _mm256_and_si256(va, m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
-                _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
-            ];
-            for (i, tai) in ta.iter().enumerate() {
-                let tw = _mm256_loadu_si256(wbase.add(32 * i) as *const __m256i);
-                let idx = _mm256_or_si256(tw, *tai);
-                let prod = _mm256_shuffle_epi8(lutv, idx);
-                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            C_DOT_SCHEME_C,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrow.len(),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT_SCHEME_C — activation loads stay within
+        // `k_padded / 4` bytes (`a_len * 4 >= vals`); ByteHi weight loads
+        // reach `128 * c + 32 * i + 32 <= k_padded` bytes
+        // (`w_len >= vals`); 16-byte LUT load covered by `lut_len == 16`;
+        // AVX2 from this fn's target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let m3 = _mm256_set1_epi8(0x03);
+            let zero = _mm256_setzero_si256();
+            let mut acc = _mm256_setzero_si256();
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                let va = _mm256_loadu_si256(arow.as_ptr().add(32 * c) as *const __m256i);
+                let wbase = wrow.as_ptr().add(128 * c);
+                let ta = [
+                    _mm256_and_si256(va, m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 2), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 4), m3),
+                    _mm256_and_si256(_mm256_srli_epi32(va, 6), m3),
+                ];
+                for (i, tai) in ta.iter().enumerate() {
+                    let tw = _mm256_loadu_si256(wbase.add(32 * i) as *const __m256i);
+                    let idx = _mm256_or_si256(tw, *tai);
+                    let prod = _mm256_shuffle_epi8(lutv, idx);
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                }
             }
+            hsum_epi64(acc)
         }
-        hsum_epi64(acc)
     }
 
     /// Scheme d: complementary nibble layouts — `w | a` directly yields
@@ -437,37 +657,47 @@ pub(crate) mod avx2 {
     /// 2 shifts, 4 shuffles.
     #[target_feature(enable = "avx2")]
     pub(crate) unsafe fn dot_scheme_d(arow: &[u8], wrow: &[u8], lut: &Lut16, k_padded: usize) -> i64 {
-        debug_assert_eq!(k_padded % K_BLOCK, 0, "K not chunk-aligned");
-        // Nibble layouts pack 2 values per byte.
-        debug_assert!(arow.len() >= k_padded / 2, "activation row too short");
-        debug_assert!(wrow.len() >= k_padded / 2, "weight row too short");
-        let lutv = load_lut(lut);
-        let mf = _mm256_set1_epi8(0x0F);
-        let zero = _mm256_setzero_si256();
-        let mut acc = _mm256_setzero_si256();
-        // Nibble layouts: 64 bytes per 128 values.
-        let chunks = k_padded / K_BLOCK;
-        for c in 0..chunks {
-            for half in 0..2 {
-                let off = 64 * c + 32 * half;
-                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                let fused = _mm256_or_si256(vw, va);
-                let ilo = _mm256_and_si256(fused, mf);
-                // High nibble: bits [7:4] → [3:0]; epi32 shift leaks the
-                // next byte's low nibble into bits [7:4], which pshufb
-                // ignores (bit 7 of the shifted result is bit 11 of the
-                // fused pair = next byte's bit 3 — may be set! Use epi16
-                // shift + mask-free trick: shift each 16-bit lane right 4
-                // then AND with 0x0F0F is needed... keep one AND).
-                let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
-                for idx in [ilo, ihi] {
-                    let prod = _mm256_shuffle_epi8(lutv, idx);
-                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            C_DOT_SCHEME_D,
+            vals: k_padded,
+            a_len: arow.len(),
+            w_len: wrow.len(),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT_SCHEME_D — nibble rows hold `k_padded / 2` bytes
+        // (`a_len * 2 >= vals` / `w_len * 2 >= vals`) and every 32-byte
+        // load reaches `64 * c + 32 * half + 32 <= k_padded / 2`; 16-byte
+        // LUT load covered by `lut_len == 16`; AVX2 from target_feature.
+        unsafe {
+            let lutv = load_lut(lut);
+            let mf = _mm256_set1_epi8(0x0F);
+            let zero = _mm256_setzero_si256();
+            let mut acc = _mm256_setzero_si256();
+            // Nibble layouts: 64 bytes per 128 values.
+            let chunks = k_padded / K_BLOCK;
+            for c in 0..chunks {
+                for half in 0..2 {
+                    let off = 64 * c + 32 * half;
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                    let fused = _mm256_or_si256(vw, va);
+                    let ilo = _mm256_and_si256(fused, mf);
+                    // High nibble: bits [7:4] → [3:0]; epi32 shift leaks
+                    // the next byte's low nibble into bits [7:4], which
+                    // pshufb ignores (bit 7 of the shifted result is bit
+                    // 11 of the fused pair = next byte's bit 3 — may be
+                    // set! Use epi16 shift + mask-free trick: shift each
+                    // 16-bit lane right 4 then AND with 0x0F0F is
+                    // needed... keep one AND).
+                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                    for idx in [ilo, ihi] {
+                        let prod = _mm256_shuffle_epi8(lutv, idx);
+                        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(prod, zero));
+                    }
                 }
             }
+            hsum_epi64(acc)
         }
-        hsum_epi64(acc)
     }
 }
 

@@ -122,6 +122,38 @@ impl TileKernel for Lut16F32Tile {
     }
 }
 
+crate::kernel_contract! {
+    pub(crate) static C_TILE_F32_1X4 = {
+        kernel: "lut16_f32::avx2::tile_f32_1x4",
+        isa: Avx2,
+        features: "avx2",
+        doc: "1x4 register-tiled f32-entry LUT kernel, nibble layouts (2 codes/byte).",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_TILE_F32 = {
+        kernel: "lut16_f32::avx2::tile_f32",
+        isa: Avx2,
+        features: "avx2",
+        doc: "Per-pair f32-entry LUT tile kernel (remainder panels), nibble layouts.",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use super::*;
@@ -130,23 +162,35 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_ps(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps(v, 1);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
-        _mm_cvtss_f32(s)
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps(v, 1);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+            _mm_cvtss_f32(s)
+        }
     }
 
     /// Look up 8 f32 products for 8 dword-expanded indices.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn lookup8(lut_lo: __m256, lut_hi: __m256, idx: __m256i) -> __m256 {
-        let lo = _mm256_permutevar8x32_ps(lut_lo, idx);
-        let hi = _mm256_permutevar8x32_ps(lut_hi, idx);
-        // Select by index bit 3 → move to the dword sign bit for blendv.
-        let sel = _mm256_castsi256_ps(_mm256_slli_epi32(idx, 28));
-        _mm256_blendv_ps(lo, hi, sel)
+        // CONTRACT: helper — register-only permute/blend, no memory
+        // access; callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm256_permutevar8x32_ps(lut_lo, idx);
+            let hi = _mm256_permutevar8x32_ps(lut_hi, idx);
+            // Select by index bit 3 → move to the dword sign bit for blendv.
+            let sel = _mm256_castsi256_ps(_mm256_slli_epi32(idx, 28));
+            _mm256_blendv_ps(lo, hi, sel)
+        }
     }
 
     /// 1×4 register-tiled f32 kernel over one K block: each 32-byte
@@ -164,42 +208,52 @@ mod avx2 {
         mt: usize,
         sums: &mut [[f32; 4]; 4],
     ) {
-        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Nibble layouts pack 2 values per byte.
-            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
-        }
-        let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
-        let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
-        let mf = _mm256_set1_epi8(0x0F);
-        let bytes = vals / 2;
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm256_setzero_ps(); 4];
-            let mut off = 0usize;
-            while off < bytes {
-                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                for (j, wrow) in wf.iter().enumerate() {
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                    let fused = _mm256_or_si256(vw, va);
-                    let ilo = _mm256_and_si256(fused, mf);
-                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
-                    for idxv in [ilo, ihi] {
-                        let q0 = _mm256_castsi256_si128(idxv);
-                        let q1 = _mm256_extracti128_si256(idxv, 1);
-                        let e0 = _mm256_cvtepu8_epi32(q0);
-                        let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
-                        let e2 = _mm256_cvtepu8_epi32(q1);
-                        let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
-                        for e in [e0, e1, e2, e3] {
-                            acc[j] = _mm256_add_ps(acc[j], lookup8(lut_lo, lut_hi, e));
+        crate::contract_assert!(
+            super::C_TILE_F32_1X4,
+            mt: mt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_TILE_F32_1X4 — nibble layouts pack 2 codes/byte, so
+        // every fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`) and each 32-byte load reaches
+        // `off + 32 <= vals / 2` (vals is a K_BLOCK multiple). The two
+        // 8-float table loads at offsets 0 and 8 are covered by
+        // `lut_len == 16`. AVX2 comes from this fn's target_feature set.
+        unsafe {
+            let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
+            let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
+            let mf = _mm256_set1_epi8(0x0F);
+            let bytes = vals / 2;
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm256_setzero_ps(); 4];
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    for (j, wrow) in wf.iter().enumerate() {
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                        let fused = _mm256_or_si256(vw, va);
+                        let ilo = _mm256_and_si256(fused, mf);
+                        let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                        for idxv in [ilo, ihi] {
+                            let q0 = _mm256_castsi256_si128(idxv);
+                            let q1 = _mm256_extracti128_si256(idxv, 1);
+                            let e0 = _mm256_cvtepu8_epi32(q0);
+                            let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
+                            let e2 = _mm256_cvtepu8_epi32(q1);
+                            let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
+                            for e in [e0, e1, e2, e3] {
+                                acc[j] = _mm256_add_ps(acc[j], lookup8(lut_lo, lut_hi, e));
+                            }
                         }
                     }
+                    off += 32;
                 }
-                off += 32;
-            }
-            for (j, a) in acc.iter().enumerate() {
-                sums[i][j] = hsum_ps(*a);
+                for (j, a) in acc.iter().enumerate() {
+                    sums[i][j] = hsum_ps(*a);
+                }
             }
         }
     }
@@ -217,42 +271,53 @@ mod avx2 {
         nt: usize,
         sums: &mut [[f32; 4]; 4],
     ) {
-        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Nibble layouts pack 2 values per byte.
-            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
-        }
-        let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
-        let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
-        let mf = _mm256_set1_epi8(0x0F);
-        let bytes = vals / 2;
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            for (j, wrow) in wf.iter().enumerate().take(nt) {
-                let mut acc = _mm256_setzero_ps();
-                let mut off = 0usize;
-                while off < bytes {
-                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                    let fused = _mm256_or_si256(vw, va);
-                    let ilo = _mm256_and_si256(fused, mf);
-                    let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
-                    // Expand 32 byte-indices → 4 groups of 8 dwords each
-                    // and accumulate products.
-                    for idxv in [ilo, ihi] {
-                        let q0 = _mm256_castsi256_si128(idxv);
-                        let q1 = _mm256_extracti128_si256(idxv, 1);
-                        let e0 = _mm256_cvtepu8_epi32(q0);
-                        let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
-                        let e2 = _mm256_cvtepu8_epi32(q1);
-                        let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
-                        for e in [e0, e1, e2, e3] {
-                            acc = _mm256_add_ps(acc, lookup8(lut_lo, lut_hi, e));
+        crate::contract_assert!(
+            super::C_TILE_F32,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_TILE_F32 — nibble layouts pack 2 codes/byte, so
+        // every fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`) and each 32-byte load reaches
+        // `off + 32 <= vals / 2` (vals is a K_BLOCK multiple). The two
+        // 8-float table loads at offsets 0 and 8 are covered by
+        // `lut_len == 16`. AVX2 comes from this fn's target_feature set.
+        unsafe {
+            let lut_lo = _mm256_loadu_ps(lut.table.as_ptr());
+            let lut_hi = _mm256_loadu_ps(lut.table.as_ptr().add(8));
+            let mf = _mm256_set1_epi8(0x0F);
+            let bytes = vals / 2;
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                for (j, wrow) in wf.iter().enumerate().take(nt) {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut off = 0usize;
+                    while off < bytes {
+                        let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                        let fused = _mm256_or_si256(vw, va);
+                        let ilo = _mm256_and_si256(fused, mf);
+                        let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                        // Expand 32 byte-indices → 4 groups of 8 dwords
+                        // each and accumulate products.
+                        for idxv in [ilo, ihi] {
+                            let q0 = _mm256_castsi256_si128(idxv);
+                            let q1 = _mm256_extracti128_si256(idxv, 1);
+                            let e0 = _mm256_cvtepu8_epi32(q0);
+                            let e1 = _mm256_cvtepu8_epi32(_mm_srli_si128(q0, 8));
+                            let e2 = _mm256_cvtepu8_epi32(q1);
+                            let e3 = _mm256_cvtepu8_epi32(_mm_srli_si128(q1, 8));
+                            for e in [e0, e1, e2, e3] {
+                                acc = _mm256_add_ps(acc, lookup8(lut_lo, lut_hi, e));
+                            }
                         }
+                        off += 32;
                     }
-                    off += 32;
+                    sums[i][j] = hsum_ps(acc);
                 }
-                sums[i][j] = hsum_ps(acc);
             }
         }
     }

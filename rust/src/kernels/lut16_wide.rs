@@ -260,6 +260,54 @@ impl TileKernel for LutWideTile {
     }
 }
 
+crate::kernel_contract! {
+    pub(crate) static C_TILE3_AVX2 = {
+        kernel: "lut16_wide::avx2::tile3",
+        isa: Avx2,
+        features: "avx2",
+        doc: "4x4 3-bit LUT tile kernel: four pshufb sub-tables + blendv select.",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 64 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            lut64: "q.lut_len == 64" => |q| q.lut_len == 64,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_TILE4_AVX2 = {
+        kernel: "lut16_wide::avx2::tile4",
+        isa: Avx2,
+        features: "avx2",
+        doc: "4x4 4-bit LUT tile kernel: sixteen sub-tables via cmpeq+mask.",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 256 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            lut256: "q.lut_len == 256" => |q| q.lut_len == 256,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_TILE3_VPERMB = {
+        kernel: "lut16_wide::avx512::tile3_vpermb",
+        isa: Avx512,
+        features: "avx512f,avx512bw,avx512vbmi",
+        doc: "4x4 3-bit LUT tile kernel: whole 64-entry table in one vpermb register.",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 64 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % crate::kernels::K_BLOCK == 0,
+            lut64: "q.lut_len == 64" => |q| q.lut_len == 64,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use super::*;
@@ -279,68 +327,78 @@ mod avx2 {
         mt: usize,
         nt: usize,
     ) -> [[i64; 4]; 4] {
-        debug_assert_eq!(lut.table.len(), 64);
-        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Dense3 packs 2 codes/byte: vals/2 bytes per fragment.
-            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
-        }
-        // Four 16-entry sub-tables, each broadcast to both lanes.
-        let mut sub = [_mm256_setzero_si256(); 4];
-        for (t, s) in sub.iter_mut().enumerate() {
-            let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
-            *s = _mm256_broadcastsi128_si256(tt);
-        }
-        let m7 = _mm256_set1_epi8(0x07);
-        let m38 = _mm256_set1_epi8(0x38);
-        let zero = _mm256_setzero_si256();
-        let bytes = vals / 2;
-        let mut out = [[0i64; 4]; 4];
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm256_setzero_si256(); 4];
-            let mut off = 0usize;
-            while off < bytes {
-                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                // round 0: codes at [2:0]; round 1: at [6:4].
-                let ca0 = _mm256_and_si256(va, m7);
-                let ca1 = _mm256_and_si256(_mm256_srli_epi32(va, 4), m7);
-                for (j, wrow) in wf.iter().enumerate().take(nt) {
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                    for r in 0..2 {
-                        let (ca, cw) = if r == 0 {
-                            (ca0, _mm256_and_si256(_mm256_slli_epi32(vw, 3), m38))
-                        } else {
-                            (ca1, _mm256_and_si256(_mm256_srli_epi32(vw, 1), m38))
-                        };
-                        let idx = _mm256_or_si256(cw, ca); // 6-bit index
-                        // Select sub-table by bits [5:4] using blendv on
-                        // the shifted index (blendv keys on bit 7).
-                        let s01 = _mm256_blendv_epi8(
-                            _mm256_shuffle_epi8(sub[0], idx),
-                            _mm256_shuffle_epi8(sub[1], idx),
-                            _mm256_slli_epi32(idx, 3), // bit4 → bit7
-                        );
-                        let s23 = _mm256_blendv_epi8(
-                            _mm256_shuffle_epi8(sub[2], idx),
-                            _mm256_shuffle_epi8(sub[3], idx),
-                            _mm256_slli_epi32(idx, 3),
-                        );
-                        let prod = _mm256_blendv_epi8(
-                            s01,
-                            s23,
-                            _mm256_slli_epi32(idx, 2), // bit5 → bit7
-                        );
-                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            C_TILE3_AVX2,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_TILE3_AVX2 — Dense3 packs 2 codes/byte, so every
+        // fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`) and each 32-byte load reaches
+        // `off + 32 <= vals / 2`; the four 16-byte sub-table loads at
+        // `16 * t, t < 4` are covered by `lut_len == 64`. AVX2 comes
+        // from this fn's target_feature set.
+        unsafe {
+            // Four 16-entry sub-tables, each broadcast to both lanes.
+            let mut sub = [_mm256_setzero_si256(); 4];
+            for (t, s) in sub.iter_mut().enumerate() {
+                let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
+                *s = _mm256_broadcastsi128_si256(tt);
+            }
+            let m7 = _mm256_set1_epi8(0x07);
+            let m38 = _mm256_set1_epi8(0x38);
+            let zero = _mm256_setzero_si256();
+            let bytes = vals / 2;
+            let mut out = [[0i64; 4]; 4];
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm256_setzero_si256(); 4];
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    // round 0: codes at [2:0]; round 1: at [6:4].
+                    let ca0 = _mm256_and_si256(va, m7);
+                    let ca1 = _mm256_and_si256(_mm256_srli_epi32(va, 4), m7);
+                    for (j, wrow) in wf.iter().enumerate().take(nt) {
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                        for r in 0..2 {
+                            let (ca, cw) = if r == 0 {
+                                (ca0, _mm256_and_si256(_mm256_slli_epi32(vw, 3), m38))
+                            } else {
+                                (ca1, _mm256_and_si256(_mm256_srli_epi32(vw, 1), m38))
+                            };
+                            let idx = _mm256_or_si256(cw, ca); // 6-bit index
+                            // Select sub-table by bits [5:4] using blendv
+                            // on the shifted index (blendv keys on bit 7).
+                            let s01 = _mm256_blendv_epi8(
+                                _mm256_shuffle_epi8(sub[0], idx),
+                                _mm256_shuffle_epi8(sub[1], idx),
+                                _mm256_slli_epi32(idx, 3), // bit4 → bit7
+                            );
+                            let s23 = _mm256_blendv_epi8(
+                                _mm256_shuffle_epi8(sub[2], idx),
+                                _mm256_shuffle_epi8(sub[3], idx),
+                                _mm256_slli_epi32(idx, 3),
+                            );
+                            let prod = _mm256_blendv_epi8(
+                                s01,
+                                s23,
+                                _mm256_slli_epi32(idx, 2), // bit5 → bit7
+                            );
+                            acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
+                        }
                     }
+                    off += 32;
                 }
-                off += 32;
+                for (j, a) in acc.iter().enumerate().take(nt) {
+                    out[i][j] = hsum_epi64(*a);
+                }
             }
-            for (j, a) in acc.iter().enumerate().take(nt) {
-                out[i][j] = hsum_epi64(*a);
-            }
+            out
         }
-        out
     }
 
     /// 4-bit tile kernel over one K block. Dense4: codes at [3:0],
@@ -355,57 +413,67 @@ mod avx2 {
         mt: usize,
         nt: usize,
     ) -> [[i64; 4]; 4] {
-        debug_assert_eq!(lut.table.len(), 256);
-        debug_assert_eq!(vals % crate::kernels::K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Dense4 packs 2 codes/byte: vals/2 bytes per fragment.
-            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
-        }
-        let mut sub = [_mm256_setzero_si256(); 16];
-        for (t, s) in sub.iter_mut().enumerate() {
-            let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
-            *s = _mm256_broadcastsi128_si256(tt);
-        }
-        let mf = _mm256_set1_epi8(0x0F);
-        let zero = _mm256_setzero_si256();
-        let bytes = vals / 2;
-        let mut out = [[0i64; 4]; 4];
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm256_setzero_si256(); 4];
-            let mut off = 0usize;
-            while off < bytes {
-                let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
-                let ca0 = _mm256_and_si256(va, mf);
-                let ca1 = _mm256_and_si256(_mm256_srli_epi16(va, 4), mf);
-                for (j, wrow) in wf.iter().enumerate().take(nt) {
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
-                    for r in 0..2 {
-                        let (ca, cw) = if r == 0 {
-                            (ca0, _mm256_and_si256(vw, mf))
-                        } else {
-                            (ca1, _mm256_and_si256(_mm256_srli_epi16(vw, 4), mf))
-                        };
-                        // prod[b] = sub[cw[b]][ca[b]] — accumulate over
-                        // the 16 possible weight codes with masks.
-                        let mut prod = _mm256_setzero_si256();
-                        for (t, s) in sub.iter().enumerate() {
-                            let sel = _mm256_cmpeq_epi8(cw, _mm256_set1_epi8(t as i8));
-                            prod = _mm256_or_si256(
-                                prod,
-                                _mm256_and_si256(_mm256_shuffle_epi8(*s, ca), sel),
-                            );
+        crate::contract_assert!(
+            C_TILE4_AVX2,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_TILE4_AVX2 — Dense4 packs 2 codes/byte, so every
+        // fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`) and each 32-byte load reaches
+        // `off + 32 <= vals / 2`; the sixteen 16-byte sub-table loads at
+        // `16 * t, t < 16` are covered by `lut_len == 256`. AVX2 comes
+        // from this fn's target_feature set.
+        unsafe {
+            let mut sub = [_mm256_setzero_si256(); 16];
+            for (t, s) in sub.iter_mut().enumerate() {
+                let tt = _mm_loadu_si128(lut.table.as_ptr().add(16 * t) as *const __m128i);
+                *s = _mm256_broadcastsi128_si256(tt);
+            }
+            let mf = _mm256_set1_epi8(0x0F);
+            let zero = _mm256_setzero_si256();
+            let bytes = vals / 2;
+            let mut out = [[0i64; 4]; 4];
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm256_setzero_si256(); 4];
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm256_loadu_si256(arow.as_ptr().add(off) as *const __m256i);
+                    let ca0 = _mm256_and_si256(va, mf);
+                    let ca1 = _mm256_and_si256(_mm256_srli_epi16(va, 4), mf);
+                    for (j, wrow) in wf.iter().enumerate().take(nt) {
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(off) as *const __m256i);
+                        for r in 0..2 {
+                            let (ca, cw) = if r == 0 {
+                                (ca0, _mm256_and_si256(vw, mf))
+                            } else {
+                                (ca1, _mm256_and_si256(_mm256_srli_epi16(vw, 4), mf))
+                            };
+                            // prod[b] = sub[cw[b]][ca[b]] — accumulate over
+                            // the 16 possible weight codes with masks.
+                            let mut prod = _mm256_setzero_si256();
+                            for (t, s) in sub.iter().enumerate() {
+                                let sel = _mm256_cmpeq_epi8(cw, _mm256_set1_epi8(t as i8));
+                                prod = _mm256_or_si256(
+                                    prod,
+                                    _mm256_and_si256(_mm256_shuffle_epi8(*s, ca), sel),
+                                );
+                            }
+                            acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
                         }
-                        acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(prod, zero));
                     }
+                    off += 32;
                 }
-                off += 32;
+                for (j, a) in acc.iter().enumerate().take(nt) {
+                    out[i][j] = hsum_epi64(*a);
+                }
             }
-            for (j, a) in acc.iter().enumerate().take(nt) {
-                out[i][j] = hsum_epi64(*a);
-            }
+            out
         }
-        out
     }
 }
 
@@ -419,19 +487,25 @@ mod avx2 {
 #[cfg(all(target_arch = "x86_64", deepgemm_avx512))]
 mod avx512 {
     use super::*;
-    use crate::kernels::K_BLOCK;
     use std::arch::x86_64::*;
 
     /// Horizontal sum of the eight i64 lanes (SAD accumulators).
     #[inline]
     #[target_feature(enable = "avx512f,avx2")]
     unsafe fn hsum_epi64_512(v: __m512i) -> i64 {
-        let lo = _mm512_castsi512_si256(v);
-        let hi = _mm512_extracti64x4_epi64(v, 1);
-        let d256 = _mm256_add_epi64(lo, hi);
-        let d = _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
-        let e = _mm_shuffle_epi32(d, 238);
-        _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm512_castsi512_si256(v);
+            let hi = _mm512_extracti64x4_epi64(v, 1);
+            let d256 = _mm256_add_epi64(lo, hi);
+            let d =
+                _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
+            let e = _mm_shuffle_epi32(d, 238);
+            _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+        }
     }
 
     /// 3-bit tile kernel over one K block on 512-bit vectors. Dense3:
@@ -447,47 +521,58 @@ mod avx512 {
         mt: usize,
         nt: usize,
     ) -> [[i64; 4]; 4] {
-        debug_assert_eq!(lut.table.len(), 64);
-        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Dense3 packs 2 codes/byte: vals/2 bytes per fragment.
-            debug_assert!(ar[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wf[r].len() >= vals / 2, "weight fragment too short");
-        }
-        // The whole 64-entry table in one register: index = (w<<3)|a.
-        let lutv = _mm512_loadu_epi8(lut.table.as_ptr() as *const i8);
-        let m7 = _mm512_set1_epi8(0x07);
-        let m38 = _mm512_set1_epi8(0x38);
-        let zero = _mm512_setzero_si512();
-        let bytes = vals / 2;
-        let mut out = [[0i64; 4]; 4];
-        for (i, arow) in ar.iter().enumerate().take(mt) {
-            let mut acc = [_mm512_setzero_si512(); 4];
-            let mut off = 0usize;
-            while off < bytes {
-                let va = _mm512_loadu_epi8(arow.as_ptr().add(off) as *const i8);
-                // round 0: codes at [2:0]; round 1: at [6:4].
-                let ca0 = _mm512_and_si512(va, m7);
-                let ca1 = _mm512_and_si512(_mm512_srli_epi32(va, 4), m7);
-                for (j, wrow) in wf.iter().enumerate().take(nt) {
-                    let vw = _mm512_loadu_epi8(wrow.as_ptr().add(off) as *const i8);
-                    for r in 0..2 {
-                        let (ca, cw) = if r == 0 {
-                            (ca0, _mm512_and_si512(_mm512_slli_epi32(vw, 3), m38))
-                        } else {
-                            (ca1, _mm512_and_si512(_mm512_srli_epi32(vw, 1), m38))
-                        };
-                        let prod = _mm512_permutexvar_epi8(_mm512_or_si512(cw, ca), lutv);
-                        acc[j] = _mm512_add_epi64(acc[j], _mm512_sad_epu8(prod, zero));
+        crate::contract_assert!(
+            super::C_TILE3_VPERMB,
+            mt: mt,
+            nt: nt,
+            vals: vals,
+            a_len: ar.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wf.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_TILE3_VPERMB — Dense3 packs 2 codes/byte, so every
+        // fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`). `vals % K_BLOCK == 0` with K_BLOCK = 128
+        // makes vals/2 a multiple of 64, so each 64-byte load reaches
+        // `off + 64 <= vals / 2`; the single 64-byte whole-table load is
+        // covered by `lut_len == 64`. AVX-512 F/BW/VBMI come from this
+        // fn's target_feature set.
+        unsafe {
+            // The whole 64-entry table in one register: index = (w<<3)|a.
+            let lutv = _mm512_loadu_epi8(lut.table.as_ptr() as *const i8);
+            let m7 = _mm512_set1_epi8(0x07);
+            let m38 = _mm512_set1_epi8(0x38);
+            let zero = _mm512_setzero_si512();
+            let bytes = vals / 2;
+            let mut out = [[0i64; 4]; 4];
+            for (i, arow) in ar.iter().enumerate().take(mt) {
+                let mut acc = [_mm512_setzero_si512(); 4];
+                let mut off = 0usize;
+                while off < bytes {
+                    let va = _mm512_loadu_epi8(arow.as_ptr().add(off) as *const i8);
+                    // round 0: codes at [2:0]; round 1: at [6:4].
+                    let ca0 = _mm512_and_si512(va, m7);
+                    let ca1 = _mm512_and_si512(_mm512_srli_epi32(va, 4), m7);
+                    for (j, wrow) in wf.iter().enumerate().take(nt) {
+                        let vw = _mm512_loadu_epi8(wrow.as_ptr().add(off) as *const i8);
+                        for r in 0..2 {
+                            let (ca, cw) = if r == 0 {
+                                (ca0, _mm512_and_si512(_mm512_slli_epi32(vw, 3), m38))
+                            } else {
+                                (ca1, _mm512_and_si512(_mm512_srli_epi32(vw, 1), m38))
+                            };
+                            let prod = _mm512_permutexvar_epi8(_mm512_or_si512(cw, ca), lutv);
+                            acc[j] = _mm512_add_epi64(acc[j], _mm512_sad_epu8(prod, zero));
+                        }
                     }
+                    off += 64;
                 }
-                off += 64;
+                for (j, a) in acc.iter().enumerate().take(nt) {
+                    out[i][j] = hsum_epi64_512(*a);
+                }
             }
-            for (j, a) in acc.iter().enumerate().take(nt) {
-                out[i][j] = hsum_epi64_512(*a);
-            }
+            out
         }
-        out
     }
 }
 

@@ -100,8 +100,14 @@
 //!   the cache-blocked, register-tiled, multi-threaded driver
 //! - [`tune`] — compile-time cache-block autotuning with a persisted
 //!   process-wide tuning cache
+//! - [`contract`] — the kernel safety-contract registry: every unsafe
+//!   micro-kernel's preconditions declared once via `kernel_contract!`,
+//!   asserted at entry via `contract_assert!`, queryable via
+//!   [`contract::contracts`] (see `docs/SAFETY.md`)
 
 pub mod bitserial;
+#[warn(missing_docs)]
+pub mod contract;
 pub mod fp32;
 pub mod int8;
 pub mod lut16;

@@ -94,8 +94,13 @@ impl Isa {
 
     /// Whether this arm can execute on the current host (compile-time
     /// arch + runtime feature detection + toolchain support for the
-    /// AVX-512 intrinsics).
+    /// AVX-512 intrinsics). Under Miri only the scalar arm reports
+    /// supported — the interpreter has no vector intrinsics, so the
+    /// whole dispatch layer collapses onto the portable paths there.
     pub fn is_supported(&self) -> bool {
+        if cfg!(miri) {
+            return matches!(self, Isa::Scalar);
+        }
         match self {
             Isa::Scalar => true,
             Isa::Neon => cfg!(target_arch = "aarch64"),

@@ -625,7 +625,12 @@ impl<T> Clone for SendMut<T> {
     }
 }
 impl<T> Copy for SendMut<T> {}
+// SAFETY: the task grid partitions the output into disjoint
+// (M-range × N-range) regions; every worker writes only through offsets
+// inside its own region, so moving the pointer across threads is sound.
 unsafe impl<T> Send for SendMut<T> {}
+// SAFETY: as for Send — concurrent tasks never write overlapping
+// offsets, and nothing reads the output until the scope join.
 unsafe impl<T> Sync for SendMut<T> {}
 
 /// Read-only window into the GEMM accumulator, handed to a
@@ -1508,6 +1513,38 @@ impl TileKernel for Lut16Tile {
     }
 }
 
+crate::kernel_contract! {
+    pub(crate) static C_DOT4X4_SCHEME_D_AVX2 = {
+        kernel: "tile::x86::dot4x4_scheme_d",
+        isa: Avx2,
+        features: "avx2",
+        doc: "4x4 register-tiled scheme-d block kernel (pshufb + vpsadbw).",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_DOT4X4_SCHEME_D_AVX512 = {
+        kernel: "tile::x86_512::dot4x4_scheme_d",
+        isa: Avx512,
+        features: "avx512f,avx512bw,avx512vbmi",
+        doc: "4x4 register-tiled scheme-d block kernel (vpermb, 64-byte chunks).",
+        example: { mt: 4, nt: 4, vals: 128, a_len: 64, w_len: 64, lut_len: 16 },
+        rules: {
+            k_chunk: "q.vals % K_BLOCK == 0" => |q| q.vals % K_BLOCK == 0,
+            lut16: "q.lut_len == 16" => |q| q.lut_len == 16,
+            a_rows: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_rows: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use crate::kernels::lut16::avx2::{hsum_epi64, load_lut};
@@ -1528,48 +1565,57 @@ mod x86 {
         lut: &Lut16,
         vals: usize,
     ) -> [[i64; 4]; 4] {
-        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Scheme d packs 2 codes/byte: vals/2 bytes per fragment.
-            debug_assert!(arows[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wrows[r].len() >= vals / 2, "weight fragment too short");
-        }
-        let lutv = load_lut(lut);
-        let mf = _mm256_set1_epi8(0x0F);
-        let zero = _mm256_setzero_si256();
-        let mut acc = [[_mm256_setzero_si256(); 4]; 4];
-        let chunks = vals / K_BLOCK;
-        for c in 0..chunks {
-            for half in 0..2 {
-                let off = 64 * c + 32 * half;
-                let va = [
-                    _mm256_loadu_si256(arows[0].as_ptr().add(off) as *const __m256i),
-                    _mm256_loadu_si256(arows[1].as_ptr().add(off) as *const __m256i),
-                    _mm256_loadu_si256(arows[2].as_ptr().add(off) as *const __m256i),
-                    _mm256_loadu_si256(arows[3].as_ptr().add(off) as *const __m256i),
-                ];
-                for j in 0..4 {
-                    let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
-                    for (i, vai) in va.iter().enumerate() {
-                        let fused = _mm256_or_si256(vw, *vai);
-                        let ilo = _mm256_and_si256(fused, mf);
-                        let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
-                        let sum8 = _mm256_add_epi8(
-                            _mm256_shuffle_epi8(lutv, ilo),
-                            _mm256_shuffle_epi8(lutv, ihi),
-                        );
-                        acc[i][j] = _mm256_add_epi64(acc[i][j], _mm256_sad_epu8(sum8, zero));
+        crate::contract_assert!(
+            super::C_DOT4X4_SCHEME_D_AVX2,
+            vals: vals,
+            a_len: arows.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wrows.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT4X4_SCHEME_D_AVX2 — scheme d packs 2 codes/byte,
+        // so every fragment holds >= vals/2 bytes (`a_len * 2 >= vals` /
+        // `w_len * 2 >= vals`) and each 32-byte load reaches
+        // `64 * c + 32 * half + 32 <= vals / 2`; the 16-byte LUT load is
+        // covered by `lut_len == 16`. AVX2 comes from this fn's
+        // target_feature set.
+        unsafe {
+            let lutv = load_lut(lut);
+            let mf = _mm256_set1_epi8(0x0F);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [[_mm256_setzero_si256(); 4]; 4];
+            let chunks = vals / K_BLOCK;
+            for c in 0..chunks {
+                for half in 0..2 {
+                    let off = 64 * c + 32 * half;
+                    let va = [
+                        _mm256_loadu_si256(arows[0].as_ptr().add(off) as *const __m256i),
+                        _mm256_loadu_si256(arows[1].as_ptr().add(off) as *const __m256i),
+                        _mm256_loadu_si256(arows[2].as_ptr().add(off) as *const __m256i),
+                        _mm256_loadu_si256(arows[3].as_ptr().add(off) as *const __m256i),
+                    ];
+                    for j in 0..4 {
+                        let vw = _mm256_loadu_si256(wrows[j].as_ptr().add(off) as *const __m256i);
+                        for (i, vai) in va.iter().enumerate() {
+                            let fused = _mm256_or_si256(vw, *vai);
+                            let ilo = _mm256_and_si256(fused, mf);
+                            let ihi = _mm256_and_si256(_mm256_srli_epi16(fused, 4), mf);
+                            let sum8 = _mm256_add_epi8(
+                                _mm256_shuffle_epi8(lutv, ilo),
+                                _mm256_shuffle_epi8(lutv, ihi),
+                            );
+                            acc[i][j] = _mm256_add_epi64(acc[i][j], _mm256_sad_epu8(sum8, zero));
+                        }
                     }
                 }
             }
-        }
-        let mut out = [[0i64; 4]; 4];
-        for (i, row) in acc.iter().enumerate() {
-            for (j, v) in row.iter().enumerate() {
-                out[i][j] = hsum_epi64(*v);
+            let mut out = [[0i64; 4]; 4];
+            for (i, row) in acc.iter().enumerate() {
+                for (j, v) in row.iter().enumerate() {
+                    out[i][j] = hsum_epi64(*v);
+                }
             }
+            out
         }
-        out
     }
 }
 
@@ -1592,12 +1638,17 @@ mod x86_512 {
     #[inline]
     #[target_feature(enable = "avx512f,avx2")]
     unsafe fn hsum_epi64_512(v: __m512i) -> i64 {
-        let lo = _mm512_castsi512_si256(v);
-        let hi = _mm512_extracti64x4_epi64(v, 1);
-        let d256 = _mm256_add_epi64(lo, hi);
-        let d = _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
-        let e = _mm_shuffle_epi32(d, 238);
-        _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+        // CONTRACT: helper — register-only; callers own the kernel contract.
+        // SAFETY: register-to-register intrinsics with no memory access;
+        // the caller guarantees the AVX-512F/AVX2 features.
+        unsafe {
+            let lo = _mm512_castsi512_si256(v);
+            let hi = _mm512_extracti64x4_epi64(v, 1);
+            let d256 = _mm256_add_epi64(lo, hi);
+            let d = _mm_add_epi64(_mm256_castsi256_si128(d256), _mm256_extracti128_si256(d256, 1));
+            let e = _mm_shuffle_epi32(d, 238);
+            _mm_cvtsi128_si64(_mm_add_epi64(e, d))
+        }
     }
 
     /// Broadcast the 16-entry biased table into all four 128-bit lanes.
@@ -1607,9 +1658,15 @@ mod x86_512 {
     #[inline]
     #[target_feature(enable = "avx512f")]
     unsafe fn load_lut_512(lut: &Lut16) -> __m512i {
-        debug_assert_eq!(lut.table.len(), 16);
-        let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
-        _mm512_broadcast_i32x4(t)
+        // CONTRACT: helper — callers assert `lut_len == 16` via their own
+        // contract before the 16-byte load below.
+        // SAFETY: the calling kernel's contract requires
+        // `lut.table.len() == 16`, covering the one 16-byte load; the
+        // caller guarantees AVX-512F.
+        unsafe {
+            let t = _mm_loadu_si128(lut.table.as_ptr() as *const __m128i);
+            _mm512_broadcast_i32x4(t)
+        }
     }
 
     /// 4×4 register-tiled scheme-d micro-kernel on 512-bit vectors: one
@@ -1625,46 +1682,55 @@ mod x86_512 {
         lut: &Lut16,
         vals: usize,
     ) -> [[i64; 4]; 4] {
-        debug_assert_eq!(vals % K_BLOCK, 0, "K fragment not chunk-aligned");
-        for r in 0..4 {
-            // Scheme d packs 2 codes/byte: vals/2 bytes per fragment.
-            debug_assert!(arows[r].len() >= vals / 2, "activation fragment too short");
-            debug_assert!(wrows[r].len() >= vals / 2, "weight fragment too short");
-        }
-        let lutv = load_lut_512(lut);
-        let mf = _mm512_set1_epi8(0x0F);
-        let zero = _mm512_setzero_si512();
-        let mut acc = [[_mm512_setzero_si512(); 4]; 4];
-        let chunks = vals / K_BLOCK;
-        for c in 0..chunks {
-            let off = 64 * c;
-            let va = [
-                _mm512_loadu_epi8(arows[0].as_ptr().add(off) as *const i8),
-                _mm512_loadu_epi8(arows[1].as_ptr().add(off) as *const i8),
-                _mm512_loadu_epi8(arows[2].as_ptr().add(off) as *const i8),
-                _mm512_loadu_epi8(arows[3].as_ptr().add(off) as *const i8),
-            ];
-            for j in 0..4 {
-                let vw = _mm512_loadu_epi8(wrows[j].as_ptr().add(off) as *const i8);
-                for (i, vai) in va.iter().enumerate() {
-                    let fused = _mm512_or_si512(vw, *vai);
-                    let ilo = _mm512_and_si512(fused, mf);
-                    let ihi = _mm512_and_si512(_mm512_srli_epi16(fused, 4), mf);
-                    let sum8 = _mm512_add_epi8(
-                        _mm512_permutexvar_epi8(ilo, lutv),
-                        _mm512_permutexvar_epi8(ihi, lutv),
-                    );
-                    acc[i][j] = _mm512_add_epi64(acc[i][j], _mm512_sad_epu8(sum8, zero));
+        crate::contract_assert!(
+            super::C_DOT4X4_SCHEME_D_AVX512,
+            vals: vals,
+            a_len: arows.iter().map(|r| r.len()).min().unwrap_or(0),
+            w_len: wrows.iter().map(|r| r.len()).min().unwrap_or(0),
+            lut_len: lut.table.len(),
+        );
+        // SAFETY: C_DOT4X4_SCHEME_D_AVX512 — scheme d packs 2
+        // codes/byte, so every fragment holds >= vals/2 bytes
+        // (`a_len * 2 >= vals` / `w_len * 2 >= vals`) and each 64-byte
+        // load reaches `64 * c + 64 <= vals / 2`; the 16-byte LUT load
+        // is covered by `lut_len == 16`. The AVX-512 F/BW/VBMI features
+        // come from this fn's target_feature set.
+        unsafe {
+            let lutv = load_lut_512(lut);
+            let mf = _mm512_set1_epi8(0x0F);
+            let zero = _mm512_setzero_si512();
+            let mut acc = [[_mm512_setzero_si512(); 4]; 4];
+            let chunks = vals / K_BLOCK;
+            for c in 0..chunks {
+                let off = 64 * c;
+                let va = [
+                    _mm512_loadu_epi8(arows[0].as_ptr().add(off) as *const i8),
+                    _mm512_loadu_epi8(arows[1].as_ptr().add(off) as *const i8),
+                    _mm512_loadu_epi8(arows[2].as_ptr().add(off) as *const i8),
+                    _mm512_loadu_epi8(arows[3].as_ptr().add(off) as *const i8),
+                ];
+                for j in 0..4 {
+                    let vw = _mm512_loadu_epi8(wrows[j].as_ptr().add(off) as *const i8);
+                    for (i, vai) in va.iter().enumerate() {
+                        let fused = _mm512_or_si512(vw, *vai);
+                        let ilo = _mm512_and_si512(fused, mf);
+                        let ihi = _mm512_and_si512(_mm512_srli_epi16(fused, 4), mf);
+                        let sum8 = _mm512_add_epi8(
+                            _mm512_permutexvar_epi8(ilo, lutv),
+                            _mm512_permutexvar_epi8(ihi, lutv),
+                        );
+                        acc[i][j] = _mm512_add_epi64(acc[i][j], _mm512_sad_epu8(sum8, zero));
+                    }
                 }
             }
-        }
-        let mut out = [[0i64; 4]; 4];
-        for (i, row) in acc.iter().enumerate() {
-            for (j, v) in row.iter().enumerate() {
-                out[i][j] = hsum_epi64_512(*v);
+            let mut out = [[0i64; 4]; 4];
+            for (i, row) in acc.iter().enumerate() {
+                for (j, v) in row.iter().enumerate() {
+                    out[i][j] = hsum_epi64_512(*v);
+                }
             }
+            out
         }
-        out
     }
 }
 

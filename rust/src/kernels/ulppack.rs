@@ -131,12 +131,30 @@ pub fn gemm_scalar(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
 pub fn gemm(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") {
+        // Miri has no vector intrinsics: stay on the scalar reference.
+        if !cfg!(miri) && std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 was just runtime-detected; the kernel's shape
+            // preconditions are asserted at its entry (C_GEMM_ULP_AVX2).
             unsafe { avx2::gemm(a, w, out) };
             return;
         }
     }
     gemm_scalar(a, w, out);
+}
+
+crate::kernel_contract! {
+    pub(crate) static C_GEMM_ULP_AVX2 = {
+        kernel: "ulppack::avx2::gemm",
+        isa: Avx2,
+        features: "avx2",
+        doc: "ULPPACK W2A2 GEMM: vpmullw packed dot products over u16 lanes.",
+        example: { mt: 1, nt: 1, vals: 32, a_len: 16, w_len: 16, lut_len: 0 },
+        rules: {
+            lane_chunk: "q.vals % 32 == 0" => |q| q.vals % 32 == 0,
+            a_row: "q.a_len * 2 >= q.vals" => |q| q.a_len * 2 >= q.vals,
+            w_row: "q.w_len * 2 >= q.vals" => |q| q.w_len * 2 >= q.vals,
+        },
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -147,35 +165,63 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
-        let lo = _mm256_castsi256_si128(v);
-        let hi = _mm256_extracti128_si256(v, 1);
-        let s = _mm_add_epi32(lo, hi);
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
-        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
-        _mm_cvtsi128_si32(s)
+        // CONTRACT: helper — register-only reduction, no memory access;
+        // callers assert the governing kernel contract.
+        // SAFETY: every intrinsic operates on register operands only and
+        // is available under this fn's target_feature set.
+        unsafe {
+            let lo = _mm256_castsi256_si128(v);
+            let hi = _mm256_extracti128_si256(v, 1);
+            let s = _mm_add_epi32(lo, hi);
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+            _mm_cvtsi128_si32(s)
+        }
     }
 
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm(a: &UlpPacked, w: &UlpPacked, out: &mut [i32]) {
-        debug_assert!(a.reversed && !w.reversed);
-        let ones = _mm256_set1_epi16(1);
-        for m in 0..a.rows {
-            let arow = a.row(m);
-            for n in 0..w.rows {
-                let wrow = w.row(n);
-                let mut acc = _mm256_setzero_si256();
-                let mut l = 0usize;
-                while l < a.lanes {
-                    let va = _mm256_loadu_si256(arow.as_ptr().add(l) as *const __m256i);
-                    let vw = _mm256_loadu_si256(wrow.as_ptr().add(l) as *const __m256i);
-                    // One multiply = 16 two-element dot products.
-                    let p = _mm256_mullo_epi16(vw, va);
-                    let mid = _mm256_srli_epi16(p, 8); // u16 dots ≤ 18
-                    // Pairwise-sum u16 dots into i32 lanes.
-                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(mid, ones));
-                    l += 16;
+        crate::contract_assert!(
+            super::C_GEMM_ULP_AVX2,
+            mt: a.rows,
+            nt: w.rows,
+            vals: a.k_padded,
+            a_len: a.lanes,
+            w_len: w.lanes,
+        );
+        // The kernel streams `a.lanes` u16 lanes from both operands, so
+        // mismatched K would read past the shorter weight rows even in
+        // release builds — keep these checks release-safe. The pair
+        // ordering is a correctness (not memory-safety) precondition.
+        assert_eq!(a.k, w.k, "K mismatch");
+        assert!(a.reversed && !w.reversed, "pack a reversed, w normal");
+        assert_eq!(out.len(), a.rows * w.rows);
+        // SAFETY: C_GEMM_ULP_AVX2 — rows of both matrices are exactly
+        // `lanes = k_padded / 2` u16 lanes by construction and
+        // `a.k == w.k` implies equal padding; `k_padded % 32 == 0`
+        // makes lanes a multiple of 16, so every 32-byte (16-lane) load
+        // reaches `l + 16 <= lanes`. AVX2 comes from this fn's
+        // target_feature set.
+        unsafe {
+            let ones = _mm256_set1_epi16(1);
+            for m in 0..a.rows {
+                let arow = a.row(m);
+                for n in 0..w.rows {
+                    let wrow = w.row(n);
+                    let mut acc = _mm256_setzero_si256();
+                    let mut l = 0usize;
+                    while l < a.lanes {
+                        let va = _mm256_loadu_si256(arow.as_ptr().add(l) as *const __m256i);
+                        let vw = _mm256_loadu_si256(wrow.as_ptr().add(l) as *const __m256i);
+                        // One multiply = 16 two-element dot products.
+                        let p = _mm256_mullo_epi16(vw, va);
+                        let mid = _mm256_srli_epi16(p, 8); // u16 dots ≤ 18
+                        // Pairwise-sum u16 dots into i32 lanes.
+                        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(mid, ones));
+                        l += 16;
+                    }
+                    out[m * w.rows + n] = hsum_epi32(acc);
                 }
-                out[m * w.rows + n] = hsum_epi32(acc);
             }
         }
     }

@@ -35,6 +35,16 @@
 //!   packing-scheme analysis (Tab. 3).
 //! - [`util`] — substrates the offline image lacks: CLI parsing, JSON,
 //!   PRNG, thread pool, property-testing helpers.
+//!
+//! Unsafe code is governed by the safety-contract registry
+//! ([`kernels::contract`]) and audited by `cargo xtask audit`; see
+//! `docs/SAFETY.md`.
+
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own justification, even inside `unsafe fn` — enforced here and by
+// `cargo xtask audit` (which also requires `// SAFETY:` comments).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod bench;
 pub mod coordinator;

@@ -13,7 +13,11 @@
 //! - `FailAction::Err` — return a typed [`crate::Error::Runtime`]
 //!   (exercises error propagation without unwinding),
 //! - `FailAction::DelayMs` — sleep before proceeding (exercises
-//!   deadlines, shedding and client-side timeouts).
+//!   deadlines, shedding and client-side timeouts),
+//! - `FailAction::Jitter` — perturb the thread schedule at the site
+//!   with a seeded mix of yields / micro-sleeps / no-ops (exercises
+//!   orderings the unperturbed scheduler rarely produces; the stress
+//!   suite runs the pool and supervisor under several seeds).
 //!
 //! (The arming API — `arm`, `arm_times`, `disarm`, `disarm_all`,
 //! `FailAction` — only exists under the feature, which is why it is
@@ -31,8 +35,9 @@
 //! DEEPGEMM_FAILPOINTS="forward_panic=panic:1;forward_delay_ms=delay:250"
 //! ```
 //!
-//! Actions: `panic[:N]`, `err[:message]`, `delay:MS[:N]` where the
-//! optional trailing `N` caps the number of hits.
+//! Actions: `panic[:N]`, `err[:message]`, `delay:MS[:N]`,
+//! `jitter:SEED[:N]` where the optional trailing `N` caps the number
+//! of hits.
 //!
 //! With the feature disabled, [`eval`] is an inlined `Ok(())` and the
 //! registry does not exist — zero cost on serving hot paths.
@@ -72,6 +77,11 @@ mod imp {
         Err(String),
         /// Sleep this many milliseconds, then proceed normally.
         DelayMs(u64),
+        /// Perturb the thread schedule at the site: each hit advances a
+        /// seeded LCG and, depending on the draw, yields the thread,
+        /// micro-sleeps (< 128 µs), or does nothing. Deterministic per
+        /// (seed, hit index); the value is the current LCG state.
+        Jitter(u64),
     }
 
     #[derive(Clone, Debug)]
@@ -137,6 +147,14 @@ mod imp {
             match reg.get_mut(site) {
                 None => return Ok(()),
                 Some(armed) => {
+                    // Jitter carries its LCG state in the action:
+                    // advance it under the lock so concurrent hitters
+                    // draw distinct values.
+                    if let FailAction::Jitter(state) = &mut armed.action {
+                        *state = state
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(1442695040888963407);
+                    }
                     let action = armed.action.clone();
                     match &mut armed.remaining {
                         Some(0) => {
@@ -162,6 +180,16 @@ mod imp {
             }
             FailAction::DelayMs(ms) => {
                 std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            FailAction::Jitter(state) => {
+                // Top bits pick the perturbation: ~1/2 yield, ~1/4
+                // micro-sleep, ~1/4 proceed untouched.
+                match state >> 62 {
+                    0 | 1 => std::thread::yield_now(),
+                    2 => std::thread::sleep(Duration::from_micros((state >> 32) & 0x7f)),
+                    _ => {}
+                }
                 Ok(())
             }
         }
@@ -207,6 +235,14 @@ mod imp {
                     None => None,
                 };
                 Some(Armed { action: FailAction::DelayMs(ms), remaining })
+            }
+            "jitter" => {
+                let seed: u64 = parts.next()?.parse().ok()?;
+                let remaining = match parts.next() {
+                    Some(n) => Some(n.parse().ok()?),
+                    None => None,
+                };
+                Some(Armed { action: FailAction::Jitter(seed), remaining })
             }
             _ => None,
         }
@@ -258,10 +294,27 @@ mod imp {
         }
 
         #[test]
+        fn jitter_action_is_benign_and_bounded() {
+            // Unbounded jitter never fails or panics, whatever the draw.
+            arm("ut_jitter", FailAction::Jitter(42));
+            for _ in 0..64 {
+                assert!(eval_armed("ut_jitter").is_ok());
+            }
+            assert!(armed_sites().contains(&"ut_jitter".to_string()));
+            disarm("ut_jitter");
+            // Bounded jitter self-disarms like every other action.
+            arm_times("ut_jitter_once", FailAction::Jitter(7), 1);
+            assert!(eval_armed("ut_jitter_once").is_ok());
+            assert!(!armed_sites().contains(&"ut_jitter_once".to_string()));
+        }
+
+        #[test]
         fn env_spec_parses() {
-            let parsed = parse_spec("a=panic:2; b=delay:150 ;c=err:kaput;junk;d=wat:1");
+            let parsed = parse_spec("a=panic:2; b=delay:150 ;c=err:kaput;junk;d=wat:1;e=jitter:7:3");
             let names: Vec<&str> = parsed.iter().map(|(s, _)| s.as_str()).collect();
-            assert_eq!(names, vec!["a", "b", "c"]);
+            assert_eq!(names, vec!["a", "b", "c", "e"]);
+            assert_eq!(parsed[3].1.action, FailAction::Jitter(7));
+            assert_eq!(parsed[3].1.remaining, Some(3));
             assert_eq!(parsed[0].1.action, FailAction::Panic);
             assert_eq!(parsed[0].1.remaining, Some(2));
             assert_eq!(parsed[1].1.action, FailAction::DelayMs(150));

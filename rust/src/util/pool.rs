@@ -56,6 +56,10 @@ impl ThreadPool {
     /// Enqueue a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        // Stress site: widen the window between the in_flight increment
+        // and the enqueue (jitter only — errors are ignored so the site
+        // cannot change `execute`'s infallible contract).
+        let _ = crate::util::failpoint::eval("pool_execute");
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_back(Box::new(job));
@@ -106,8 +110,7 @@ impl ThreadPool {
                 // submitted job has run, so the borrows captured by `job`
                 // outlive its execution. The transmute only erases the
                 // `'env` lifetime bound.
-                let job: Box<dyn FnOnce() + Send + 'static> =
-                    unsafe { std::mem::transmute(job) };
+                let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
                 *pending.0.lock().unwrap() += 1;
                 let rem = pending.clone();
                 let slot = first_panic.clone();
@@ -125,6 +128,9 @@ impl ThreadPool {
                         cv.notify_all();
                     }
                 };
+                // Stress site: perturb the submission loop relative to
+                // workers already draining earlier jobs of this scope.
+                let _ = crate::util::failpoint::eval("pool_scope_submit");
                 // `execute` can only panic before enqueuing (poisoned
                 // queue lock); undo the count so the guard doesn't wait
                 // for a job that never entered the queue.
@@ -169,6 +175,9 @@ fn worker_loop(sh: Arc<Shared>) {
             }
         };
         job();
+        // Stress site: widen the window between job completion and the
+        // work-pulling counter decrement that wakes `wait_idle`.
+        let _ = crate::util::failpoint::eval("pool_job_done");
         if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
             let _g = sh.done_mx.lock().unwrap();
             sh.done_cv.notify_all();

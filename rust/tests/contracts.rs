@@ -1,0 +1,214 @@
+//! Contract-registry property suite (see `docs/SAFETY.md`).
+//!
+//! Three layers of assurance over [`deepgemm::kernels::contract`]:
+//!
+//! 1. **Registry invariants** — the table is populated, kernel paths are
+//!    unique, every example satisfies its own contract.
+//! 2. **Boundary probing** — every contract is fuzzed at boundary
+//!    shapes (each query field swept through 0, 1, MR−1, MR, MR+1, 63,
+//!    64, 65): `check()` must agree *exactly* with the conjunction of
+//!    the contract's rules, out-of-contract shapes must be rejected
+//!    with a violation naming the failed rule — the same rejection the
+//!    kernels' `contract_assert!` performs before any unsafe code runs.
+//! 3. **End-to-end anchoring** — boundary shapes executed through the
+//!    real GEMM plans produce bit-identical results to the scalar
+//!    oracle under every ISA arm the host supports (the plan/pack layer
+//!    pads K so kernels only ever see in-contract shapes).
+
+use deepgemm::kernels::contract::{contracts, find, ShapeQuery};
+use deepgemm::kernels::pack::{self, Layout, Scheme};
+use deepgemm::kernels::simd::Isa;
+use deepgemm::kernels::{
+    int8, oracle_gemm_i32, CodeMat, GemmPlan, Int8Tile, Lut16Tile, PlanOpts,
+};
+use deepgemm::quant::{IntCodebook, Lut16};
+use deepgemm::util::rng::Rng;
+
+/// The boundary axis from the issue: 0, 1, MR−1, MR, MR+1 (MR = NR =
+/// 4), and the 63/64/65 straddle of the 64-element cache line.
+const BOUNDARY: [usize; 8] = [0, 1, 3, 4, 5, 63, 64, 65];
+
+/// Set query field `idx` (mt, nt, vals, a_len, w_len, lut_len) to `v`.
+fn with_field(mut q: ShapeQuery, idx: usize, v: usize) -> ShapeQuery {
+    match idx {
+        0 => q.mt = v,
+        1 => q.nt = v,
+        2 => q.vals = v,
+        3 => q.a_len = v,
+        4 => q.w_len = v,
+        _ => q.lut_len = v,
+    }
+    q
+}
+
+#[test]
+fn registry_invariants() {
+    let all: Vec<_> = contracts().collect();
+    assert!(all.len() >= 15, "registry unexpectedly small: {}", all.len());
+    let mut kernels = std::collections::HashSet::new();
+    for c in &all {
+        assert!(kernels.insert(c.kernel), "duplicate contract for {}", c.kernel);
+        assert!(!c.rules.is_empty(), "{} has no rules", c.kernel);
+        assert!(!c.doc.is_empty(), "{} has no doc line", c.kernel);
+        c.check(&c.example).unwrap_or_else(|v| panic!("example violates own contract: {v}"));
+        assert_eq!(find(c.kernel).map(|f| f.kernel), Some(c.kernel));
+        // Non-scalar arms must name the target features the dispatcher
+        // verified (mirrors `#[target_feature(enable = ...)]`).
+        if c.isa != Isa::Scalar {
+            assert!(!c.features.is_empty(), "{} ({:?}) lists no features", c.kernel, c.isa);
+        }
+    }
+}
+
+#[test]
+fn check_agrees_with_rule_conjunction_at_every_boundary() {
+    for c in contracts() {
+        for field in 0..6 {
+            for &v in &BOUNDARY {
+                let q = with_field(c.example, field, v);
+                let expect = c.rules.iter().all(|r| (r.check)(&q));
+                match c.check(&q) {
+                    Ok(()) => assert!(
+                        expect,
+                        "{}: check() accepted {q:?} but a rule rejects it",
+                        c.kernel
+                    ),
+                    Err(v) => {
+                        assert!(!expect, "{}: check() rejected in-contract {q:?}: {v}", c.kernel);
+                        // The violation names a real rule of this
+                        // contract and carries its verbatim expression.
+                        let rule = c
+                            .rules
+                            .iter()
+                            .find(|r| r.name == v.rule)
+                            .unwrap_or_else(|| panic!("{}: unknown rule '{}'", c.kernel, v.rule));
+                        assert_eq!(rule.expr, v.expr);
+                        assert_eq!(v.kernel, c.kernel);
+                        assert!(v.to_string().contains(v.rule), "{v}");
+                        assert!(v.to_string().contains(v.expr), "{v}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn out_of_contract_k_is_rejected_before_any_unsafe_call() {
+    // Every registered kernel streams K in chunks, so an off-by-one
+    // padded-K must be rejected by `check()` — the same predicate
+    // `contract_assert!` evaluates at kernel entry, i.e. before any
+    // unsafe operation can execute.
+    for c in contracts() {
+        let mut q = c.example;
+        q.vals += 1;
+        let v = c
+            .check(&q)
+            .expect_err(&format!("{}: off-chunk vals={} must be rejected", c.kernel, q.vals));
+        assert_eq!(v.kernel, c.kernel);
+    }
+}
+
+#[test]
+fn empty_work_is_always_in_contract() {
+    // M = 0 / N = 0 / K = 0 degenerate shapes: the kernels run zero
+    // iterations, so the contracts must accept the all-empty query
+    // (with the LUT still present where the contract requires one).
+    for c in contracts() {
+        let q = ShapeQuery { lut_len: c.example.lut_len, ..ShapeQuery::EMPTY };
+        c.check(&q).unwrap_or_else(|v| panic!("{}: empty work rejected: {v}", c.kernel));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end anchoring at boundary shapes.
+// ---------------------------------------------------------------------------
+
+fn supported_arms() -> Vec<Isa> {
+    Isa::ALL.into_iter().filter(|isa| isa.is_supported()).collect()
+}
+
+fn seed(m: usize, n: usize, k: usize) -> u64 {
+    ((m as u64) << 40) ^ ((n as u64) << 20) ^ (k as u64) ^ 0xC0_47AC7
+}
+
+fn opts(isa: Isa) -> PlanOpts {
+    PlanOpts { threads: 1, isa: Some(isa), ..Default::default() }
+}
+
+fn run_lut16_d(m: usize, n: usize, k: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k);
+    let wcb = IntCodebook::signed(2);
+    let acb = IntCodebook::unsigned(2);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let lut = Lut16::build(&wcb, &acb);
+    let ap = pack::pack_activations(&a, Scheme::D);
+    let wp = pack::pack_weights(&w, Scheme::D);
+    let plan = GemmPlan::new(&wp, Lut16Tile::new(Scheme::D, lut), opts(isa));
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn run_int8(m: usize, n: usize, k: usize, isa: Isa) -> Vec<i32> {
+    let s = seed(m, n, k) ^ 0x18;
+    let mut rng = Rng::new(s);
+    let acodes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+    let wvals: Vec<i8> = (0..n * k).map(|_| rng.below(255) as i8).collect();
+    let (wp, sums) = int8::pack_weights_i8(&wvals, n, k);
+    let ap = pack::pack(&CodeMat::from_data(m, k, 8, acodes), Layout::Int8);
+    let plan = GemmPlan::new(&wp, Int8Tile::new(128, sums), opts(isa));
+    let mut out = vec![0i32; m * n];
+    plan.execute(&ap, &mut out);
+    out
+}
+
+fn lut16_oracle(m: usize, n: usize, k: usize) -> Vec<i32> {
+    let s = seed(m, n, k);
+    let wcb = IntCodebook::signed(2);
+    let acb = IntCodebook::unsigned(2);
+    let a = CodeMat::random(m, k, 2, s);
+    let w = CodeMat::random(n, k, 2, s ^ 1);
+    let mut out = vec![0i32; m * n];
+    oracle_gemm_i32(&a, &w, &wcb, &acb, &mut out);
+    out
+}
+
+#[test]
+fn boundary_shapes_match_scalar_oracle_under_every_arm() {
+    // Corner combinations of the boundary axis (the full cross-product
+    // lives in tests/isa_diff.rs): remainder tiles in M and N, sub-,
+    // exact- and over-chunk K — with the scalar arm itself anchored to
+    // the code-level oracle, so "bit-identical" is grounded.
+    let arms = supported_arms();
+    let shapes =
+        [(1usize, 1usize, 1usize), (3, 5, 63), (4, 4, 64), (5, 3, 65), (1, 65, 64), (65, 1, 63)];
+    for &(m, n, k) in &shapes {
+        let base_d = run_lut16_d(m, n, k, Isa::Scalar);
+        assert_eq!(base_d, lut16_oracle(m, n, k), "scalar vs oracle m={m} n={n} k={k}");
+        let base_i8 = run_int8(m, n, k, Isa::Scalar);
+        for &isa in &arms {
+            let what = format!("m={m} n={n} k={k} isa={}", isa.name());
+            assert_eq!(run_lut16_d(m, n, k, isa), base_d, "lut16-d {what}");
+            assert_eq!(run_int8(m, n, k, isa), base_i8, "int8 {what}");
+        }
+    }
+}
+
+#[test]
+fn vector_arm_kernels_are_all_registered() {
+    // The kernels the plans above dispatch to on vector arms must be
+    // backed by registry entries — the closed loop `cargo xtask audit`
+    // enforces statically, re-checked here at runtime.
+    for kernel in [
+        "lut16::avx2::gemm",
+        "lut16::avx2::dot4_scheme_d",
+        "tile::x86::dot4x4_scheme_d",
+        "tile::x86_512::dot4x4_scheme_d",
+        "int8::avx2::tile_i8",
+        "int8::avx512::tile_i8_vnni",
+    ] {
+        assert!(find(kernel).is_some(), "no registered contract for {kernel}");
+    }
+}

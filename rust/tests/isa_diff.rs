@@ -237,7 +237,8 @@ fn remainder_shape_sweep_agrees_across_arms() {
     // of M, N, K in {1, MR-1, MR, MR+1, 63, 64, 65} (MR = NR = 4)
     // exercises full tiles, remainder tiles in both dimensions, and
     // sub-/exact-/over-chunk K under each arm. Debug builds also hit
-    // the kernels' debug-assert preconditions on every call.
+    // every kernel's registered contract (`contract_assert!`, see
+    // `kernels::contract` and docs/SAFETY.md) on every call.
     let arms = supported_arms("remainder sweep");
     let axis = [1usize, 3, 4, 5, 63, 64, 65];
     for &m in &axis {

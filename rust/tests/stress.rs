@@ -1,0 +1,187 @@
+//! Schedule-perturbing concurrency stress (see `docs/SAFETY.md`).
+//!
+//! Runs the thread-pool's work-pulling counter and the batcher's
+//! supervisor respawn path with `FailAction::Jitter` armed at the
+//! failpoint sites planted inside them (`pool_execute`,
+//! `pool_job_done`, `pool_scope_submit`, `supervisor_respawn`): each
+//! hit draws from a seeded LCG and yields, micro-sleeps, or proceeds,
+//! forcing thread interleavings the unperturbed scheduler rarely
+//! produces. The invariants must hold under every seed — jobs run
+//! exactly once, `wait_idle` neither hangs nor returns early, scoped
+//! panics propagate, and the supervisor recovers. The nightly TSan job
+//! runs this same suite under `-Zsanitizer=thread`.
+//!
+//! Only compiled with `--features failpoints` (like tests/chaos.rs);
+//! the registry is process-global, so scenarios serialize on a mutex.
+#![cfg(feature = "failpoints")]
+
+use deepgemm::coordinator::{BatcherConfig, Router};
+use deepgemm::engine::CompiledModel;
+use deepgemm::kernels::pack::Scheme;
+use deepgemm::kernels::Backend;
+use deepgemm::nn::{zoo, Tensor};
+use deepgemm::util::failpoint::{self, FailAction};
+use deepgemm::util::pool::ThreadPool;
+use deepgemm::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Seeds for the perturbation sweep — distinct LCG trajectories, so
+/// each run explores different yield/sleep placements at the sites.
+const SEEDS: [u64; 4] = [1, 42, 0xDEAD_BEEF, 0x0123_4567_89AB_CDEF];
+
+fn serial() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::disarm_all();
+    g
+}
+
+fn arm_pool_jitter(seed: u64) {
+    failpoint::arm("pool_execute", FailAction::Jitter(seed));
+    failpoint::arm("pool_job_done", FailAction::Jitter(seed.rotate_left(17) ^ 0x9E37));
+    failpoint::arm("pool_scope_submit", FailAction::Jitter(seed.rotate_left(31) ^ 0x79B9));
+}
+
+#[test]
+fn pool_runs_every_job_exactly_once_under_jitter() {
+    let _g = serial();
+    for &seed in &SEEDS {
+        arm_pool_jitter(seed);
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..400 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 400, "seed {seed:#x}: lost or double-ran jobs");
+        drop(pool); // shutdown must join cleanly under jitter too
+        failpoint::disarm_all();
+    }
+}
+
+#[test]
+fn concurrent_wait_idle_observes_completion_under_jitter() {
+    // A second thread hammers `wait_idle` while the main thread is
+    // still enqueuing: the jittered window between the in_flight
+    // increment/decrement and the queue operations must never let
+    // `wait_idle` hang or report idle while jobs are outstanding.
+    let _g = serial();
+    for &seed in &SEEDS {
+        arm_pool_jitter(seed);
+        let pool = Arc::new(ThreadPool::new(3));
+        let done = Arc::new(AtomicU64::new(0));
+        let waiter = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    pool.wait_idle(); // must always return
+                    std::thread::yield_now();
+                }
+            })
+        };
+        for _ in 0..200 {
+            let d = done.clone();
+            pool.execute(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 200, "seed {seed:#x}");
+        waiter.join().expect("waiter thread must not panic");
+        failpoint::disarm_all();
+    }
+}
+
+#[test]
+fn scope_run_sums_and_propagates_panic_under_jitter() {
+    let _g = serial();
+    for &seed in &SEEDS {
+        arm_pool_jitter(seed);
+        let pool = ThreadPool::new(4);
+        // Borrowing scope: the join guard must hold the borrows alive
+        // past every jittered submission/completion window.
+        let data: Vec<u64> = (0..300).collect();
+        let sum = AtomicU64::new(0);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for chunk in data.chunks(11) {
+            let sum = &sum;
+            jobs.push(Box::new(move || {
+                sum.fetch_add(chunk.iter().sum::<u64>(), Ordering::SeqCst);
+            }));
+        }
+        pool.scope_run(jobs);
+        assert_eq!(sum.load(Ordering::SeqCst), 299 * 300 / 2, "seed {seed:#x}");
+        // Panic propagation: the first panic must reach the caller
+        // after every job joined, and the pool must stay usable.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_run(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("stress boom")),
+                Box::new(|| {}),
+            ]);
+        }));
+        assert!(r.is_err(), "seed {seed:#x}: scope panic must propagate");
+        let c = Arc::new(AtomicU64::new(0));
+        let cc = c.clone();
+        pool.execute(move || {
+            cc.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 1, "seed {seed:#x}: pool must survive");
+        failpoint::disarm_all();
+    }
+}
+
+#[test]
+fn supervisor_respawn_recovers_under_jitter() {
+    // One injected worker panic with the respawn path jittered: clients
+    // racing the supervisor must only ever observe a typed WorkerPanic
+    // or a success, and the worker must come back healthy.
+    let _g = serial();
+    for &seed in &SEEDS {
+        failpoint::arm("supervisor_respawn", FailAction::Jitter(seed));
+        failpoint::arm_times("forward_panic", FailAction::Panic, 1);
+        let mut rng = Rng::new(7);
+        let g = zoo::small_cnn(4, &mut rng);
+        let model = CompiledModel::compile(g, Backend::Lut16(Scheme::D), &[]).unwrap();
+        let mut router = Router::new();
+        router.register(
+            model,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+                respawn_backoff: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let r = Arc::new(router);
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    r.infer("small_cnn", Tensor::random(&[1, 3, 32, 32], i, -1.0, 1.0))
+                })
+            })
+            .collect();
+        for h in hs {
+            match h.join().unwrap() {
+                Ok(_) | Err(deepgemm::Error::WorkerPanic(_)) => {}
+                Err(e) => panic!("seed {seed:#x}: unexpected error variant: {e}"),
+            }
+        }
+        // Post-respawn the worker serves normally and reports healthy.
+        let resp = r
+            .infer("small_cnn", Tensor::random(&[1, 3, 32, 32], 99, -1.0, 1.0))
+            .expect("post-respawn request must succeed");
+        assert_eq!(resp.output.len(), 4);
+        let h = &r.health()[0];
+        assert!(h.alive && h.healthy, "seed {seed:#x}: {h:?}");
+        assert!(h.respawns >= 1, "seed {seed:#x}: supervisor never respawned");
+        failpoint::disarm_all();
+    }
+}

@@ -1,0 +1,1082 @@
+//! `cargo xtask` — repo automation for the deepgemm workspace.
+//!
+//! The only subcommand is `audit`, the unsafe-code static auditor (see
+//! `docs/SAFETY.md`). It lexes `src/` (comments, strings, char literals
+//! and raw strings are masked before any rule runs) and enforces:
+//!
+//! - every `unsafe {}` block / `unsafe impl` carries a `// SAFETY:`
+//!   comment immediately above it; every `unsafe fn` carries one above
+//!   its declaration or inside its body;
+//! - every `#[target_feature]` function either asserts a registered
+//!   kernel contract at entry (`contract_assert!`, declared via
+//!   `kernel_contract!`) or is marked `// CONTRACT: helper`;
+//! - no hand-written `debug_assert*` remains inside a
+//!   `#[target_feature]` function (preconditions belong to contracts);
+//! - forbidden patterns (`static mut`, `transmute`, `get_unchecked`,
+//!   `from_raw_parts`) appear only at allow-listed (file, token) pairs;
+//! - the full unsafe inventory (file, line, kind, justification hash)
+//!   matches the checked-in `unsafe_inventory.json` baseline — compared
+//!   line-agnostically, so pure code motion never trips it, but any new
+//!   or removed unsafe site requires `--write-baseline` in the same PR.
+//!
+//! `--table` additionally regenerates the backend × ISA contract table
+//! in `docs/SIMD.md` from the `kernel_contract!` declarations.
+//!
+//! The auditor is zero-dependency on purpose: the build image is fully
+//! offline, so the lexer, JSON reader/writer and diffing are hand-rolled
+//! (mirroring the main crate's no-deps policy). Scope is `rust/src`
+//! only — tests, benches and this tool itself are not audited.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------------
+// Lexer: mask comments / strings / chars, record line comments.
+// ---------------------------------------------------------------------------
+
+/// A source file with comments and literals blanked out (same byte
+/// length as the input, newlines preserved) plus the extracted line
+/// comments.
+struct Masked {
+    /// The masked code: every comment/string/char byte replaced by a
+    /// space (newlines kept), so token scans cannot be confused.
+    code: Vec<u8>,
+    /// Line-comment text per line (1-based), leading `/`/`!` stripped
+    /// and trimmed. Only `//`-style comments are recorded; block
+    /// comments are masked but carry no SAFETY semantics here.
+    comments: BTreeMap<usize, String>,
+    /// Byte offset of the start of each line (0-based index = line - 1).
+    line_starts: Vec<usize>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn line_of(line_starts: &[usize], off: usize) -> usize {
+    match line_starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let mut code = b.to_vec();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let blank = |code: &mut [u8], from: usize, to: usize| {
+        let to = to.min(code.len());
+        for ch in &mut code[from..to] {
+            if *ch != b'\n' {
+                *ch = b' ';
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            let text = src[start + 2..i].trim_start_matches(['/', '!']).trim().to_string();
+            let line = line_of(&line_starts, start);
+            // Keep the first comment on a line (trailing same-line runs
+            // do not occur in this codebase).
+            comments.entry(line).or_insert(text);
+            blank(&mut code, start, i);
+            continue;
+        }
+        // Block comment (nesting, as in Rust).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut code, start, i);
+            continue;
+        }
+        // String literal.
+        if c == b'"' {
+            let start = i;
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            blank(&mut code, start, i);
+            continue;
+        }
+        // Identifier — or a raw-string prefix (r"", r#""#, br"").
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let at_token_start = i == 0 || !is_ident(b[i - 1]);
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if at_token_start && j < b.len() && b[j] == b'r' {
+                let mut k = j + 1;
+                while k < b.len() && b[k] == b'#' {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b'"' {
+                    let hashes = k - (j + 1);
+                    let mut m = k + 1;
+                    while m < b.len() {
+                        if b[m] == b'"' {
+                            let mut h = 0usize;
+                            while h < hashes && m + 1 + h < b.len() && b[m + 1 + h] == b'#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                m += 1 + hashes;
+                                break;
+                            }
+                        }
+                        m += 1;
+                    }
+                    blank(&mut code, i, m);
+                    i = m;
+                    continue;
+                }
+            }
+            while i < b.len() && is_ident(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                let start = i;
+                let mut j = i + 3; // skip quote, backslash, escaped char
+                while j < b.len() && b[j] != b'\'' {
+                    j += 1;
+                }
+                j += 1;
+                blank(&mut code, start, j);
+                i = j;
+                continue;
+            }
+            if i + 2 < b.len() && b[i + 2] == b'\'' {
+                blank(&mut code, i, i + 3);
+                i += 3;
+                continue;
+            }
+            i += 1; // lifetime: skip the quote only
+            continue;
+        }
+        i += 1;
+    }
+    Masked { code, comments, line_starts }
+}
+
+// ---------------------------------------------------------------------------
+// Token scanning helpers over masked code.
+// ---------------------------------------------------------------------------
+
+/// All identifier-like tokens of the masked code, with byte offsets.
+fn tokens(code: &[u8]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if code[i].is_ascii_alphabetic() || code[i] == b'_' {
+            let start = i;
+            while i < code.len() && is_ident(code[i]) {
+                i += 1;
+            }
+            out.push((start, String::from_utf8_lossy(&code[start..i]).into_owned()));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn skip_ws(code: &[u8], mut i: usize) -> usize {
+    while i < code.len() && (code[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Offset just past the matching `}` for the `{` at `open` (which must
+/// point at a `{` in masked code).
+fn match_brace(code: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < code.len() {
+        match code[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    code.len()
+}
+
+/// The masked text of line `line` (1-based).
+fn line_slice(m: &Masked, line: usize) -> &str {
+    let start = m.line_starts[line - 1];
+    let end = m.line_starts.get(line).copied().unwrap_or(m.code.len());
+    std::str::from_utf8(&m.code[start..end]).unwrap_or("").trim_end_matches('\n')
+}
+
+/// The contiguous comment run immediately above `line`, oldest first.
+/// Attribute-only lines between the run and `line` are skipped.
+fn comment_run_above(m: &Masked, line: usize) -> Vec<String> {
+    let mut texts: Vec<String> = Vec::new();
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let code_text = line_slice(m, l).trim().to_string();
+        if let Some(t) = m.comments.get(&l) {
+            if code_text.is_empty() {
+                texts.push(t.clone());
+                continue;
+            }
+            break; // trailing comment on a code line — not a run
+        }
+        if texts.is_empty() && code_text.starts_with("#[") {
+            continue; // attributes between the decl and its comments
+        }
+        break;
+    }
+    texts.reverse();
+    texts
+}
+
+/// Join a comment run into a justification string starting at the first
+/// line that contains `SAFETY:`; `None` when the run has no SAFETY line.
+fn safety_text(run: &[String]) -> Option<String> {
+    let start = run.iter().position(|t| t.contains("SAFETY:"))?;
+    Some(run[start..].join(" "))
+}
+
+/// First SAFETY comment run whose line falls inside [from_line, to_line].
+fn safety_in_span(m: &Masked, from_line: usize, to_line: usize) -> Option<String> {
+    for (&l, t) in m.comments.range(from_line..=to_line) {
+        if t.contains("SAFETY:") {
+            let mut parts = vec![t.clone()];
+            let mut nl = l + 1;
+            while nl <= to_line {
+                match m.comments.get(&nl) {
+                    Some(next) if line_slice(m, nl).trim().is_empty() => {
+                        parts.push(next.clone());
+                        nl += 1;
+                    }
+                    _ => break,
+                }
+            }
+            return Some(parts.join(" "));
+        }
+    }
+    None
+}
+
+/// FNV-1a 64-bit over UTF-8 bytes, rendered as `fnv1a:<16 hex digits>`.
+fn fnv1a(s: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("fnv1a:{h:016x}")
+}
+
+// ---------------------------------------------------------------------------
+// Audit proper.
+// ---------------------------------------------------------------------------
+
+/// One rule failure, printed as `file:line: [rule] message`.
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+/// One unsafe site in the inventory.
+#[derive(Clone)]
+struct Entry {
+    file: String,
+    line: usize,
+    kind: &'static str,
+    hash: String,
+}
+
+/// A `kernel_contract!` declaration (fields used by `--table`).
+struct ContractDecl {
+    name: String,
+    kernel: String,
+    isa: String,
+    features: String,
+    rules: Vec<(String, String)>,
+}
+
+/// Everything the auditor learned about one file.
+struct Audit {
+    violations: Vec<Violation>,
+    inventory: Vec<Entry>,
+    contract_decls: Vec<ContractDecl>,
+    /// `contract_assert!` targets: (contract name, line).
+    contract_uses: Vec<(String, usize)>,
+}
+
+/// (file suffix, token) pairs exempt from the forbidden-pattern rule.
+/// Each entry documents a reviewed, SAFETY-commented use.
+const FORBIDDEN_ALLOW: &[(&str, &str)] = &[
+    // Scoped-job lifetime erasure; the join guard bounds every borrow.
+    ("src/util/pool.rs", "transmute"),
+];
+
+const FORBIDDEN: &[&str] = &["transmute", "get_unchecked", "from_raw_parts"];
+
+fn audit_file(label: &str, src: &str) -> Audit {
+    let m = mask(src);
+    let toks = tokens(&m.code);
+    let mut violations = Vec::new();
+    let mut inventory = Vec::new();
+    let mut contract_decls = Vec::new();
+    let mut contract_uses = Vec::new();
+
+    for (ti, (off, tok)) in toks.iter().enumerate() {
+        let line = line_of(&m.line_starts, *off);
+        match tok.as_str() {
+            "unsafe" => {
+                let after = skip_ws(&m.code, off + tok.len());
+                let next_char = m.code.get(after).copied().unwrap_or(b' ');
+                let next_tok = toks.get(ti + 1).map(|(_, t)| t.as_str()).unwrap_or("");
+                if next_char == b'{' || (next_tok != "fn" && next_tok != "impl") {
+                    // unsafe block (or unknown form — held to block rules)
+                    let just = safety_text(&comment_run_above(&m, line));
+                    if just.is_none() {
+                        violations.push(Violation {
+                            file: label.to_string(),
+                            line,
+                            rule: "missing-safety-comment",
+                            msg: "unsafe block without a `// SAFETY:` comment above it".into(),
+                        });
+                    }
+                    inventory.push(Entry {
+                        file: label.to_string(),
+                        line,
+                        kind: "unsafe_block",
+                        hash: fnv1a(&just.unwrap_or_default()),
+                    });
+                } else if next_tok == "impl" {
+                    let just = safety_text(&comment_run_above(&m, line));
+                    if just.is_none() {
+                        violations.push(Violation {
+                            file: label.to_string(),
+                            line,
+                            rule: "missing-safety-comment",
+                            msg: "unsafe impl without a `// SAFETY:` comment above it".into(),
+                        });
+                    }
+                    inventory.push(Entry {
+                        file: label.to_string(),
+                        line,
+                        kind: "unsafe_impl",
+                        hash: fnv1a(&just.unwrap_or_default()),
+                    });
+                } else {
+                    // unsafe fn: SAFETY above the declaration or inside
+                    // the body both discharge the rule.
+                    let body_open = m.code[*off..].iter().position(|&c| c == b'{').map(|p| p + off);
+                    let just = safety_text(&comment_run_above(&m, line)).or_else(|| {
+                        body_open.and_then(|open| {
+                            let close = match_brace(&m.code, open);
+                            safety_in_span(
+                                &m,
+                                line_of(&m.line_starts, open),
+                                line_of(&m.line_starts, close.saturating_sub(1)),
+                            )
+                        })
+                    });
+                    if just.is_none() {
+                        violations.push(Violation {
+                            file: label.to_string(),
+                            line,
+                            rule: "missing-safety-comment",
+                            msg: "unsafe fn without a `// SAFETY:` comment (above or in body)"
+                                .into(),
+                        });
+                    }
+                    inventory.push(Entry {
+                        file: label.to_string(),
+                        line,
+                        kind: "unsafe_fn",
+                        hash: fnv1a(&just.unwrap_or_default()),
+                    });
+                }
+            }
+            "target_feature" => {
+                // Attribute — find the decorated fn and inspect its body.
+                let fn_tok = toks[ti + 1..].iter().find(|(_, t)| t == "fn");
+                let Some((fn_off, _)) = fn_tok else { continue };
+                let Some(open_rel) = m.code[*fn_off..].iter().position(|&c| c == b'{') else {
+                    continue;
+                };
+                let open = fn_off + open_rel;
+                let close = match_brace(&m.code, open);
+                let body = &m.code[open..close];
+                let body_txt = String::from_utf8_lossy(body);
+                let from_line = line_of(&m.line_starts, open);
+                let to_line = line_of(&m.line_starts, close.saturating_sub(1));
+                let has_contract = body_txt.contains("contract_assert!");
+                let helper = m
+                    .comments
+                    .range(from_line..=to_line)
+                    .any(|(_, t)| t.contains("CONTRACT: helper"));
+                if !has_contract && !helper {
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line,
+                        rule: "missing-contract",
+                        msg: "#[target_feature] fn has neither `contract_assert!` at entry \
+                              nor a `// CONTRACT: helper` marker"
+                            .into(),
+                    });
+                }
+                for (boff, btok) in &toks {
+                    if *boff >= open && *boff < close && btok.starts_with("debug_assert") {
+                        violations.push(Violation {
+                            file: label.to_string(),
+                            line: line_of(&m.line_starts, *boff),
+                            rule: "debug-assert-in-kernel",
+                            msg: "hand-written debug_assert inside a #[target_feature] fn; \
+                                  declare the precondition in its kernel_contract! instead"
+                                .into(),
+                        });
+                    }
+                }
+            }
+            "kernel_contract" => {
+                // Declaration site: `kernel_contract! { ... }` (the
+                // macro's own definition is followed by `{`, not `!`).
+                let after = skip_ws(&m.code, off + tok.len());
+                if m.code.get(after) != Some(&b'!') {
+                    continue;
+                }
+                let Some(open_rel) = m.code[after..].iter().position(|&c| c == b'{') else {
+                    continue;
+                };
+                let open = after + open_rel;
+                let close = match_brace(&m.code, open);
+                if let Some(decl) = parse_contract_decl(src, &m, &toks, open, close) {
+                    contract_decls.push(decl);
+                }
+            }
+            "contract_assert" => {
+                let after = skip_ws(&m.code, off + tok.len());
+                if m.code.get(after) != Some(&b'!') {
+                    continue;
+                }
+                let Some(paren_rel) = m.code[after..].iter().position(|&c| c == b'(') else {
+                    continue;
+                };
+                let from = after + paren_rel + 1;
+                let to = m.code[from..]
+                    .iter()
+                    .position(|&c| c == b',')
+                    .map(|p| p + from)
+                    .unwrap_or(from);
+                let path = String::from_utf8_lossy(&m.code[from..to]).trim().to_string();
+                let name = path.rsplit("::").next().unwrap_or(&path).trim().to_string();
+                if !name.is_empty() {
+                    contract_uses.push((name, line));
+                }
+            }
+            "static" => {
+                if toks.get(ti + 1).map(|(_, t)| t.as_str()) == Some("mut") {
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line,
+                        rule: "forbidden-pattern",
+                        msg: "`static mut` is forbidden; use atomics or interior mutability"
+                            .into(),
+                    });
+                }
+            }
+            t if FORBIDDEN.contains(&t) => {
+                let allowed = FORBIDDEN_ALLOW
+                    .iter()
+                    .any(|(file, word)| label.ends_with(file) && *word == t);
+                if !allowed {
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line,
+                        rule: "forbidden-pattern",
+                        msg: format!(
+                            "`{t}` outside the allow-list; if this use is reviewed and \
+                             sound, add ({label:?}, {t:?}) to FORBIDDEN_ALLOW in xtask"
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    Audit { violations, inventory, contract_decls, contract_uses }
+}
+
+/// Parse one `kernel_contract! { ... }` block span (masked offsets;
+/// original text sliced by the same offsets, masking preserves length).
+fn parse_contract_decl(
+    src: &str,
+    m: &Masked,
+    toks: &[(usize, String)],
+    open: usize,
+    close: usize,
+) -> Option<ContractDecl> {
+    let name = toks
+        .iter()
+        .find(|(o, t)| *o >= open && *o < close && t == "static")
+        .and_then(|(o, _)| toks.iter().find(|(o2, _)| *o2 > *o))
+        .map(|(_, t)| t.clone())?;
+    let orig = &src[open..close];
+    let masked_block = String::from_utf8_lossy(&m.code[open..close]).into_owned();
+    let kernel = quoted_field(orig, &masked_block, "kernel:")?;
+    let features = quoted_field(orig, &masked_block, "features:").unwrap_or_default();
+    let isa = {
+        let at = masked_block.find("isa:")?;
+        orig[at + 4..]
+            .split(|c: char| c == ',' || c == '\n')
+            .next()
+            .unwrap_or("")
+            .trim()
+            .to_string()
+    };
+    let mut rules = Vec::new();
+    if let Some(rat) = masked_block.find("rules:") {
+        let rules_open = masked_block[rat..].find('{').map(|p| p + rat)?;
+        let rules_close = match_brace(&m.code[open..close], rules_open);
+        for raw in orig[rules_open + 1..rules_close.saturating_sub(1)].lines() {
+            let t = raw.trim();
+            let Some(colon) = t.find(':') else { continue };
+            let rname = t[..colon].trim();
+            if rname.is_empty() || !rname.bytes().all(is_ident) {
+                continue;
+            }
+            let rest = &t[colon + 1..];
+            let Some(q1) = rest.find('"') else { continue };
+            let Some(q2) = rest[q1 + 1..].find('"') else { continue };
+            rules.push((rname.to_string(), rest[q1 + 1..q1 + 1 + q2].to_string()));
+        }
+    }
+    Some(ContractDecl { name, kernel, isa, features, rules })
+}
+
+/// Find `key` in the masked block, then return the first quoted string
+/// after it from the original text.
+fn quoted_field(orig: &str, masked_block: &str, key: &str) -> Option<String> {
+    let at = masked_block.find(key)?;
+    let rest = &orig[at + key.len()..];
+    let q1 = rest.find('"')?;
+    let q2 = rest[q1 + 1..].find('"')?;
+    Some(rest[q1 + 1..q1 + 1 + q2].to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Baseline (unsafe_inventory.json).
+// ---------------------------------------------------------------------------
+
+fn render_inventory(entries: &[Entry]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"schema\": 1,\n  \"tool\": \"cargo xtask audit\",\n  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{ \"file\": \"{}\", \"line\": {}, \"kind\": \"{}\", \"hash\": \"{}\" }}{}\n",
+            e.file, e.line, e.kind, e.hash, comma
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Extract `"key": "value"` from a single JSON object line.
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let at = line.find(&pat)? + pat.len();
+    let end = line[at..].find('"')? + at;
+    Some(line[at..end].to_string())
+}
+
+fn parse_inventory(text: &str) -> Vec<(String, String, String)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let (Some(file), Some(kind), Some(hash)) = (
+            json_str_field(line, "file"),
+            json_str_field(line, "kind"),
+            json_str_field(line, "hash"),
+        ) else {
+            continue;
+        };
+        out.push((file, kind, hash));
+    }
+    out
+}
+
+/// Line-agnostic multiset diff: (file, kind, hash) triples vs baseline.
+fn diff_baseline(current: &[Entry], baseline: &[(String, String, String)]) -> Vec<Violation> {
+    let mut counts: BTreeMap<(String, String, String), i64> = BTreeMap::new();
+    for e in current {
+        *counts.entry((e.file.clone(), e.kind.to_string(), e.hash.clone())).or_default() += 1;
+    }
+    for b in baseline {
+        *counts.entry(b.clone()).or_default() -= 1;
+    }
+    let mut out = Vec::new();
+    for ((file, kind, hash), n) in counts {
+        if n > 0 {
+            let line = current
+                .iter()
+                .find(|e| e.file == file && e.kind == kind && e.hash == hash)
+                .map(|e| e.line)
+                .unwrap_or(0);
+            out.push(Violation {
+                file,
+                line,
+                rule: "baseline",
+                msg: format!(
+                    "new or changed {kind} ({hash}, x{n}) not in unsafe_inventory.json; \
+                     review it and run `cargo xtask audit --write-baseline`"
+                ),
+            });
+        } else if n < 0 {
+            out.push(Violation {
+                file: file.clone(),
+                line: 0,
+                rule: "baseline",
+                msg: format!(
+                    "stale baseline entry {kind} ({hash}, x{}) no longer in the tree; \
+                     run `cargo xtask audit --write-baseline`",
+                    -n
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Contract table (docs/SIMD.md).
+// ---------------------------------------------------------------------------
+
+const TABLE_START: &str = "<!-- contract-table:start -->";
+const TABLE_END: &str = "<!-- contract-table:end -->";
+
+fn render_table(decls: &[ContractDecl]) -> String {
+    let mut rows: Vec<&ContractDecl> = decls.iter().collect();
+    // Test-module contracts (kernel path under `tests`) are registered
+    // for the unregistered-contract check but kept out of the docs.
+    rows.retain(|d| !d.kernel.contains("::tests::"));
+    rows.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+    let mut out = String::new();
+    out.push_str("<!-- generated by `cargo xtask audit --table`; do not edit by hand -->\n\n");
+    out.push_str("| contract | kernel | ISA arm | CPU features | preconditions |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for d in rows {
+        let pre = d
+            .rules
+            .iter()
+            .map(|(_, expr)| format!("`{expr}`"))
+            .collect::<Vec<_>>()
+            .join("; ");
+        let feats =
+            if d.features.is_empty() { "—".to_string() } else { format!("`{}`", d.features) };
+        out.push_str(&format!(
+            "| `{}` | `{}` | {} | {} | {} |\n",
+            d.name,
+            d.kernel,
+            d.isa.to_lowercase(),
+            feats,
+            pre
+        ));
+    }
+    out
+}
+
+fn splice_table(doc: &str, table: &str) -> Option<String> {
+    let start = doc.find(TABLE_START)? + TABLE_START.len();
+    let end = doc.find(TABLE_END)?;
+    Some(format!("{}\n{}{}", &doc[..start], table, &doc[end..]))
+}
+
+// ---------------------------------------------------------------------------
+// Driver.
+// ---------------------------------------------------------------------------
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("audit") => {}
+        _ => {
+            eprintln!("usage: cargo xtask audit [--write-baseline] [--table]");
+            return ExitCode::FAILURE;
+        }
+    }
+    let write_baseline = args.iter().any(|a| a == "--write-baseline");
+    let table = args.iter().any(|a| a == "--table");
+
+    let ws_root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+    let src_dir = ws_root.join("src");
+    let baseline_path = ws_root.join("unsafe_inventory.json");
+
+    let mut files = Vec::new();
+    if let Err(e) = walk(&src_dir, &mut files) {
+        eprintln!("error: cannot walk {}: {e}", src_dir.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut violations = Vec::new();
+    let mut inventory = Vec::new();
+    let mut decls = Vec::new();
+    let mut uses = Vec::new();
+    for path in &files {
+        let label = path
+            .strip_prefix(&ws_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: cannot read {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let mut a = audit_file(&label, &src);
+        violations.append(&mut a.violations);
+        inventory.extend(a.inventory);
+        decls.extend(a.contract_decls);
+        uses.extend(a.contract_uses.into_iter().map(|(n, l)| (label.clone(), n, l)));
+    }
+
+    // Cross-file: every contract_assert! target must be declared.
+    let declared: Vec<&str> = decls.iter().map(|d| d.name.as_str()).collect();
+    for (file, name, line) in &uses {
+        if !declared.contains(&name.as_str()) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: "unregistered-contract",
+                msg: format!("contract_assert! names `{name}` but no kernel_contract! declares it"),
+            });
+        }
+    }
+
+    inventory.sort_by(|a, b| (&a.file, a.line, a.kind).cmp(&(&b.file, b.line, b.kind)));
+
+    if write_baseline {
+        if let Err(e) = std::fs::write(&baseline_path, render_inventory(&inventory)) {
+            eprintln!("error: cannot write {}: {e}", baseline_path.display());
+            return ExitCode::FAILURE;
+        }
+        println!(
+            "wrote {} ({} unsafe sites)",
+            baseline_path.display(),
+            inventory.len()
+        );
+    } else {
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => violations.extend(diff_baseline(&inventory, &parse_inventory(&text))),
+            Err(_) => violations.push(Violation {
+                file: "unsafe_inventory.json".into(),
+                line: 0,
+                rule: "baseline",
+                msg: "baseline missing; run `cargo xtask audit --write-baseline`".into(),
+            }),
+        }
+    }
+
+    if table {
+        let simd_md = ws_root.parent().map(|r| r.join("docs").join("SIMD.md"));
+        let rendered = render_table(&decls);
+        print!("{rendered}");
+        if let Some(simd_md) = simd_md {
+            match std::fs::read_to_string(&simd_md) {
+                Ok(doc) => match splice_table(&doc, &rendered) {
+                    Some(updated) => {
+                        if updated != doc {
+                            if let Err(e) = std::fs::write(&simd_md, updated) {
+                                eprintln!("error: cannot write {}: {e}", simd_md.display());
+                                return ExitCode::FAILURE;
+                            }
+                            println!("updated {}", simd_md.display());
+                        } else {
+                            println!("{} already up to date", simd_md.display());
+                        }
+                    }
+                    None => {
+                        eprintln!(
+                            "error: contract-table markers not found in {}",
+                            simd_md.display()
+                        );
+                        return ExitCode::FAILURE;
+                    }
+                },
+                Err(e) => {
+                    eprintln!("error: cannot read {}: {e}", simd_md.display());
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+    }
+
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    if violations.is_empty() {
+        println!(
+            "audit OK: {} files, {} unsafe sites, {} contracts, {} contract uses",
+            files.len(),
+            inventory.len(),
+            decls.len(),
+            uses.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("error: {}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        }
+        eprintln!("audit FAILED: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests — in-memory fixtures only, so checked-in sources never trip the
+// tree audit with seeded violations.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(a: &Audit) -> Vec<&'static str> {
+        a.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn masking_strings_comments_chars_lifetimes() {
+        let src = r##"
+// unsafe in a comment
+let s = "unsafe { }";
+let r = r#"unsafe"#;
+let c = 'u';
+let esc = '\'';
+fn f<'a>(x: &'a str) {}
+"##;
+        let m = mask(src);
+        let toks = tokens(&m.code);
+        assert!(!toks.iter().any(|(_, t)| t == "unsafe"), "masked text leaked: {toks:?}");
+        assert!(toks.iter().any(|(_, t)| t == "fn"));
+        assert_eq!(m.comments.get(&2).map(String::as_str), Some("unsafe in a comment"));
+    }
+
+    #[test]
+    fn unsafe_block_without_safety_is_flagged() {
+        // The seeded-violation fixture: this is what CI proves the
+        // auditor rejects.
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert_eq!(rules_of(&a), vec!["missing-safety-comment"]);
+        assert_eq!(a.inventory.len(), 1);
+        assert_eq!(a.inventory[0].kind, "unsafe_block");
+    }
+
+    #[test]
+    fn unsafe_block_with_safety_passes() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert!(a.violations.is_empty(), "{:?}", rules_of(&a));
+        assert_eq!(a.inventory[0].kind, "unsafe_block");
+        assert_ne!(a.inventory[0].hash, fnv1a(""));
+    }
+
+    #[test]
+    fn unsafe_impl_needs_its_own_comment() {
+        let src = "struct S(*mut u8);\n// SAFETY: disjoint writes only.\nunsafe impl Send for S {}\nunsafe impl Sync for S {}\n";
+        let a = audit_file("src/x.rs", src);
+        // Send documented, Sync (no run directly above it) flagged.
+        assert_eq!(rules_of(&a), vec!["missing-safety-comment"]);
+        assert_eq!(a.inventory.len(), 2);
+        assert!(a.inventory.iter().all(|e| e.kind == "unsafe_impl"));
+    }
+
+    #[test]
+    fn unsafe_fn_with_body_safety_passes() {
+        let src = "unsafe fn k() {\n    // SAFETY: register-only.\n    unsafe { core::hint::spin_loop() }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert!(a.violations.is_empty(), "{:?}", rules_of(&a));
+        let kinds: Vec<_> = a.inventory.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["unsafe_fn", "unsafe_block"]);
+    }
+
+    #[test]
+    fn target_feature_without_contract_is_flagged() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn k(p: *const u8) -> u8 {\n    // SAFETY: fine.\n    unsafe { *p }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert_eq!(rules_of(&a), vec!["missing-contract"]);
+    }
+
+    #[test]
+    fn target_feature_with_contract_assert_passes() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn k(n: usize) {\n    crate::contract_assert!(super::C_K, vals: n,);\n    // SAFETY: contract checked above.\n    unsafe { core::hint::spin_loop() }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert!(a.violations.is_empty(), "{:?}", rules_of(&a));
+        assert_eq!(a.contract_uses, vec![("C_K".to_string(), 3)]);
+    }
+
+    #[test]
+    fn target_feature_helper_marker_passes() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn h() {\n    // CONTRACT: helper — register-only.\n    // SAFETY: no memory access.\n    unsafe { core::hint::spin_loop() }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert!(a.violations.is_empty(), "{:?}", rules_of(&a));
+    }
+
+    #[test]
+    fn debug_assert_inside_kernel_is_flagged() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn k(n: usize) {\n    crate::contract_assert!(C_K, vals: n,);\n    debug_assert_eq!(n % 2, 0);\n    // SAFETY: ok.\n    unsafe { core::hint::spin_loop() }\n}\n";
+        let a = audit_file("src/x.rs", src);
+        assert_eq!(rules_of(&a), vec!["debug-assert-in-kernel"]);
+    }
+
+    #[test]
+    fn forbidden_patterns_and_allowlist() {
+        let src = "fn f() {\n    let x: u32 = unsafe { std::mem::transmute(1i32) };\n}\n";
+        let a = audit_file("src/other.rs", src);
+        assert!(rules_of(&a).contains(&"forbidden-pattern"));
+        // Same token in the allow-listed file passes that rule.
+        let b = audit_file("src/util/pool.rs", src);
+        assert!(!rules_of(&b).contains(&"forbidden-pattern"));
+        let c = audit_file("src/x.rs", "static mut G: u32 = 0;\n");
+        assert_eq!(rules_of(&c), vec!["forbidden-pattern"]);
+    }
+
+    #[test]
+    fn contract_decl_parsing_for_table() {
+        let src = r#"
+crate::kernel_contract! {
+    pub(crate) static C_DEMO = {
+        kernel: "demo::avx2::k",
+        isa: Avx2,
+        features: "avx2,fma",
+        doc: "Demo kernel.",
+        example: { mt: 1, nt: 1, vals: 32, a_len: 32, w_len: 32, lut_len: 0 },
+        rules: {
+            k_chunk: "q.vals % 32 == 0" => |q| q.vals % 32 == 0,
+            a_row: "q.a_len >= q.vals" => |q| q.a_len >= q.vals,
+        },
+    }
+}
+"#;
+        let a = audit_file("src/x.rs", src);
+        assert_eq!(a.contract_decls.len(), 1);
+        let d = &a.contract_decls[0];
+        assert_eq!(d.name, "C_DEMO");
+        assert_eq!(d.kernel, "demo::avx2::k");
+        assert_eq!(d.isa, "Avx2");
+        assert_eq!(d.features, "avx2,fma");
+        assert_eq!(
+            d.rules,
+            vec![
+                ("k_chunk".to_string(), "q.vals % 32 == 0".to_string()),
+                ("a_row".to_string(), "q.a_len >= q.vals".to_string()),
+            ]
+        );
+        let table = render_table(&a.contract_decls);
+        assert!(table.contains("| `C_DEMO` | `demo::avx2::k` | avx2 | `avx2,fma` |"));
+        assert!(table.contains("`q.vals % 32 == 0`; `q.a_len >= q.vals`"));
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_diff() {
+        let entries = vec![
+            Entry { file: "src/a.rs".into(), line: 3, kind: "unsafe_block", hash: fnv1a("x") },
+            Entry { file: "src/b.rs".into(), line: 9, kind: "unsafe_fn", hash: fnv1a("y") },
+        ];
+        let text = render_inventory(&entries);
+        let parsed = parse_inventory(&text);
+        assert_eq!(parsed.len(), 2);
+        assert!(diff_baseline(&entries, &parsed).is_empty());
+        // Line moves are invisible; new sites are not.
+        let mut moved = entries.clone();
+        moved[0].line = 33;
+        assert!(diff_baseline(&moved, &parsed).is_empty());
+        let mut grown = entries.clone();
+        grown.push(Entry {
+            file: "src/c.rs".into(),
+            line: 1,
+            kind: "unsafe_block",
+            hash: fnv1a("z"),
+        });
+        let d = diff_baseline(&grown, &parsed);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "baseline");
+    }
+
+    #[test]
+    fn table_splice_replaces_between_markers() {
+        let doc = format!("before\n{TABLE_START}\nold\n{TABLE_END}\nafter\n");
+        let out = splice_table(&doc, "NEW\n").unwrap();
+        assert!(out.contains("NEW"));
+        assert!(!out.contains("old"));
+        assert!(out.starts_with("before\n"));
+        assert!(out.ends_with("after\n"));
+    }
+
+    #[test]
+    fn fnv_hash_is_stable() {
+        // FNV-1a 64 test vectors (empty string and "a").
+        assert_eq!(fnv1a(""), "fnv1a:cbf29ce484222325");
+        assert_eq!(fnv1a("a"), "fnv1a:af63dc4c8601ec8c");
+    }
+}
